@@ -1,0 +1,71 @@
+//! Long-context memory study: drive one request to the model's full
+//! context, tracking quantized-cache growth vs the FP16 equivalent, and
+//! project the same accounting onto the paper's Phi3-medium/A100 shape
+//! (the Figure 6 "FP16 OOM beyond 4k" claim).
+//!
+//! Run: `cargo run --release --example longcontext`
+
+use anyhow::Result;
+use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
+use turboattention::costmodel::{max_batch, GpuSpec, Method, ModelShape};
+use turboattention::model::{ModelBundle, Sampler};
+use turboattention::quant::Bits;
+use turboattention::runtime::Runtime;
+
+fn main() -> Result<()> {
+    // Part 1: real engine, real cache accounting, context filled to max.
+    let rt = Runtime::load("artifacts")?;
+    let max_ctx = rt.manifest.model.max_ctx;
+    let cfg = EngineConfig {
+        mode: PathMode::Turbo,
+        sampler: Sampler::TopK { k: 6, temp: 0.9 },
+        kv_bits: Bits::Int4,
+        n_2bit_heads: 2, // mixed precision: 2 of 4 heads at 2-bit
+        ..Default::default()
+    };
+    let mut engine = Engine::new(ModelBundle::new(rt), cfg);
+    let prompt = b"the cache streams old blocks per layer. ".to_vec();
+    let gen = max_ctx - prompt.len() - 2; // fill the context
+    engine.submit(GenRequest::new(1, prompt, gen));
+    let done = engine.run_to_completion()?;
+    let c = &done[0];
+    println!(
+        "generated {} tokens to context {}/{max_ctx} ({:?})",
+        c.generated.len(),
+        c.prompt_len + c.generated.len(),
+        c.finish_reason
+    );
+    println!(
+        "quantized cache: {} bytes, {:.2}x smaller than FP16 equivalent",
+        engine.metrics.cache_bytes, engine.metrics.cache_compression
+    );
+
+    // Part 2: the same accounting at paper scale (analytical).
+    println!("\nPhi3-medium on A100-80GB — max batch before KV OOM:");
+    let gpu = GpuSpec::a100_80gb();
+    let shape = ModelShape::phi3_medium();
+    println!("{:<14} {:>8} {:>8} {:>8} {:>8}", "method", "4k", "8k", "16k", "32k");
+    for m in [
+        Method::FlashFp16,
+        Method::Kivi { bits: 4 },
+        Method::Turbo { avg_bits: 3.0 },
+    ] {
+        let row: Vec<String> = [4_000usize, 8_000, 16_000, 32_000]
+            .iter()
+            .map(|&ctx| format!("{}", max_batch(&gpu, &shape, &m, ctx)))
+            .collect();
+        println!(
+            "{:<14} {:>8} {:>8} {:>8} {:>8}",
+            m.label(),
+            row[0],
+            row[1],
+            row[2],
+            row[3]
+        );
+    }
+    println!(
+        "\n(paper Figure 6: FP16 OOMs at batch 4 beyond 4k context; the \
+         int-4/2 cache sustains 32k)"
+    );
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Quickstart: load the AOT artifacts, generate a completion on the
+//! TurboAttention path, and compare it with the exact FlashAttention
+//! baseline on the same prompt.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use anyhow::Result;
+use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
+use turboattention::model::{ByteTokenizer, ModelBundle, Sampler};
+use turboattention::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let tok = ByteTokenizer;
+    let prompt = "the scheduler ";
+    let mut outputs = Vec::new();
+
+    for (name, mode) in [("turbo", PathMode::Turbo), ("flash", PathMode::Flash)] {
+        let rt = Runtime::load("artifacts")?;
+        let cfg = EngineConfig {
+            mode,
+            sampler: Sampler::Greedy,
+            ..Default::default()
+        };
+        let mut engine = Engine::new(ModelBundle::new(rt), cfg);
+        engine.submit(GenRequest::new(1, tok.encode(prompt), 48));
+        let done = engine.run_to_completion()?;
+        let c = &done[0];
+        println!(
+            "[{name}] \"{prompt}{}\"",
+            tok.decode(&c.generated)
+        );
+        println!(
+            "[{name}] ttft {:.0}ms, {:.1}ms/token, cache compression {:.2}x",
+            c.ttft * 1e3,
+            c.tpot * 1e3,
+            engine.metrics.cache_compression.max(1.0)
+        );
+        outputs.push(c.generated.clone());
+    }
+
+    let agree = outputs[0]
+        .iter()
+        .zip(&outputs[1])
+        .filter(|(a, b)| a == b)
+        .count() as f64
+        / outputs[0].len().max(1) as f64;
+    println!(
+        "\ngreedy agreement turbo vs exact: {:.0}% ({} tokens)",
+        agree * 100.0,
+        outputs[0].len()
+    );
+    Ok(())
+}

@@ -1,0 +1,204 @@
+"""AOT compile path: lower every serving entrypoint to HLO **text**.
+
+HLO text — not ``lowered.compile().serialize()`` and not a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+Rust ``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Model weights are baked into the HLO as constants (closure over trained
+params), so the Rust binary is fully self-contained once artifacts exist.
+
+Run: ``cd python && python -m compile.aot --out ../artifacts``
+(idempotent; `make artifacts` wires the dependency tracking).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import train as train_lib
+from .kernels import flash as flash_k
+from .kernels import ref as ref_k
+from .kernels import sas as sas_k
+from .kernels import turbo as turbo_k
+
+# Microbench kernel shapes (standalone attention artifacts for Rust golden
+# tests and benches — independent of the model config).
+MICRO_H, MICRO_N, MICRO_D = 4, 128, 32
+MICRO_BLOCK = 32
+SAS_ROWS, SAS_COLS = 128, 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (gen_hlo.py recipe).
+
+    `as_hlo_text(True)` = print_large_constants: the trained weights are
+    baked into the HLO as constants and the default printer elides
+    anything big as `constant({...})`, which would silently destroy the
+    model on the Rust side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_of(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def build_entrypoints(params, cfg: model_lib.ModelConfig):
+    """(name, fn, arg_specs) for every artifact."""
+    c = cfg.max_ctx
+    l, h, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    nb = cfg.n_cache_blocks
+    i32, f32, i8 = jnp.int32, jnp.float32, jnp.int8
+
+    prefill_turbo = functools.partial(model_lib.prefill_turbo, params, cfg)
+    prefill_flash = functools.partial(model_lib.prefill_flash, params, cfg)
+    decode_turbo = functools.partial(model_lib.decode_turbo, params, cfg)
+    decode_flash = functools.partial(model_lib.decode_flash, params, cfg)
+
+    def attn_turbo_micro(q, k, v):
+        return (
+            turbo_k.turbo_attention(
+                q, k, v, br=MICRO_BLOCK, bc=MICRO_BLOCK, causal=True
+            ),
+        )
+
+    def attn_flash_micro(q, k, v):
+        return (
+            flash_k.flash_attention(
+                q, k, v, br=MICRO_BLOCK, bc=MICRO_BLOCK, causal=True
+            ),
+        )
+
+    def sas_micro(x):
+        return (sas_k.sas_softmax(x, block=MICRO_BLOCK),)
+
+    return [
+        (
+            "prefill_turbo",
+            prefill_turbo,
+            [_spec((c,), i32), _spec((), i32)],
+        ),
+        (
+            "prefill_flash",
+            prefill_flash,
+            [_spec((c,), i32), _spec((), i32)],
+        ),
+        (
+            "decode_turbo",
+            decode_turbo,
+            [
+                _spec((), i32),
+                _spec((), i32),
+                _spec((l, h, c, dh), i8),
+                _spec((l, h, c, dh), i8),
+                _spec((l, h, nb), f32),
+                _spec((l, h, nb), f32),
+                _spec((), i32),
+            ],
+        ),
+        (
+            "decode_flash",
+            decode_flash,
+            [
+                _spec((), i32),
+                _spec((), i32),
+                _spec((l, h, c, dh), f32),
+                _spec((l, h, c, dh), f32),
+                _spec((), i32),
+            ],
+        ),
+        (
+            "attn_turbo_micro",
+            attn_turbo_micro,
+            [_spec((MICRO_H, MICRO_N, MICRO_D), f32)] * 3,
+        ),
+        (
+            "attn_flash_micro",
+            attn_flash_micro,
+            [_spec((MICRO_H, MICRO_N, MICRO_D), f32)] * 3,
+        ),
+        ("sas_micro", sas_micro, [_spec((SAS_ROWS, SAS_COLS), f32)]),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=300)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = model_lib.ModelConfig()
+    params = train_lib.get_params(
+        cfg, cache_path=os.path.join(args.out, "params.npz"),
+        steps=args.train_steps,
+    )
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head,
+            "d_ff": cfg.d_ff,
+            "max_ctx": cfg.max_ctx,
+            "block": cfg.block,
+            "n_r": cfg.n_r,
+            "int8_qmax": ref_k.INT8_QMAX,
+            "sas_poly": list(ref_k.SAS_POLY),
+        },
+        "micro": {
+            "heads": MICRO_H,
+            "seq": MICRO_N,
+            "d_head": MICRO_D,
+            "block": MICRO_BLOCK,
+            "sas_rows": SAS_ROWS,
+            "sas_cols": SAS_COLS,
+        },
+        "artifacts": [],
+    }
+
+    for name, fn, specs in build_entrypoints(params, cfg):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        out_list = list(outs) if isinstance(outs, (tuple, list)) else [outs]
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [_shape_of(s) for s in specs],
+                "outputs": [_shape_of(s) for s in jax.tree_util.tree_leaves(out_list)],
+            }
+        )
+        print(f"[aot] wrote {fname} ({len(text)/1e6:.2f} MB)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Layer-1 FP32 FlashAttention baseline Pallas kernel.
+
+Exact-exp tiled online-softmax attention — the paper's "FlashAttention
+FP16/32" comparator. Structure mirrors turbo.py so the two kernels differ
+only in what TurboAttention changes: tile quantization and SAS.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .sas import NEG_BIG
+
+INTERPRET = True
+
+
+def _flash_kernel(bc: int, causal: bool, q_ref, k_ref, v_ref, nvalid_ref, o_ref):
+    i = pl.program_id(1)
+    q = q_ref[0]
+    br, d = q.shape
+    k_all = k_ref[0]
+    v_all = v_ref[0]
+    nq_valid = nvalid_ref[0]
+    nk_valid = nvalid_ref[1]
+    nk_pad = k_all.shape[0]
+    tc = nk_pad // bc
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qpos = i * br + jax.lax.iota(jnp.int32, br)
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice(k_all, (j * bc, 0), (bc, d))
+        vb = jax.lax.dynamic_slice(v_all, (j * bc, 0), (bc, d))
+        s_ij = jax.lax.dot(q, kb.T, preferred_element_type=jnp.float32) * scale
+        kpos = j * bc + jax.lax.iota(jnp.int32, bc)
+        mask = kpos[None, :] < nk_valid
+        if causal:
+            apos = qpos[:, None] + (nk_valid - nq_valid)
+            mask = jnp.logical_and(mask, kpos[None, :] <= apos)
+        s_ij = jnp.where(mask, s_ij, NEG_BIG)
+        m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+        p = jnp.exp(jnp.maximum(s_ij - m_new[:, None], NEG_BIG))
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(jnp.maximum(m - m_new, NEG_BIG))
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = alpha[:, None] * acc + jax.lax.dot(
+            p, vb, preferred_element_type=jnp.float32
+        )
+        live = (j * bc) < nk_valid
+        m = jnp.where(live, m_new, m)
+        l = jnp.where(live, l_new, l)
+        acc = jnp.where(live, acc_new, acc)
+        return m, l, acc
+
+    m0 = jnp.full((br,), NEG_BIG, jnp.float32)
+    l0 = jnp.zeros((br,), jnp.float32)
+    a0 = jnp.zeros((br, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, tc, body, (m0, l0, a0))
+    o_ref[0] = acc / jnp.maximum(l, 1e-20)[:, None]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    nq_valid: jax.Array | None = None,
+    nk_valid: jax.Array | None = None,
+    *,
+    br: int = ref.DEFAULT_BR,
+    bc: int = ref.DEFAULT_BC,
+    causal: bool = False,
+) -> jax.Array:
+    """Multi-head exact tiled attention over [H, Nq, d] / [H, Nk, d]."""
+    h, nq, d = q.shape
+    nk = k.shape[1]
+    nq_pad = -(-nq // br) * br
+    nk_pad = -(-nk // bc) * bc
+    qp = jnp.pad(q, ((0, 0), (0, nq_pad - nq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk_pad - nk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk_pad - nk), (0, 0)))
+    if nq_valid is None:
+        nq_valid = jnp.int32(nq)
+    if nk_valid is None:
+        nk_valid = jnp.int32(nk)
+    nvalid = jnp.stack(
+        [jnp.asarray(nq_valid, jnp.int32), jnp.asarray(nk_valid, jnp.int32)]
+    )
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bc, causal),
+        grid=(h, nq_pad // br),
+        in_specs=[
+            pl.BlockSpec((1, br, d), lambda hh, ii: (hh, ii, 0)),
+            pl.BlockSpec((1, nk_pad, d), lambda hh, ii: (hh, 0, 0)),
+            pl.BlockSpec((1, nk_pad, d), lambda hh, ii: (hh, 0, 0)),
+            pl.BlockSpec((2,), lambda hh, ii: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((1, br, d), lambda hh, ii: (hh, ii, 0))],
+        out_shape=[jax.ShapeDtypeStruct((h, nq_pad, d), jnp.float32)],
+        interpret=INTERPRET,
+    )(qp, kp, vp, nvalid)[0]
+    return out[:, :nq]

@@ -1,0 +1,127 @@
+"""Layer-1 Pallas quantization kernels (FlashQ building blocks).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that both the
+pytest oracle checks and the Rust runtime can execute. Block shapes are
+still chosen as if targeting TPU VMEM (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True  # CPU PJRT: Mosaic lowering unavailable (see DESIGN.md)
+
+
+def _quant_sym_kernel(x_ref, q_ref, s_ref):
+    """Per-grid-block symmetric INT8 quantization (paper Eq. 9)."""
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x))
+    s = jnp.maximum(amax / ref.INT8_QMAX, 1e-8)
+    q_ref[...] = jnp.clip(jnp.round(x / s), -127.0, 127.0).astype(jnp.int8)
+    s_ref[0] = s
+
+
+def quant_sym_int8_blocked(
+    x: jax.Array, block: int = ref.DEFAULT_BC
+) -> tuple[jax.Array, jax.Array]:
+    """Quantize [n, d] to INT8 with one symmetric scale per row-block.
+
+    Returns (q int8 [n, d], scales f32 [n_blocks]). ``n`` must be a
+    multiple of ``block`` (the caller pads; the KV cache is page-aligned).
+    """
+    n, d = x.shape
+    assert n % block == 0, (n, block)
+    nb = n // block
+    q, s = pl.pallas_call(
+        _quant_sym_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x)
+    return q, s
+
+
+def _quant_asym_kernel(levels: int, q1_ref, q2_ref, s_ref, z_ref):
+    """Channelwise asymmetric INT-k compression of an INT8 block (Eq. 10)."""
+    q1 = q1_ref[...].astype(jnp.int32)
+    cmin = jnp.min(q1, axis=0)
+    cmax = jnp.max(q1, axis=0)
+    s_int = jnp.maximum((cmax - cmin + levels - 1) // levels, 1)
+    z_int = jnp.floor_divide(cmin, s_int)
+    rounded = jnp.floor_divide(2 * q1 + s_int, 2 * s_int)
+    q2_ref[...] = jnp.clip(rounded - z_int, 0, levels).astype(jnp.int8)
+    s_ref[...] = s_int.astype(jnp.int32)[None, :]
+    z_ref[...] = z_int.astype(jnp.int32)[None, :]
+
+
+def quant_asym_blocked(
+    q1: jax.Array, bits: int, block: int = ref.DEFAULT_BC
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Progressive q1->q2 compression, per row-block, channelwise.
+
+    Returns (q2 codes int8 [n, d], s_int int32 [nb, d], z_int int32 [nb, d]).
+    """
+    n, d = q1.shape
+    assert n % block == 0
+    nb = n // block
+    levels = (1 << bits) - 1
+    return pl.pallas_call(
+        functools.partial(_quant_asym_kernel, levels),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.int8),
+            jax.ShapeDtypeStruct((nb, d), jnp.int32),
+            jax.ShapeDtypeStruct((nb, d), jnp.int32),
+        ],
+        interpret=INTERPRET,
+    )(q1)
+
+
+def _dequant_asym_kernel(q2_ref, s_ref, z_ref, q1_ref):
+    """Integer q2 -> q1 decompression (decode Step 2)."""
+    q1 = (q2_ref[...].astype(jnp.int32) + z_ref[...]) * s_ref[...]
+    q1_ref[...] = jnp.clip(q1, -127, 127).astype(jnp.int8)
+
+
+def dequant_asym_blocked(
+    q2: jax.Array,
+    s_int: jax.Array,
+    z_int: jax.Array,
+    block: int = ref.DEFAULT_BC,
+) -> jax.Array:
+    """Inverse of :func:`quant_asym_blocked` back to INT8 (never float)."""
+    n, d = q2.shape
+    nb = n // block
+    return pl.pallas_call(
+        _dequant_asym_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((block, d), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.int8)],
+        interpret=INTERPRET,
+    )(q2, s_int, z_int)[0]

@@ -1,0 +1,406 @@
+"""Pure-jnp reference oracles for every TurboAttention kernel.
+
+These are the CORE correctness signal: each Pallas kernel in this package
+is validated against the matching function here by pytest (with hypothesis
+shape sweeps), and the Rust CPU engine is validated against the same math
+via golden vectors.
+
+Numerics follow the paper exactly:
+  * INT8 symmetric blockwise quantization with scale = max|x| / 119
+    (TurboAttention Algorithm 1; 119 leaves headroom below 127 so the
+    running-rescale in online softmax cannot overflow int8).
+  * Progressive asymmetric INT4/INT2 channelwise-group compression of the
+    INT8 tensors, with INT8 integer scale/zero-point (paper Eq. 7/8 and
+    Algorithm 1 write-back step).
+  * SAS: e^{-t} = LUT(t_int) * POLY(t_dec), cubic least-squares POLY on
+    [0,1) (paper Eq. 15), sparsity threshold n_r (paper Eq. 14).
+  * Algorithm 1 (prefill) / Algorithm 2 (decode) fused dataflow with
+    online softmax.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Paper constants
+# --------------------------------------------------------------------------
+
+#: Symmetric INT8 range used by TurboAttention (max|x| maps to 119).
+INT8_QMAX = 119.0
+
+#: SAS cubic polynomial coefficients for e^{-x} on [0, 1) — paper Eq. 15.
+SAS_POLY = (-0.1025, 0.4626, -0.9922, 0.9996)
+
+#: SAS sparsity threshold: scores below n_r (after max-subtraction) -> 0.
+SAS_NR = -6.0
+
+#: Default FlashAttention tile sizes (B_r, B_c) — paper §5.2 uses 64.
+DEFAULT_BR = 64
+DEFAULT_BC = 64
+
+
+# --------------------------------------------------------------------------
+# Quantization primitives
+# --------------------------------------------------------------------------
+
+
+def quant_sym_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric INT8 quantization: q = round(x/s), s = max|x|/119.
+
+    Returns (q int8, s f32 scalar). The caller decides block granularity by
+    what it passes in (a FlashAttention tile in Algorithm 1).
+    """
+    amax = jnp.max(jnp.abs(x))
+    s = jnp.maximum(amax / INT8_QMAX, 1e-8).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / s), -127.0, 127.0).astype(jnp.int8)
+    return q, s
+
+
+def dequant_sym_int8(q: jax.Array, s: jax.Array) -> jax.Array:
+    """Inverse of :func:`quant_sym_int8`."""
+    return q.astype(jnp.float32) * s
+
+
+def quant_asym_int(
+    q1: jax.Array, bits: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Progressive step: asymmetric INT4/INT2 compression of an INT8 tensor.
+
+    Channelwise (axis 0 = tokens, axis 1 = channels): each channel of the
+    q1 (int8) block gets an integer scale and zero point, themselves
+    representable in INT8 (paper Eq. 7/8).
+
+        s_int = max(1, ceil((max - min) / (2^bits - 1)))   (int)
+        z_int = floor(min / s_int)                          (int)
+        q2    = clip(round(q1 / s_int) - z_int, 0, 2^bits-1)
+
+    Dequantization (pure integer, the decode hot path):
+
+        q1' = (q2 + z_int) * s_int
+
+    Returns (q2 int8-held codes in [0, 2^bits-1], s_int int32 per channel,
+    z_int int32 per channel).
+    """
+    assert bits in (2, 3, 4), bits
+    levels = (1 << bits) - 1
+    q1i = q1.astype(jnp.int32)
+    cmin = jnp.min(q1i, axis=0)
+    cmax = jnp.max(q1i, axis=0)
+    s_int = jnp.maximum((cmax - cmin + levels - 1) // levels, 1)
+    z_int = jnp.floor_divide(cmin, s_int)
+    # Round-to-nearest in integer arithmetic, valid for signed q1:
+    # floor((2*q1 + s) / (2*s)).
+    rounded = jnp.floor_divide(2 * q1i + s_int, 2 * s_int)
+    q2 = jnp.clip(rounded - z_int, 0, levels)
+    return q2.astype(jnp.int8), s_int.astype(jnp.int32), z_int.astype(jnp.int32)
+
+
+def dequant_asym_int(
+    q2: jax.Array, s_int: jax.Array, z_int: jax.Array
+) -> jax.Array:
+    """Integer q2 -> q1 dequantization (paper Algorithm 2, Step 2)."""
+    q1 = (q2.astype(jnp.int32) + z_int) * s_int
+    return jnp.clip(q1, -127, 127).astype(jnp.int8)
+
+
+def progressive_quant(
+    x: jax.Array, bits: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Full BPQ pipeline float -> (q2, s_int, z_int, s_fp)."""
+    q1, s_fp = quant_sym_int8(x)
+    q2, s_int, z_int = quant_asym_int(q1, bits)
+    return q2, s_int, z_int, s_fp
+
+
+def progressive_dequant(
+    q2: jax.Array, s_int: jax.Array, z_int: jax.Array, s_fp: jax.Array
+) -> jax.Array:
+    """Full inverse of :func:`progressive_quant` (to float, for oracles)."""
+    return dequant_asym_int(q2, s_int, z_int).astype(jnp.float32) * s_fp
+
+
+def quant_asym_float_grouped(
+    x: jax.Array, bits: int, group: int, axis: int
+) -> jax.Array:
+    """KIVI-style fake-quant: asymmetric float-scale group quantization.
+
+    Used by the KIVI/GEAR baselines. ``axis`` is the dimension along which
+    groups of size ``group`` share a scale (0 = per-channel groups down the
+    token axis, 1 = per-token groups across channels). Returns the
+    dequantized tensor (fake quant) — baselines decompress to float before
+    attention, which is exactly the overhead TurboAttention removes.
+    """
+    assert x.ndim == 2
+    levels = (1 << bits) - 1
+    moved = jnp.moveaxis(x, axis, 0)  # group axis first
+    n = moved.shape[0]
+    pad = (-n) % group
+    padded = jnp.pad(moved, ((0, pad), (0, 0)), constant_values=0.0)
+    g = padded.reshape(-1, group, padded.shape[1])
+    gmin = jnp.min(g, axis=1, keepdims=True)
+    gmax = jnp.max(g, axis=1, keepdims=True)
+    scale = jnp.maximum((gmax - gmin) / levels, 1e-8)
+    q = jnp.clip(jnp.round((g - gmin) / scale), 0, levels)
+    deq = q * scale + gmin
+    deq = deq.reshape(padded.shape)[:n]
+    return jnp.moveaxis(deq, 0, axis)
+
+
+# --------------------------------------------------------------------------
+# SAS: Sparse Activated Softmax
+# --------------------------------------------------------------------------
+
+
+def sas_lut(n_r: float = SAS_NR) -> jax.Array:
+    """Lookup table LUT[i] = e^{-i} for i = 0..|n_r|, with a trailing 0."""
+    depth = int(-n_r)
+    idx = jnp.arange(depth + 2, dtype=jnp.float32)
+    lut = jnp.exp(-idx)
+    return lut.at[depth + 1].set(0.0)
+
+
+def sas_poly(t: jax.Array) -> jax.Array:
+    """Cubic approximation of e^{-t} for t in [0, 1) — paper Eq. 15."""
+    c3, c2, c1, c0 = SAS_POLY
+    return ((c3 * t + c2) * t + c1) * t + c0
+
+
+def sas_exp(x: jax.Array, n_r: float = SAS_NR) -> jax.Array:
+    """SAS approximation of e^{x} for x <= 0 (paper Eq. 13/14).
+
+    Scores below the sparsity threshold n_r return exactly 0.
+    """
+    t = -x  # t >= 0
+    depth = int(-n_r)
+    t_int = jnp.floor(t)
+    t_dec = t - t_int
+    lut = sas_lut(n_r)
+    idx = jnp.clip(t_int, 0, depth + 1).astype(jnp.int32)
+    val = lut[idx] * sas_poly(t_dec)
+    return jnp.where(x < n_r, 0.0, val)
+
+
+def sas_softmax(x: jax.Array, n_r: float = SAS_NR) -> jax.Array:
+    """Row-wise SAS softmax (paper Algorithm 3)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = sas_exp(x - m, n_r)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-20)
+
+
+# --------------------------------------------------------------------------
+# Attention references
+# --------------------------------------------------------------------------
+
+
+def attention_exact(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = False
+) -> jax.Array:
+    """Exact softmax attention over a single head: [Nq,d],[Nk,d],[Nk,d]."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        nq, nk = s.shape
+        # Row i of q corresponds to absolute position (nk - nq + i).
+        qpos = jnp.arange(nq)[:, None] + (nk - nq)
+        kpos = jnp.arange(nk)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v
+
+
+def _blocks(n: int, b: int) -> int:
+    return (n + b - 1) // b
+
+
+def turbo_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    br: int = DEFAULT_BR,
+    bc: int = DEFAULT_BC,
+    n_r: float = SAS_NR,
+    causal: bool = False,
+    kv_bits: int | None = None,
+) -> jax.Array:
+    """Reference implementation of TurboAttention prefill (Algorithm 1).
+
+    Single head. Blocked online softmax where every matmul runs over
+    INT8-quantized tiles and every exponentiation goes through SAS.
+    If ``kv_bits`` is 2/3/4, K and V tiles are additionally round-tripped
+    through progressive quantization before use, so tests can measure the
+    full-pipeline (q2-cache) error that decode sees.
+    """
+    nq, d = q.shape
+    nk = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    tr, tc = _blocks(nq, br), _blocks(nk, bc)
+    out = jnp.zeros((nq, d), jnp.float32)
+    for i in range(tr):
+        q_blk = q[i * br : (i + 1) * br]
+        rb = q_blk.shape[0]
+        q8, sq = quant_sym_int8(q_blk)
+        m = jnp.full((rb,), -jnp.inf, jnp.float32)
+        l = jnp.zeros((rb,), jnp.float32)
+        acc = jnp.zeros((rb, d), jnp.float32)
+        for j in range(tc):
+            k_blk = k[j * bc : (j + 1) * bc]
+            v_blk = v[j * bc : (j + 1) * bc]
+            if kv_bits is not None:
+                k_blk = progressive_dequant(*progressive_quant(k_blk, kv_bits))
+                v_blk = progressive_dequant(*progressive_quant(v_blk, kv_bits))
+            k8, sk = quant_sym_int8(k_blk)
+            v8, sv = quant_sym_int8(v_blk)
+            s_ij = (
+                jnp.dot(q8.astype(jnp.int32), k8.astype(jnp.int32).T).astype(
+                    jnp.float32
+                )
+                * sq
+                * sk
+                * scale
+            )
+            if causal:
+                qpos = jnp.arange(i * br, i * br + rb)[:, None] + (nk - nq)
+                kpos = jnp.arange(j * bc, j * bc + k_blk.shape[0])[None, :]
+                s_ij = jnp.where(kpos <= qpos, s_ij, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+            # Guard fully-masked rows: keep m finite for the SAS argument.
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = sas_exp(
+                jnp.where(jnp.isfinite(s_ij), s_ij - m_safe[:, None], -jnp.inf),
+                n_r,
+            )
+            alpha = sas_exp(
+                jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf), n_r
+            )
+            l = alpha * l + jnp.sum(p, axis=-1)
+            p8, sp = quant_sym_int8(p)
+            pv = (
+                jnp.dot(p8.astype(jnp.int32), v8.astype(jnp.int32)).astype(
+                    jnp.float32
+                )
+                * sp
+                * sv
+            )
+            acc = alpha[:, None] * acc + pv
+            m = m_new
+        out = out.at[i * br : i * br + rb].set(
+            acc / jnp.maximum(l, 1e-20)[:, None]
+        )
+    return out
+
+
+def turbo_decode_ref(
+    q: jax.Array,
+    k8: jax.Array,
+    v8: jax.Array,
+    sk: jax.Array,
+    sv: jax.Array,
+    *,
+    bc: int = DEFAULT_BC,
+    n_r: float = SAS_NR,
+) -> jax.Array:
+    """Reference TurboAttention decode (Algorithm 2), single head.
+
+    ``k8``/``v8`` are the INT8 (q1-level) cache produced by the Rust side's
+    q2->q1 integer dequantization; ``sk``/``sv`` are the per-block FP scales
+    from the original symmetric step, shape [n_blocks].
+    """
+    (d,) = q.shape
+    nk = k8.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    tc = _blocks(nk, bc)
+    q8, sq = quant_sym_int8(q)
+    m = jnp.float32(-jnp.inf)
+    l = jnp.float32(0.0)
+    acc = jnp.zeros((d,), jnp.float32)
+    for j in range(tc):
+        kb = k8[j * bc : (j + 1) * bc].astype(jnp.int32)
+        vb = v8[j * bc : (j + 1) * bc].astype(jnp.int32)
+        s_j = (
+            jnp.dot(q8.astype(jnp.int32), kb.T).astype(jnp.float32)
+            * sq
+            * sk[j]
+            * scale
+        )
+        m_new = jnp.maximum(m, jnp.max(s_j))
+        p = sas_exp(s_j - m_new, n_r)
+        alpha = sas_exp(jnp.where(jnp.isfinite(m), m - m_new, -jnp.inf), n_r)
+        l = alpha * l + jnp.sum(p)
+        p8, sp = quant_sym_int8(p)
+        pv = jnp.dot(p8.astype(jnp.int32), vb).astype(jnp.float32) * sp * sv[j]
+        acc = alpha * acc + pv
+        m = m_new
+    return acc / jnp.maximum(l, 1e-20)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    br: int = DEFAULT_BR,
+    bc: int = DEFAULT_BC,
+    causal: bool = False,
+) -> jax.Array:
+    """FP32 tiled FlashAttention (exact exp) — the paper's baseline."""
+    nq, d = q.shape
+    nk = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    tr, tc = _blocks(nq, br), _blocks(nk, bc)
+    out = jnp.zeros((nq, d), jnp.float32)
+    for i in range(tr):
+        q_blk = q[i * br : (i + 1) * br]
+        rb = q_blk.shape[0]
+        m = jnp.full((rb,), -jnp.inf, jnp.float32)
+        l = jnp.zeros((rb,), jnp.float32)
+        acc = jnp.zeros((rb, d), jnp.float32)
+        for j in range(tc):
+            k_blk = k[j * bc : (j + 1) * bc]
+            v_blk = v[j * bc : (j + 1) * bc]
+            s_ij = (q_blk @ k_blk.T) * scale
+            if causal:
+                qpos = jnp.arange(i * br, i * br + rb)[:, None] + (nk - nq)
+                kpos = jnp.arange(j * bc, j * bc + k_blk.shape[0])[None, :]
+                s_ij = jnp.where(kpos <= qpos, s_ij, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(
+                jnp.isfinite(s_ij), jnp.exp(s_ij - m_safe[:, None]), 0.0
+            )
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = alpha * l + jnp.sum(p, axis=-1)
+            acc = alpha[:, None] * acc + p @ v_blk
+            m = m_new
+        out = out.at[i * br : i * br + rb].set(
+            acc / jnp.maximum(l, 1e-20)[:, None]
+        )
+    return out
+
+
+# --------------------------------------------------------------------------
+# Headwise mixed precision (paper §3.2)
+# --------------------------------------------------------------------------
+
+
+def head_priority(kv: jax.Array) -> jax.Array:
+    """priority^(h) = gap^(h) * std^(h) over a [H, N, d] K (or V) tensor.
+
+    gap  = max-min range across all channels of the head,
+    std  = standard deviation of the per-channel gaps.
+    """
+    cmax = jnp.max(kv, axis=1)  # [H, d]
+    cmin = jnp.min(kv, axis=1)
+    gaps = cmax - cmin  # per-channel gap, [H, d]
+    gap = jnp.max(cmax, axis=-1) - jnp.min(cmin, axis=-1)  # [H]
+    std = jnp.std(gaps, axis=-1)
+    return gap * std
+
+
+def select_2bit_heads(priority: jax.Array, n_h: int) -> jax.Array:
+    """Boolean mask of heads assigned 2-bit (the n_h lowest-priority)."""
+    order = jnp.argsort(priority)
+    mask = jnp.zeros(priority.shape, bool)
+    return mask.at[order[:n_h]].set(True)

@@ -1,0 +1,68 @@
+"""Layer-1 Pallas kernel for SAS (Sparse Activated Softmax).
+
+Implements paper Algorithm 3: rowwise max-subtraction, sparsity threshold
+n_r, then e^{-t} = LUT(t_int) * POLY(t_dec) with the cubic from Eq. 15,
+and rowwise renormalization. The LUT is tiny (|n_r|+2 entries) because the
+sparsity threshold bounds the integer part — that is the "sparse" in SAS.
+
+On TPU this evaluates entirely in the VPU in low precision with no
+transcendental-unit round trip; interpret=True here for CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True
+
+#: Finite stand-in for -inf inside kernels (avoids inf arithmetic).
+NEG_BIG = -1e9
+
+
+def sas_exp_inline(x: jax.Array, lut: jax.Array, n_r: float) -> jax.Array:
+    """SAS e^{x} for x <= 0, usable inside a Pallas kernel body.
+
+    ``lut`` must be :func:`ref.sas_lut`(n_r) passed in as a kernel operand
+    (on TPU it lives in SMEM; the poly runs vectorized in the VPU).
+    """
+    depth = int(-n_r)
+    t = -x
+    t_int = jnp.floor(t)
+    t_dec = t - t_int
+    idx = jnp.clip(t_int, 0.0, float(depth + 1)).astype(jnp.int32)
+    val = lut[idx] * ref.sas_poly(t_dec)
+    return jnp.where(x < n_r, 0.0, val)
+
+
+def _sas_softmax_kernel(n_r: float, x_ref, lut_ref, o_ref):
+    x = x_ref[...]
+    lut = lut_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = sas_exp_inline(x - m, lut, n_r)
+    o_ref[...] = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-20)
+
+
+def sas_softmax(
+    x: jax.Array, block: int = ref.DEFAULT_BR, n_r: float = ref.SAS_NR
+) -> jax.Array:
+    """Row-blocked SAS softmax over a [n, m] score matrix."""
+    n, mdim = x.shape
+    assert n % block == 0, (n, block)
+    lut = ref.sas_lut(n_r)
+    return pl.pallas_call(
+        functools.partial(_sas_softmax_kernel, n_r),
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, mdim), lambda i: (i, 0)),
+            pl.BlockSpec((lut.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((block, mdim), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, mdim), jnp.float32)],
+        interpret=INTERPRET,
+    )(x, lut)[0]

@@ -1,0 +1,275 @@
+"""Layer-1 fused TurboAttention Pallas kernels (paper Algorithms 1 and 2).
+
+Prefill: grid over (head, q-block); each grid step quantizes its Q tile to
+INT8 symmetric, then streams K/V tiles through INT8 quantization, an
+INT8xINT8->INT32 score matmul, SAS online softmax, INT8 P quantization and
+an INT8 PV matmul, maintaining FlashAttention's running (m, l, acc) state.
+
+Decode: grid over heads; the K/V cache arrives already at q1 level (INT8 +
+per-block FP scales) — the Rust side performs the integer q2->q1
+decompression (paper decode Step 2) before invoking this kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the kv loop here is
+a `fori_loop` over dynamic slices of a whole-head VMEM block; on a real TPU
+it becomes a third grid dimension with (m, l, acc) in VMEM scratch, and the
+INT8 dots target the MXU via preferred_element_type=int32. interpret=True
+throughout: CPU PJRT cannot run Mosaic custom-calls.
+
+NOTE on jit: these wrappers are deliberately *not* jitted at definition.
+When the whole wrapper is jitted with a **constant** nk_valid, XLA CPU's
+constant folding of the interpret-mode kernel produces wrong masking for
+padded tails (jax 0.8.2; adding a debug print makes it vanish). The AOT
+artifacts always pass nq_valid/nk_valid as *traced* runtime scalars, which
+compiles correctly — test_attention_kernels.py has a regression test
+pinning the traced-jit == eager behaviour.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .sas import NEG_BIG, sas_exp_inline
+
+INTERPRET = True
+
+
+def _quant_tile(x):
+    """Symmetric INT8 tile quantization, kernel-inline (Algorithm 1)."""
+    amax = jnp.max(jnp.abs(x))
+    s = jnp.maximum(amax / ref.INT8_QMAX, 1e-8)
+    q = jnp.clip(jnp.round(x / s), -127.0, 127.0).astype(jnp.int8)
+    return q, s
+
+
+def _idot(a, b):
+    """INT8 x INT8 -> INT32 dot (MXU path on TPU; numpy under interpret)."""
+    return jax.lax.dot(
+        a.astype(jnp.int32),
+        b.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _turbo_prefill_kernel(
+    bc: int, n_r: float, causal: bool,
+    q_ref, k_ref, v_ref, lut_ref, nvalid_ref, o_ref,
+):
+    i = pl.program_id(1)
+    q = q_ref[0]  # [br, d]
+    br, d = q.shape
+    k_all = k_ref[0]  # [nk_pad, d]
+    v_all = v_ref[0]
+    lut = lut_ref[...]
+    nq_valid = nvalid_ref[0]
+    nk_valid = nvalid_ref[1]
+    nk_pad = k_all.shape[0]
+    tc = nk_pad // bc
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    q8, sq = _quant_tile(q)
+    q8i = q8.astype(jnp.int32)
+    qpos = i * br + jax.lax.iota(jnp.int32, br)  # absolute q row index
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice(k_all, (j * bc, 0), (bc, d))
+        vb = jax.lax.dynamic_slice(v_all, (j * bc, 0), (bc, d))
+        k8, sk = _quant_tile(kb)
+        v8, sv = _quant_tile(vb)
+        s_ij = (
+            _idot(q8i, k8.astype(jnp.int32).T).astype(jnp.float32)
+            * (sq * sk * scale)
+        )
+        kpos = j * bc + jax.lax.iota(jnp.int32, bc)
+        mask = kpos[None, :] < nk_valid
+        if causal:
+            # q row r is absolute position (nk_valid - nq_valid + qpos[r]).
+            apos = qpos[:, None] + (nk_valid - nq_valid)
+            mask = jnp.logical_and(mask, kpos[None, :] <= apos)
+        s_ij = jnp.where(mask, s_ij, NEG_BIG)
+        m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+        p = sas_exp_inline(s_ij - m_new[:, None], lut, n_r)
+        alpha = sas_exp_inline(m - m_new, lut, n_r)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        p8, sp = _quant_tile(p)
+        pv = (
+            _idot(p8.astype(jnp.int32), v8.astype(jnp.int32)).astype(
+                jnp.float32
+            )
+            * (sp * sv)
+        )
+        acc_new = alpha[:, None] * acc + pv
+        # Blocks entirely past the valid length must not touch the state
+        # (the SAS rescale of a no-op block is 0.9996, not exactly 1).
+        live = (j * bc) < nk_valid
+        m = jnp.where(live, m_new, m)
+        l = jnp.where(live, l_new, l)
+        acc = jnp.where(live, acc_new, acc)
+        return m, l, acc
+
+    m0 = jnp.full((br,), NEG_BIG, jnp.float32)
+    l0 = jnp.zeros((br,), jnp.float32)
+    a0 = jnp.zeros((br, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, tc, body, (m0, l0, a0))
+    o_ref[0] = acc / jnp.maximum(l, 1e-20)[:, None]
+
+
+def turbo_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    nq_valid: jax.Array | None = None,
+    nk_valid: jax.Array | None = None,
+    *,
+    br: int = ref.DEFAULT_BR,
+    bc: int = ref.DEFAULT_BC,
+    n_r: float = ref.SAS_NR,
+    causal: bool = False,
+) -> jax.Array:
+    """Multi-head fused TurboAttention prefill over [H, Nq, d] / [H, Nk, d].
+
+    Pads sequence dims to tile multiples internally; returns [H, Nq, d].
+    ``nq_valid``/``nk_valid`` may be traced i32 scalars so one compiled
+    executable serves every sequence length up to the padded shape.
+    """
+    h, nq, d = q.shape
+    nk = k.shape[1]
+    nq_pad = -(-nq // br) * br
+    nk_pad = -(-nk // bc) * bc
+    qp = jnp.pad(q, ((0, 0), (0, nq_pad - nq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk_pad - nk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk_pad - nk), (0, 0)))
+    lut = ref.sas_lut(n_r)
+    if nq_valid is None:
+        nq_valid = jnp.int32(nq)
+    if nk_valid is None:
+        nk_valid = jnp.int32(nk)
+    nvalid = jnp.stack(
+        [jnp.asarray(nq_valid, jnp.int32), jnp.asarray(nk_valid, jnp.int32)]
+    )
+    out = pl.pallas_call(
+        functools.partial(_turbo_prefill_kernel, bc, n_r, causal),
+        grid=(h, nq_pad // br),
+        in_specs=[
+            pl.BlockSpec((1, br, d), lambda hh, ii: (hh, ii, 0)),
+            pl.BlockSpec((1, nk_pad, d), lambda hh, ii: (hh, 0, 0)),
+            pl.BlockSpec((1, nk_pad, d), lambda hh, ii: (hh, 0, 0)),
+            pl.BlockSpec((lut.shape[0],), lambda hh, ii: (0,)),
+            pl.BlockSpec((2,), lambda hh, ii: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((1, br, d), lambda hh, ii: (hh, ii, 0))],
+        out_shape=[jax.ShapeDtypeStruct((h, nq_pad, d), jnp.float32)],
+        interpret=INTERPRET,
+    )(qp, kp, vp, lut, nvalid)[0]
+    return out[:, :nq]
+
+
+def _turbo_decode_kernel(
+    bc: int, n_r: float,
+    q_ref, k8_ref, v8_ref, sk_ref, sv_ref, lut_ref, nvalid_ref,
+    o_ref, m_ref, l_ref,
+):
+    q = q_ref[0]  # [d]
+    d = q.shape[0]
+    k8 = k8_ref[0]  # [nk_pad, d] int8 (q1 level)
+    v8 = v8_ref[0]
+    sk = sk_ref[0]  # [tc] per-block fp scales
+    sv = sv_ref[0]
+    lut = lut_ref[...]
+    nk_valid = nvalid_ref[0]
+    nk_pad = k8.shape[0]
+    tc = nk_pad // bc
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    q8, sq = _quant_tile(q)
+    q8i = q8.astype(jnp.int32)[None, :]  # [1, d]
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice(k8, (j * bc, 0), (bc, d)).astype(jnp.int32)
+        vb = jax.lax.dynamic_slice(v8, (j * bc, 0), (bc, d)).astype(jnp.int32)
+        s_j = (
+            _idot(q8i, kb.T).astype(jnp.float32)[0] * (sq * sk[j] * scale)
+        )
+        kpos = j * bc + jax.lax.iota(jnp.int32, bc)
+        s_j = jnp.where(kpos < nk_valid, s_j, NEG_BIG)
+        m_new = jnp.maximum(m, jnp.max(s_j))
+        p = sas_exp_inline(s_j - m_new, lut, n_r)
+        alpha = sas_exp_inline(m - m_new, lut, n_r)
+        l_new = alpha * l + jnp.sum(p)
+        p8, sp = _quant_tile(p)
+        pv = (
+            _idot(p8.astype(jnp.int32)[None, :], vb).astype(jnp.float32)[0]
+            * (sp * sv[j])
+        )
+        acc_new = alpha * acc + pv
+        live = (j * bc) < nk_valid
+        m = jnp.where(live, m_new, m)
+        l = jnp.where(live, l_new, l)
+        acc = jnp.where(live, acc_new, acc)
+        return m, l, acc
+
+    m0 = jnp.float32(NEG_BIG)
+    l0 = jnp.float32(0.0)
+    a0 = jnp.zeros((d,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, tc, body, (m0, l0, a0))
+    o_ref[0] = acc / jnp.maximum(l, 1e-20)
+    m_ref[0] = m
+    l_ref[0] = l
+
+
+def turbo_decode(
+    q: jax.Array,
+    k8: jax.Array,
+    v8: jax.Array,
+    sk: jax.Array,
+    sv: jax.Array,
+    nk_valid: jax.Array,
+    *,
+    bc: int = ref.DEFAULT_BC,
+    n_r: float = ref.SAS_NR,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Multi-head TurboAttention decode step (Algorithm 2).
+
+    q [H, d] float; k8/v8 [H, nk_pad, d] int8 (q1 cache, page-aligned);
+    sk/sv [H, tc] per-block scales; nk_valid traced scalar — the same
+    compiled executable serves every context length up to nk_pad.
+
+    Returns (out [H, d], m [H], l [H]): the un-merged online-softmax state
+    so the caller can fold in tokens that are not yet in the INT8 cache
+    (the model's current token — see model.py decode path).
+    """
+    h, nk_pad, d = k8.shape
+    tc = nk_pad // bc
+    lut = ref.sas_lut(n_r)
+    nvalid = jnp.reshape(nk_valid.astype(jnp.int32), (1,))
+    out, m, l = pl.pallas_call(
+        functools.partial(_turbo_decode_kernel, bc, n_r),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda hh: (hh, 0)),
+            pl.BlockSpec((1, nk_pad, d), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((1, nk_pad, d), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((1, tc), lambda hh: (hh, 0)),
+            pl.BlockSpec((1, tc), lambda hh: (hh, 0)),
+            pl.BlockSpec((lut.shape[0],), lambda hh: (0,)),
+            pl.BlockSpec((1,), lambda hh: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda hh: (hh, 0)),
+            pl.BlockSpec((1,), lambda hh: (hh,)),
+            pl.BlockSpec((1,), lambda hh: (hh,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, d), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(q, k8, v8, sk, sv, lut, nvalid)
+    return out, m, l

@@ -1,0 +1,310 @@
+"""Layer-2 JAX model: a byte-level transformer LM whose attention runs
+through the Layer-1 TurboAttention kernels.
+
+Three attention paths share the same weights:
+  * ``exact``  — plain jnp softmax attention (training + oracle).
+  * ``flash``  — FP32 tiled FlashAttention Pallas kernel (paper baseline).
+  * ``turbo``  — fused quantized TurboAttention Pallas kernel.
+
+The decode path mirrors the paper's serving split: the Rust coordinator
+owns the quantized (q2) KV store and the enhanced INT8 buffer; this module
+consumes the q1-level cache (INT8 + per-block scales) the coordinator
+reconstructs, and returns the new token's float K/V for the coordinator to
+quantize into the buffer. The current token participates in attention via
+an online-softmax merge with the kernel's (m, l) state, so it never needs
+to round-trip through the cache within a step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash as flash_k
+from .kernels import ref as ref_k
+from .kernels import turbo as turbo_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + tiling for the tiny serving model."""
+
+    vocab: int = 256  # byte-level
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256
+    max_ctx: int = 288  # prefill pad + decode headroom
+    block: int = 32  # B_r = B_c (paper §5.2 uses 64; scaled to model)
+    n_r: float = ref_k.SAS_NR
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_cache_blocks(self) -> int:
+        assert self.max_ctx % self.block == 0
+        return self.max_ctx // self.block
+
+
+Params = dict[str, Any]
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Initialize LM parameters (scaled-normal, GPT-2-style)."""
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+
+    def norm(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    d, h, f = cfg.d_model, cfg.n_heads, cfg.d_ff
+    params: Params = {
+        "tok_emb": norm(next(keys), (cfg.vocab, d), 0.02),
+        "pos_emb": norm(next(keys), (cfg.max_ctx, d), 0.02),
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "head": norm(next(keys), (d, cfg.vocab), 0.02),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "wq": norm(next(keys), (d, d), 0.02),
+                "wk": norm(next(keys), (d, d), 0.02),
+                "wv": norm(next(keys), (d, d), 0.02),
+                "wo": norm(next(keys), (d, d), 0.02 / (2 * cfg.n_layers) ** 0.5),
+                "w1": norm(next(keys), (d, f), 0.02),
+                "b1": jnp.zeros((f,)),
+                "w2": norm(next(keys), (f, d), 0.02 / (2 * cfg.n_layers) ** 0.5),
+                "b2": jnp.zeros((d,)),
+            }
+        )
+    return params
+
+
+def layer_norm(x: jax.Array, p: Params) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+def _split_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[S, d_model] -> [H, S, d_head]."""
+    s = x.shape[0]
+    return x.reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+
+
+def _merge_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[H, S, d_head] -> [S, d_model]."""
+    return x.transpose(1, 0, 2).reshape(x.shape[1], cfg.d_model)
+
+
+def _attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cfg: ModelConfig,
+    mode: str,
+    nvalid: jax.Array | None,
+) -> jax.Array:
+    """Dispatch [H, S, dh] attention to the selected path (causal)."""
+    if mode == "exact":
+        outs = jax.vmap(
+            lambda qq, kk, vv: ref_k.attention_exact(qq, kk, vv, causal=True)
+        )(q, k, v)
+        return outs
+    if mode == "flash":
+        return flash_k.flash_attention(
+            q, k, v, nvalid, nvalid, br=cfg.block, bc=cfg.block, causal=True
+        )
+    if mode == "turbo":
+        return turbo_k.turbo_attention(
+            q, k, v, nvalid, nvalid,
+            br=cfg.block, bc=cfg.block, n_r=cfg.n_r, causal=True,
+        )
+    raise ValueError(mode)
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str = "exact",
+    nvalid: jax.Array | None = None,
+    return_kv: bool = False,
+):
+    """Full-sequence forward pass. tokens [S] int32 -> logits [S, vocab].
+
+    With ``return_kv``, also returns per-layer float K/V [L, H, S, dh]
+    (the prefill cache before quantization).
+    """
+    s = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s]
+    kvs = []
+    for lp in params["layers"]:
+        h_in = layer_norm(x, lp["ln1"])
+        q = _split_heads(h_in @ lp["wq"], cfg)
+        k = _split_heads(h_in @ lp["wk"], cfg)
+        v = _split_heads(h_in @ lp["wv"], cfg)
+        attn = _attention(q, k, v, cfg, mode, nvalid)
+        x = x + _merge_heads(attn, cfg) @ lp["wo"]
+        h2 = layer_norm(x, lp["ln2"])
+        x = x + (jax.nn.gelu(h2 @ lp["w1"] + lp["b1"])) @ lp["w2"] + lp["b2"]
+        if return_kv:
+            kvs.append((k, v))
+    logits = layer_norm(x, params["ln_f"]) @ params["head"]
+    if return_kv:
+        ks = jnp.stack([k for k, _ in kvs])  # [L, H, S, dh]
+        vs = jnp.stack([v for _, v in kvs])
+        return logits, ks, vs
+    return logits
+
+
+def forward_batch(params: Params, tokens: jax.Array, cfg: ModelConfig):
+    """Training helper: [B, S] -> [B, S, vocab] with exact attention."""
+    return jax.vmap(lambda t: forward(params, t, cfg, mode="exact"))(tokens)
+
+
+# --------------------------------------------------------------------------
+# AOT entrypoints
+# --------------------------------------------------------------------------
+
+
+def _quant_cache_blocked(kv: jax.Array, block: int):
+    """Quantize a [L, H, S, dh] float cache to q1: int8 + per-block scales.
+
+    Returns (q8 [L,H,S,dh] i8, scales [L,H,S/block] f32). Matches paper
+    Algorithm 1's symmetric per-tile step; the further q2 compression is
+    the Rust coordinator's job (per-head mixed precision lives there).
+    """
+    l, h, s, dh = kv.shape
+    nb = s // block
+    blocks = kv.reshape(l, h, nb, block, dh)
+    amax = jnp.max(jnp.abs(blocks), axis=(3, 4))
+    scales = jnp.maximum(amax / ref_k.INT8_QMAX, 1e-8)
+    q = jnp.clip(
+        jnp.round(blocks / scales[..., None, None]), -127.0, 127.0
+    ).astype(jnp.int8)
+    return q.reshape(l, h, s, dh), scales.astype(jnp.float32)
+
+
+def prefill_turbo(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  nvalid: jax.Array):
+    """AOT prefill (turbo path): tokens [max_ctx] i32, nvalid i32 scalar.
+
+    Returns (logits [max_ctx, vocab], k8, v8 [L,H,max_ctx,dh] i8,
+    sk, sv [L,H,max_ctx/block] f32).
+    """
+    logits, ks, vs = forward(
+        params, tokens, cfg, mode="turbo", nvalid=nvalid, return_kv=True
+    )
+    k8, sk = _quant_cache_blocked(ks, cfg.block)
+    v8, sv = _quant_cache_blocked(vs, cfg.block)
+    return logits, k8, v8, sk, sv
+
+
+def prefill_flash(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  nvalid: jax.Array):
+    """AOT prefill (exact baseline): float K/V cache out."""
+    logits, ks, vs = forward(
+        params, tokens, cfg, mode="flash", nvalid=nvalid, return_kv=True
+    )
+    return logits, ks, vs
+
+
+def _sas_merge_token(out, m, l, s_new, v_new, n_r):
+    """Online-softmax merge of one extra (current-token) score column.
+
+    out/m/l: [H, dh], [H], [H] from turbo_decode; s_new [H]; v_new [H, dh].
+    """
+    m_tot = jnp.maximum(m, s_new)
+    alpha = ref_k.sas_exp(m - m_tot, n_r)  # rescale cached part
+    p_new = ref_k.sas_exp(s_new - m_tot, n_r)
+    l_tot = alpha * l + p_new
+    merged = (alpha * l)[:, None] * out + p_new[:, None] * v_new
+    return merged / jnp.maximum(l_tot, 1e-20)[:, None]
+
+
+def decode_turbo(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,      # i32 scalar — token to embed
+    pos: jax.Array,        # i32 scalar — its absolute position
+    k8: jax.Array,         # [L, H, max_ctx, dh] i8 (q1 cache from Rust)
+    v8: jax.Array,
+    sk: jax.Array,         # [L, H, max_ctx/block] f32
+    sv: jax.Array,
+    nk_valid: jax.Array,   # i32 scalar — tokens already in cache
+):
+    """AOT decode step (turbo): one token through all layers.
+
+    Returns (logits [vocab], k_new [L, H, dh], v_new [L, H, dh]).
+    The new token attends to the INT8 cache via Algorithm 2 plus a float
+    merge of its own K/V (which the Rust side then folds into the buffer).
+    """
+    x = params["tok_emb"][token] + params["pos_emb"][pos]
+    k_news, v_news = [], []
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_head))
+    for li, lp in enumerate(params["layers"]):
+        h_in = layer_norm(x, lp["ln1"])
+        q = (h_in @ lp["wq"]).reshape(cfg.n_heads, cfg.d_head)
+        k_t = (h_in @ lp["wk"]).reshape(cfg.n_heads, cfg.d_head)
+        v_t = (h_in @ lp["wv"]).reshape(cfg.n_heads, cfg.d_head)
+        out, m, l = turbo_k.turbo_decode(
+            q, k8[li], v8[li], sk[li], sv[li], nk_valid,
+            bc=cfg.block, n_r=cfg.n_r,
+        )
+        s_new = jnp.sum(q * k_t, axis=-1) * scale  # [H]
+        attn = _sas_merge_token(out, m, l, s_new, v_t, cfg.n_r)
+        x = x + attn.reshape(cfg.d_model) @ lp["wo"]
+        h2 = layer_norm(x, lp["ln2"])
+        x = x + (jax.nn.gelu(h2 @ lp["w1"] + lp["b1"])) @ lp["w2"] + lp["b2"]
+        k_news.append(k_t)
+        v_news.append(v_t)
+    logits = layer_norm(x, params["ln_f"]) @ params["head"]
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def decode_flash(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,
+    pos: jax.Array,
+    kf: jax.Array,        # [L, H, max_ctx, dh] f32 exact cache
+    vf: jax.Array,
+    nk_valid: jax.Array,
+):
+    """AOT decode step (exact float-cache baseline, FlashAttention math)."""
+    x = params["tok_emb"][token] + params["pos_emb"][pos]
+    k_news, v_news = [], []
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_head))
+    max_ctx = kf.shape[2]
+    for li, lp in enumerate(params["layers"]):
+        h_in = layer_norm(x, lp["ln1"])
+        q = (h_in @ lp["wq"]).reshape(cfg.n_heads, cfg.d_head)
+        k_t = (h_in @ lp["wk"]).reshape(cfg.n_heads, cfg.d_head)
+        v_t = (h_in @ lp["wv"]).reshape(cfg.n_heads, cfg.d_head)
+        # Exact masked attention over cache + current token.
+        s_cache = jnp.einsum("hd,hnd->hn", q, kf[li]) * scale
+        mask = jnp.arange(max_ctx)[None, :] < nk_valid
+        s_cache = jnp.where(mask, s_cache, -jnp.inf)
+        s_new = jnp.sum(q * k_t, axis=-1, keepdims=True) * scale
+        s_all = jnp.concatenate([s_cache, s_new], axis=1)
+        p = jax.nn.softmax(s_all, axis=-1)
+        attn = jnp.einsum("hn,hnd->hd", p[:, :max_ctx], vf[li]) + p[
+            :, max_ctx:
+        ] * v_t
+        x = x + attn.reshape(cfg.d_model) @ lp["wo"]
+        h2 = layer_norm(x, lp["ln2"])
+        x = x + (jax.nn.gelu(h2 @ lp["w1"] + lp["b1"])) @ lp["w2"] + lp["b2"]
+        k_news.append(k_t)
+        v_news.append(v_t)
+    logits = layer_norm(x, params["ln_f"]) @ params["head"]
+    return logits, jnp.stack(k_news), jnp.stack(v_news)

@@ -1,0 +1,162 @@
+"""Build-time training of the tiny serving model on a synthetic corpus.
+
+The paper evaluates on LLaMA3-8B/Qwen2-7B/Phi3 checkpoints, which are not
+available in this sandbox (see DESIGN.md §2). The substitute is a small
+byte-level LM trained here, at build time, on a deterministic synthetic
+grammar — enough structure that next-token agreement between the exact and
+quantized attention paths is a meaningful accuracy signal.
+
+Runs once from ``make artifacts`` (aot.py calls :func:`get_params`, which
+caches trained weights in artifacts/params.npz).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as model_lib
+
+# Deterministic synthetic grammar: subject verb object adverb sentences.
+_SUBJECTS = ["the router", "a worker", "the scheduler", "one shard",
+             "the cache", "a batch", "the kernel", "this head"]
+_VERBS = ["routes", "quantizes", "merges", "streams", "evicts", "scores",
+          "packs", "flushes"]
+_OBJECTS = ["the tokens", "eight pages", "a tile", "the buffer",
+            "low bits", "two heads", "the scales", "old blocks"]
+_ADVERBS = ["quickly", "in order", "without loss", "per layer", "at once",
+            "lazily", "again", "safely"]
+
+
+def gen_corpus(n_sentences: int = 4000, seed: int = 7) -> bytes:
+    """Deterministic corpus of templated sentences (byte-level)."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for _ in range(n_sentences):
+        s = (
+            f"{_SUBJECTS[rng.integers(8)]} {_VERBS[rng.integers(8)]} "
+            f"{_OBJECTS[rng.integers(8)]} {_ADVERBS[rng.integers(8)]}. "
+        )
+        parts.append(s)
+    return "".join(parts).encode("ascii")
+
+
+def _batches(data: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(data) - seq - 1
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        x = np.stack([data[i : i + seq] for i in idx])
+        y = np.stack([data[i + 1 : i + seq + 1] for i in idx])
+        yield jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32)
+
+
+def loss_fn(params, x, y, cfg):
+    logits = model_lib.forward_batch(params, x, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train(
+    cfg: model_lib.ModelConfig,
+    steps: int = 300,
+    batch: int = 16,
+    seq: int = 96,
+    lr: float = 3e-3,
+    seed: int = 0,
+    log_every: int = 50,
+) -> model_lib.Params:
+    """Adam training loop; returns trained params."""
+    key = jax.random.PRNGKey(seed)
+    params = model_lib.init_params(key, cfg)
+    flat, tree = jax.tree_util.tree_flatten(params)
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+
+    @jax.jit
+    def step(params, m, v, x, y, t):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, cfg)
+        gflat, _ = jax.tree_util.tree_flatten(grads)
+        pflat, tree_ = jax.tree_util.tree_flatten(params)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(pflat, gflat, m, v):
+            mi = b1 * mi + (1 - b1) * g
+            vi = b2 * vi + (1 - b2) * g * g
+            mhat = mi / (1 - b1**t)
+            vhat = vi / (1 - b2**t)
+            new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+            new_m.append(mi)
+            new_v.append(vi)
+        return jax.tree_util.tree_unflatten(tree_, new_p), new_m, new_v, loss
+
+    data = np.frombuffer(gen_corpus(), dtype=np.uint8).astype(np.int32)
+    t0 = time.time()
+    for i, (x, y) in enumerate(_batches(data, batch, seq, steps, seed)):
+        params, m, v, loss = step(params, m, v, x, y, jnp.float32(i + 1))
+        if (i + 1) % log_every == 0 or i == 0:
+            print(
+                f"[train] step {i+1:4d}/{steps} loss={float(loss):.4f} "
+                f"({time.time()-t0:.1f}s)",
+                flush=True,
+            )
+    return params
+
+
+def _flatten_with_paths(params) -> dict[str, np.ndarray]:
+    out = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, val in node.items():
+                walk(f"{prefix}/{k}" if prefix else k, val)
+        elif isinstance(node, list):
+            for i, val in enumerate(node):
+                walk(f"{prefix}/{i}", val)
+        else:
+            out[prefix] = np.asarray(node)
+
+    walk("", params)
+    return out
+
+
+def _unflatten_with_paths(flat: dict[str, np.ndarray], cfg) -> model_lib.Params:
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {
+                k: walk(f"{prefix}/{k}" if prefix else k, val)
+                for k, val in node.items()
+            }
+        if isinstance(node, list):
+            return [walk(f"{prefix}/{i}", val) for i, val in enumerate(node)]
+        return jnp.asarray(flat[prefix])
+
+    return walk("", params)
+
+
+def get_params(
+    cfg: model_lib.ModelConfig,
+    cache_path: str = "../artifacts/params.npz",
+    steps: int = 300,
+) -> model_lib.Params:
+    """Trained params, cached on disk so `make artifacts` trains once."""
+    if os.path.exists(cache_path):
+        flat = dict(np.load(cache_path))
+        print(f"[train] loaded cached params from {cache_path}")
+        return _unflatten_with_paths(flat, cfg)
+    params = train(cfg, steps=steps)
+    os.makedirs(os.path.dirname(cache_path), exist_ok=True)
+    np.savez(cache_path, **_flatten_with_paths(params))
+    print(f"[train] saved params to {cache_path}")
+    return params
+
+
+if __name__ == "__main__":
+    train(model_lib.ModelConfig(), steps=100)

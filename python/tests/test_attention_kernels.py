@@ -1,0 +1,207 @@
+"""Fused attention Pallas kernels vs references (the core L1 signal)."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import flash, quant, ref, turbo
+
+COMMON = dict(deadline=None, max_examples=8)
+
+
+def _qkv(seed, h, nq, nk, d, scale=1.0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(h, nq, d)) * scale, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(h, nk, d)) * scale, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(h, nk, d)) * scale, jnp.float32)
+    return q, k, v
+
+
+class TestFlashKernel:
+    @settings(**COMMON)
+    @given(
+        h=st.integers(1, 3),
+        nq=st.integers(1, 70),
+        d=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_exact_attention(self, h, nq, d, causal, seed):
+        nk = nq  # self-attention shape
+        q, k, v = _qkv(seed, h, nq, nk, d)
+        out = flash.flash_attention(q, k, v, br=16, bc=16, causal=causal)
+        exact = jnp.stack(
+            [ref.attention_exact(q[i], k[i], v[i], causal) for i in range(h)]
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(exact), atol=2e-5
+        )
+
+    def test_cross_attention_rectangular(self):
+        q, k, v = _qkv(3, 2, 24, 56, 16)
+        out = flash.flash_attention(q, k, v, br=16, bc=16, causal=False)
+        exact = jnp.stack(
+            [ref.attention_exact(q[i], k[i], v[i]) for i in range(2)]
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exact), atol=2e-5)
+
+    def test_traced_nvalid_masks_padding(self):
+        """Same executable must serve shorter sequences via nvalid."""
+        q, k, v = _qkv(5, 1, 32, 32, 16)
+        n = 20
+        out_full = flash.flash_attention(
+            q, k, v, jnp.int32(n), jnp.int32(n), br=16, bc=16, causal=True
+        )
+        exact = ref.attention_exact(q[0, :n], k[0, :n], v[0, :n], True)
+        np.testing.assert_allclose(
+            np.asarray(out_full[0, :n]), np.asarray(exact), atol=2e-5
+        )
+
+
+class TestTurboPrefillKernel:
+    @settings(**COMMON)
+    @given(
+        h=st.integers(1, 2),
+        nq=st.integers(1, 70),
+        d=st.sampled_from([8, 16]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_turbo_ref(self, h, nq, d, causal, seed):
+        q, k, v = _qkv(seed, h, nq, nq, d)
+        out = turbo.turbo_attention(q, k, v, br=16, bc=16, causal=causal)
+        want = jnp.stack(
+            [
+                ref.turbo_attention_ref(
+                    q[i], k[i], v[i], br=16, bc=16, causal=causal
+                )
+                for i in range(h)
+            ]
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2.5e-2)
+
+    @settings(**COMMON)
+    @given(seed=st.integers(0, 2**31))
+    def test_close_to_exact_attention(self, seed):
+        """End-to-end quantization error stays small (paper: near-lossless)."""
+        q, k, v = _qkv(seed, 2, 48, 48, 16)
+        out = turbo.turbo_attention(q, k, v, br=16, bc=16, causal=True)
+        exact = jnp.stack(
+            [ref.attention_exact(q[i], k[i], v[i], True) for i in range(2)]
+        )
+        rel = np.linalg.norm(np.asarray(out - exact)) / np.linalg.norm(
+            np.asarray(exact)
+        )
+        assert rel < 0.05, rel
+
+    def test_traced_nvalid(self):
+        q, k, v = _qkv(11, 1, 32, 32, 16)
+        n = 19
+        out = turbo.turbo_attention(
+            q, k, v, jnp.int32(n), jnp.int32(n), br=16, bc=16, causal=True
+        )
+        want = ref.turbo_attention_ref(
+            q[0, :n], k[0, :n], v[0, :n], br=16, bc=16, causal=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[0, :n]), np.asarray(want), atol=2.5e-2
+        )
+
+
+class TestTurboDecodeKernel:
+    @settings(**COMMON)
+    @given(
+        h=st.integers(1, 3),
+        nk=st.integers(1, 60),
+        d=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_decode_ref(self, h, nk, d, seed):
+        bc = 16
+        nk_pad = -(-nk // bc) * bc
+        rng = np.random.default_rng(seed)
+        kf = rng.normal(size=(h, nk_pad, d)).astype(np.float32)
+        vf = rng.normal(size=(h, nk_pad, d)).astype(np.float32)
+        qv = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+        k8 = jnp.stack([quant.quant_sym_int8_blocked(jnp.asarray(kf[i]), block=bc)[0] for i in range(h)])
+        sk = jnp.stack([quant.quant_sym_int8_blocked(jnp.asarray(kf[i]), block=bc)[1] for i in range(h)])
+        v8 = jnp.stack([quant.quant_sym_int8_blocked(jnp.asarray(vf[i]), block=bc)[0] for i in range(h)])
+        sv = jnp.stack([quant.quant_sym_int8_blocked(jnp.asarray(vf[i]), block=bc)[1] for i in range(h)])
+        out, m, l = turbo.turbo_decode(qv, k8, v8, sk, sv, jnp.int32(nk), bc=bc)
+        for i in range(h):
+            want = ref.turbo_decode_ref(
+                qv[i], k8[i][:nk], v8[i][:nk], sk[i], sv[i], bc=bc
+            )
+            np.testing.assert_allclose(
+                np.asarray(out[i]), np.asarray(want), atol=2.5e-2
+            )
+        assert np.all(np.asarray(l) > 0)
+
+    def test_online_state_allows_external_merge(self):
+        """(m, l) outputs let the model merge the current token exactly."""
+        h, nk, d, bc = 2, 32, 16, 16
+        rng = np.random.default_rng(4)
+        kf = jnp.asarray(rng.normal(size=(h, nk, d)), jnp.float32)
+        vf = jnp.asarray(rng.normal(size=(h, nk, d)), jnp.float32)
+        qv = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+        k_t = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+        v_t = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+        k8 = jnp.stack([quant.quant_sym_int8_blocked(kf[i], block=bc)[0] for i in range(h)])
+        sk = jnp.stack([quant.quant_sym_int8_blocked(kf[i], block=bc)[1] for i in range(h)])
+        v8 = jnp.stack([quant.quant_sym_int8_blocked(vf[i], block=bc)[0] for i in range(h)])
+        sv = jnp.stack([quant.quant_sym_int8_blocked(vf[i], block=bc)[1] for i in range(h)])
+        out, m, l = turbo.turbo_decode(qv, k8, v8, sk, sv, jnp.int32(nk), bc=bc)
+        scale = 1.0 / np.sqrt(d)
+        s_new = jnp.sum(qv * k_t, axis=-1) * scale
+        m_tot = jnp.maximum(m, s_new)
+        alpha = ref.sas_exp(m - m_tot)
+        p_new = ref.sas_exp(s_new - m_tot)
+        l_tot = alpha * l + p_new
+        merged = ((alpha * l)[:, None] * out + p_new[:, None] * v_t) / l_tot[:, None]
+        # Compare against decode over the extended int8 cache + float merge
+        # done by the reference path on identical inputs.
+        for i in range(h):
+            base = ref.turbo_decode_ref(qv[i], k8[i], v8[i], sk[i], sv[i], bc=bc)
+            m_i = np.maximum(np.asarray(m[i]), np.asarray(s_new[i]))
+            a_i = float(ref.sas_exp(m[i] - m_i))
+            p_i = float(ref.sas_exp(s_new[i] - m_i))
+            l_i = a_i * float(l[i]) + p_i
+            want = (a_i * float(l[i]) * np.asarray(base) + p_i * np.asarray(v_t[i])) / l_i
+            np.testing.assert_allclose(np.asarray(merged[i]), want, atol=1e-4)
+
+
+class TestJitTracedNvalidRegression:
+    """Regression for the XLA-CPU constant-folding Heisenbug (see turbo.py).
+
+    The AOT artifact path jits the kernels with *traced* nq/nk_valid; that
+    configuration must match the (known-good) eager execution exactly.
+    """
+
+    def test_turbo_traced_jit_matches_eager(self):
+        import jax
+
+        q, k, v = _qkv(0, 1, 2, 2, 8)
+        eager = turbo.turbo_attention(q, k, v, br=16, bc=16, causal=False)
+        jitted = jax.jit(
+            lambda a, b, c, nq, nk: turbo.turbo_attention(
+                a, b, c, nq, nk, br=16, bc=16, causal=False
+            )
+        )(q, k, v, jnp.int32(2), jnp.int32(2))
+        np.testing.assert_allclose(
+            np.asarray(eager), np.asarray(jitted), atol=1e-6
+        )
+
+    def test_flash_traced_jit_matches_eager(self):
+        import jax
+
+        q, k, v = _qkv(1, 1, 5, 5, 8)
+        eager = flash.flash_attention(q, k, v, br=16, bc=16, causal=True)
+        jitted = jax.jit(
+            lambda a, b, c, nq, nk: flash.flash_attention(
+                a, b, c, nq, nk, br=16, bc=16, causal=True
+            )
+        )(q, k, v, jnp.int32(5), jnp.int32(5))
+        np.testing.assert_allclose(
+            np.asarray(eager), np.asarray(jitted), atol=1e-6
+        )

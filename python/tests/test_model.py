@@ -1,0 +1,127 @@
+"""Layer-2 model tests: shapes, path agreement, prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.kernels import ref
+
+CFG = model_lib.ModelConfig(
+    d_model=32, n_layers=2, n_heads=2, d_ff=64, max_ctx=64, block=16
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model_lib.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(32, 127, size=(CFG.max_ctx,)), jnp.int32)
+
+
+class TestForward:
+    def test_logits_shape(self, params, tokens):
+        logits = model_lib.forward(params, tokens, CFG)
+        assert logits.shape == (CFG.max_ctx, CFG.vocab)
+
+    def test_flash_path_matches_exact(self, params, tokens):
+        a = model_lib.forward(params, tokens, CFG, mode="exact")
+        b = model_lib.forward(params, tokens, CFG, mode="flash")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+    def test_turbo_path_close_to_exact(self, params, tokens):
+        a = model_lib.forward(params, tokens, CFG, mode="exact")
+        b = model_lib.forward(params, tokens, CFG, mode="turbo")
+        # Quantized path: logits drift bounded; argmax agreement high.
+        agree = np.mean(
+            np.argmax(np.asarray(a), -1) == np.argmax(np.asarray(b), -1)
+        )
+        assert agree > 0.9, agree
+
+    def test_return_kv_shapes(self, params, tokens):
+        _, ks, vs = model_lib.forward(params, tokens, CFG, return_kv=True)
+        want = (CFG.n_layers, CFG.n_heads, CFG.max_ctx, CFG.d_head)
+        assert ks.shape == want and vs.shape == want
+
+    def test_causality(self, params, tokens):
+        """Changing a future token must not affect earlier logits."""
+        logits1 = model_lib.forward(params, tokens, CFG)
+        t2 = tokens.at[40].set((tokens[40] + 1) % 127)
+        logits2 = model_lib.forward(params, t2, CFG)
+        np.testing.assert_allclose(
+            np.asarray(logits1[:40]), np.asarray(logits2[:40]), atol=1e-5
+        )
+
+
+class TestPrefillDecodeConsistency:
+    def test_flash_decode_reproduces_forward(self, params, tokens):
+        """Prefill n tokens, decode the rest one-by-one == full forward."""
+        n, total = 24, 32
+        full = model_lib.forward(params, tokens[:total], CFG, mode="exact")
+        logits, kf, vf = model_lib.prefill_flash(
+            params, CFG, tokens, jnp.int32(n)
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits[:n]),
+            np.asarray(full[:n]),
+            atol=1e-3,
+        )
+        kf = np.array(kf)
+        vf = np.array(vf)
+        for t in range(n, total):
+            step_logits, k_new, v_new = model_lib.decode_flash(
+                params, CFG, tokens[t], jnp.int32(t),
+                jnp.asarray(kf), jnp.asarray(vf), jnp.int32(t),
+            )
+            np.testing.assert_allclose(
+                np.asarray(step_logits), np.asarray(full[t]), atol=2e-3
+            )
+            kf[:, :, t] = np.asarray(k_new)
+            vf[:, :, t] = np.asarray(v_new)
+
+    def test_turbo_prefill_outputs(self, params, tokens):
+        logits, k8, v8, sk, sv = model_lib.prefill_turbo(
+            params, CFG, tokens, jnp.int32(48)
+        )
+        assert logits.shape == (CFG.max_ctx, CFG.vocab)
+        assert k8.dtype == jnp.int8 and v8.dtype == jnp.int8
+        assert sk.shape == (
+            CFG.n_layers, CFG.n_heads, CFG.max_ctx // CFG.block
+        )
+        assert np.all(np.asarray(sk) > 0)
+
+    def test_turbo_decode_agreement_with_flash(self, params, tokens):
+        """Quantized decode tracks the exact path's next-token choices."""
+        n = 32
+        _, kf, vf = model_lib.prefill_flash(params, CFG, tokens, jnp.int32(n))
+        _, k8, v8, sk, sv = model_lib.prefill_turbo(
+            params, CFG, tokens, jnp.int32(n)
+        )
+        lf, _, _ = model_lib.decode_flash(
+            params, CFG, tokens[n], jnp.int32(n), kf, vf, jnp.int32(n)
+        )
+        lt, k_new, v_new = model_lib.decode_turbo(
+            params, CFG, tokens[n], jnp.int32(n), k8, v8, sk, sv, jnp.int32(n)
+        )
+        assert k_new.shape == (CFG.n_layers, CFG.n_heads, CFG.d_head)
+        # Tiny random-init model: top-1 often matches, top-5 must overlap.
+        top_f = set(np.argsort(np.asarray(lf))[-5:])
+        top_t = set(np.argsort(np.asarray(lt))[-5:])
+        assert top_f & top_t, (top_f, top_t)
+
+
+class TestQuantCacheBlocked:
+    def test_matches_per_block_ref(self):
+        rng = np.random.default_rng(3)
+        kv = jnp.asarray(rng.normal(size=(2, 2, 32, 8)), jnp.float32)
+        q8, s = model_lib._quant_cache_blocked(kv, 16)
+        q_ref, s_ref = ref.quant_sym_int8(kv[1, 0, 16:32])
+        np.testing.assert_array_equal(
+            np.asarray(q8[1, 0, 16:32]), np.asarray(q_ref)
+        )
+        assert np.isclose(float(s[1, 0, 1]), float(s_ref), rtol=1e-6)

@@ -1,0 +1,175 @@
+"""Quantization kernels vs ref oracles, with hypothesis shape/param sweeps."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import quant, ref
+
+COMMON = dict(deadline=None, max_examples=15)
+
+
+def _rand(rng, shape, scale=3.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+class TestSymmetricInt8:
+    @settings(**COMMON)
+    @given(
+        n=st.integers(1, 6),
+        d=st.integers(1, 48),
+        scale=st.floats(1e-3, 1e3),
+        seed=st.integers(0, 2**31),
+    )
+    def test_roundtrip_error_bound(self, n, d, scale, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (n, d), scale)
+        q, s = ref.quant_sym_int8(x)
+        err = np.max(np.abs(np.asarray(ref.dequant_sym_int8(q, s)) - np.asarray(x)))
+        assert err <= float(s) * 0.5 + 1e-6
+
+    @settings(**COMMON)
+    @given(seed=st.integers(0, 2**31))
+    def test_scale_is_amax_over_119(self, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (8, 8))
+        _, s = ref.quant_sym_int8(x)
+        assert np.isclose(float(s), max(np.max(np.abs(np.asarray(x))) / 119.0, 1e-8), rtol=1e-6)
+
+    def test_zero_input(self):
+        q, s = ref.quant_sym_int8(jnp.zeros((4, 4)))
+        assert np.all(np.asarray(q) == 0) and float(s) > 0
+
+    @settings(**COMMON)
+    @given(
+        nb=st.integers(1, 4), block=st.sampled_from([8, 16]),
+        d=st.integers(4, 32), seed=st.integers(0, 2**31),
+    )
+    def test_pallas_blocked_matches_ref(self, nb, block, d, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (nb * block, d))
+        q, s = quant.quant_sym_int8_blocked(x, block=block)
+        for b in range(nb):
+            qr, sr = ref.quant_sym_int8(x[b * block : (b + 1) * block])
+            np.testing.assert_array_equal(
+                np.asarray(q[b * block : (b + 1) * block]), np.asarray(qr)
+            )
+            assert np.isclose(float(s[b]), float(sr), rtol=1e-6)
+
+
+class TestProgressive:
+    @settings(**COMMON)
+    @given(
+        bits=st.sampled_from([2, 3, 4]),
+        n=st.integers(2, 40),
+        d=st.integers(1, 32),
+        seed=st.integers(0, 2**31),
+    )
+    def test_codes_in_range(self, bits, n, d, seed):
+        rng = np.random.default_rng(seed)
+        q1, _ = ref.quant_sym_int8(_rand(rng, (n, d)))
+        q2, s_int, z_int = ref.quant_asym_int(q1, bits)
+        assert np.all(np.asarray(q2) >= 0)
+        assert np.all(np.asarray(q2) <= (1 << bits) - 1)
+        assert np.all(np.asarray(s_int) >= 1)
+        assert np.all(np.abs(np.asarray(s_int)) <= 255)
+
+    @settings(**COMMON)
+    @given(
+        bits=st.sampled_from([2, 3, 4]),
+        n=st.integers(2, 40),
+        d=st.integers(1, 32),
+        seed=st.integers(0, 2**31),
+    )
+    def test_integer_roundtrip_error_bounded_by_scale(self, bits, n, d, seed):
+        """|q1' - q1| <= 1.5 * s_int per channel (round + clip slack)."""
+        rng = np.random.default_rng(seed)
+        q1, _ = ref.quant_sym_int8(_rand(rng, (n, d)))
+        q2, s_int, z_int = ref.quant_asym_int(q1, bits)
+        back = ref.dequant_asym_int(q2, s_int, z_int)
+        err = np.abs(np.asarray(back, np.int32) - np.asarray(q1, np.int32))
+        bound = 1.5 * np.asarray(s_int)[None, :] + 1
+        assert np.all(err <= bound), (err.max(), np.asarray(s_int).max())
+
+    def test_4bit_tighter_than_2bit(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, (64, 32))
+        errs = {}
+        for bits in (2, 4):
+            deq = ref.progressive_dequant(*ref.progressive_quant(x, bits))
+            errs[bits] = float(jnp.mean((deq - x) ** 2))
+        assert errs[4] < errs[2]
+
+    @settings(**COMMON)
+    @given(
+        bits=st.sampled_from([2, 4]),
+        nb=st.integers(1, 3),
+        seed=st.integers(0, 2**31),
+    )
+    def test_pallas_asym_matches_ref(self, bits, nb, seed):
+        rng = np.random.default_rng(seed)
+        block, d = 16, 24
+        q1, _ = ref.quant_sym_int8(_rand(rng, (nb * block, d)))
+        q2, si, zi = quant.quant_asym_blocked(q1, bits, block=block)
+        for b in range(nb):
+            sl = slice(b * block, (b + 1) * block)
+            q2r, sir, zir = ref.quant_asym_int(q1[sl], bits)
+            np.testing.assert_array_equal(np.asarray(q2[sl]), np.asarray(q2r))
+            np.testing.assert_array_equal(np.asarray(si[b]), np.asarray(sir))
+            np.testing.assert_array_equal(np.asarray(zi[b]), np.asarray(zir))
+
+    @settings(**COMMON)
+    @given(bits=st.sampled_from([2, 4]), seed=st.integers(0, 2**31))
+    def test_pallas_dequant_matches_ref(self, bits, seed):
+        rng = np.random.default_rng(seed)
+        block, d, nb = 16, 8, 2
+        q1, _ = ref.quant_sym_int8(_rand(rng, (nb * block, d)))
+        q2, si, zi = quant.quant_asym_blocked(q1, bits, block=block)
+        back = quant.dequant_asym_blocked(q2, si, zi, block=block)
+        for b in range(nb):
+            sl = slice(b * block, (b + 1) * block)
+            np.testing.assert_array_equal(
+                np.asarray(back[sl]),
+                np.asarray(ref.dequant_asym_int(q2[sl], si[b], zi[b])),
+            )
+
+
+class TestChannelVsTokenwise:
+    def test_channelwise_beats_tokenwise_with_channel_outliers(self):
+        """Fig 10: with channel outliers, channelwise group quant wins."""
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(128, 32)).astype(np.float32)
+        x[:, 3] *= 12.0  # persistent channel outlier (Fig 4 pattern)
+        x[:, 17] *= 8.0
+        xj = jnp.asarray(x)
+        err_chan = float(jnp.mean(
+            (ref.quant_asym_float_grouped(xj, 4, 32, axis=0) - xj) ** 2))
+        err_tok = float(jnp.mean(
+            (ref.quant_asym_float_grouped(xj, 4, 32, axis=1) - xj) ** 2))
+        assert err_chan < err_tok
+
+
+class TestHeadwise:
+    def test_priority_ranks_outlier_heads_higher(self):
+        rng = np.random.default_rng(2)
+        kv = rng.normal(size=(4, 64, 16)).astype(np.float32)
+        kv[2, :, 5] *= 20.0  # head 2 gets a big channel outlier
+        pr = np.asarray(ref.head_priority(jnp.asarray(kv)))
+        assert np.argmax(pr) == 2
+
+    def test_select_2bit_heads_picks_lowest(self):
+        pr = jnp.asarray([3.0, 1.0, 2.0, 10.0])
+        mask = np.asarray(ref.select_2bit_heads(pr, 2))
+        assert list(mask) == [False, True, True, False]
+
+    @settings(**COMMON)
+    @given(h=st.integers(1, 8), n_h=st.integers(0, 8), seed=st.integers(0, 2**31))
+    def test_select_count(self, h, n_h, seed):
+        hypothesis.assume(n_h <= h)
+        rng = np.random.default_rng(seed)
+        pr = jnp.asarray(rng.random(h).astype(np.float32))
+        mask = np.asarray(ref.select_2bit_heads(pr, n_h))
+        assert mask.sum() == n_h

@@ -1,0 +1,91 @@
+"""SAS (Sparse Activated Softmax) kernel and oracle tests."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import ref, sas
+
+COMMON = dict(deadline=None, max_examples=15)
+
+
+class TestPoly:
+    def test_coefficients_match_paper(self):
+        assert ref.SAS_POLY == (-0.1025, 0.4626, -0.9922, 0.9996)
+
+    def test_poly_error_on_unit_interval(self):
+        """Fig 5: cubic fit of e^{-x} on [0,1] — max error well under 1e-3."""
+        t = jnp.linspace(0.0, 1.0, 1001)
+        err = np.max(np.abs(np.asarray(ref.sas_poly(t) - jnp.exp(-t))))
+        assert err < 5e-4, err
+
+
+class TestSasExp:
+    @settings(**COMMON)
+    @given(seed=st.integers(0, 2**31))
+    def test_matches_exp_above_threshold(self, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(-rng.random(256) * 6.0, jnp.float32)  # in (-6, 0]
+        approx = np.asarray(ref.sas_exp(x))
+        exact = np.asarray(jnp.exp(x))
+        assert np.max(np.abs(approx - exact)) < 1e-3
+
+    def test_sparsity_below_threshold(self):
+        x = jnp.asarray([-6.001, -7.5, -100.0, -1e9], jnp.float32)
+        assert np.all(np.asarray(ref.sas_exp(x)) == 0.0)
+
+    def test_zero_maps_to_poly_constant(self):
+        assert np.isclose(float(ref.sas_exp(jnp.float32(0.0))), 0.9996)
+
+    def test_lut_contents(self):
+        lut = np.asarray(ref.sas_lut())
+        np.testing.assert_allclose(lut[:7], np.exp(-np.arange(7)), rtol=1e-6)
+        assert lut[7] == 0.0
+
+    def test_monotone_nonincreasing(self):
+        x = jnp.linspace(-8.0, 0.0, 4001)
+        y = np.asarray(ref.sas_exp(x))
+        assert np.all(np.diff(y) >= -1e-6)
+
+
+class TestSasSoftmax:
+    @settings(**COMMON)
+    @given(
+        n=st.integers(1, 8), m=st.integers(2, 64), seed=st.integers(0, 2**31)
+    )
+    def test_close_to_exact_softmax(self, n, m, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(n, m)) * 2.5, jnp.float32)
+        approx = np.asarray(ref.sas_softmax(x))
+        exact = np.asarray(jax.nn.softmax(x, axis=-1))
+        # Elementwise error dominated by dropped tail mass below n_r.
+        assert np.max(np.abs(approx - exact)) < 2e-2
+
+    @settings(**COMMON)
+    @given(n=st.integers(1, 6), seed=st.integers(0, 2**31))
+    def test_rows_sum_to_one(self, n, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(n, 16)) * 5, jnp.float32)
+        rows = np.asarray(jnp.sum(ref.sas_softmax(x), axis=-1))
+        np.testing.assert_allclose(rows, 1.0, atol=1e-5)
+
+    def test_extreme_scores_sparsified(self):
+        x = jnp.asarray([[0.0, -20.0, -20.0, -20.0]], jnp.float32)
+        out = np.asarray(ref.sas_softmax(x))[0]
+        np.testing.assert_allclose(out, [1.0, 0.0, 0.0, 0.0], atol=1e-6)
+
+    @settings(**COMMON)
+    @given(
+        nb=st.integers(1, 3),
+        block=st.sampled_from([8, 16]),
+        m=st.integers(2, 48),
+        seed=st.integers(0, 2**31),
+    )
+    def test_pallas_kernel_matches_ref(self, nb, block, m, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(nb * block, m)) * 3, jnp.float32)
+        out_k = np.asarray(sas.sas_softmax(x, block=block))
+        out_r = np.asarray(ref.sas_softmax(x))
+        np.testing.assert_allclose(out_k, out_r, atol=1e-6)

@@ -1,0 +1,67 @@
+//! Attention engine benchmarks (Figure 6's latency content on this
+//! testbed): CPU wall-clock of exact / flash / turbo engines across
+//! context lengths, plus the analytical GPU-shape speedups.
+
+use turboattention::attention::{
+    attention_exact, flash_attention, turbo_attention, TurboConfig,
+};
+use turboattention::bench::{Bencher, Table};
+use turboattention::costmodel::{
+    attention_decode_cost, attention_prefill_cost, AttnWorkload, GpuSpec, Method,
+};
+use turboattention::tensor::Mat;
+use turboattention::testutil::Rng;
+
+fn main() {
+    println!("== bench: attention engines (Figure 6 CPU substrate) ==\n");
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(0);
+    let d = 64;
+    for n in [128usize, 256, 512] {
+        let q = Mat::randn(&mut rng, n, d, 1.0);
+        let k = Mat::randn(&mut rng, n, d, 1.0);
+        let v = Mat::randn(&mut rng, n, d, 1.0);
+        b.bench(&format!("exact n={n}"), || {
+            attention_exact(&q, &k, &v, true)
+        });
+        b.bench(&format!("flash n={n}"), || {
+            flash_attention(&q, &k, &v, 64, 64, true)
+        });
+        let cfg = TurboConfig { br: 64, bc: 64, causal: true, ..Default::default() };
+        b.bench(&format!("turbo n={n}"), || {
+            turbo_attention(&q, &k, &v, &cfg)
+        });
+    }
+
+    println!("\n== analytical A100 speedups (Figure 6 shape) ==\n");
+    let gpu = GpuSpec::a100_80gb();
+    let mut t = Table::new(&["phase", "ctx", "KIVI-4", "GEAR-4", "Turbo-3"]);
+    for prefill in [true, false] {
+        for ctx in [4_000usize, 8_000, 16_000, 32_000] {
+            let w = AttnWorkload {
+                batch: 4,
+                heads: 40,
+                d_head: 128,
+                nq: if prefill { ctx } else { 1 },
+                nk: ctx,
+            };
+            let cost = |m: &Method| {
+                if prefill {
+                    attention_prefill_cost(&gpu, m, &w).total()
+                } else {
+                    attention_decode_cost(&gpu, m, &w).total()
+                }
+            };
+            let base = cost(&Method::FlashFp16);
+            t.row(&[
+                if prefill { "prefill" } else { "decode" }.into(),
+                format!("{ctx}"),
+                format!("{:.2}x", base / cost(&Method::Kivi { bits: 4 })),
+                format!("{:.2}x", base / cost(&Method::GearL { bits: 4, rank: 4 })),
+                format!("{:.2}x", base / cost(&Method::Turbo { avg_bits: 3.0 })),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(paper: Turbo up to 1.8x prefill / 1.7x decode; KIVI/GEAR < 1x decode)");
+}

@@ -1,0 +1,49 @@
+//! End-to-end engine benchmarks over the real PJRT artifacts (Figure 7a's
+//! serving content on this testbed) plus the Figure 1 timeshare via the
+//! cost model. Requires `make artifacts`.
+
+use turboattention::bench::Bencher;
+use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
+use turboattention::costmodel::{e2e_step_cost, GpuSpec, Method, ModelShape};
+use turboattention::model::{ModelBundle, Sampler};
+use turboattention::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench: engine decode step (real PJRT path) ==\n");
+    for (name, mode) in [("turbo", PathMode::Turbo), ("flash", PathMode::Flash)] {
+        let rt = Runtime::load("artifacts")?;
+        let cfg = EngineConfig { mode, sampler: Sampler::Greedy, ..Default::default() };
+        let mut engine = Engine::new(ModelBundle::new(rt), cfg);
+        // Keep a long-lived request running; resubmit when the context
+        // fills so every timed iteration is a real decode step.
+        let mut next_id = 0u64;
+        let mut refill = |e: &mut Engine| {
+            if e.idle() {
+                next_id += 1;
+                e.submit(GenRequest::new(next_id, vec![b'a'; 96], 10_000));
+                e.step().expect("prefill step"); // untimed prefill
+            }
+        };
+        refill(&mut engine);
+        let mut b = Bencher::quick();
+        b.bench(&format!("decode step [{name}]"), || {
+            refill(&mut engine);
+            engine.step().expect("step")
+        });
+    }
+
+    println!("\n== Figure 1a shape: attention share vs context (cost model) ==\n");
+    let gpu = GpuSpec::a100_80gb();
+    let shape = ModelShape::phi3_medium();
+    for ctx in [1_000usize, 10_000, 40_000, 80_000] {
+        let (attn, lin, tot) =
+            e2e_step_cost(&gpu, &shape, &Method::FlashFp16, 1, ctx, true);
+        println!(
+            "ctx {ctx:>6}: attention {:>5.1}% of step ({:.1}ms attn, {:.1}ms linear)",
+            100.0 * attn.total() / tot,
+            attn.total() * 1e3,
+            lin * 1e3
+        );
+    }
+    Ok(())
+}

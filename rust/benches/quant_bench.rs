@@ -1,0 +1,54 @@
+//! Quantization hot-path benchmarks (Figure 10 + §Perf targets): the
+//! q2->q1 integer dequantization that dominates the decode path, packing,
+//! and symmetric quantization throughput.
+
+use turboattention::bench::Bencher;
+use turboattention::kvcache::QuantPage;
+use turboattention::quant::{
+    pack_codes, quant_asym_int, quant_sym_int8, unpack_codes, Bits,
+};
+use turboattention::testutil::Rng;
+
+fn main() {
+    println!("== bench: FlashQ quantization hot paths ==\n");
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(0);
+
+    // Page-sized block: 64 tokens x 128 channels (paper tile).
+    let tokens = 64;
+    let channels = 128;
+    let x = rng.normal_vec(tokens * channels, 1.0);
+    let q1 = quant_sym_int8(&x);
+
+    b.bench("quant_sym_int8 64x128", || quant_sym_int8(&x));
+    b.bench("quant_asym_int4 64x128", || {
+        quant_asym_int(&q1.codes, tokens, channels, Bits::Int4)
+    });
+    let blk4 = quant_asym_int(&q1.codes, tokens, channels, Bits::Int4);
+    b.bench("pack int4 8k codes", || pack_codes(&blk4.codes, Bits::Int4));
+    let packed = pack_codes(&blk4.codes, Bits::Int4);
+    b.bench("unpack int4 8k codes", || unpack_codes(&packed));
+
+    // The decode hot path: full page q2 -> q1.
+    let page4 = QuantPage::from_q1(&q1.codes, tokens, channels, q1.scale, Bits::Int4);
+    let page2 = QuantPage::from_q1(&q1.codes, tokens, channels, q1.scale, Bits::Int2);
+    let mut scratch = Vec::new();
+    let mut out = vec![0i8; tokens * channels];
+    b.bench("page dequant q2->q1 int4 (hot path)", || {
+        page4.dequant_q1_into(&mut scratch, &mut out);
+        out[0]
+    });
+    b.bench("page dequant q2->q1 int2 (hot path)", || {
+        page2.dequant_q1_into(&mut scratch, &mut out);
+        out[0]
+    });
+
+    // Throughput summary for the hot path.
+    let stats = b.results().iter().find(|r| r.name.contains("int4 (hot")).unwrap();
+    let elems_per_s = (tokens * channels) as f64 / stats.mean_s();
+    println!(
+        "\nq2->q1 dequant throughput: {:.1} M elems/s ({} B page)",
+        elems_per_s / 1e6,
+        page4.bytes()
+    );
+}

@@ -1,0 +1,60 @@
+//! SAS microbenchmarks (Figure 5 + the §4 "softmax is 30% of attention"
+//! claim): exact FP32 exp softmax vs SAS LUT+POLY softmax on the CPU
+//! substrate, plus accuracy of the fit.
+
+use turboattention::bench::Bencher;
+use turboattention::sas::{softmax_row_exact, Sas};
+use turboattention::testutil::Rng;
+
+fn main() {
+    println!("== bench: SAS softmax (Figure 5 / §4) ==\n");
+    let mut rng = Rng::new(0);
+    let rows = 256;
+    let cols = 1024;
+    let data: Vec<f32> = rng.normal_vec(rows * cols, 3.0);
+    let sas = Sas::default();
+    let mut b = Bencher::default();
+
+    b.bench("softmax/exact-exp 256x1024", || {
+        let mut m = data.clone();
+        for r in 0..rows {
+            softmax_row_exact(&mut m[r * cols..(r + 1) * cols]);
+        }
+        m
+    });
+    b.bench("softmax/SAS 256x1024", || {
+        let mut m = data.clone();
+        for r in 0..rows {
+            sas.softmax_row(&mut m[r * cols..(r + 1) * cols]);
+        }
+        m
+    });
+    if let Some(s) = b.speedup("softmax/exact-exp 256x1024", "softmax/SAS 256x1024") {
+        println!("\nSAS speedup over exact exp: {s:.2}x");
+    }
+
+    // Element-level exp throughput.
+    let xs: Vec<f32> = (0..65536).map(|i| -(i as f32) / 11000.0).collect();
+    b.bench("exp/libm 64k elems", || {
+        xs.iter().map(|&x| x.exp()).sum::<f32>()
+    });
+    b.bench("exp/SAS 64k elems", || {
+        xs.iter().map(|&x| sas.exp(x)).sum::<f32>()
+    });
+    if let Some(s) = b.speedup("exp/libm 64k elems", "exp/SAS 64k elems") {
+        println!("\nSAS elementwise speedup over libm expf: {s:.2}x");
+    }
+
+    println!(
+        "\naccuracy: poly max err on [0,1] = {:.2e}, SAS max err on [-6,0] = {:.2e}",
+        {
+            let mut w = 0.0f32;
+            for i in 0..=1000 {
+                let t = i as f32 / 1000.0;
+                w = w.max((Sas::poly(t) - (-t).exp()).abs());
+            }
+            w
+        },
+        sas.max_abs_error(-6.0, 6000)
+    );
+}

@@ -1,0 +1,249 @@
+//! Baseline KV-cache compression comparators: KIVI and GEAR-L.
+//!
+//! Both compress K/V for storage but decompress to FLOAT before running
+//! exact attention — the dequantization overhead TurboAttention removes
+//! (paper Figure 1b/6). Implementations follow the cited papers at the
+//! fidelity Table 2 needs:
+//!
+//! * KIVI (Liu et al. 2024): per-channel grouped asymmetric quantization
+//!   for K, per-token grouped for V; the last `n_b` residual tokens stay
+//!   in full precision.
+//! * GEAR-L (Kang et al. 2024): group quantization plus a rank-r low-rank
+//!   approximation of the residual error; full-precision residual tokens.
+
+use crate::tensor::Mat;
+
+/// Asymmetric float-scale group fake-quant along an axis.
+///
+/// `axis = 0`: groups of `group` consecutive *tokens* share a scale per
+/// channel (KIVI key mode / "channelwise"). `axis = 1`: groups of
+/// consecutive *channels* share a scale per token (KIVI value mode /
+/// "tokenwise"). Returns the dequantized matrix.
+pub fn fake_quant_grouped(x: &Mat, bits: u32, group: usize, axis: usize) -> Mat {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let mut out = x.clone();
+    match axis {
+        0 => {
+            let mut g0 = 0;
+            while g0 < x.rows {
+                let g1 = (g0 + group).min(x.rows);
+                for c in 0..x.cols {
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    for r in g0..g1 {
+                        lo = lo.min(x.get(r, c));
+                        hi = hi.max(x.get(r, c));
+                    }
+                    let scale = ((hi - lo) / levels).max(1e-8);
+                    for r in g0..g1 {
+                        let q = ((x.get(r, c) - lo) / scale).round().clamp(0.0, levels);
+                        out.set(r, c, q * scale + lo);
+                    }
+                }
+                g0 = g1;
+            }
+        }
+        1 => {
+            for r in 0..x.rows {
+                let mut g0 = 0;
+                while g0 < x.cols {
+                    let g1 = (g0 + group).min(x.cols);
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    for c in g0..g1 {
+                        lo = lo.min(x.get(r, c));
+                        hi = hi.max(x.get(r, c));
+                    }
+                    let scale = ((hi - lo) / levels).max(1e-8);
+                    for c in g0..g1 {
+                        let q = ((x.get(r, c) - lo) / scale).round().clamp(0.0, levels);
+                        out.set(r, c, q * scale + lo);
+                    }
+                    g0 = g1;
+                }
+            }
+        }
+        _ => panic!("axis must be 0 or 1"),
+    }
+    out
+}
+
+/// KIVI-style cache compression of a `[tokens, d]` K or V slab.
+///
+/// The trailing `n_b` tokens (the residual buffer) stay full precision.
+pub fn kivi_compress(x: &Mat, bits: u32, group: usize, n_b: usize, is_key: bool) -> Mat {
+    let cut = x.rows.saturating_sub(n_b);
+    if cut == 0 {
+        return x.clone();
+    }
+    let head = x.rows_slice(0, cut);
+    let axis = if is_key { 0 } else { 1 };
+    let mut out = fake_quant_grouped(&head, bits, group, axis);
+    // Re-attach the full-precision residual tokens.
+    out.data.extend_from_slice(&x.data[cut * x.cols..]);
+    out.rows = x.rows;
+    out
+}
+
+/// Rank-r approximation of a matrix via subspace iteration (GEAR's
+/// low-rank error-compensation term; r is small so this is cheap).
+pub fn low_rank_approx(x: &Mat, r: usize, iters: usize) -> Mat {
+    let (m, n) = (x.rows, x.cols);
+    let r = r.min(m.min(n));
+    if r == 0 {
+        return Mat::zeros(m, n);
+    }
+    // Deterministic init: leading columns of x^T x power iteration.
+    let mut rng = crate::testutil::Rng::new(0x6EA5);
+    let mut basis = Mat::randn(&mut rng, n, r, 1.0); // [n, r]
+    for _ in 0..iters.max(1) {
+        // y = x @ basis [m, r]
+        let y = x.matmul(&basis);
+        // basis = x^T @ y, then orthonormalize (Gram-Schmidt).
+        let mut xt_y = Mat::zeros(n, r);
+        for i in 0..m {
+            let x_row = x.row(i);
+            let y_row = y.row(i);
+            for c in 0..n {
+                for j in 0..r {
+                    xt_y.data[c * r + j] += x_row[c] * y_row[j];
+                }
+            }
+        }
+        gram_schmidt(&mut xt_y);
+        basis = xt_y;
+    }
+    // Project: x ~= (x @ basis) @ basis^T.
+    let coeff = x.matmul(&basis); // [m, r]
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let c_row = coeff.row(i);
+        let o_row = out.row_mut(i);
+        for j in 0..r {
+            let b_col = j;
+            for c in 0..n {
+                o_row[c] += c_row[j] * basis.data[c * r + b_col];
+            }
+        }
+    }
+    out
+}
+
+fn gram_schmidt(a: &mut Mat) {
+    let (n, r) = (a.rows, a.cols);
+    for j in 0..r {
+        for prev in 0..j {
+            let mut dot = 0.0f32;
+            for i in 0..n {
+                dot += a.data[i * r + j] * a.data[i * r + prev];
+            }
+            for i in 0..n {
+                let sub = dot * a.data[i * r + prev];
+                a.data[i * r + j] -= sub;
+            }
+        }
+        let mut norm = 0.0f32;
+        for i in 0..n {
+            norm += a.data[i * r + j].powi(2);
+        }
+        let inv = 1.0 / norm.sqrt().max(1e-12);
+        for i in 0..n {
+            a.data[i * r + j] *= inv;
+        }
+    }
+}
+
+/// GEAR-L: group quantization + rank-r compensation of the residual.
+pub fn gear_compress(x: &Mat, bits: u32, group: usize, n_b: usize, rank: usize) -> Mat {
+    let cut = x.rows.saturating_sub(n_b);
+    if cut == 0 {
+        return x.clone();
+    }
+    let head = x.rows_slice(0, cut);
+    let quantized = fake_quant_grouped(&head, bits, group, 0);
+    // Residual error and its low-rank approximation.
+    let mut resid = head.clone();
+    for (r, &q) in resid.data.iter_mut().zip(&quantized.data) {
+        *r -= q;
+    }
+    let lr = low_rank_approx(&resid, rank, 2);
+    let mut out = quantized;
+    for (o, &l) in out.data.iter_mut().zip(&lr.data) {
+        *o += l;
+    }
+    out.data.extend_from_slice(&x.data[cut * x.cols..]);
+    out.rows = x.rows;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop, Rng};
+
+    #[test]
+    fn fake_quant_reduces_to_identity_at_high_bits() {
+        let mut rng = Rng::new(0);
+        let x = Mat::randn(&mut rng, 32, 8, 1.0);
+        let q = fake_quant_grouped(&x, 16, 8, 0);
+        assert!(x.rel_err(&q) < 1e-3);
+    }
+
+    #[test]
+    fn channelwise_beats_tokenwise_with_channel_outliers() {
+        // Figure 10's claim, reproduced as a unit test.
+        let mut rng = Rng::new(1);
+        let mut x = Mat::randn(&mut rng, 128, 32, 1.0);
+        for r in 0..128 {
+            x.data[r * 32 + 3] *= 12.0;
+            x.data[r * 32 + 17] *= 8.0;
+        }
+        let chan = fake_quant_grouped(&x, 4, 32, 0);
+        let tok = fake_quant_grouped(&x, 4, 32, 1);
+        assert!(x.mse(&chan) < x.mse(&tok));
+    }
+
+    #[test]
+    fn kivi_preserves_residual_tokens() {
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(&mut rng, 40, 8, 1.0);
+        let out = kivi_compress(&x, 2, 8, 16, true);
+        // Last 16 tokens bit-identical.
+        assert_eq!(&out.data[24 * 8..], &x.data[24 * 8..]);
+        // Compressed head differs (2-bit is lossy).
+        assert!(out.rows_slice(0, 24).mse(&x.rows_slice(0, 24)) > 0.0);
+    }
+
+    #[test]
+    fn low_rank_exact_for_low_rank_input() {
+        // Rank-1 matrix recovered exactly by rank-1 approximation.
+        let u = [1.0f32, -2.0, 0.5];
+        let v = [3.0f32, 1.0, -1.0, 2.0];
+        let mut x = Mat::zeros(3, 4);
+        for i in 0..3 {
+            for j in 0..4 {
+                x.set(i, j, u[i] * v[j]);
+            }
+        }
+        let a = low_rank_approx(&x, 1, 4);
+        assert!(x.rel_err(&a) < 1e-3, "rel {}", x.rel_err(&a));
+    }
+
+    #[test]
+    fn gear_beats_plain_quant() {
+        prop::run("gear <= kivi error", 15, |g| {
+            let x = Mat::from_vec(48, 16, g.normal_vec(48 * 16, 1.0));
+            let plain = fake_quant_grouped(&x, 2, 16, 0);
+            let gear = gear_compress(&x, 2, 16, 0, 4);
+            assert!(x.mse(&gear) <= x.mse(&plain) * 1.05);
+        });
+    }
+
+    #[test]
+    fn small_inputs_dont_panic() {
+        let x = Mat::from_vec(1, 1, vec![3.0]);
+        let _ = kivi_compress(&x, 2, 4, 0, true);
+        let _ = gear_compress(&x, 2, 4, 0, 2);
+        let _ = low_rank_approx(&x, 3, 2);
+    }
+}

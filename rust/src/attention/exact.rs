@@ -1,0 +1,83 @@
+//! Exact softmax attention — the single-head accuracy oracle.
+
+use crate::tensor::Mat;
+
+/// `softmax(Q K^T / sqrt(d)) V` over `[nq,d] x [nk,d] x [nk,d]`.
+///
+/// With `causal`, query row i sees key positions `<= i + nk - nq`
+/// (the query block is the tail of the context).
+pub fn attention_exact(q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
+    assert_eq!(q.cols, k.cols);
+    assert_eq!(k.rows, v.rows);
+    let d = q.cols;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores = q.matmul_t(k);
+    for s in scores.data.iter_mut() {
+        *s *= scale;
+    }
+    if causal {
+        for i in 0..scores.rows {
+            let limit = i + k.rows - q.rows;
+            for j in 0..scores.cols {
+                if j > limit {
+                    scores.set(i, j, f32::NEG_INFINITY);
+                }
+            }
+        }
+    }
+    for i in 0..scores.rows {
+        crate::sas::softmax_row_exact(scores.row_mut(i));
+    }
+    scores.matmul(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop, Rng};
+
+    #[test]
+    fn uniform_scores_average_values() {
+        // q == 0 -> uniform attention -> output = mean of V rows.
+        let q = Mat::zeros(1, 4);
+        let mut rng = Rng::new(0);
+        let k = Mat::randn(&mut rng, 3, 4, 1.0);
+        let v = Mat::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let o = attention_exact(&q, &k, &v, false);
+        assert!((o.get(0, 0) - 3.0).abs() < 1e-5);
+        assert!((o.get(0, 1) - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn causal_first_row_copies_v0() {
+        let mut rng = Rng::new(1);
+        let q = Mat::randn(&mut rng, 4, 8, 1.0);
+        let k = Mat::randn(&mut rng, 4, 8, 1.0);
+        let v = Mat::randn(&mut rng, 4, 8, 1.0);
+        let o = attention_exact(&q, &k, &v, true);
+        for c in 0..8 {
+            assert!((o.get(0, c) - v.get(0, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        prop::run("attention output in V convex hull", 50, |g| {
+            let nq = g.usize_in(1, 12);
+            let nk = g.usize_in(nq, 16);
+            let d = g.usize_in(1, 16);
+            let q = Mat::from_vec(nq, d, g.normal_vec(nq * d, 1.0));
+            let k = Mat::from_vec(nk, d, g.normal_vec(nk * d, 1.0));
+            let v = Mat::from_vec(nk, d, g.normal_vec(nk * d, 1.0));
+            let o = attention_exact(&q, &k, &v, false);
+            for c in 0..d {
+                let vmin = (0..nk).map(|r| v.get(r, c)).fold(f32::INFINITY, f32::min);
+                let vmax = (0..nk).map(|r| v.get(r, c)).fold(f32::NEG_INFINITY, f32::max);
+                for r in 0..nq {
+                    let x = o.get(r, c);
+                    assert!(x >= vmin - 1e-4 && x <= vmax + 1e-4);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,133 @@
+//! FP32 tiled FlashAttention with exact exp — the paper's baseline.
+//!
+//! Same online-softmax dataflow as the turbo engine but without tile
+//! quantization or SAS, so diffs between the two isolate exactly what
+//! TurboAttention changes (used by Table 4's FlashQ-only/SAS-only
+//! ablation).
+
+use crate::tensor::{dot, Mat};
+
+/// Tiled exact attention with running (m, l, acc) state.
+pub fn flash_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    br: usize,
+    bc: usize,
+    causal: bool,
+) -> Mat {
+    let (nq, d) = (q.rows, q.cols);
+    let nk = k.rows;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Mat::zeros(nq, d);
+
+    let mut i0 = 0;
+    while i0 < nq {
+        let i1 = (i0 + br).min(nq);
+        let rb = i1 - i0;
+        let mut m = vec![f32::NEG_INFINITY; rb];
+        let mut l = vec![0.0f32; rb];
+        let mut acc = Mat::zeros(rb, d);
+
+        let mut j0 = 0;
+        while j0 < nk {
+            let j1 = (j0 + bc).min(nk);
+            let cb = j1 - j0;
+            // Scores for this tile.
+            let mut s = vec![f32::NEG_INFINITY; rb * cb];
+            for r in 0..rb {
+                let limit = if causal { i0 + r + nk - nq } else { usize::MAX };
+                let q_row = q.row(i0 + r);
+                for c in 0..cb {
+                    if j0 + c <= limit {
+                        s[r * cb + c] = dot(q_row, k.row(j0 + c)) * scale;
+                    }
+                }
+            }
+            for r in 0..rb {
+                let row = &mut s[r * cb..(r + 1) * cb];
+                let m_new = row
+                    .iter()
+                    .fold(m[r], |a, &b| a.max(b));
+                if m_new == f32::NEG_INFINITY {
+                    continue; // fully masked tile row
+                }
+                let alpha = if m[r] == f32::NEG_INFINITY {
+                    0.0
+                } else {
+                    (m[r] - m_new).exp()
+                };
+                let mut row_sum = 0.0;
+                for p in row.iter_mut() {
+                    *p = if p.is_finite() { (*p - m_new).exp() } else { 0.0 };
+                    row_sum += *p;
+                }
+                l[r] = alpha * l[r] + row_sum;
+                let acc_row = acc.row_mut(r);
+                for a in acc_row.iter_mut() {
+                    *a *= alpha;
+                }
+                for (c, &p) in row.iter().enumerate() {
+                    if p != 0.0 {
+                        let v_row = v.row(j0 + c);
+                        for (a, &vv) in acc_row.iter_mut().zip(v_row) {
+                            *a += p * vv;
+                        }
+                    }
+                }
+                m[r] = m_new;
+            }
+            j0 = j1;
+        }
+        for r in 0..rb {
+            let inv = 1.0 / l[r].max(1e-20);
+            let acc_row = acc.row(r);
+            let o_row = out.row_mut(i0 + r);
+            for (o, &a) in o_row.iter_mut().zip(acc_row) {
+                *o = a * inv;
+            }
+        }
+        i0 = i1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_exact;
+    use crate::testutil::prop;
+
+    #[test]
+    fn matches_exact_attention() {
+        prop::run("flash == exact", 60, |g| {
+            let nq = g.usize_in(1, 40);
+            let nk = g.usize_in(nq, 48);
+            let d = g.usize_in(1, 24);
+            let br = *g.choose(&[4usize, 8, 16]);
+            let bc = *g.choose(&[4usize, 8, 16]);
+            let causal = g.bool();
+            let q = Mat::from_vec(nq, d, g.normal_vec(nq * d, 1.0));
+            let k = Mat::from_vec(nk, d, g.normal_vec(nk * d, 1.0));
+            let v = Mat::from_vec(nk, d, g.normal_vec(nk * d, 1.0));
+            let a = flash_attention(&q, &k, &v, br, bc, causal);
+            let b = attention_exact(&q, &k, &v, causal);
+            let rel = a.rel_err(&b);
+            assert!(rel < 1e-5, "rel err {rel}");
+        });
+    }
+
+    #[test]
+    fn single_tile_equals_multi_tile() {
+        prop::run("tiling invariance", 40, |g| {
+            let n = g.usize_in(2, 32);
+            let d = g.usize_in(1, 16);
+            let q = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let k = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let v = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let one = flash_attention(&q, &k, &v, n, n, true);
+            let many = flash_attention(&q, &k, &v, 3, 5, true);
+            assert!(one.rel_err(&many) < 1e-5);
+        });
+    }
+}

@@ -1,0 +1,52 @@
+//! Attention engines (CPU substrate).
+//!
+//! Four engines over identical `[N, d]` single-head inputs:
+//!
+//! * [`exact`]   — reference softmax attention (the accuracy oracle).
+//! * [`flash`]   — FP32 tiled FlashAttention with exact exp (the paper's
+//!   baseline; numerically equal to `exact` up to fp error).
+//! * [`turbo`]   — TurboAttention (Algorithms 1/2): INT8 tile matmuls +
+//!   SAS online softmax + progressive q2 cache. The paper's contribution.
+//! * [`baselines`] — KIVI and GEAR-L KV-cache compression comparators
+//!   (dequantize-to-float then exact attention), for Table 2 / Figure 6.
+//!
+//! These run the same math as the Pallas kernels (validated against the
+//! same jnp oracles via golden vectors in `rust/tests/`), so accuracy
+//! experiments can sweep configurations without a Python round trip.
+
+pub mod baselines;
+pub mod exact;
+pub mod flash;
+pub mod turbo;
+
+pub use exact::attention_exact;
+pub use flash::flash_attention;
+pub use turbo::{turbo_attention, turbo_decode, TurboConfig};
+
+/// Causal-mask helper: is key position `kpos` visible to query row `qrow`
+/// when the query block is the tail of an `nk`-token context?
+#[inline]
+pub fn causal_visible(qrow: usize, kpos: usize, nq: usize, nk: usize) -> bool {
+    kpos <= qrow + nk - nq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn causal_self_attention() {
+        // nq == nk: strictly lower-triangular + diagonal.
+        assert!(causal_visible(0, 0, 4, 4));
+        assert!(!causal_visible(0, 1, 4, 4));
+        assert!(causal_visible(3, 3, 4, 4));
+    }
+
+    #[test]
+    fn causal_decode_tail() {
+        // 1 query over 8 keys: sees everything.
+        for k in 0..8 {
+            assert!(causal_visible(0, k, 1, 8));
+        }
+    }
+}

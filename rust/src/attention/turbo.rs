@@ -1,0 +1,381 @@
+//! TurboAttention CPU engine — paper Algorithms 1 (prefill) and 2 (decode).
+//!
+//! Bit-faithful mirror of the Pallas kernel / jnp oracle: INT8 symmetric
+//! tile quantization, INT8xINT8->INT32 matmuls, SAS online softmax, INT8
+//! quantization of the probability tile before the PV matmul, and an
+//! optional progressive (INT4/2) round trip of K/V tiles to measure the
+//! q2-cache effect end to end.
+
+use crate::quant::{
+    dequant_asym_int, quant_asym_int, quant_sym_int8, Bits,
+};
+use crate::sas::Sas;
+use crate::tensor::{idot, Mat};
+
+/// Engine configuration (paper defaults: 64/64 tiles, n_r = -6).
+#[derive(Debug, Clone)]
+pub struct TurboConfig {
+    pub br: usize,
+    pub bc: usize,
+    pub n_r: f32,
+    pub causal: bool,
+    /// If set, round-trip K/V tiles through progressive quantization at
+    /// this storage width before use (models reading the q2 cache).
+    pub kv_bits: Option<Bits>,
+    /// Table 4 ablation: use exact exp instead of SAS (FlashQ-only mode).
+    pub exact_exp: bool,
+}
+
+impl Default for TurboConfig {
+    fn default() -> Self {
+        TurboConfig {
+            br: 64,
+            bc: 64,
+            n_r: -6.0,
+            causal: false,
+            kv_bits: None,
+            exact_exp: false,
+        }
+    }
+}
+
+/// TurboAttention prefill over a single head (Algorithm 1).
+pub fn turbo_attention(q: &Mat, k: &Mat, v: &Mat, cfg: &TurboConfig) -> Mat {
+    assert_eq!(q.cols, k.cols);
+    assert_eq!(k.rows, v.rows);
+    let (nq, d) = (q.rows, q.cols);
+    let nk = k.rows;
+    let scale = 1.0 / (d as f32).sqrt();
+    let sas = Sas::new(cfg.n_r);
+    let ex = |x: f32| if cfg.exact_exp { x.exp() } else { sas.exp(x) };
+    let mut out = Mat::zeros(nq, d);
+
+    let mut i0 = 0;
+    while i0 < nq {
+        let i1 = (i0 + cfg.br).min(nq);
+        let rb = i1 - i0;
+        let q_blk = q.rows_slice(i0, i1);
+        let q8 = quant_sym_int8(&q_blk.data);
+        let mut m = vec![f32::NEG_INFINITY; rb];
+        let mut l = vec![0.0f32; rb];
+        let mut acc = Mat::zeros(rb, d);
+
+        let mut j0 = 0;
+        while j0 < nk {
+            let j1 = (j0 + cfg.bc).min(nk);
+            let cb = j1 - j0;
+            let mut k_blk = k.rows_slice(j0, j1);
+            let mut v_blk = v.rows_slice(j0, j1);
+            if let Some(bits) = cfg.kv_bits {
+                roundtrip_q2(&mut k_blk, bits);
+                roundtrip_q2(&mut v_blk, bits);
+            }
+            let k8 = quant_sym_int8(&k_blk.data);
+            let v8 = quant_sym_int8(&v_blk.data);
+            let sf = q8.scale * k8.scale * scale;
+
+            // INT8 score tile.
+            let mut s = vec![f32::NEG_INFINITY; rb * cb];
+            for r in 0..rb {
+                let limit =
+                    if cfg.causal { i0 + r + nk - nq } else { usize::MAX };
+                let q_row = &q8.codes[r * d..(r + 1) * d];
+                for c in 0..cb {
+                    if j0 + c <= limit {
+                        let k_row = &k8.codes[c * d..(c + 1) * d];
+                        s[r * cb + c] = idot(q_row, k_row) as f32 * sf;
+                    }
+                }
+            }
+
+            // SAS online softmax + P quantization + INT8 PV.
+            let mut p = vec![0.0f32; rb * cb];
+            let mut m_new = vec![f32::NEG_INFINITY; rb];
+            for r in 0..rb {
+                let row = &s[r * cb..(r + 1) * cb];
+                m_new[r] =
+                    row.iter().fold(m[r], |a, &b| a.max(b));
+                if m_new[r] == f32::NEG_INFINITY {
+                    continue;
+                }
+                let p_row = &mut p[r * cb..(r + 1) * cb];
+                for (pp, &sv) in p_row.iter_mut().zip(row) {
+                    *pp = if sv.is_finite() { ex(sv - m_new[r]) } else { 0.0 };
+                }
+            }
+            let p8 = quant_sym_int8(&p);
+            let pv_sf = p8.scale * v8.scale;
+            for r in 0..rb {
+                if m_new[r] == f32::NEG_INFINITY {
+                    continue;
+                }
+                let alpha = if m[r] == f32::NEG_INFINITY {
+                    0.0
+                } else {
+                    ex(m[r] - m_new[r])
+                };
+                let p_row = &p[r * cb..(r + 1) * cb];
+                l[r] = alpha * l[r] + p_row.iter().sum::<f32>();
+                let p8_row = &p8.codes[r * cb..(r + 1) * cb];
+                let acc_row = acc.row_mut(r);
+                for a in acc_row.iter_mut() {
+                    *a *= alpha;
+                }
+                for (c, &pc) in p8_row.iter().enumerate() {
+                    if pc != 0 {
+                        let v_row = &v8.codes[c * d..(c + 1) * d];
+                        let w = pc as i32;
+                        for (a, &vv) in acc_row.iter_mut().zip(v_row) {
+                            *a += (w * vv as i32) as f32 * pv_sf;
+                        }
+                    }
+                }
+                m[r] = m_new[r];
+            }
+            j0 = j1;
+        }
+        for r in 0..rb {
+            let inv = 1.0 / l[r].max(1e-20);
+            for (o, &a) in out.row_mut(i0 + r).iter_mut().zip(acc.row(r)) {
+                *o = a * inv;
+            }
+        }
+        i0 = i1;
+    }
+    out
+}
+
+/// Round-trip a float tile through progressive quantization at `bits`
+/// (write to q2 cache, read back) — models the decode-visible error.
+fn roundtrip_q2(blk: &mut Mat, bits: Bits) {
+    let q1 = quant_sym_int8(&blk.data);
+    let b = quant_asym_int(&q1.codes, blk.rows, blk.cols, bits);
+    let back = dequant_asym_int(&b);
+    for (x, &c) in blk.data.iter_mut().zip(&back) {
+        *x = c as f32 * q1.scale;
+    }
+}
+
+/// One TurboAttention decode step (Algorithm 2) over a q1-level cache.
+///
+/// `k8`/`v8` are `[nk, d]` INT8 codes grouped in blocks of `bc` rows with
+/// per-block scales `sk`/`sv` (`ceil(nk/bc)` entries). Returns
+/// (output `[d]`, running max m, denominator l) so the caller can merge
+/// not-yet-cached tokens (the model's current token).
+#[allow(clippy::too_many_arguments)]
+pub fn turbo_decode(
+    q: &[f32],
+    k8: &[i8],
+    v8: &[i8],
+    sk: &[f32],
+    sv: &[f32],
+    nk: usize,
+    bc: usize,
+    n_r: f32,
+) -> (Vec<f32>, f32, f32) {
+    let d = q.len();
+    assert!(k8.len() >= nk * d && v8.len() >= nk * d);
+    let scale = 1.0 / (d as f32).sqrt();
+    let sas = Sas::new(n_r);
+    let q8 = quant_sym_int8(q);
+
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let mut acc = vec![0.0f32; d];
+    let mut s = vec![0.0f32; bc];
+    let mut j0 = 0;
+    let mut blk = 0;
+    while j0 < nk {
+        let j1 = (j0 + bc).min(nk);
+        let cb = j1 - j0;
+        let sf = q8.scale * sk[blk] * scale;
+        let mut m_new = m;
+        for c in 0..cb {
+            let k_row = &k8[(j0 + c) * d..(j0 + c + 1) * d];
+            let sc = idot(&q8.codes, k_row) as f32 * sf;
+            s[c] = sc;
+            m_new = m_new.max(sc);
+        }
+        let alpha = if m == f32::NEG_INFINITY { 0.0 } else { sas.exp(m - m_new) };
+        let mut row_sum = 0.0;
+        for item in s.iter_mut().take(cb) {
+            *item = sas.exp(*item - m_new);
+            row_sum += *item;
+        }
+        l = alpha * l + row_sum;
+        let p8 = quant_sym_int8(&s[..cb]);
+        let pv_sf = p8.scale * sv[blk];
+        for a in acc.iter_mut() {
+            *a *= alpha;
+        }
+        for (c, &pc) in p8.codes.iter().enumerate() {
+            if pc != 0 {
+                let v_row = &v8[(j0 + c) * d..(j0 + c + 1) * d];
+                let w = pc as i32;
+                for (a, &vv) in acc.iter_mut().zip(v_row) {
+                    *a += (w * vv as i32) as f32 * pv_sf;
+                }
+            }
+        }
+        m = m_new;
+        j0 = j1;
+        blk += 1;
+    }
+    let inv = 1.0 / l.max(1e-20);
+    let out = acc.iter().map(|&a| a * inv).collect();
+    (out, m, l)
+}
+
+/// Merge one extra (uncached) token into a decode result via SAS online
+/// softmax — the model-side float merge (model.py `_sas_merge_token`).
+pub fn sas_merge_token(
+    out: &[f32],
+    m: f32,
+    l: f32,
+    s_new: f32,
+    v_new: &[f32],
+    n_r: f32,
+) -> Vec<f32> {
+    let sas = Sas::new(n_r);
+    let m_tot = m.max(s_new);
+    let alpha = if m == f32::NEG_INFINITY { 0.0 } else { sas.exp(m - m_tot) };
+    let p_new = sas.exp(s_new - m_tot);
+    let l_tot = (alpha * l + p_new).max(1e-20);
+    out.iter()
+        .zip(v_new)
+        .map(|(&o, &v)| (alpha * l * o + p_new * v) / l_tot)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_exact;
+    use crate::quant::quant_sym_int8;
+    use crate::testutil::prop;
+
+    #[test]
+    fn close_to_exact_attention() {
+        prop::run("turbo ~ exact", 40, |g| {
+            let nq = g.usize_in(1, 40);
+            let nk = g.usize_in(nq, 48);
+            let d = g.usize_in(4, 24);
+            let causal = g.bool();
+            let q = Mat::from_vec(nq, d, g.normal_vec(nq * d, 1.0));
+            let k = Mat::from_vec(nk, d, g.normal_vec(nk * d, 1.0));
+            let v = Mat::from_vec(nk, d, g.normal_vec(nk * d, 1.0));
+            let cfg = TurboConfig { br: 16, bc: 16, causal, ..Default::default() };
+            let a = turbo_attention(&q, &k, &v, &cfg);
+            let b = attention_exact(&q, &k, &v, causal);
+            let rel = a.rel_err(&b);
+            assert!(rel < 0.08, "rel err {rel}");
+        });
+    }
+
+    #[test]
+    fn tiling_invariance_up_to_quant_noise() {
+        prop::run("turbo tiling", 30, |g| {
+            let n = g.usize_in(4, 32);
+            let d = g.usize_in(4, 16);
+            let q = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let k = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let v = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let c1 = TurboConfig { br: 8, bc: 8, causal: true, ..Default::default() };
+            let c2 = TurboConfig { br: 16, bc: 4, causal: true, ..Default::default() };
+            let a = turbo_attention(&q, &k, &v, &c1);
+            let b = turbo_attention(&q, &k, &v, &c2);
+            assert!(a.rel_err(&b) < 0.06);
+        });
+    }
+
+    #[test]
+    fn kv_bits_4_better_than_2() {
+        prop::run("q2 width ordering", 20, |g| {
+            let n = 32;
+            let d = 16;
+            let q = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let k = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let v = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let exact = attention_exact(&q, &k, &v, true);
+            let err = |bits| {
+                let cfg = TurboConfig {
+                    br: 16,
+                    bc: 16,
+                    causal: true,
+                    kv_bits: Some(bits),
+                    ..Default::default()
+                };
+                turbo_attention(&q, &k, &v, &cfg).rel_err(&exact)
+            };
+            assert!(err(Bits::Int4) <= err(Bits::Int2) + 0.02);
+        });
+    }
+
+    #[test]
+    fn decode_matches_prefill_last_row() {
+        prop::run("decode == prefill tail", 30, |g| {
+            let nk = g.usize_in(1, 40);
+            let d = g.usize_in(4, 16);
+            let bc = 8;
+            let q = g.normal_vec(d, 1.0);
+            let kf = g.normal_vec(nk * d, 1.0);
+            let vf = g.normal_vec(nk * d, 1.0);
+            // Build the q1 cache per block (as the kvcache would).
+            let nb = nk.div_ceil(bc);
+            let mut k8 = vec![0i8; nk * d];
+            let mut v8 = vec![0i8; nk * d];
+            let mut sk = vec![0.0f32; nb];
+            let mut sv = vec![0.0f32; nb];
+            for b in 0..nb {
+                let lo = b * bc;
+                let hi = ((b + 1) * bc).min(nk);
+                let qk = quant_sym_int8(&kf[lo * d..hi * d]);
+                k8[lo * d..hi * d].copy_from_slice(&qk.codes);
+                sk[b] = qk.scale;
+                let qv = quant_sym_int8(&vf[lo * d..hi * d]);
+                v8[lo * d..hi * d].copy_from_slice(&qv.codes);
+                sv[b] = qv.scale;
+            }
+            let (out, _m, l) = turbo_decode(&q, &k8, &v8, &sk, &sv, nk, bc, -6.0);
+            assert!(l > 0.0);
+            // Compare against exact attention over the dequantized cache.
+            let kd: Vec<f32> = (0..nk * d)
+                .map(|i| k8[i] as f32 * sk[i / (bc * d)])
+                .collect();
+            let vd: Vec<f32> = (0..nk * d)
+                .map(|i| v8[i] as f32 * sv[i / (bc * d)])
+                .collect();
+            let qm = Mat::from_vec(1, d, q.clone());
+            let km = Mat::from_vec(nk, d, kd);
+            let vm = Mat::from_vec(nk, d, vd);
+            let want = attention_exact(&qm, &km, &vm, false);
+            let got = Mat::from_vec(1, d, out);
+            let rel = got.rel_err(&want);
+            assert!(rel < 0.08, "rel {rel}");
+        });
+    }
+
+    #[test]
+    fn merge_token_dominant_new_token() {
+        // If the new token's score dwarfs the cache, output -> v_new.
+        let out = vec![1.0, 2.0];
+        let merged =
+            sas_merge_token(&out, -3.0, 2.0, 50.0, &[9.0, -9.0], -6.0);
+        assert!((merged[0] - 9.0).abs() < 1e-3);
+        assert!((merged[1] + 9.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn merge_token_empty_cache() {
+        let merged = sas_merge_token(
+            &[0.0, 0.0],
+            f32::NEG_INFINITY,
+            0.0,
+            0.3,
+            &[4.0, 5.0],
+            -6.0,
+        );
+        assert!((merged[0] - 4.0).abs() < 1e-4);
+        assert!((merged[1] - 5.0).abs() < 1e-4);
+    }
+}

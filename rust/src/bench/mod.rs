@@ -1,0 +1,227 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Wall-clock timing with warmup, adaptive iteration count, and robust
+//! statistics. Used by `benches/*.rs` (cargo bench with `harness = false`)
+//! and the experiment drivers.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_s(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// `name  mean ± σ  (median, min, n)` line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:<10} (median {:>12}, min {:>12}, n={})",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.median),
+            fmt_dur(self.min),
+            self.iters
+        )
+    }
+}
+
+/// Human duration formatting at ns/us/ms/s granularity.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick-mode bencher for CI / tests.
+    pub fn quick() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(200),
+            min_iters: 3,
+            max_iters: 1000,
+            ..Default::default()
+        }
+    }
+
+    /// Time `f`, preventing dead-code elimination via the returned value.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        // Warmup + estimate per-iter cost.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup || warm_iters < 1 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > self.max_iters {
+                break;
+            }
+        }
+        let per_iter = w0.elapsed().as_secs_f64() / warm_iters as f64;
+        let target = ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as u64)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(target as usize);
+        for _ in 0..target {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: target,
+            mean,
+            median: samples[n / 2],
+            min: samples[0],
+            stddev: Duration::from_secs_f64(var.sqrt()),
+        };
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Speedup of `base` over `new` by case name.
+    pub fn speedup(&self, base: &str, new: &str) -> Option<f64> {
+        let b = self.results.iter().find(|r| r.name == base)?;
+        let n = self.results.iter().find(|r| r.name == new)?;
+        Some(b.mean_s() / n.mean_s())
+    }
+}
+
+/// Simple text table printer for paper-style output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.header));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::quick();
+        let stats = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(stats.iters >= 3);
+        assert!(stats.min <= stats.median);
+        assert!(stats.median <= stats.mean * 10);
+    }
+
+    #[test]
+    fn speedup_lookup() {
+        let mut b = Bencher::quick();
+        b.bench("slow", || std::thread::sleep(Duration::from_micros(200)));
+        b.bench("fast", || std::thread::sleep(Duration::from_micros(50)));
+        let s = b.speedup("slow", "fast").unwrap();
+        assert!(s > 1.5, "speedup {s}");
+    }
+
+    #[test]
+    fn fmt_durations() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains('s'));
+    }
+
+    #[test]
+    #[should_panic(expected = "column mismatch")]
+    fn table_checks_columns() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

@@ -1,0 +1,348 @@
+//! The serving engine: continuous batcher + PJRT model + quantized KV
+//! cache + sampling, with a threaded command loop for the server.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::request::{Completion, FinishReason, GenRequest, RequestId};
+use crate::info;
+use crate::kvcache::{KvCache, KvCacheConfig, PrecisionMap};
+use crate::metrics::{EngineMetrics, Histogram};
+use crate::model::{ModelBundle, Sampler};
+use crate::quant::Bits;
+use crate::testutil::Rng;
+
+/// Which attention path serves requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathMode {
+    /// TurboAttention: quantized execution + paged q2 cache.
+    Turbo,
+    /// Exact FlashAttention baseline with an FP32 cache.
+    Flash,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub mode: PathMode,
+    pub batcher: BatcherConfig,
+    pub sampler: Sampler,
+    /// q2 storage width for uniform precision (Turbo mode).
+    pub kv_bits: Bits,
+    /// Number of 2-bit heads per layer (0 = uniform `kv_bits`).
+    pub n_2bit_heads: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            mode: PathMode::Turbo,
+            batcher: BatcherConfig::default(),
+            sampler: Sampler::Greedy,
+            kv_bits: Bits::Int4,
+            n_2bit_heads: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-request generation state.
+struct Session {
+    req: GenRequest,
+    /// Turbo path: paged quantized cache.
+    cache: Option<KvCache>,
+    /// Flash path: float K/V slabs `[L*H*C*dh]`.
+    flash_kv: Option<(Vec<f32>, Vec<f32>)>,
+    generated: Vec<u8>,
+    /// Next token to feed (sampled but not yet decoded).
+    pending_token: u8,
+    /// Its absolute position.
+    pos: usize,
+    prefill_done_at: Instant,
+}
+
+/// Commands accepted by the engine thread.
+pub enum Command {
+    Submit(GenRequest, Sender<Completion>),
+    /// Drain all work then reply on the channel.
+    Flush(Sender<()>),
+    Shutdown,
+}
+
+/// The engine. Owns the PJRT runtime; single-threaded step loop.
+pub struct Engine {
+    pub cfg: EngineConfig,
+    bundle: ModelBundle,
+    batcher: Batcher,
+    sessions: HashMap<RequestId, Session>,
+    rng: Rng,
+    pub metrics: EngineMetrics,
+    pub ttft_hist: Histogram,
+    pub latency_hist: Histogram,
+}
+
+impl Engine {
+    pub fn new(bundle: ModelBundle, cfg: EngineConfig) -> Engine {
+        Engine {
+            batcher: Batcher::new(cfg.batcher.clone()),
+            sessions: HashMap::new(),
+            rng: Rng::new(cfg.seed),
+            metrics: EngineMetrics::default(),
+            ttft_hist: Histogram::new(),
+            latency_hist: Histogram::new(),
+            bundle,
+            cfg,
+        }
+    }
+
+    pub fn bundle(&mut self) -> &mut ModelBundle {
+        &mut self.bundle
+    }
+
+    pub fn submit(&mut self, req: GenRequest) {
+        self.batcher.submit(req);
+    }
+
+    pub fn idle(&self) -> bool {
+        self.batcher.idle()
+    }
+
+    fn new_cache(&self) -> KvCache {
+        let m = &self.bundle.rt.manifest.model;
+        let precision = if self.cfg.n_2bit_heads == 0 {
+            PrecisionMap::uniform(m.n_layers, m.n_heads, self.cfg.kv_bits)
+        } else {
+            // Static head split until calibration runs (experiments use
+            // `PrecisionMap::mixed_from_stats` with real stats).
+            let mut pm = PrecisionMap::uniform(m.n_layers, m.n_heads, Bits::Int4);
+            for l in 0..m.n_layers {
+                for h in 0..self.cfg.n_2bit_heads.min(m.n_heads) {
+                    pm.set(l, h, Bits::Int2);
+                }
+            }
+            pm
+        };
+        KvCache::new(KvCacheConfig::new(
+            m.n_layers, m.n_heads, m.d_head, m.block, precision,
+        ))
+    }
+
+    /// Run one scheduler iteration: admit + prefill, then one decode round.
+    /// Returns completions finished this step.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let decision = self.batcher.schedule();
+        let mut done = Vec::new();
+
+        // Prefill admitted requests.
+        for id in decision.prefill {
+            let req = self
+                .batcher
+                .request(id)
+                .expect("scheduled request must exist")
+                .clone();
+            let turbo = self.cfg.mode == PathMode::Turbo;
+            let out = self.bundle.prefill(&req.prompt, turbo)?;
+            let n = req.prompt.len();
+            let logits = self.bundle.logits_at(&out.logits, n - 1);
+            let first = self.cfg.sampler.sample(logits, &mut self.rng);
+            let mut session = Session {
+                cache: None,
+                flash_kv: None,
+                generated: vec![first],
+                pending_token: first,
+                pos: n,
+                prefill_done_at: Instant::now(),
+                req,
+            };
+            match self.cfg.mode {
+                PathMode::Turbo => {
+                    let (k8, v8, sk, sv) =
+                        out.turbo_cache.expect("turbo prefill returns cache");
+                    let mut cache = self.new_cache();
+                    self.bundle.ingest_prefill(&mut cache, &k8, &v8, &sk, &sv, n);
+                    session.cache = Some(cache);
+                }
+                PathMode::Flash => {
+                    session.flash_kv = Some(out.flash_cache.expect("flash cache"));
+                }
+            }
+            self.metrics.prefill_tokens += n as u64;
+            self.metrics.tokens_generated += 1;
+            self.batcher.on_token(id);
+            let ttft = session.req.submitted_at.elapsed().as_secs_f64();
+            self.ttft_hist.record(ttft);
+            self.sessions.insert(id, session);
+        }
+
+        // Decode round: one step per running request.
+        for id in decision.decode {
+            let Some(session) = self.sessions.get_mut(&id) else { continue };
+            if let Some(reason) = finished(session, self.bundle.max_ctx()) {
+                let c = Self::complete(session, reason);
+                self.latency_hist.record(c.total_latency);
+                self.metrics.requests_completed += 1;
+                self.batcher.finish(id);
+                self.sessions.remove(&id);
+                done.push(c);
+                continue;
+            }
+            let token = session.pending_token;
+            let pos = session.pos;
+            let out = match self.cfg.mode {
+                PathMode::Turbo => {
+                    let cache = session.cache.as_ref().expect("turbo cache");
+                    self.bundle.decode_turbo(cache, token, pos)?
+                }
+                PathMode::Flash => {
+                    let (kf, vf) = session.flash_kv.as_ref().expect("flash kv");
+                    let nk = pos;
+                    self.bundle.decode_flash(kf, vf, token, pos, nk)?
+                }
+            };
+            // Fold the new token's K/V into the cache.
+            let m_info = self.bundle.rt.manifest.model.clone();
+            match self.cfg.mode {
+                PathMode::Turbo => {
+                    let cache = session.cache.as_mut().unwrap();
+                    let dh = m_info.d_head;
+                    for l in 0..m_info.n_layers {
+                        for h in 0..m_info.n_heads {
+                            let o = (l * m_info.n_heads + h) * dh;
+                            cache
+                                .k_stream_mut(l, h)
+                                .push_token(&out.k_new[o..o + dh]);
+                            cache
+                                .v_stream_mut(l, h)
+                                .push_token(&out.v_new[o..o + dh]);
+                        }
+                    }
+                }
+                PathMode::Flash => {
+                    let (kf, vf) = session.flash_kv.as_mut().unwrap();
+                    let dh = m_info.d_head;
+                    let c = m_info.max_ctx;
+                    for l in 0..m_info.n_layers {
+                        for h in 0..m_info.n_heads {
+                            let src = (l * m_info.n_heads + h) * dh;
+                            let dst = ((l * m_info.n_heads + h) * c + pos) * dh;
+                            kf[dst..dst + dh]
+                                .copy_from_slice(&out.k_new[src..src + dh]);
+                            vf[dst..dst + dh]
+                                .copy_from_slice(&out.v_new[src..src + dh]);
+                        }
+                    }
+                }
+            }
+            let next = self.cfg.sampler.sample(&out.logits, &mut self.rng);
+            session.generated.push(next);
+            session.pending_token = next;
+            session.pos += 1;
+            self.metrics.tokens_generated += 1;
+            self.batcher.on_token(id);
+        }
+        self.metrics.batches_run += 1;
+        if let Some(s) = self.sessions.values().next() {
+            if let Some(cache) = &s.cache {
+                let stats = cache.stats();
+                self.metrics.cache_bytes = stats.bytes;
+                self.metrics.cache_compression = stats.compression_ratio();
+            }
+        }
+        Ok(done)
+    }
+
+    fn complete(session: &Session, reason: FinishReason) -> Completion {
+        let total = session.req.submitted_at.elapsed().as_secs_f64();
+        let decode_time = session.prefill_done_at.elapsed().as_secs_f64();
+        let n_gen = session.generated.len().max(1);
+        Completion {
+            id: session.req.id,
+            prompt_len: session.req.prompt.len(),
+            generated: session.generated.clone(),
+            total_latency: total,
+            ttft: total - decode_time,
+            tpot: decode_time / n_gen as f64,
+            finish_reason: reason,
+        }
+    }
+
+    /// Drive the engine until all submitted requests complete.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        while !self.idle() {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+
+    /// Threaded serving loop: consume commands until Shutdown.
+    pub fn run_loop(mut self, rx: Receiver<Command>) -> Result<()> {
+        let mut reply_to: HashMap<RequestId, Sender<Completion>> = HashMap::new();
+        loop {
+            // Drain pending commands (non-blocking while busy; blocking
+            // when idle so we don't spin).
+            loop {
+                let cmd = if self.idle() {
+                    match rx.recv() {
+                        Ok(c) => c,
+                        Err(_) => return Ok(()),
+                    }
+                } else {
+                    match rx.try_recv() {
+                        Ok(c) => c,
+                        Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                        Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                            return Ok(())
+                        }
+                    }
+                };
+                match cmd {
+                    Command::Submit(req, tx) => {
+                        reply_to.insert(req.id, tx);
+                        self.submit(req);
+                    }
+                    Command::Flush(tx) => {
+                        while !self.idle() {
+                            for c in self.step()? {
+                                if let Some(tx) = reply_to.remove(&c.id) {
+                                    let _ = tx.send(c);
+                                }
+                            }
+                        }
+                        let _ = tx.send(());
+                    }
+                    Command::Shutdown => {
+                        info!("engine", "shutdown: {} completed", self.metrics.requests_completed);
+                        return Ok(());
+                    }
+                }
+            }
+            for c in self.step()? {
+                if let Some(tx) = reply_to.remove(&c.id) {
+                    let _ = tx.send(c);
+                }
+            }
+        }
+    }
+}
+
+/// Completion check: token budget, stop byte, or context exhaustion.
+fn finished(s: &Session, max_ctx: usize) -> Option<FinishReason> {
+    if s.generated.len() >= s.req.max_new_tokens {
+        return Some(FinishReason::MaxTokens);
+    }
+    if let Some(stop) = s.req.stop_byte {
+        if s.generated.last() == Some(&stop) {
+            return Some(FinishReason::StopByte);
+        }
+    }
+    if s.pos + 1 >= max_ctx {
+        return Some(FinishReason::ContextFull);
+    }
+    None
+}

@@ -1,0 +1,28 @@
+//! The serving coordinator — Layer 3's contribution: request routing,
+//! iteration-level continuous batching, and the engine that ties the PJRT
+//! runtime to the quantized KV cache.
+//!
+//! Topology (vLLM-router-like, scaled to this testbed):
+//!
+//! ```text
+//!   clients -> server (TCP threads) -> submit queue -> Engine thread
+//!                                                        | step():
+//!                                                        |  admit prefills
+//!                                                        |  decode round
+//!                                                        v
+//!                                  completions -> per-request channels
+//! ```
+//!
+//! The PJRT CPU client executes one computation at a time, so "batching"
+//! here is Orca-style *iteration-level scheduling*: the batcher multiplexes
+//! prefill admission and per-request decode steps under a token budget,
+//! which is exactly the coordination layer the paper's throughput numbers
+//! assume (the kernel-level batch dimension lives in the cost model).
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+
+pub use batcher::{Batcher, BatcherConfig, SchedDecision};
+pub use engine::{Engine, EngineConfig, PathMode};
+pub use request::{Completion, GenRequest, RequestId, RequestState};

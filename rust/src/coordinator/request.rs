@@ -1,0 +1,75 @@
+//! Request and completion types flowing through the coordinator.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// A generation request as submitted by a client.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: RequestId,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    /// Stop generation at this byte (e.g. b'.') if set.
+    pub stop_byte: Option<u8>,
+    pub submitted_at: Instant,
+}
+
+impl GenRequest {
+    pub fn new(id: RequestId, prompt: Vec<u8>, max_new_tokens: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            stop_byte: None,
+            submitted_at: Instant::now(),
+        }
+    }
+}
+
+/// Lifecycle state tracked by the batcher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Queued, prefill not yet run.
+    Waiting,
+    /// Prefill done; decoding.
+    Running,
+    /// Finished (all tokens emitted or stop condition hit).
+    Done,
+}
+
+/// Completed request with serving telemetry.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub generated: Vec<u8>,
+    /// Queue + prefill + decode wall time.
+    pub total_latency: f64,
+    /// Time to first token (queue + prefill).
+    pub ttft: f64,
+    /// Decode seconds per generated token.
+    pub tpot: f64,
+    pub finish_reason: FinishReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopByte,
+    ContextFull,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let r = GenRequest::new(7, b"hello".to_vec(), 32);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, b"hello");
+        assert_eq!(r.max_new_tokens, 32);
+        assert!(r.stop_byte.is_none());
+    }
+}

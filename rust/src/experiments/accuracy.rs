@@ -1,0 +1,444 @@
+//! Accuracy experiments (Tables 2/3/4/5, Figure 7b).
+//!
+//! Substitution (DESIGN.md §2): the paper measures CoT task accuracy on
+//! 7-8B checkpoints; here the same quantization mechanisms act on
+//! calibrated synthetic multi-head QKV (channel-outlier structure per
+//! Figure 4) and accuracy is *next-token agreement*: the % of positions
+//! where a fixed random readout over the attention output picks the same
+//! token as the exact-FP16 path. The orderings the paper reports (Turbo
+//! ~ FP16 > GEAR > KIVI; mixed-2/4 modest loss; robustness across block
+//! sizes) are driven by exactly the outlier-handling mechanisms this
+//! proxy preserves.
+
+use crate::attention::baselines::{fake_quant_grouped, gear_compress, kivi_compress};
+use crate::attention::{attention_exact, turbo_attention, TurboConfig};
+use crate::bench::Table;
+use crate::quant::{head_score, select_2bit_heads, Bits, HeadStats, SelectionRule};
+use crate::sas::Sas;
+use crate::tensor::Mat;
+use crate::testutil::Rng;
+use crate::util::cli::Args;
+use crate::workload::synth::{outlier_kv_slab, OutlierProfile};
+
+/// One evaluation suite: multi-head QKV with calibrated outliers.
+pub struct Suite {
+    pub name: String,
+    pub q: Vec<Mat>,
+    pub k: Vec<Mat>,
+    pub v: Vec<Mat>,
+    /// Fixed random readout `[heads * d, vocab]`.
+    pub readout: Mat,
+}
+
+pub const SUITE_HEADS: usize = 8;
+pub const SUITE_D: usize = 32;
+const READOUT_VOCAB: usize = 64;
+
+impl Suite {
+    /// Build a suite with `nq` positions; heads 2 and 5 get strong
+    /// channel outliers (the Figure 4 pattern).
+    pub fn build(name: &str, nq: usize, seed: u64) -> Suite {
+        let mut rng = Rng::new(seed);
+        let mut q = Vec::new();
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        for h in 0..SUITE_HEADS {
+            let profile = if h == 2 || h == 5 {
+                OutlierProfile::llama_k()
+            } else {
+                OutlierProfile::plain()
+            };
+            let v_profile = if h == 2 || h == 5 {
+                OutlierProfile::phi3_v()
+            } else {
+                OutlierProfile::plain()
+            };
+            q.push(Mat::randn(&mut rng, nq, SUITE_D, 1.0));
+            k.push(outlier_kv_slab(&mut rng, nq, SUITE_D, &profile));
+            v.push(outlier_kv_slab(&mut rng, nq, SUITE_D, &v_profile));
+        }
+        let readout =
+            Mat::randn(&mut rng, SUITE_HEADS * SUITE_D, READOUT_VOCAB, 1.0);
+        Suite { name: name.into(), q, k, v, readout }
+    }
+
+    /// Readout argmax per position over concatenated head outputs.
+    fn decisions(&self, head_outputs: &[Mat]) -> Vec<usize> {
+        let nq = head_outputs[0].rows;
+        let mut decisions = Vec::with_capacity(nq);
+        for r in 0..nq {
+            let mut logits = vec![0.0f32; READOUT_VOCAB];
+            for (h, out) in head_outputs.iter().enumerate() {
+                let row = out.row(r);
+                for (c, &x) in row.iter().enumerate() {
+                    let w_row = self.readout.row(h * SUITE_D + c);
+                    for (l, &w) in logits.iter_mut().zip(w_row) {
+                        *l += x * w;
+                    }
+                }
+            }
+            decisions.push(crate::model::argmax(&logits));
+        }
+        decisions
+    }
+
+    /// Agreement % between a method's outputs and the exact outputs.
+    pub fn agreement(&self, exact: &[Mat], method: &[Mat]) -> f64 {
+        let a = self.decisions(exact);
+        let b = self.decisions(method);
+        let hits = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        100.0 * hits as f64 / a.len() as f64
+    }
+
+    pub fn exact_outputs(&self) -> Vec<Mat> {
+        (0..SUITE_HEADS)
+            .map(|h| attention_exact(&self.q[h], &self.k[h], &self.v[h], true))
+            .collect()
+    }
+}
+
+/// A method under accuracy test: per-head attention outputs.
+pub enum AccMethod {
+    Exact,
+    Turbo { bits_per_head: Vec<Bits>, br: usize, bc: usize, exact_exp: bool },
+    /// exact scores + SAS softmax (Table 4's SAS-only row).
+    SasOnly,
+    Kivi { bits: u32 },
+    Gear { bits: u32, rank: usize },
+}
+
+impl AccMethod {
+    pub fn turbo_uniform(bits: Bits, br: usize, bc: usize) -> AccMethod {
+        AccMethod::Turbo {
+            bits_per_head: vec![bits; SUITE_HEADS],
+            br,
+            bc,
+            exact_exp: false,
+        }
+    }
+
+    pub fn run(&self, suite: &Suite) -> Vec<Mat> {
+        (0..SUITE_HEADS)
+            .map(|h| {
+                let (q, k, v) = (&suite.q[h], &suite.k[h], &suite.v[h]);
+                match self {
+                    AccMethod::Exact => attention_exact(q, k, v, true),
+                    AccMethod::SasOnly => sas_only_attention(q, k, v),
+                    AccMethod::Turbo { bits_per_head, br, bc, exact_exp } => {
+                        let cfg = TurboConfig {
+                            br: *br,
+                            bc: *bc,
+                            causal: true,
+                            kv_bits: Some(bits_per_head[h]),
+                            exact_exp: *exact_exp,
+                            ..Default::default()
+                        };
+                        turbo_attention(q, k, v, &cfg)
+                    }
+                    AccMethod::Kivi { bits } => {
+                        // Per-channel K, per-token V, fp residual window.
+                        let n_b = 16.min(k.rows / 2);
+                        let kq = kivi_compress(k, *bits, 32, n_b, true);
+                        let vq = kivi_compress(v, *bits, 32, n_b, false);
+                        attention_exact(q, &kq, &vq, true)
+                    }
+                    AccMethod::Gear { bits, rank } => {
+                        let n_b = 16.min(k.rows / 2);
+                        let kq = gear_compress(k, *bits, 32, n_b, *rank);
+                        let vq = gear_compress(v, *bits, 32, n_b, *rank);
+                        attention_exact(q, &kq, &vq, true)
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+fn sas_only_attention(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    let d = q.cols;
+    let scale = 1.0 / (d as f32).sqrt();
+    let sas = Sas::default();
+    let mut scores = q.matmul_t(k);
+    for s in scores.data.iter_mut() {
+        *s *= scale;
+    }
+    for i in 0..scores.rows {
+        let limit = i + k.rows - q.rows;
+        for j in 0..scores.cols {
+            if j > limit {
+                scores.set(i, j, f32::NEG_INFINITY);
+            }
+        }
+        sas.softmax_row(scores.row_mut(i));
+    }
+    scores.matmul(v)
+}
+
+/// Mixed 2/4-bit turbo using the paper's priority selection on K stats.
+fn turbo_mixed(suite: &Suite, n_2bit: usize, rule: SelectionRule, br: usize, bc: usize) -> AccMethod {
+    let scores: Vec<f32> = (0..SUITE_HEADS)
+        .map(|h| {
+            let stats =
+                HeadStats::from_slab(&suite.k[h].data, suite.k[h].rows, SUITE_D);
+            head_score(&stats, rule)
+        })
+        .collect();
+    let mask = select_2bit_heads(&scores, n_2bit);
+    AccMethod::Turbo {
+        bits_per_head: mask
+            .iter()
+            .map(|&two| if two { Bits::Int2 } else { Bits::Int4 })
+            .collect(),
+        br,
+        bc,
+        exact_exp: false,
+    }
+}
+
+fn default_suites(args: &Args) -> Vec<Suite> {
+    // Prefill profile of GSM8k/AQuA/BBH CoT prompts, scaled ~1/7 to the
+    // CPU engine's comfortable range.
+    let scale = args.opt_parse("suite-scale", 0.14f64);
+    crate::workload::eval_suites(scale)
+        .into_iter()
+        .enumerate()
+        .map(|(i, (name, nq, _))| Suite::build(name, nq, 100 + i as u64))
+        .collect()
+}
+
+/// Table 2: CoT-reasoning accuracy proxy across methods and bit widths.
+pub fn tab2_reasoning(args: &Args) -> anyhow::Result<()> {
+    let suites = default_suites(args);
+    println!(
+        "Table 2 — next-token agreement vs FP16 (%), synthetic CoT-shaped \
+         suites\n(paper metric: task accuracy; ordering is the reproduced \
+         content)\n"
+    );
+    let br = 32;
+    let rows: Vec<(String, String, AccMethod)> = vec![
+        ("FP16".into(), "16".into(), AccMethod::Exact),
+        ("KIVI".into(), "4".into(), AccMethod::Kivi { bits: 4 }),
+        ("GEAR-L".into(), "4".into(), AccMethod::Gear { bits: 4, rank: 4 }),
+        (
+            "TurboAttention".into(),
+            "4".into(),
+            AccMethod::turbo_uniform(Bits::Int4, br, br),
+        ),
+        ("KIVI".into(), "3".into(), AccMethod::Kivi { bits: 3 }),
+        ("GEAR-L".into(), "3".into(), AccMethod::Gear { bits: 3, rank: 4 }),
+    ];
+    let mut table = Table::new(&[
+        "Method", "Bit", &suites[0].name, &suites[1].name, &suites[2].name,
+        "Ave.",
+    ]);
+    let exacts: Vec<Vec<Mat>> = suites.iter().map(|s| s.exact_outputs()).collect();
+    let mut run_row = |label: String, bit: String, m: &AccMethod| {
+        let mut cells = vec![label, bit];
+        let mut sum = 0.0;
+        for (s, e) in suites.iter().zip(&exacts) {
+            let acc = s.agreement(e, &m.run(s));
+            sum += acc;
+            cells.push(format!("{acc:.2}"));
+        }
+        cells.push(format!("{:.2}", sum / suites.len() as f64));
+        cells
+    };
+    for (label, bit, m) in &rows {
+        let cells = run_row(label.clone(), bit.clone(), m);
+        table.row(&cells);
+    }
+    // Mixed 2/4 (half the heads 2-bit) — compared against 3-bit baselines.
+    let mixed_cells = {
+        let mut cells =
+            vec!["TurboAttention (mixed)".to_string(), "2/4".to_string()];
+        let mut sum = 0.0;
+        for (s, e) in suites.iter().zip(&exacts) {
+            let m = turbo_mixed(s, SUITE_HEADS / 2, SelectionRule::Priority, br, br);
+            let acc = s.agreement(e, &m.run(s));
+            sum += acc;
+            cells.push(format!("{acc:.2}"));
+        }
+        cells.push(format!("{:.2}", sum / suites.len() as f64));
+        cells
+    };
+    table.row(&mixed_cells);
+    table.print();
+    println!(
+        "\nExpected shape (paper): Turbo-4bit ~ FP16; Turbo-mixed beats the \
+         3-bit baselines; KIVI lowest at matched bits."
+    );
+    Ok(())
+}
+
+/// Table 3: block-size ablation.
+pub fn tab3_block_size(args: &Args) -> anyhow::Result<()> {
+    let suite = Suite::build("GSM8k-like", args.opt_parse("nq", 128usize), 7);
+    let exact = suite.exact_outputs();
+    println!("Table 3 — TurboAttention agreement across block sizes (B_r, B_c)\n");
+    let mut table = Table::new(&["Block size (Br,Bc)", "Dataset", "Agreement %"]);
+    for (br, bc) in [(16, 16), (16, 32), (32, 16), (32, 32), (32, 64), (64, 32), (64, 64)] {
+        let m = AccMethod::turbo_uniform(Bits::Int4, br, bc);
+        let acc = suite.agreement(&exact, &m.run(&suite));
+        table.row(&[
+            format!("({br},{bc})"),
+            "GSM8k-like".into(),
+            format!("{acc:.2}"),
+        ]);
+    }
+    table.print();
+    println!("\n(paper: accuracy is robust across block sizes — spread < 1 point)");
+    Ok(())
+}
+
+/// Table 4: FlashQ-only vs SAS-only vs both.
+pub fn tab4_flashq_sas(args: &Args) -> anyhow::Result<()> {
+    let suite = Suite::build("AQuA-like", args.opt_parse("nq", 160usize), 11);
+    let exact = suite.exact_outputs();
+    println!("Table 4 — FlashQ and SAS accuracy decomposition\n");
+    let mut table = Table::new(&["Method", "Agreement %"]);
+    let flashq_only = AccMethod::Turbo {
+        bits_per_head: vec![Bits::Int4; SUITE_HEADS],
+        br: 32,
+        bc: 32,
+        exact_exp: true,
+    };
+    let rows: Vec<(&str, AccMethod)> = vec![
+        ("FP16", AccMethod::Exact),
+        ("FlashQ-4bit", flashq_only),
+        ("SAS", AccMethod::SasOnly),
+        ("FlashQ-4bit + SAS", AccMethod::turbo_uniform(Bits::Int4, 32, 32)),
+    ];
+    for (name, m) in rows {
+        let acc = suite.agreement(&exact, &m.run(&suite));
+        table.row(&[name.into(), format!("{acc:.2}")]);
+    }
+    table.print();
+    println!("\n(paper: both techniques individually near-lossless)");
+    Ok(())
+}
+
+/// Table 5: integration with weight quantization (readout proxy).
+pub fn tab5_weight_quant(args: &Args) -> anyhow::Result<()> {
+    let mut suite = Suite::build("GSM8k-like", args.opt_parse("nq", 128usize), 13);
+    let exact = suite.exact_outputs();
+    println!(
+        "Table 5 — TurboAttention composed with weight quantization\n\
+         (readout matrix quantized as the linear-layer proxy)\n"
+    );
+    let mut table = Table::new(&["Method", "Agreement %"]);
+    // FP16 weights.
+    let turbo = AccMethod::turbo_uniform(Bits::Int4, 32, 32);
+    let base = suite.agreement(&exact, &turbo.run(&suite));
+    table.row(&["FP16 weights".into(), "100.00".into()]);
+    table.row(&["TurboAttention".into(), format!("{base:.2}")]);
+    // LLM.int8-like: per-channel symmetric INT8 on the readout.
+    let orig = suite.readout.clone();
+    suite.readout = fake_quant_grouped(&orig, 8, orig.rows, 0);
+    let acc8 = suite.agreement(&exact, &turbo.run(&suite));
+    table.row(&["LLM.int8() + TurboAttention".into(), format!("{acc8:.2}")]);
+    // Qserve-like: 4-bit groupwise weights.
+    suite.readout = fake_quant_grouped(&orig, 4, 32, 0);
+    let acc4 = suite.agreement(&exact, &turbo.run(&suite));
+    table.row(&["Qserve(W4) + TurboAttention".into(), format!("{acc4:.2}")]);
+    suite.readout = orig;
+    table.print();
+    println!("\n(paper: composition costs < 1 point on top of either technique)");
+    Ok(())
+}
+
+/// Figure 7b: head-selection rule ablation across 2-bit head counts.
+///
+/// Heads get *graded, structurally different* outlier patterns (one huge
+/// channel vs many medium channels vs drift-only ...) so the four rules
+/// rank them differently; the metric is mean relative output error (x100,
+/// lower = better) — agreement saturates too early to separate rules.
+pub fn fig7b_head_selection(args: &Args) -> anyhow::Result<()> {
+    let nq = args.opt_parse("nq", 160usize);
+    let mut rng = Rng::new(17);
+    let profiles: [OutlierProfile; SUITE_HEADS] = [
+        OutlierProfile::plain(),
+        OutlierProfile { frac_channels: 0.03, boost: 15.0, token_drift: 0.1 },
+        OutlierProfile { frac_channels: 0.40, boost: 3.0, token_drift: 0.2 },
+        OutlierProfile { frac_channels: 0.10, boost: 6.0, token_drift: 0.3 },
+        OutlierProfile { frac_channels: 0.50, boost: 1.8, token_drift: 0.1 },
+        OutlierProfile { frac_channels: 0.0, boost: 1.0, token_drift: 0.8 },
+        OutlierProfile { frac_channels: 0.06, boost: 10.0, token_drift: 0.0 },
+        OutlierProfile::plain(),
+    ];
+    let mut q = Vec::new();
+    let mut k = Vec::new();
+    let mut v = Vec::new();
+    for p in &profiles {
+        q.push(Mat::randn(&mut rng, nq, SUITE_D, 1.0));
+        k.push(outlier_kv_slab(&mut rng, nq, SUITE_D, p));
+        v.push(outlier_kv_slab(&mut rng, nq, SUITE_D, p));
+    }
+    let readout = Mat::randn(&mut rng, SUITE_HEADS * SUITE_D, 64, 1.0);
+    let suite = Suite { name: "graded".into(), q, k, v, readout };
+    let exact = suite.exact_outputs();
+    let rel_err = |outs: &[Mat]| -> f64 {
+        outs.iter()
+            .zip(&exact)
+            .map(|(a, b)| a.rel_err(b))
+            .sum::<f64>()
+            / outs.len() as f64
+            * 100.0
+    };
+    println!(
+        "Figure 7b — mean relative output error (x100, lower = better) vs \
+         number of 2-bit heads, by selection rule\n"
+    );
+    let rules = [
+        ("priority (ours)", SelectionRule::Priority),
+        ("entropy", SelectionRule::Entropy),
+        ("min-max", SelectionRule::MinMax),
+        ("variation", SelectionRule::Variation),
+    ];
+    let counts = [0usize, 2, 4, 6, 8];
+    let mut table = Table::new(&["rule", "0", "2", "4", "6", "8"]);
+    for (name, rule) in rules {
+        let mut cells = vec![name.to_string()];
+        for &n in &counts {
+            let m = turbo_mixed(&suite, n, rule, 32, 32);
+            cells.push(format!("{:.2}", rel_err(&m.run(&suite))));
+        }
+        table.row(&cells);
+    }
+    table.print();
+    println!(
+        "\n(paper: the priority rule degrades most gracefully as 2-bit \
+         head count grows)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_agreement_reflexive() {
+        let s = Suite::build("t", 32, 0);
+        let e = s.exact_outputs();
+        assert_eq!(s.agreement(&e, &e), 100.0);
+    }
+
+    #[test]
+    fn turbo4_beats_kivi2() {
+        let s = Suite::build("t", 64, 1);
+        let e = s.exact_outputs();
+        let t4 = AccMethod::turbo_uniform(Bits::Int4, 16, 16);
+        let k2 = AccMethod::Kivi { bits: 2 };
+        let a_t = s.agreement(&e, &t4.run(&s));
+        let a_k = s.agreement(&e, &k2.run(&s));
+        assert!(a_t >= a_k, "turbo4 {a_t} vs kivi2 {a_k}");
+    }
+
+    #[test]
+    fn sas_only_near_lossless() {
+        let s = Suite::build("t", 64, 2);
+        let e = s.exact_outputs();
+        let acc = s.agreement(&e, &AccMethod::SasOnly.run(&s));
+        assert!(acc > 95.0, "sas-only {acc}");
+    }
+}

@@ -1,0 +1,140 @@
+//! Distribution and kernel-approximation figures (4/8/9, 5, 10).
+
+use crate::attention::baselines::fake_quant_grouped;
+use crate::bench::Table;
+use crate::quant::{head_priority, HeadStats};
+use crate::sas::Sas;
+use crate::tensor::Mat;
+use crate::testutil::Rng;
+use crate::util::cli::Args;
+use crate::workload::synth::{gap_distributions, outlier_kv_slab, OutlierProfile};
+
+/// Figures 4/8/9: Q/K/V channel min-max gap distributions, channel vs
+/// token axis, for LLaMA-like and Phi3-like outlier profiles.
+pub fn fig4_distributions(args: &Args) -> anyhow::Result<()> {
+    let tokens = args.opt_parse("tokens", 512usize);
+    let channels = args.opt_parse("channels", 64usize);
+    let seed = args.opt_parse("seed", 0u64);
+    println!(
+        "Figure 4/8/9 — channelwise vs tokenwise min-max gap distributions"
+    );
+    println!(
+        "(synthetic slabs calibrated to the paper's observed outlier \
+         structure; tokens={tokens} channels={channels})\n"
+    );
+    let mut table = Table::new(&[
+        "profile", "axis", "p50 gap", "p90 gap", "max gap", "max/p50",
+    ]);
+    for (name, profile) in [
+        ("LLaMA3-like K", OutlierProfile::llama_k()),
+        ("Phi3-like V", OutlierProfile::phi3_v()),
+        ("no-outlier ctrl", OutlierProfile::plain()),
+    ] {
+        let mut rng = Rng::new(seed);
+        let slab = outlier_kv_slab(&mut rng, tokens, channels, &profile);
+        let (chan, tok) = gap_distributions(&slab);
+        for (axis, gaps) in [("channel", &chan), ("token", &tok)] {
+            let mut s = gaps.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let p50 = s[s.len() / 2];
+            let p90 = s[s.len() * 9 / 10];
+            let max = *s.last().unwrap();
+            table.row(&[
+                name.into(),
+                axis.into(),
+                format!("{p50:.2}"),
+                format!("{p90:.2}"),
+                format!("{max:.2}"),
+                format!("{:.1}x", max / p50.max(1e-6)),
+            ]);
+        }
+    }
+    table.print();
+
+    // Headwise priority view (Figure 4's "certain heads have outliers").
+    println!("\nHead priorities (gap x std), 8 heads, outliers in heads 2 & 5:");
+    let mut rng = Rng::new(seed + 1);
+    for h in 0..8usize {
+        let profile = if h == 2 || h == 5 {
+            OutlierProfile::phi3_v()
+        } else {
+            OutlierProfile::plain()
+        };
+        let slab = outlier_kv_slab(&mut rng, tokens, channels, &profile);
+        let stats = HeadStats::from_slab(&slab.data, tokens, channels);
+        let pr = head_priority(&stats);
+        println!("  head {h}: priority {pr:10.2} {}", if pr > 100.0 { "<- keep 4-bit" } else { "" });
+    }
+    Ok(())
+}
+
+/// Figure 5: cubic polynomial fit of e^{-x} on [0, 1].
+pub fn fig5_poly_fit(_args: &Args) -> anyhow::Result<()> {
+    println!("Figure 5 — POLY(x) vs e^(-x) on [0,1] (paper Eq. 15)\n");
+    let mut table = Table::new(&["x", "e^-x", "POLY(x)", "abs err"]);
+    let mut max_err = 0.0f32;
+    let mut sum_err = 0.0f64;
+    let n = 1000;
+    for i in 0..=n {
+        let x = i as f32 / n as f32;
+        let exact = (-x).exp();
+        let poly = Sas::poly(x);
+        let err = (poly - exact).abs();
+        max_err = max_err.max(err);
+        sum_err += err as f64;
+        if i % 100 == 0 {
+            table.row(&[
+                format!("{x:.1}"),
+                format!("{exact:.6}"),
+                format!("{poly:.6}"),
+                format!("{err:.2e}"),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nmax |err| = {max_err:.2e}, mean |err| = {:.2e} (paper: 'captures \
+         the essential behavior with minimal overhead')",
+        sum_err / (n + 1) as f64
+    );
+
+    // Full SAS (LUT x POLY + sparsity) error over [n_r, 0].
+    let sas = Sas::default();
+    println!(
+        "full SAS max |err| on [-6,0]: {:.2e}; SAS(x < -6) = 0 (sparsified)",
+        sas.max_abs_error(-6.0, 6000)
+    );
+    Ok(())
+}
+
+/// Figure 10: channelwise vs tokenwise group quantization error.
+pub fn fig10_quant_error(args: &Args) -> anyhow::Result<()> {
+    let seed = args.opt_parse("seed", 0u64);
+    println!("Figure 10 — group quantization error by axis (MSE)\n");
+    let mut table = Table::new(&[
+        "profile", "bits", "channelwise MSE", "tokenwise MSE", "token/chan",
+    ]);
+    for (name, profile) in [
+        ("LLaMA3-like K", OutlierProfile::llama_k()),
+        ("Phi3-like V", OutlierProfile::phi3_v()),
+    ] {
+        for bits in [2u32, 4] {
+            let mut rng = Rng::new(seed);
+            let x: Mat = outlier_kv_slab(&mut rng, 256, 64, &profile);
+            let chan = fake_quant_grouped(&x, bits, 32, 0);
+            let tok = fake_quant_grouped(&x, bits, 32, 1);
+            let mse_c = x.mse(&chan);
+            let mse_t = x.mse(&tok);
+            table.row(&[
+                name.into(),
+                format!("{bits}"),
+                format!("{mse_c:.4}"),
+                format!("{mse_t:.4}"),
+                format!("{:.1}x", mse_t / mse_c.max(1e-12)),
+            ]);
+        }
+    }
+    table.print();
+    println!("\n(paper: channelwise grouping has less quantization error)");
+    Ok(())
+}

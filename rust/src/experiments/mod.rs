@@ -1,0 +1,41 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation
+//! (DESIGN.md §5 maps each ID to its modules). Every driver prints the
+//! same rows/series the paper reports; EXPERIMENTS.md records the
+//! paper-vs-measured comparison.
+
+pub mod accuracy;
+pub mod figures;
+pub mod perf_figures;
+
+use crate::util::cli::Args;
+
+/// Dispatch `turboattn experiment <id>`.
+pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
+    match id {
+        "fig1" => perf_figures::fig1_timeshare(args),
+        "fig4" | "fig8" | "fig9" => figures::fig4_distributions(args),
+        "fig5" => figures::fig5_poly_fit(args),
+        "fig6" => perf_figures::fig6_speedup(args),
+        "fig7a" => perf_figures::fig7a_throughput(args),
+        "fig7b" => accuracy::fig7b_head_selection(args),
+        "fig10" => figures::fig10_quant_error(args),
+        "tab2" => accuracy::tab2_reasoning(args),
+        "tab3" => accuracy::tab3_block_size(args),
+        "tab4" => accuracy::tab4_flashq_sas(args),
+        "tab5" => accuracy::tab5_weight_quant(args),
+        "all" => {
+            for id in [
+                "fig1", "fig4", "fig5", "fig6", "fig7a", "fig7b", "fig10",
+                "tab2", "tab3", "tab4", "tab5",
+            ] {
+                println!("\n================ {id} ================");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other}; ids: fig1 fig4 fig5 fig6 fig7a \
+             fig7b fig10 tab2 tab3 tab4 tab5 all"
+        ),
+    }
+}

@@ -1,0 +1,189 @@
+//! Enhanced KV decode buffer (paper §3.3).
+//!
+//! Newly generated K/V tokens land here at INT8 with a **universal
+//! clamped scale**: the scale is fixed when the buffer opens, and later
+//! outliers are clamped rather than triggering a re-quantization of
+//! already-buffered tokens. When `n_b` tokens accumulate the buffer is
+//! flushed through progressive quantization into a q2 page.
+//!
+//! This contrasts with KIVI/GEAR's full-precision residual windows: the
+//! buffer is itself INT8, so the attention over buffered tokens is still
+//! integer inference.
+
+use crate::quant::sym::{quant_sym_int8_fixed_scale, INT8_QMAX};
+
+/// INT8 token buffer for one (layer, head) K or V stream.
+#[derive(Debug, Clone)]
+pub struct DecodeBuffer {
+    pub channels: usize,
+    pub capacity: usize,
+    /// INT8 codes, `len() / channels` tokens.
+    codes: Vec<i8>,
+    /// Universal scale; fixed at first append of an epoch, reset on flush.
+    scale: f32,
+    /// Count of clamped (outlier) elements since the last flush — a
+    /// telemetry signal for scale quality.
+    pub clamped: u64,
+}
+
+impl DecodeBuffer {
+    pub fn new(channels: usize, capacity: usize) -> DecodeBuffer {
+        assert!(capacity > 0);
+        DecodeBuffer {
+            channels,
+            capacity,
+            codes: Vec::with_capacity(capacity * channels),
+            scale: 0.0,
+            clamped: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len() / self.channels
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() >= self.capacity
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    pub fn codes(&self) -> &[i8] {
+        &self.codes
+    }
+
+    /// Append one token's channel vector. Returns true if the buffer is
+    /// now full (caller should flush into a page).
+    ///
+    /// The first token of an epoch sets the universal scale (with a 2x
+    /// headroom factor so moderately larger later tokens don't clamp);
+    /// subsequent outliers are clamped, per the paper.
+    pub fn push(&mut self, values: &[f32]) -> bool {
+        assert_eq!(values.len(), self.channels);
+        assert!(!self.is_full(), "push into full buffer — flush first");
+        if self.is_empty() {
+            let amax = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            self.scale = (amax * 2.0 / INT8_QMAX).max(1e-8);
+        }
+        let before = self.codes.len();
+        self.codes
+            .extend(quant_sym_int8_fixed_scale(values, self.scale));
+        // Count clamps for telemetry.
+        for (&c, &v) in self.codes[before..].iter().zip(values) {
+            if (c == 127 || c == -127) && (v / self.scale).abs() > 127.5 {
+                self.clamped += 1;
+            }
+        }
+        self.is_full()
+    }
+
+    /// Drain all buffered tokens as (q1 codes, universal scale, count),
+    /// resetting the buffer for the next epoch.
+    pub fn drain(&mut self) -> (Vec<i8>, f32, usize) {
+        let tokens = self.len();
+        let scale = self.scale;
+        let codes = std::mem::take(&mut self.codes);
+        self.scale = 0.0;
+        self.clamped = 0;
+        (codes, scale, tokens)
+    }
+
+    /// Dequantized float view of buffered tokens (tests/oracles only).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.codes.iter().map(|&c| c as f32 * self.scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn fills_at_capacity() {
+        let mut b = DecodeBuffer::new(4, 3);
+        assert!(!b.push(&[1.0, 2.0, 3.0, 4.0]));
+        assert!(!b.push(&[1.0; 4]));
+        assert!(b.push(&[0.5; 4]));
+        assert!(b.is_full());
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn universal_scale_is_stable_across_pushes() {
+        let mut b = DecodeBuffer::new(2, 8);
+        b.push(&[1.0, -1.0]);
+        let s0 = b.scale();
+        b.push(&[100.0, 0.0]); // outlier: clamped, scale unchanged
+        assert_eq!(b.scale(), s0);
+        assert!(b.clamped > 0);
+        // First token's codes unchanged by the outlier push.
+        let f = b.to_f32();
+        assert!((f[0] - 1.0).abs() < s0);
+    }
+
+    #[test]
+    fn drain_resets_epoch() {
+        let mut b = DecodeBuffer::new(2, 4);
+        b.push(&[1.0, 2.0]);
+        let (codes, scale, n) = b.drain();
+        assert_eq!(n, 1);
+        assert_eq!(codes.len(), 2);
+        assert!(scale > 0.0);
+        assert!(b.is_empty());
+        assert_eq!(b.scale(), 0.0);
+        // New epoch gets a fresh scale from its first token.
+        b.push(&[10.0, 0.0]);
+        assert!((b.scale() - 20.0 / INT8_QMAX).abs() < 1e-6);
+    }
+
+    #[test]
+    fn token_count_conservation() {
+        prop::run("buffer conserves tokens", 50, |g| {
+            let ch = g.usize_in(1, 8);
+            let cap = g.usize_in(1, 16);
+            let mut b = DecodeBuffer::new(ch, cap);
+            let mut pushed = 0usize;
+            let mut drained = 0usize;
+            for _ in 0..g.usize_in(0, 100) {
+                if b.is_full() {
+                    drained += b.drain().2;
+                }
+                let v = g.normal_vec(ch, 1.0);
+                b.push(&v);
+                pushed += 1;
+            }
+            drained += b.drain().2;
+            assert_eq!(pushed, drained);
+        });
+    }
+
+    #[test]
+    fn roundtrip_error_within_scale_for_in_range_tokens() {
+        prop::run("buffer quant error", 50, |g| {
+            let ch = g.usize_in(1, 16);
+            let mut b = DecodeBuffer::new(ch, 8);
+            let first = g.normal_vec(ch, 1.0);
+            b.push(&first);
+            let s = b.scale();
+            // Second token within 2x the first token's range: no clamping.
+            let second: Vec<f32> =
+                first.iter().map(|&x| x * g.f32_in(-1.5, 1.5)).collect();
+            b.push(&second);
+            let back = b.to_f32();
+            for (i, &want) in first.iter().chain(&second).enumerate() {
+                assert!(
+                    (back[i] - want).abs() <= s * 0.5 + 1e-6,
+                    "idx {i}: {} vs {want} (s={s})",
+                    back[i]
+                );
+            }
+        });
+    }
+}

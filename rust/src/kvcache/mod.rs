@@ -1,0 +1,28 @@
+//! Paged, quantized KV cache — the Rust coordinator's ownership of the
+//! paper's FlashQ storage hierarchy.
+//!
+//! Layout per (layer, head):
+//!
+//! ```text
+//!   [ q2 pages: INT4/INT2 packed, bc tokens each ][ INT8 buffer: < n_b ]
+//! ```
+//!
+//! * Prefill writes q1 (INT8 + per-block scale) blocks; the cache
+//!   immediately compresses full blocks to q2 at the head's precision
+//!   (paper Algorithm 1 write-back) and keeps the tail in the buffer.
+//! * Decode appends one token at a time to the enhanced INT8 buffer
+//!   (universal clamped scale — §3.3); when the buffer reaches `n_b`
+//!   tokens it is flushed through progressive quantization into a page.
+//! * Reads reconstruct the q1 view (INT8 codes + per-block scales) that
+//!   the decode executable consumes; q2 -> q1 is pure integer work and is
+//!   the optimized hot path.
+
+pub mod buffer;
+pub mod page;
+pub mod precision;
+pub mod store;
+
+pub use buffer::DecodeBuffer;
+pub use page::QuantPage;
+pub use precision::PrecisionMap;
+pub use store::{CacheStats, HeadCache, KvCache, KvCacheConfig};

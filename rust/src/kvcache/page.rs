@@ -1,0 +1,183 @@
+//! One q2-level cache page: `bc` tokens of K or V for one head, packed.
+
+use crate::quant::{
+    pack_codes, quant_asym_int, unpack_codes_into, Bits, PackedCodes,
+};
+
+/// A full page of `tokens x channels` codes at q2 precision, plus the
+/// integer dequantization parameters and the q1-level FP scale.
+#[derive(Debug, Clone)]
+pub struct QuantPage {
+    pub bits: Bits,
+    pub tokens: usize,
+    pub channels: usize,
+    /// Packed q2 codes.
+    pub packed: PackedCodes,
+    /// Per-channel integer scale (INT8 range, held as i32).
+    pub s_int: Vec<i32>,
+    /// Per-channel integer zero point.
+    pub z_int: Vec<i32>,
+    /// The symmetric FP scale of the q1 level this page was built from.
+    pub fp_scale: f32,
+    /// Precomputed code -> q1 tables, `channels x (levels+1)` i8 entries.
+    /// Pages are immutable, so the per-channel affine
+    /// `clamp((code + z) * s)` is folded into a lookup at construction —
+    /// the §Perf optimization of the decode hot path (derivable metadata,
+    /// excluded from the storage accounting).
+    deq_table: Vec<i8>,
+}
+
+impl QuantPage {
+    /// Compress a q1 block (INT8 codes + scale) into a page.
+    pub fn from_q1(
+        q1: &[i8],
+        tokens: usize,
+        channels: usize,
+        fp_scale: f32,
+        bits: Bits,
+    ) -> QuantPage {
+        let blk = quant_asym_int(q1, tokens, channels, bits);
+        let stride = bits.levels() as usize + 1;
+        let mut deq_table = vec![0i8; channels * stride];
+        for c in 0..channels {
+            for code in 0..stride {
+                let v = (code as i32 + blk.z_int[c]) * blk.s_int[c];
+                deq_table[c * stride + code] = v.clamp(-127, 127) as i8;
+            }
+        }
+        QuantPage {
+            bits,
+            tokens,
+            channels,
+            packed: pack_codes(&blk.codes, bits),
+            s_int: blk.s_int,
+            z_int: blk.z_int,
+            fp_scale,
+            deq_table,
+        }
+    }
+
+    /// Decompress q2 -> q1 INT8 codes into `out` (len tokens*channels).
+    ///
+    /// Hot path: fused unpack + per-channel table lookup (no multiply,
+    /// no clamp in the loop). INT4/INT2 get specialized byte-wise paths.
+    pub fn dequant_q1_into(&self, scratch: &mut Vec<u8>, out: &mut [i8]) {
+        let n = self.tokens * self.channels;
+        assert_eq!(out.len(), n);
+        let ch = self.channels;
+        match self.bits {
+            Bits::Int4 if ch % 2 == 0 => {
+                // Two codes per byte; channel index advances by 2.
+                let bytes_per_row = ch / 2;
+                for t in 0..self.tokens {
+                    let row = &self.packed.bytes
+                        [t * bytes_per_row..(t + 1) * bytes_per_row];
+                    let out_row = &mut out[t * ch..(t + 1) * ch];
+                    for (i, &b) in row.iter().enumerate() {
+                        let c = 2 * i;
+                        out_row[c] =
+                            self.deq_table[c * 16 + (b & 0xF) as usize];
+                        out_row[c + 1] =
+                            self.deq_table[(c + 1) * 16 + (b >> 4) as usize];
+                    }
+                }
+            }
+            Bits::Int2 if ch % 4 == 0 => {
+                let bytes_per_row = ch / 4;
+                for t in 0..self.tokens {
+                    let row = &self.packed.bytes
+                        [t * bytes_per_row..(t + 1) * bytes_per_row];
+                    let out_row = &mut out[t * ch..(t + 1) * ch];
+                    for (i, &b) in row.iter().enumerate() {
+                        let c = 4 * i;
+                        out_row[c] = self.deq_table[c * 4 + (b & 3) as usize];
+                        out_row[c + 1] =
+                            self.deq_table[(c + 1) * 4 + ((b >> 2) & 3) as usize];
+                        out_row[c + 2] =
+                            self.deq_table[(c + 2) * 4 + ((b >> 4) & 3) as usize];
+                        out_row[c + 3] =
+                            self.deq_table[(c + 3) * 4 + (b >> 6) as usize];
+                    }
+                }
+            }
+            _ => {
+                // Generic path: unpack then table-lookup per element.
+                let stride = self.bits.levels() as usize + 1;
+                scratch.resize(n, 0);
+                unpack_codes_into(&self.packed, &mut scratch[..n]);
+                for t in 0..self.tokens {
+                    let row_in = &scratch[t * ch..(t + 1) * ch];
+                    let row_out = &mut out[t * ch..(t + 1) * ch];
+                    for c in 0..ch {
+                        row_out[c] =
+                            self.deq_table[c * stride + row_in[c] as usize];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Convenience allocating variant (tests / cold paths).
+    pub fn dequant_q1(&self) -> Vec<i8> {
+        let mut out = vec![0i8; self.tokens * self.channels];
+        let mut scratch = Vec::new();
+        self.dequant_q1_into(&mut scratch, &mut out);
+        out
+    }
+
+    /// Bytes of storage used by this page (codes + params).
+    pub fn bytes(&self) -> usize {
+        self.packed.bytes.len()
+            + self.s_int.len()  // s_int fits i8 per paper; count 1B each
+            + self.z_int.len()
+            + 4 // fp_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quant_sym_int8;
+    use crate::testutil::prop;
+
+    #[test]
+    fn page_roundtrip_matches_unpacked_pipeline() {
+        prop::run("page == asym pipeline", 50, |g| {
+            let tokens = g.usize_in(1, 64);
+            let channels = g.usize_in(1, 32);
+            let bits = *g.choose(&[Bits::Int2, Bits::Int4]);
+            let x = g.normal_vec(tokens * channels, 2.0);
+            let q1 = quant_sym_int8(&x);
+            let page =
+                QuantPage::from_q1(&q1.codes, tokens, channels, q1.scale, bits);
+            let got = page.dequant_q1();
+            let blk = crate::quant::quant_asym_int(&q1.codes, tokens, channels, bits);
+            let want = crate::quant::dequant_asym_int(&blk);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn storage_is_actually_compressed() {
+        let x: Vec<f32> = (0..64 * 32).map(|i| (i as f32).sin()).collect();
+        let q1 = quant_sym_int8(&x);
+        let p4 = QuantPage::from_q1(&q1.codes, 64, 32, q1.scale, Bits::Int4);
+        let p2 = QuantPage::from_q1(&q1.codes, 64, 32, q1.scale, Bits::Int2);
+        let fp16_bytes = 64 * 32 * 2;
+        assert!(p4.bytes() * 3 < fp16_bytes, "int4 page {}B", p4.bytes());
+        assert!(p2.bytes() < p4.bytes());
+    }
+
+    #[test]
+    fn dequant_into_avoids_reallocation() {
+        let x: Vec<f32> = (0..16 * 8).map(|i| (i as f32).cos()).collect();
+        let q1 = quant_sym_int8(&x);
+        let page = QuantPage::from_q1(&q1.codes, 16, 8, q1.scale, Bits::Int4);
+        let mut scratch = Vec::new();
+        let mut out = vec![0i8; 16 * 8];
+        page.dequant_q1_into(&mut scratch, &mut out);
+        let cap = scratch.capacity();
+        page.dequant_q1_into(&mut scratch, &mut out);
+        assert_eq!(scratch.capacity(), cap);
+    }
+}

@@ -1,0 +1,117 @@
+//! Head-wise precision assignment (paper §3.2) for the whole model.
+
+use crate::quant::{head_score, select_2bit_heads, Bits, HeadStats, SelectionRule};
+
+/// Per-(layer, head) storage precision for the q2 KV cache.
+#[derive(Debug, Clone)]
+pub struct PrecisionMap {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// bits[layer * n_heads + head]
+    bits: Vec<Bits>,
+}
+
+impl PrecisionMap {
+    /// Uniform precision for every head.
+    pub fn uniform(n_layers: usize, n_heads: usize, bits: Bits) -> PrecisionMap {
+        PrecisionMap { n_layers, n_heads, bits: vec![bits; n_layers * n_heads] }
+    }
+
+    /// Mixed precision from calibration statistics: per layer, the `n_h`
+    /// lowest-priority heads get 2-bit, the rest 4-bit (Eq. 12).
+    ///
+    /// `stats[layer][head]` are K (or K+V merged) calibration stats.
+    pub fn mixed_from_stats(
+        stats: &[Vec<HeadStats>],
+        n_h: usize,
+        rule: SelectionRule,
+    ) -> PrecisionMap {
+        let n_layers = stats.len();
+        let n_heads = stats.first().map(|l| l.len()).unwrap_or(0);
+        let mut bits = Vec::with_capacity(n_layers * n_heads);
+        for layer in stats {
+            assert_eq!(layer.len(), n_heads, "ragged head stats");
+            let scores: Vec<f32> =
+                layer.iter().map(|s| head_score(s, rule)).collect();
+            let mask = select_2bit_heads(&scores, n_h);
+            bits.extend(
+                mask.iter().map(|&two| if two { Bits::Int2 } else { Bits::Int4 }),
+            );
+        }
+        PrecisionMap { n_layers, n_heads, bits }
+    }
+
+    pub fn get(&self, layer: usize, head: usize) -> Bits {
+        self.bits[layer * self.n_heads + head]
+    }
+
+    pub fn set(&mut self, layer: usize, head: usize, bits: Bits) {
+        self.bits[layer * self.n_heads + head] = bits;
+    }
+
+    /// Average storage bits per cached element (the "Bit" column of
+    /// Table 2).
+    pub fn avg_bits(&self) -> f64 {
+        let total: u32 = self.bits.iter().map(|b| b.bits()).sum();
+        total as f64 / self.bits.len() as f64
+    }
+
+    pub fn count(&self, bits: Bits) -> usize {
+        self.bits.iter().filter(|&&b| b == bits).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    fn stats_with_outlier(rng: &mut Rng, outlier: bool) -> HeadStats {
+        let mut data = rng.normal_vec(64 * 8, 1.0);
+        if outlier {
+            for t in 0..64 {
+                data[t * 8 + 2] *= 12.0;
+            }
+        }
+        HeadStats::from_slab(&data, 64, 8)
+    }
+
+    #[test]
+    fn uniform_map() {
+        let m = PrecisionMap::uniform(2, 4, Bits::Int4);
+        assert_eq!(m.get(1, 3), Bits::Int4);
+        assert_eq!(m.avg_bits(), 4.0);
+    }
+
+    #[test]
+    fn mixed_assigns_2bit_to_low_priority() {
+        let mut rng = Rng::new(0);
+        // Layer with heads [plain, outlier, plain, outlier]:
+        let layer: Vec<HeadStats> = (0..4)
+            .map(|h| stats_with_outlier(&mut rng, h % 2 == 1))
+            .collect();
+        let m = PrecisionMap::mixed_from_stats(
+            &[layer],
+            2,
+            SelectionRule::Priority,
+        );
+        // The outlier heads (1, 3) must stay 4-bit.
+        assert_eq!(m.get(0, 1), Bits::Int4);
+        assert_eq!(m.get(0, 3), Bits::Int4);
+        assert_eq!(m.get(0, 0), Bits::Int2);
+        assert_eq!(m.get(0, 2), Bits::Int2);
+        assert_eq!(m.avg_bits(), 3.0);
+    }
+
+    #[test]
+    fn half_heads_2bit_gives_3_avg_bits() {
+        let mut rng = Rng::new(1);
+        let stats: Vec<Vec<HeadStats>> = (0..3)
+            .map(|_| (0..8).map(|_| stats_with_outlier(&mut rng, false)).collect())
+            .collect();
+        let m = PrecisionMap::mixed_from_stats(&stats, 4, SelectionRule::Priority);
+        assert_eq!(m.avg_bits(), 3.0);
+        assert_eq!(m.count(Bits::Int2), 12);
+        assert_eq!(m.count(Bits::Int4), 12);
+    }
+}

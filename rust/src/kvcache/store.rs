@@ -1,0 +1,356 @@
+//! The full model-level quantized KV cache: pages + buffers per
+//! (layer, head, K/V), with memory accounting.
+
+use super::{DecodeBuffer, PrecisionMap, QuantPage};
+use crate::quant::Bits;
+
+/// Cache geometry and policy.
+#[derive(Debug, Clone)]
+pub struct KvCacheConfig {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    /// Page size in tokens (= the attention tile B_c).
+    pub block: usize,
+    /// Decode-buffer capacity n_b (paper uses 64; must be <= block so a
+    /// flush fills at most one page).
+    pub n_b: usize,
+    pub precision: PrecisionMap,
+}
+
+impl KvCacheConfig {
+    pub fn new(
+        n_layers: usize,
+        n_heads: usize,
+        d_head: usize,
+        block: usize,
+        precision: PrecisionMap,
+    ) -> KvCacheConfig {
+        KvCacheConfig { n_layers, n_heads, d_head, block, n_b: block, precision }
+    }
+}
+
+/// One K or V stream for one (layer, head): q2 pages + INT8 buffer.
+#[derive(Debug)]
+pub struct StreamCache {
+    pub pages: Vec<QuantPage>,
+    pub buffer: DecodeBuffer,
+    bits: Bits,
+    d_head: usize,
+    block: usize,
+}
+
+impl StreamCache {
+    fn new(d_head: usize, block: usize, n_b: usize, bits: Bits) -> StreamCache {
+        StreamCache {
+            pages: Vec::new(),
+            buffer: DecodeBuffer::new(d_head, n_b),
+            bits,
+            d_head,
+            block,
+        }
+    }
+
+    /// Tokens stored (pages + buffer).
+    pub fn tokens(&self) -> usize {
+        self.pages.iter().map(|p| p.tokens).sum::<usize>() + self.buffer.len()
+    }
+
+    /// Ingest a prefill q1 block (INT8 codes, one fp scale, `tokens`
+    /// tokens). Full `block`-sized groups become pages immediately
+    /// (Algorithm 1 write-back); a trailing partial group seeds the
+    /// buffer with the block's scale as the universal scale.
+    pub fn ingest_q1_block(&mut self, codes: &[i8], fp_scale: f32, tokens: usize) {
+        assert_eq!(codes.len(), tokens * self.d_head);
+        let mut t0 = 0;
+        while t0 < tokens {
+            let t1 = (t0 + self.block).min(tokens);
+            let chunk = &codes[t0 * self.d_head..t1 * self.d_head];
+            if t1 - t0 == self.block && self.buffer.is_empty() {
+                self.pages.push(QuantPage::from_q1(
+                    chunk,
+                    self.block,
+                    self.d_head,
+                    fp_scale,
+                    self.bits,
+                ));
+            } else {
+                // Partial group (or buffer already seeded): go through the
+                // buffer token by token to preserve flush semantics.
+                for t in t0..t1 {
+                    let row = &codes[t * self.d_head..(t + 1) * self.d_head];
+                    let vals: Vec<f32> =
+                        row.iter().map(|&c| c as f32 * fp_scale).collect();
+                    self.push_token(&vals);
+                }
+                t0 = t1;
+                continue;
+            }
+            t0 = t1;
+        }
+    }
+
+    /// Append one decode token (float channel vector); flushes the buffer
+    /// into a q2 page when it reaches capacity.
+    pub fn push_token(&mut self, values: &[f32]) {
+        let full = self.buffer.push(values);
+        if full {
+            let (codes, scale, tokens) = self.buffer.drain();
+            self.pages.push(QuantPage::from_q1(
+                &codes,
+                tokens,
+                self.d_head,
+                scale,
+                self.bits,
+            ));
+        }
+    }
+
+    /// Materialize the q1 view into caller buffers:
+    /// `q1` is `[capacity_tokens, d_head]` (page-aligned capacity), and
+    /// `scales` one entry per `block` tokens. Returns valid token count.
+    pub fn read_q1_into(
+        &self,
+        scratch: &mut Vec<u8>,
+        q1: &mut [i8],
+        scales: &mut [f32],
+    ) -> usize {
+        let d = self.d_head;
+        let mut t = 0usize;
+        for (pi, page) in self.pages.iter().enumerate() {
+            debug_assert_eq!(page.tokens, self.block, "non-final page must be full");
+            page.dequant_q1_into(
+                scratch,
+                &mut q1[t * d..(t + page.tokens) * d],
+            );
+            scales[pi] = page.fp_scale;
+            t += page.tokens;
+        }
+        let bl = self.buffer.len();
+        if bl > 0 {
+            debug_assert_eq!(t % self.block, 0);
+            q1[t * d..(t + bl) * d].copy_from_slice(self.buffer.codes());
+            scales[t / self.block] = self.buffer.scale();
+            t += bl;
+        }
+        t
+    }
+
+    /// Storage bytes (packed pages + buffer codes).
+    pub fn bytes(&self) -> usize {
+        self.pages.iter().map(|p| p.bytes()).sum::<usize>()
+            + self.buffer.len() * self.d_head
+            + 4
+    }
+}
+
+/// Aggregate memory statistics (drives the compression-ratio reporting).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheStats {
+    pub tokens: usize,
+    pub bytes: usize,
+    pub fp16_equiv_bytes: usize,
+}
+
+impl CacheStats {
+    pub fn compression_ratio(&self) -> f64 {
+        self.fp16_equiv_bytes as f64 / self.bytes.max(1) as f64
+    }
+}
+
+/// Full-model cache: `[n_layers][n_heads]` K and V streams.
+pub struct KvCache {
+    pub cfg: KvCacheConfig,
+    k: Vec<StreamCache>,
+    v: Vec<StreamCache>,
+}
+
+/// One (layer, head) pair of K/V stream views.
+pub struct HeadCache<'a> {
+    pub k: &'a StreamCache,
+    pub v: &'a StreamCache,
+}
+
+impl KvCache {
+    pub fn new(cfg: KvCacheConfig) -> KvCache {
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        for layer in 0..cfg.n_layers {
+            for head in 0..cfg.n_heads {
+                let bits = cfg.precision.get(layer, head);
+                k.push(StreamCache::new(cfg.d_head, cfg.block, cfg.n_b, bits));
+                v.push(StreamCache::new(cfg.d_head, cfg.block, cfg.n_b, bits));
+            }
+        }
+        KvCache { cfg, k, v }
+    }
+
+    fn idx(&self, layer: usize, head: usize) -> usize {
+        layer * self.cfg.n_heads + head
+    }
+
+    pub fn head(&self, layer: usize, head: usize) -> HeadCache<'_> {
+        let i = self.idx(layer, head);
+        HeadCache { k: &self.k[i], v: &self.v[i] }
+    }
+
+    pub fn k_stream_mut(&mut self, layer: usize, head: usize) -> &mut StreamCache {
+        let i = self.idx(layer, head);
+        &mut self.k[i]
+    }
+
+    pub fn v_stream_mut(&mut self, layer: usize, head: usize) -> &mut StreamCache {
+        let i = self.idx(layer, head);
+        &mut self.v[i]
+    }
+
+    /// Token count of the (layer 0, head 0) K stream — by construction all
+    /// streams hold the same count.
+    pub fn tokens(&self) -> usize {
+        self.k.first().map(|s| s.tokens()).unwrap_or(0)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let bytes: usize =
+            self.k.iter().chain(&self.v).map(|s| s.bytes()).sum();
+        let tokens = self.tokens();
+        let fp16 = 2 * tokens
+            * self.cfg.d_head
+            * self.cfg.n_layers
+            * self.cfg.n_heads
+            * 2; // K and V, 2 bytes each
+        CacheStats { tokens, bytes, fp16_equiv_bytes: fp16 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quant_sym_int8;
+    use crate::testutil::{prop, Rng};
+
+    fn cfg(block: usize) -> KvCacheConfig {
+        KvCacheConfig::new(2, 2, 8, block, PrecisionMap::uniform(2, 2, Bits::Int4))
+    }
+
+    #[test]
+    fn ingest_full_blocks_makes_pages() {
+        let mut cache = KvCache::new(cfg(4));
+        let mut rng = Rng::new(0);
+        let x = rng.normal_vec(8 * 8, 1.0); // 8 tokens
+        let q1 = quant_sym_int8(&x);
+        cache.k_stream_mut(0, 0).ingest_q1_block(&q1.codes, q1.scale, 8);
+        let s = &cache.head(0, 0).k;
+        assert_eq!(s.pages.len(), 2);
+        assert_eq!(s.buffer.len(), 0);
+        assert_eq!(s.tokens(), 8);
+    }
+
+    #[test]
+    fn ingest_partial_block_seeds_buffer() {
+        let mut cache = KvCache::new(cfg(4));
+        let mut rng = Rng::new(1);
+        let x = rng.normal_vec(6 * 8, 1.0); // 6 tokens: 1 page + 2 buffered
+        let q1 = quant_sym_int8(&x);
+        cache.k_stream_mut(0, 0).ingest_q1_block(&q1.codes, q1.scale, 6);
+        let s = &cache.head(0, 0).k;
+        assert_eq!(s.pages.len(), 1);
+        assert_eq!(s.buffer.len(), 2);
+        assert_eq!(s.tokens(), 6);
+    }
+
+    #[test]
+    fn decode_pushes_flush_at_capacity() {
+        let mut cache = KvCache::new(cfg(4));
+        let mut rng = Rng::new(2);
+        for i in 0..9 {
+            let v = rng.normal_vec(8, 1.0);
+            cache.k_stream_mut(1, 1).push_token(&v);
+            assert_eq!(cache.head(1, 1).k.tokens(), i + 1);
+        }
+        let s = &cache.head(1, 1).k;
+        assert_eq!(s.pages.len(), 2);
+        assert_eq!(s.buffer.len(), 1);
+    }
+
+    #[test]
+    fn read_q1_roundtrip_tracks_values() {
+        prop::run("cache q1 read", 25, |g| {
+            let block = 4;
+            let mut cache = KvCache::new(cfg(block));
+            let n = g.usize_in(1, 20);
+            let mut originals: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..n {
+                let v = g.normal_vec(8, 1.0);
+                cache.k_stream_mut(0, 1).push_token(&v);
+                originals.push(v);
+            }
+            let cap = 24; // page-aligned capacity
+            let mut q1 = vec![0i8; cap * 8];
+            let mut scales = vec![0.0f32; cap / block];
+            let mut scratch = Vec::new();
+            let got =
+                cache.head(0, 1).k.read_q1_into(&mut scratch, &mut q1, &mut scales);
+            assert_eq!(got, n);
+            // Every non-clamped token approximately recoverable:
+            // q1 * block_scale (int8 round + int4 progressive error is a
+            // bounded number of quantizer steps; values beyond the
+            // universal scale's 127-code range are clamped by design).
+            for (t, orig) in originals.iter().enumerate() {
+                let s = scales[t / block];
+                for c in 0..8 {
+                    if orig[c].abs() > 126.0 * s {
+                        continue; // clamped outlier (paper §3.3 semantics)
+                    }
+                    let approx = q1[t * 8 + c] as f32 * s;
+                    assert!(
+                        (approx - orig[c]).abs() <= 30.0 * s + 1e-4,
+                        "t={t} c={c}: {approx} vs {}",
+                        orig[c]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn stats_reflect_compression() {
+        // Realistic geometry: page/parameter overhead amortizes over the
+        // block and head dim (tiny 4x8 pages are overhead-dominated).
+        let pm = PrecisionMap::uniform(2, 2, Bits::Int4);
+        let cfg = KvCacheConfig::new(2, 2, 32, 16, pm);
+        let mut cache = KvCache::new(cfg);
+        let mut rng = Rng::new(3);
+        for _ in 0..64 {
+            for l in 0..2 {
+                for h in 0..2 {
+                    let kv = rng.normal_vec(32, 1.0);
+                    cache.k_stream_mut(l, h).push_token(&kv);
+                    cache.v_stream_mut(l, h).push_token(&kv);
+                }
+            }
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.tokens, 64);
+        // INT4 pages + small buffer: better than 2.5x vs FP16.
+        assert!(stats.compression_ratio() > 2.5, "{}", stats.compression_ratio());
+    }
+
+    #[test]
+    fn mixed_precision_2bit_heads_smaller() {
+        let mut pm = PrecisionMap::uniform(1, 2, Bits::Int4);
+        pm.set(0, 1, Bits::Int2);
+        let cfg = KvCacheConfig::new(1, 2, 8, 4, pm);
+        let mut cache = KvCache::new(cfg);
+        let mut rng = Rng::new(4);
+        for _ in 0..8 {
+            for h in 0..2 {
+                let kv = rng.normal_vec(8, 1.0);
+                cache.k_stream_mut(0, h).push_token(&kv);
+            }
+        }
+        let b4 = cache.head(0, 0).k.bytes();
+        let b2 = cache.head(0, 1).k.bytes();
+        assert!(b2 < b4, "2-bit head {b2}B vs 4-bit head {b4}B");
+    }
+}

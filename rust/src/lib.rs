@@ -1,0 +1,30 @@
+//! TurboAttention — reproduction of "TurboAttention: Efficient Attention
+//! Approximation For High Throughput LLMs" (Kang et al., 2024) as a
+//! three-layer Rust + JAX + Pallas serving stack.
+//!
+//! Layer 1 (build time): Pallas kernels implementing FlashQ + SAS
+//! (`python/compile/kernels/`). Layer 2 (build time): a JAX transformer
+//! whose attention runs through those kernels, AOT-lowered to HLO text
+//! (`python/compile/`). Layer 3 (this crate): the serving coordinator —
+//! PJRT runtime, quantized paged KV cache, continuous batcher, request
+//! server — with Python never on the request path.
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment
+//! index, and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod attention;
+pub mod bench;
+pub mod coordinator;
+pub mod costmodel;
+pub mod experiments;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sas;
+pub mod server;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+pub mod workload;

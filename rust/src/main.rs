@@ -1,0 +1,177 @@
+//! `turboattn` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!   serve       start the TCP serving loop (engine thread + listener)
+//!   gen         one-shot generation from the CLI
+//!   experiment  regenerate a paper table/figure (fig1..tab5, all)
+//!   selftest    runtime smoke: load artifacts, run micro kernels
+//!
+//! Examples:
+//!   turboattn gen --prompt "the router " --max-new 48 --mode turbo
+//!   turboattn serve --port 7100 --mode turbo
+//!   turboattn experiment fig6
+
+use std::net::TcpListener;
+use std::sync::mpsc::channel;
+
+use anyhow::{Context, Result};
+
+use turboattention::coordinator::engine::Command;
+use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
+use turboattention::model::{ByteTokenizer, ModelBundle, Sampler};
+use turboattention::quant::Bits;
+use turboattention::runtime::{HostTensor, Runtime};
+use turboattention::util::cli::Args;
+use turboattention::{info, server};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    turboattention::util::set_log_level(if args.flag("quiet") {
+        1
+    } else if args.flag("verbose") {
+        3
+    } else {
+        2
+    });
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(&args),
+        Some("gen") => gen(&args),
+        Some("experiment") => {
+            let id = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .context("usage: turboattn experiment <figN|tabN|all>")?;
+            turboattention::experiments::run(id, &args)
+        }
+        Some("selftest") => selftest(&args),
+        other => {
+            eprintln!(
+                "usage: turboattn <serve|gen|experiment|selftest> [--options]\n\
+                 (got {other:?})"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn engine_config(args: &Args) -> EngineConfig {
+    let mode = match args.opt_or("mode", "turbo") {
+        "turbo" => PathMode::Turbo,
+        "flash" => PathMode::Flash,
+        other => panic!("--mode must be turbo|flash, got {other}"),
+    };
+    let kv_bits = Bits::from_bits(args.opt_parse("kv-bits", 4u32))
+        .expect("--kv-bits must be 2|3|4|8");
+    let sampler = if args.flag("greedy") {
+        Sampler::Greedy
+    } else {
+        Sampler::TopK {
+            k: args.opt_parse("top-k", 8usize),
+            temp: args.opt_parse("temp", 0.8f32),
+        }
+    };
+    let mut cfg = EngineConfig {
+        mode,
+        kv_bits,
+        sampler,
+        n_2bit_heads: args.opt_parse("n-2bit-heads", 0usize),
+        seed: args.opt_parse("seed", 0u64),
+        ..Default::default()
+    };
+    cfg.batcher.max_running = args.opt_parse("max-running", 8usize);
+    cfg.batcher.token_budget = args.opt_parse("token-budget", 4096usize);
+    cfg
+}
+
+fn load_engine(args: &Args) -> Result<Engine> {
+    let dir = args.opt_or("artifacts", "artifacts");
+    let rt = Runtime::load(dir)?;
+    Ok(Engine::new(ModelBundle::new(rt), engine_config(args)))
+}
+
+fn gen(args: &Args) -> Result<()> {
+    let mut engine = load_engine(args)?;
+    let prompt = args.opt_or("prompt", "the router routes the tokens ");
+    let max_new = args.opt_parse("max-new", 48usize);
+    let tok = ByteTokenizer;
+    engine.submit(GenRequest::new(1, tok.encode(prompt), max_new));
+    let completions = engine.run_to_completion()?;
+    for c in completions {
+        println!("prompt : {prompt}");
+        println!("output : {}", tok.decode(&c.generated));
+        println!(
+            "ttft {:.1}ms | total {:.1}ms | {:.1}ms/token | cache {:.2}x compressed",
+            c.ttft * 1e3,
+            c.total_latency * 1e3,
+            c.tpot * 1e3,
+            engine.metrics.cache_compression.max(1.0)
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let port: u16 = args.opt_parse("port", 7100u16);
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    info!("main", "turboattn serving on 127.0.0.1:{port}");
+    let (tx, rx) = channel::<Command>();
+    // The PJRT client is not Send (Rc internals): construct the engine
+    // *inside* its thread — the leader owns the device for its lifetime.
+    let cfg = engine_config(args);
+    let dir = args.opt_or("artifacts", "artifacts").to_string();
+    let engine_thread = std::thread::spawn(move || -> Result<()> {
+        let rt = Runtime::load(&dir)?;
+        let engine = Engine::new(ModelBundle::new(rt), cfg);
+        engine.run_loop(rx)
+    });
+    server::serve(listener, tx)?;
+    engine_thread.join().expect("engine thread")?;
+    Ok(())
+}
+
+/// Runtime smoke test: run the micro artifacts and compare turbo vs flash.
+fn selftest(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", "artifacts");
+    let mut rt = Runtime::load(dir)?;
+    let micro = rt.manifest.micro.clone();
+    let n = micro.heads * micro.seq * micro.d_head;
+    let mut rng = turboattention::testutil::Rng::new(0);
+    let shape = vec![micro.heads, micro.seq, micro.d_head];
+    let mk = |rng: &mut turboattention::testutil::Rng| {
+        HostTensor::F32(rng.normal_vec(n, 1.0), shape.clone())
+    };
+    let q = mk(&mut rng);
+    let k = mk(&mut rng);
+    let v = mk(&mut rng);
+    let turbo = rt.run("attn_turbo_micro", &[q.clone(), k.clone(), v.clone()])?;
+    let flash = rt.run("attn_flash_micro", &[q, k, v])?;
+    let t = turbo[0].as_f32()?;
+    let f = flash[0].as_f32()?;
+    let rel = {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in t.iter().zip(f) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        (num / den).sqrt()
+    };
+    println!("attn_turbo_micro vs attn_flash_micro rel err: {rel:.4}");
+    anyhow::ensure!(rel < 0.05, "quantized attention drifted: rel {rel}");
+
+    let sas_in = HostTensor::F32(
+        rng.normal_vec(micro.sas_rows * micro.sas_cols, 2.0),
+        vec![micro.sas_rows, micro.sas_cols],
+    );
+    let sas_out = rt.run("sas_micro", &[sas_in])?;
+    let probs = sas_out[0].as_f32()?;
+    for r in 0..micro.sas_rows {
+        let s: f32 =
+            probs[r * micro.sas_cols..(r + 1) * micro.sas_cols].iter().sum();
+        anyhow::ensure!((s - 1.0).abs() < 1e-4, "sas row {r} sums to {s}");
+    }
+    println!("sas_micro rows normalized OK");
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,220 @@
+//! Serving metrics: latency histograms and throughput windows.
+
+use std::time::{Duration, Instant};
+
+/// Fixed-bucket log-scale latency histogram (microseconds to minutes).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds in seconds (log spaced).
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        // 1us .. ~100s, 4 buckets per decade.
+        let mut bounds = Vec::new();
+        let mut b = 1e-6;
+        while b < 120.0 {
+            bounds.push(b);
+            b *= 10f64.powf(0.25);
+        }
+        let n = bounds.len();
+        Histogram { bounds, counts: vec![0; n + 1], sum: 0.0, count: 0, max: 0.0 }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += seconds;
+        self.count += 1;
+        self.max = self.max.max(seconds);
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile estimate from bucket interpolation (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max
+                };
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// One-line human summary (ms).
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.count,
+            self.mean() * 1e3,
+            self.p50() * 1e3,
+            self.p95() * 1e3,
+            self.p99() * 1e3,
+            self.max * 1e3
+        )
+    }
+}
+
+/// Sliding-window throughput counter (events/s over the last window).
+#[derive(Debug)]
+pub struct ThroughputWindow {
+    window: Duration,
+    events: std::collections::VecDeque<(Instant, u64)>,
+    total: u64,
+}
+
+impl ThroughputWindow {
+    pub fn new(window: Duration) -> ThroughputWindow {
+        ThroughputWindow { window, events: Default::default(), total: 0 }
+    }
+
+    pub fn record(&mut self, n: u64) {
+        self.record_at(Instant::now(), n);
+    }
+
+    fn record_at(&mut self, t: Instant, n: u64) {
+        self.events.push_back((t, n));
+        self.total += n;
+        self.evict(t);
+    }
+
+    fn evict(&mut self, now: Instant) {
+        while let Some(&(t, n)) = self.events.front() {
+            if now.duration_since(t) > self.window {
+                self.events.pop_front();
+                self.total -= n;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Events per second over the current window.
+    pub fn rate(&mut self) -> f64 {
+        self.evict(Instant::now());
+        self.total as f64 / self.window.as_secs_f64()
+    }
+
+    pub fn total_in_window(&mut self) -> u64 {
+        self.evict(Instant::now());
+        self.total
+    }
+}
+
+/// Aggregated engine metrics snapshot.
+#[derive(Debug, Default, Clone)]
+pub struct EngineMetrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub batches_run: u64,
+    pub cache_bytes: usize,
+    pub cache_compression: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4); // 0.1ms .. 100ms
+        }
+        assert!(h.p50() <= h.p95());
+        assert!(h.p95() <= h.p99());
+        assert!(h.p99() <= h.max() + 1e-9);
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_mean_exact() {
+        let mut h = Histogram::new();
+        h.record(0.001);
+        h.record(0.003);
+        assert!((h.mean() - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_of_uniform_batch() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(0.01);
+        }
+        // All mass in one bucket: p50 == p99 bucket bound >= 0.01.
+        assert!(h.p50() >= 0.01);
+        assert!(h.p50() < 0.02);
+    }
+
+    #[test]
+    fn throughput_window_counts() {
+        let mut w = ThroughputWindow::new(Duration::from_secs(10));
+        w.record(5);
+        w.record(7);
+        assert_eq!(w.total_in_window(), 12);
+        assert!((w.rate() - 1.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,297 @@
+//! Typed wrappers around the prefill/decode AOT executables.
+//!
+//! `ModelBundle` hides the PJRT tensor plumbing: padding prompts to the
+//! artifact shape, assembling the q1 cache view the decode executable
+//! consumes, and unpacking the (logits, K/V) outputs.
+
+use anyhow::{bail, Result};
+
+use crate::kvcache::KvCache;
+use crate::runtime::{HostTensor, Runtime};
+
+/// Prefill result: next-token logits for every prompt position plus the
+/// q1-level cache tensors (turbo) or float cache (flash).
+pub struct PrefillOut {
+    /// Logits for position `i` predict token `i+1`; `[max_ctx * vocab]`.
+    pub logits: Vec<f32>,
+    /// Turbo: (k8, v8 `[L*H*C*dh]` i8, sk, sv `[L*H*nb]` f32).
+    pub turbo_cache: Option<(Vec<i8>, Vec<i8>, Vec<f32>, Vec<f32>)>,
+    /// Flash: (kf, vf `[L*H*C*dh]` f32).
+    pub flash_cache: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+/// Decode step result.
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    /// New token's K and V, `[L*H*dh]`.
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+}
+
+/// The serving model: a `Runtime` plus the shapes from its manifest.
+pub struct ModelBundle {
+    pub rt: Runtime,
+    /// Reused decode-step buffers (k8, v8, sk, sv) — §Perf: avoids four
+    /// cache-sized allocations per generated token.
+    decode_scratch: Option<(Vec<i8>, Vec<i8>, Vec<f32>, Vec<f32>)>,
+}
+
+impl ModelBundle {
+    pub fn new(rt: Runtime) -> ModelBundle {
+        ModelBundle { rt, decode_scratch: None }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.rt.manifest.model.vocab
+    }
+
+    pub fn max_ctx(&self) -> usize {
+        self.rt.manifest.model.max_ctx
+    }
+
+    pub fn block(&self) -> usize {
+        self.rt.manifest.model.block
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.rt.manifest.model.n_layers
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.rt.manifest.model.n_heads
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.rt.manifest.model.d_head
+    }
+
+    fn cache_elems(&self) -> usize {
+        let m = &self.rt.manifest.model;
+        m.n_layers * m.n_heads * m.max_ctx * m.d_head
+    }
+
+    fn scale_elems(&self) -> usize {
+        let m = &self.rt.manifest.model;
+        m.n_layers * m.n_heads * (m.max_ctx / m.block)
+    }
+
+    /// Run prefill over `prompt` (byte tokens) on the given path.
+    pub fn prefill(&mut self, prompt: &[u8], turbo: bool) -> Result<PrefillOut> {
+        let m = &self.rt.manifest.model;
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > m.max_ctx {
+            bail!("prompt len {} exceeds max_ctx {}", prompt.len(), m.max_ctx);
+        }
+        let max_ctx = m.max_ctx;
+        let mut tokens = vec![0i32; max_ctx];
+        for (i, &b) in prompt.iter().enumerate() {
+            tokens[i] = b as i32;
+        }
+        let inputs = [
+            HostTensor::I32(tokens, vec![max_ctx]),
+            HostTensor::scalar_i32(prompt.len() as i32),
+        ];
+        if turbo {
+            let outs = self.rt.run("prefill_turbo", &inputs)?;
+            let [logits, k8, v8, sk, sv] = take5(outs)?;
+            Ok(PrefillOut {
+                logits: logits.as_f32()?.to_vec(),
+                turbo_cache: Some((
+                    k8.as_i8()?.to_vec(),
+                    v8.as_i8()?.to_vec(),
+                    sk.as_f32()?.to_vec(),
+                    sv.as_f32()?.to_vec(),
+                )),
+                flash_cache: None,
+            })
+        } else {
+            let outs = self.rt.run("prefill_flash", &inputs)?;
+            let [logits, kf, vf] = take3(outs)?;
+            Ok(PrefillOut {
+                logits: logits.as_f32()?.to_vec(),
+                turbo_cache: None,
+                flash_cache: Some((kf.as_f32()?.to_vec(), vf.as_f32()?.to_vec())),
+            })
+        }
+    }
+
+    /// Ingest a turbo prefill cache into the paged `KvCache`.
+    ///
+    /// Splits the `[L, H, max_ctx, dh]` q1 slabs into per-block chunks
+    /// with their scales and feeds `ingest_q1_block`.
+    pub fn ingest_prefill(
+        &self,
+        cache: &mut KvCache,
+        k8: &[i8],
+        v8: &[i8],
+        sk: &[f32],
+        sv: &[f32],
+        n_tokens: usize,
+    ) {
+        let m = &self.rt.manifest.model;
+        assert_eq!(k8.len(), self.cache_elems());
+        assert_eq!(sk.len(), self.scale_elems());
+        let (l_n, h_n, c, dh, bc) =
+            (m.n_layers, m.n_heads, m.max_ctx, m.d_head, m.block);
+        let nb = c / bc;
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let base = ((l * h_n) + h) * c * dh;
+                let sbase = ((l * h_n) + h) * nb;
+                let mut t0 = 0usize;
+                let mut bi = 0usize;
+                while t0 < n_tokens {
+                    let t1 = (t0 + bc).min(n_tokens);
+                    let codes = &k8[base + t0 * dh..base + t1 * dh];
+                    cache.k_stream_mut(l, h).ingest_q1_block(
+                        codes,
+                        sk[sbase + bi],
+                        t1 - t0,
+                    );
+                    let codes = &v8[base + t0 * dh..base + t1 * dh];
+                    cache.v_stream_mut(l, h).ingest_q1_block(
+                        codes,
+                        sv[sbase + bi],
+                        t1 - t0,
+                    );
+                    t0 = t1;
+                    bi += 1;
+                }
+            }
+        }
+    }
+
+    /// One turbo decode step: embed `token` at `pos`, attend over the
+    /// paged cache (q2 -> q1 reconstruction happens here, the decode hot
+    /// path), return logits and the new token's K/V.
+    pub fn decode_turbo(
+        &mut self,
+        cache: &KvCache,
+        token: u8,
+        pos: usize,
+    ) -> Result<DecodeOut> {
+        let m = &self.rt.manifest.model;
+        let (l_n, h_n, c, dh, bc) =
+            (m.n_layers, m.n_heads, m.max_ctx, m.d_head, m.block);
+        let nb = c / bc;
+        let (mut k8, mut v8, mut sk, mut sv) =
+            self.decode_scratch.take().unwrap_or_else(|| {
+                (
+                    vec![0i8; l_n * h_n * c * dh],
+                    vec![0i8; l_n * h_n * c * dh],
+                    vec![1.0f32; l_n * h_n * nb],
+                    vec![1.0f32; l_n * h_n * nb],
+                )
+            });
+        let mut scratch = Vec::new();
+        let mut nk = 0usize;
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let base = ((l * h_n) + h) * c * dh;
+                let sbase = ((l * h_n) + h) * nb;
+                let hc = cache.head(l, h);
+                nk = hc.k.read_q1_into(
+                    &mut scratch,
+                    &mut k8[base..base + c * dh],
+                    &mut sk[sbase..sbase + nb],
+                );
+                hc.v.read_q1_into(
+                    &mut scratch,
+                    &mut v8[base..base + c * dh],
+                    &mut sv[sbase..sbase + nb],
+                );
+            }
+        }
+        let shape4 = vec![l_n, h_n, c, dh];
+        let shape3 = vec![l_n, h_n, nb];
+        let inputs = [
+            HostTensor::scalar_i32(token as i32),
+            HostTensor::scalar_i32(pos as i32),
+            HostTensor::I8(k8, shape4.clone()),
+            HostTensor::I8(v8, shape4),
+            HostTensor::F32(sk, shape3.clone()),
+            HostTensor::F32(sv, shape3),
+            HostTensor::scalar_i32(nk as i32),
+        ];
+        let outs = self.rt.run("decode_turbo", &inputs)?;
+        // Return the big buffers to the scratch pool for the next step.
+        let mut it = inputs.into_iter();
+        let (_tok, _pos) = (it.next(), it.next());
+        if let (
+            Some(HostTensor::I8(k8, _)),
+            Some(HostTensor::I8(v8, _)),
+            Some(HostTensor::F32(sk, _)),
+            Some(HostTensor::F32(sv, _)),
+        ) = (it.next(), it.next(), it.next(), it.next())
+        {
+            self.decode_scratch = Some((k8, v8, sk, sv));
+        }
+        let [logits, k_new, v_new] = take3(outs)?;
+        Ok(DecodeOut {
+            logits: logits.as_f32()?.to_vec(),
+            k_new: k_new.as_f32()?.to_vec(),
+            v_new: v_new.as_f32()?.to_vec(),
+        })
+    }
+
+    /// One flash (exact baseline) decode step over a float cache owned by
+    /// the caller (`[L*H*C*dh]`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_flash(
+        &mut self,
+        kf: &[f32],
+        vf: &[f32],
+        token: u8,
+        pos: usize,
+        nk: usize,
+    ) -> Result<DecodeOut> {
+        let m = &self.rt.manifest.model;
+        let shape4 = vec![m.n_layers, m.n_heads, m.max_ctx, m.d_head];
+        let outs = self.rt.run(
+            "decode_flash",
+            &[
+                HostTensor::scalar_i32(token as i32),
+                HostTensor::scalar_i32(pos as i32),
+                HostTensor::F32(kf.to_vec(), shape4.clone()),
+                HostTensor::F32(vf.to_vec(), shape4),
+                HostTensor::scalar_i32(nk as i32),
+            ],
+        )?;
+        let [logits, k_new, v_new] = take3(outs)?;
+        Ok(DecodeOut {
+            logits: logits.as_f32()?.to_vec(),
+            k_new: k_new.as_f32()?.to_vec(),
+            v_new: v_new.as_f32()?.to_vec(),
+        })
+    }
+
+    /// Logits row for position `pos` out of a prefill logits buffer.
+    pub fn logits_at<'a>(&self, logits: &'a [f32], pos: usize) -> &'a [f32] {
+        let v = self.vocab();
+        &logits[pos * v..(pos + 1) * v]
+    }
+}
+
+fn take3(mut v: Vec<HostTensor>) -> Result<[HostTensor; 3]> {
+    if v.len() != 3 {
+        bail!("expected 3 outputs, got {}", v.len());
+    }
+    let c = v.pop().unwrap();
+    let b = v.pop().unwrap();
+    let a = v.pop().unwrap();
+    Ok([a, b, c])
+}
+
+fn take5(mut v: Vec<HostTensor>) -> Result<[HostTensor; 5]> {
+    if v.len() != 5 {
+        bail!("expected 5 outputs, got {}", v.len());
+    }
+    let e = v.pop().unwrap();
+    let d = v.pop().unwrap();
+    let c = v.pop().unwrap();
+    let b = v.pop().unwrap();
+    let a = v.pop().unwrap();
+    Ok([a, b, c, d, e])
+}

@@ -1,0 +1,125 @@
+//! Model-level glue: byte tokenizer, sampling, and typed wrappers around
+//! the prefill/decode AOT executables.
+
+pub mod bundle;
+
+pub use bundle::{DecodeOut, ModelBundle, PrefillOut};
+
+use crate::testutil::Rng;
+
+/// Byte-level "tokenizer" (vocab 256) — the tiny LM is a byte LM.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, text: &str) -> Vec<u8> {
+        text.as_bytes().to_vec()
+    }
+
+    pub fn decode(&self, tokens: &[u8]) -> String {
+        tokens
+            .iter()
+            .map(|&b| {
+                if b.is_ascii_graphic() || b == b' ' || b == b'\n' {
+                    b as char
+                } else {
+                    '\u{FFFD}'
+                }
+            })
+            .collect()
+    }
+}
+
+/// Sampling policy for next-token selection.
+#[derive(Debug, Clone, Copy)]
+pub enum Sampler {
+    Greedy,
+    /// Top-k sampling with temperature.
+    TopK { k: usize, temp: f32 },
+}
+
+impl Sampler {
+    /// Sample a token id from a logits slice.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u8 {
+        match *self {
+            Sampler::Greedy => argmax(logits) as u8,
+            Sampler::TopK { k, temp } => {
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                idx.truncate(k.max(1));
+                let m = logits[idx[0]];
+                let mut probs: Vec<f64> = idx
+                    .iter()
+                    .map(|&i| (((logits[i] - m) / temp.max(1e-3)) as f64).exp())
+                    .collect();
+                let total: f64 = probs.iter().sum();
+                for p in probs.iter_mut() {
+                    *p /= total;
+                }
+                let mut u = rng.f64();
+                for (j, &p) in probs.iter().enumerate() {
+                    if u < p {
+                        return idx[j] as u8;
+                    }
+                    u -= p;
+                }
+                idx[idx.len() - 1] as u8
+            }
+        }
+    }
+}
+
+/// Index of the max element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "the router routes tokens.";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.1, 5.0, -1.0, 4.9];
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_stays_in_top_k() {
+        let mut rng = Rng::new(1);
+        let mut logits = vec![-10.0; 16];
+        logits[3] = 5.0;
+        logits[7] = 4.5;
+        let s = Sampler::TopK { k: 2, temp: 1.0 };
+        for _ in 0..50 {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 3 || t == 7);
+        }
+    }
+
+    #[test]
+    fn topk_low_temp_is_greedy() {
+        let mut rng = Rng::new(2);
+        let logits = vec![1.0, 2.0, 3.0, 2.9];
+        let s = Sampler::TopK { k: 4, temp: 0.01 };
+        for _ in 0..20 {
+            assert_eq!(s.sample(&logits, &mut rng), 2);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Progressive step: asymmetric INT4/INT2 channelwise compression of an
+//! INT8 block (paper Eq. 7/8/10; mirrors `ref.quant_asym_int` bit-exact).
+//!
+//! The q1 block is `[tokens, channels]` row-major; each *channel* gets an
+//! integer scale `s_int >= 1` and zero point `z_int`, both fitting INT8.
+//! Compression and decompression are pure integer arithmetic — this is
+//! what lets the paper's decode path skip floating-point dequantization.
+
+use super::Bits;
+
+/// An asymmetrically-compressed block at q2 level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsymBlock {
+    pub bits: Bits,
+    pub tokens: usize,
+    pub channels: usize,
+    /// Codes in [0, 2^bits - 1], one per (token, channel), row-major.
+    /// Held unpacked (one code per byte) here; [`super::pack`] handles the
+    /// bit-packed storage representation.
+    pub codes: Vec<u8>,
+    /// Per-channel integer scale (>= 1).
+    pub s_int: Vec<i32>,
+    /// Per-channel integer zero point (floor(min / s_int)).
+    pub z_int: Vec<i32>,
+}
+
+/// Compress an INT8 block channelwise to `bits` (q1 -> q2).
+///
+/// `q1` is `[tokens, channels]` row-major.
+pub fn quant_asym_int(q1: &[i8], tokens: usize, channels: usize, bits: Bits) -> AsymBlock {
+    assert_eq!(q1.len(), tokens * channels);
+    let levels = bits.levels();
+    let mut s_int = vec![1i32; channels];
+    let mut z_int = vec![0i32; channels];
+    for c in 0..channels {
+        let mut cmin = i32::MAX;
+        let mut cmax = i32::MIN;
+        for t in 0..tokens {
+            let v = q1[t * channels + c] as i32;
+            cmin = cmin.min(v);
+            cmax = cmax.max(v);
+        }
+        if tokens == 0 {
+            cmin = 0;
+            cmax = 0;
+        }
+        let s = ((cmax - cmin + levels - 1).div_euclid(levels)).max(1);
+        s_int[c] = s;
+        z_int[c] = cmin.div_euclid(s);
+    }
+    let mut codes = vec![0u8; tokens * channels];
+    for t in 0..tokens {
+        for c in 0..channels {
+            let v = q1[t * channels + c] as i32;
+            let s = s_int[c];
+            // Round-to-nearest: floor((2v + s) / (2s)), valid for signed v
+            // (matches the jnp oracle's floor_divide form).
+            let rounded = (2 * v + s).div_euclid(2 * s);
+            codes[t * channels + c] =
+                (rounded - z_int[c]).clamp(0, levels) as u8;
+        }
+    }
+    AsymBlock { bits, tokens, channels, codes, s_int, z_int }
+}
+
+/// Integer q2 -> q1 decompression (paper Algorithm 2 Step 2 — the decode
+/// hot path; see also the optimized batched form in `kvcache`).
+pub fn dequant_asym_int(b: &AsymBlock) -> Vec<i8> {
+    let mut q1 = vec![0i8; b.tokens * b.channels];
+    for t in 0..b.tokens {
+        let row = &b.codes[t * b.channels..(t + 1) * b.channels];
+        let out = &mut q1[t * b.channels..(t + 1) * b.channels];
+        for c in 0..b.channels {
+            let v = (row[c] as i32 + b.z_int[c]) * b.s_int[c];
+            out[c] = v.clamp(-127, 127) as i8;
+        }
+    }
+    q1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sym::quant_sym_int8;
+    use crate::testutil::prop;
+
+    fn rand_q1(g: &mut crate::testutil::prop::Gen, t: usize, c: usize) -> Vec<i8> {
+        let x = g.normal_vec(t * c, 2.0);
+        quant_sym_int8(&x).codes
+    }
+
+    #[test]
+    fn codes_in_range() {
+        prop::run("asym codes in range", 80, |g| {
+            let t = g.usize_in(1, 40);
+            let c = g.usize_in(1, 24);
+            let bits = *g.choose(&[Bits::Int2, Bits::Int3, Bits::Int4]);
+            let q1 = rand_q1(g, t, c);
+            let b = quant_asym_int(&q1, t, c, bits);
+            assert!(b.codes.iter().all(|&v| (v as i32) <= bits.levels()));
+            assert!(b.s_int.iter().all(|&s| (1..=255).contains(&s)));
+        });
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_scale() {
+        prop::run("asym roundtrip bound", 80, |g| {
+            let t = g.usize_in(2, 40);
+            let c = g.usize_in(1, 24);
+            let bits = *g.choose(&[Bits::Int2, Bits::Int3, Bits::Int4]);
+            let q1 = rand_q1(g, t, c);
+            let b = quant_asym_int(&q1, t, c, bits);
+            let back = dequant_asym_int(&b);
+            for tt in 0..t {
+                for cc in 0..c {
+                    let e = (back[tt * c + cc] as i32
+                        - q1[tt * c + cc] as i32)
+                        .abs();
+                    let bound = (3 * b.s_int[cc]) / 2 + 1;
+                    assert!(e <= bound, "err {e} > bound {bound}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn constant_channel_is_exact() {
+        // A channel with a single repeated value must round-trip exactly.
+        let q1 = vec![42i8; 8]; // 8 tokens x 1 channel
+        let b = quant_asym_int(&q1, 8, 1, Bits::Int2);
+        let back = dequant_asym_int(&b);
+        assert!(back.iter().all(|&v| v == 42));
+    }
+
+    #[test]
+    fn int4_never_worse_than_int2() {
+        prop::run("int4 <= int2 error", 40, |g| {
+            let t = g.usize_in(4, 40);
+            let c = g.usize_in(1, 16);
+            let q1 = rand_q1(g, t, c);
+            let mse = |bits| {
+                let b = quant_asym_int(&q1, t, c, bits);
+                let back = dequant_asym_int(&b);
+                q1.iter()
+                    .zip(&back)
+                    .map(|(&a, &b)| ((a as i32 - b as i32) as f64).powi(2))
+                    .sum::<f64>()
+            };
+            assert!(mse(Bits::Int4) <= mse(Bits::Int2) + 1e-9);
+        });
+    }
+
+    #[test]
+    fn matches_known_example() {
+        // Hand-checked against the jnp oracle.
+        let q1: Vec<i8> = vec![-100, -50, 0, 50, 100, 119, -119, 7];
+        let b = quant_asym_int(&q1, 8, 1, Bits::Int4);
+        // range = 238 -> s = ceil(238/15) = 16, z = floor(-119/16) = -8
+        assert_eq!(b.s_int[0], 16);
+        assert_eq!(b.z_int[0], -8);
+        let back = dequant_asym_int(&b);
+        for (a, r) in q1.iter().zip(&back) {
+            assert!((*a as i32 - *r as i32).abs() <= 8 + 1);
+        }
+    }
+
+    #[test]
+    fn empty_tokens_ok() {
+        let b = quant_asym_int(&[], 0, 4, Bits::Int4);
+        assert_eq!(b.codes.len(), 0);
+        assert_eq!(dequant_asym_int(&b).len(), 0);
+    }
+}

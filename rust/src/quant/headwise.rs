@@ -1,0 +1,214 @@
+//! Head-wise mixed precision (paper §3.2) plus the ablation baselines of
+//! Figure 7b (entropy, min-max, variation selection rules).
+//!
+//! `priority^(h) = gap^(h) x std^(h)` where gap is the global max-min
+//! range of the head's values and std is the standard deviation of the
+//! per-channel gaps. The `n_h` lowest-priority heads per layer are stored
+//! at 2-bit; the rest at 4-bit.
+
+/// Per-head statistics computed from a calibration pass over K (or V).
+#[derive(Debug, Clone)]
+pub struct HeadStats {
+    /// Per-channel min over tokens.
+    pub cmin: Vec<f32>,
+    /// Per-channel max over tokens.
+    pub cmax: Vec<f32>,
+}
+
+impl HeadStats {
+    /// Accumulate stats from a `[tokens, channels]` row-major slab.
+    pub fn from_slab(data: &[f32], tokens: usize, channels: usize) -> HeadStats {
+        assert_eq!(data.len(), tokens * channels);
+        let mut cmin = vec![f32::INFINITY; channels];
+        let mut cmax = vec![f32::NEG_INFINITY; channels];
+        for t in 0..tokens {
+            for c in 0..channels {
+                let v = data[t * channels + c];
+                cmin[c] = cmin[c].min(v);
+                cmax[c] = cmax[c].max(v);
+            }
+        }
+        if tokens == 0 {
+            cmin.iter_mut().for_each(|v| *v = 0.0);
+            cmax.iter_mut().for_each(|v| *v = 0.0);
+        }
+        HeadStats { cmin, cmax }
+    }
+
+    /// Per-channel gaps (max - min).
+    pub fn channel_gaps(&self) -> Vec<f32> {
+        self.cmax.iter().zip(&self.cmin).map(|(a, b)| a - b).collect()
+    }
+
+    /// Head-level gap: range across ALL channels.
+    pub fn head_gap(&self) -> f32 {
+        let hi = self.cmax.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let lo = self.cmin.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+        hi - lo
+    }
+
+    /// Std-dev of per-channel gaps.
+    pub fn gap_std(&self) -> f32 {
+        let gaps = self.channel_gaps();
+        let mean = gaps.iter().sum::<f32>() / gaps.len() as f32;
+        (gaps.iter().map(|g| (g - mean).powi(2)).sum::<f32>()
+            / gaps.len() as f32)
+            .sqrt()
+    }
+
+    /// Shannon entropy of the (normalized absolute) channel-gap
+    /// distribution — the "Entropy" ablation baseline.
+    pub fn gap_entropy(&self) -> f32 {
+        let gaps = self.channel_gaps();
+        let total: f32 = gaps.iter().map(|g| g.abs()).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        -gaps
+            .iter()
+            .map(|g| {
+                let p = g.abs() / total;
+                if p > 0.0 {
+                    p * p.ln()
+                } else {
+                    0.0
+                }
+            })
+            .sum::<f32>()
+    }
+}
+
+/// Selection rules compared in the paper's Figure 7b ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionRule {
+    /// The paper's metric: gap x std (default).
+    Priority,
+    /// Entropy of the channel-gap distribution.
+    Entropy,
+    /// Head-level min-max range only.
+    MinMax,
+    /// Variation (std of channel gaps) only.
+    Variation,
+}
+
+/// Paper priority: gap x std (Eq. 11).
+pub fn head_priority(stats: &HeadStats) -> f32 {
+    stats.head_gap() * stats.gap_std()
+}
+
+/// Score a head under the given rule (higher = keep at 4-bit).
+pub fn head_score(stats: &HeadStats, rule: SelectionRule) -> f32 {
+    match rule {
+        SelectionRule::Priority => head_priority(stats),
+        SelectionRule::Entropy => stats.gap_entropy(),
+        SelectionRule::MinMax => stats.head_gap(),
+        SelectionRule::Variation => stats.gap_std(),
+    }
+}
+
+/// Pick the `n_h` lowest-scoring heads for 2-bit storage (Eq. 12).
+/// Returns a boolean mask, true = 2-bit.
+pub fn select_2bit_heads(scores: &[f32], n_h: usize) -> Vec<bool> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut mask = vec![false; scores.len()];
+    for &h in order.iter().take(n_h.min(scores.len())) {
+        mask[h] = true;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop, Rng};
+
+    fn slab_with_outlier_channel(
+        rng: &mut Rng,
+        tokens: usize,
+        channels: usize,
+        outlier_c: Option<usize>,
+        boost: f32,
+    ) -> Vec<f32> {
+        let mut d = rng.normal_vec(tokens * channels, 1.0);
+        if let Some(c) = outlier_c {
+            for t in 0..tokens {
+                d[t * channels + c] *= boost;
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn outlier_head_gets_higher_priority() {
+        let mut rng = Rng::new(7);
+        let plain = HeadStats::from_slab(
+            &slab_with_outlier_channel(&mut rng, 64, 16, None, 1.0),
+            64,
+            16,
+        );
+        let outlier = HeadStats::from_slab(
+            &slab_with_outlier_channel(&mut rng, 64, 16, Some(3), 15.0),
+            64,
+            16,
+        );
+        assert!(head_priority(&outlier) > head_priority(&plain) * 5.0);
+    }
+
+    #[test]
+    fn select_lowest() {
+        let scores = [3.0, 1.0, 2.0, 10.0];
+        assert_eq!(select_2bit_heads(&scores, 2), vec![false, true, true, false]);
+    }
+
+    #[test]
+    fn select_count_invariant() {
+        prop::run("2bit head count", 100, |g| {
+            let h = g.usize_in(1, 16);
+            let n_h = g.usize_in(0, h + 3); // may exceed head count
+            let scores: Vec<f32> = (0..h).map(|_| g.f32_in(0.0, 10.0)).collect();
+            let mask = select_2bit_heads(&scores, n_h);
+            assert_eq!(mask.iter().filter(|&&b| b).count(), n_h.min(h));
+        });
+    }
+
+    #[test]
+    fn stats_known_values() {
+        // 2 tokens x 2 channels: ch0 in [1, 3], ch1 in [-2, 0].
+        let s = HeadStats::from_slab(&[1.0, -2.0, 3.0, 0.0], 2, 2);
+        assert_eq!(s.channel_gaps(), vec![2.0, 2.0]);
+        assert_eq!(s.head_gap(), 5.0); // 3 - (-2)
+        assert_eq!(s.gap_std(), 0.0);
+        assert_eq!(head_priority(&s), 0.0); // uniform gaps -> std 0
+    }
+
+    #[test]
+    fn entropy_uniform_gaps_maximal() {
+        let uniform = HeadStats { cmin: vec![0.0; 4], cmax: vec![1.0; 4] };
+        let skewed = HeadStats {
+            cmin: vec![0.0; 4],
+            cmax: vec![10.0, 0.1, 0.1, 0.1],
+        };
+        assert!(uniform.gap_entropy() > skewed.gap_entropy());
+    }
+
+    #[test]
+    fn all_rules_produce_finite_scores() {
+        prop::run("finite scores", 50, |g| {
+            let t = g.usize_in(1, 32);
+            let c = g.usize_in(1, 16);
+            let data = g.normal_vec(t * c, 2.0);
+            let s = HeadStats::from_slab(&data, t, c);
+            for rule in [
+                SelectionRule::Priority,
+                SelectionRule::Entropy,
+                SelectionRule::MinMax,
+                SelectionRule::Variation,
+            ] {
+                assert!(head_score(&s, rule).is_finite());
+            }
+        });
+    }
+}

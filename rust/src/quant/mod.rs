@@ -1,0 +1,90 @@
+//! FlashQ quantization substrate (paper §3), mirrored in Rust.
+//!
+//! This is the Rust-side twin of `python/compile/kernels/quant.py` /
+//! `ref.py`: the Rust coordinator owns the q2-level (INT4/INT2 packed)
+//! KV cache, so it needs bit-exact implementations of:
+//!
+//! * symmetric blockwise INT8 quantization (q1, scale = max|x|/119),
+//! * asymmetric channelwise INT4/2 compression with integer scale and
+//!   zero point (q2, paper Eq. 7/8/10),
+//! * the pure-integer q2 -> q1 decompression on the decode hot path,
+//! * bit packing (2x INT4 or 4x INT2 per byte) for real memory savings,
+//! * head-wise mixed-precision priority metrics and selection (§3.2).
+
+pub mod asym;
+pub mod headwise;
+pub mod pack;
+pub mod sym;
+
+pub use asym::{dequant_asym_int, quant_asym_int, AsymBlock};
+pub use headwise::{
+    head_priority, head_score, select_2bit_heads, HeadStats, SelectionRule,
+};
+pub use pack::{pack_codes, unpack_codes, unpack_codes_into, PackedCodes};
+pub use sym::{dequant_sym_int8, quant_sym_int8, QuantBlock, INT8_QMAX};
+
+/// Bit width for the q2 (storage) level of progressive quantization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Bits {
+    Int2,
+    Int3,
+    Int4,
+    /// q1-only: keep INT8, skip the progressive step (used for the query
+    /// and for ablations).
+    Int8,
+}
+
+impl Bits {
+    pub fn levels(self) -> i32 {
+        match self {
+            Bits::Int2 => 3,
+            Bits::Int3 => 7,
+            Bits::Int4 => 15,
+            Bits::Int8 => 255,
+        }
+    }
+
+    pub fn bits(self) -> u32 {
+        match self {
+            Bits::Int2 => 2,
+            Bits::Int3 => 3,
+            Bits::Int4 => 4,
+            Bits::Int8 => 8,
+        }
+    }
+
+    /// Bytes needed to store `n` codes at this width (packed).
+    pub fn packed_bytes(self, n: usize) -> usize {
+        (n * self.bits() as usize).div_ceil(8)
+    }
+
+    pub fn from_bits(b: u32) -> Option<Bits> {
+        match b {
+            2 => Some(Bits::Int2),
+            3 => Some(Bits::Int3),
+            4 => Some(Bits::Int4),
+            8 => Some(Bits::Int8),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_levels() {
+        assert_eq!(Bits::Int2.levels(), 3);
+        assert_eq!(Bits::Int4.levels(), 15);
+        assert_eq!(Bits::Int8.levels(), 255);
+    }
+
+    #[test]
+    fn packed_bytes() {
+        assert_eq!(Bits::Int4.packed_bytes(64), 32);
+        assert_eq!(Bits::Int2.packed_bytes(64), 16);
+        assert_eq!(Bits::Int2.packed_bytes(3), 1);
+        assert_eq!(Bits::Int4.packed_bytes(3), 2);
+    }
+}

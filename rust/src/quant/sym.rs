@@ -1,0 +1,99 @@
+//! Symmetric blockwise INT8 quantization (paper Eq. 9, Algorithm 1).
+//!
+//! Scale is `max|x| / 119` — the paper reserves headroom below 127 so the
+//! online-softmax rescale can never overflow int8. Matches the jnp oracle
+//! (`ref.quant_sym_int8`) bit-for-bit on the same input.
+
+/// Symmetric quantization maps max|x| to this code (paper constant).
+pub const INT8_QMAX: f32 = 119.0;
+
+/// One symmetrically-quantized block: INT8 codes + one f32 scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantBlock {
+    pub codes: Vec<i8>,
+    pub scale: f32,
+}
+
+/// Quantize a block of floats to INT8 with a single symmetric scale.
+pub fn quant_sym_int8(x: &[f32]) -> QuantBlock {
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = (amax / INT8_QMAX).max(1e-8);
+    let codes = x
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    QuantBlock { codes, scale }
+}
+
+/// Dequantize back to f32 (oracle/tests; the hot path never does this —
+/// it multiplies the INT32 dot product by the scale product instead).
+pub fn dequant_sym_int8(q: &QuantBlock) -> Vec<f32> {
+    q.codes.iter().map(|&c| c as f32 * q.scale).collect()
+}
+
+/// Quantize with a caller-fixed scale, clamping outliers — the enhanced
+/// KV-buffer path (paper §3.3): a universal scale avoids re-quantizing
+/// buffered tokens when a new outlier arrives.
+pub fn quant_sym_int8_fixed_scale(x: &[f32], scale: f32) -> Vec<i8> {
+    x.iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        prop::run("sym int8 roundtrip", 100, |g| {
+            let n = g.usize_in(1, 256);
+            let scale = g.f32_in(0.01, 100.0);
+            let x = g.normal_vec(n, scale);
+            let q = quant_sym_int8(&x);
+            let back = dequant_sym_int8(&q);
+            for (a, b) in x.iter().zip(&back) {
+                assert!(
+                    (a - b).abs() <= q.scale * 0.5 + 1e-6,
+                    "err {} scale {}",
+                    (a - b).abs(),
+                    q.scale
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn scale_is_amax_over_qmax() {
+        let x = vec![-3.0, 1.0, 2.38];
+        let q = quant_sym_int8(&x);
+        assert!((q.scale - 3.0 / INT8_QMAX).abs() < 1e-7);
+        assert_eq!(q.codes[0], -119);
+    }
+
+    #[test]
+    fn zero_block_is_stable() {
+        let q = quant_sym_int8(&[0.0; 16]);
+        assert!(q.codes.iter().all(|&c| c == 0));
+        assert!(q.scale > 0.0);
+    }
+
+    #[test]
+    fn codes_never_exceed_127() {
+        prop::run("codes in range", 100, |g| {
+            let n = g.usize_in(1, 64);
+            let x = g.normal_vec(n, 10.0);
+            let q = quant_sym_int8(&x);
+            assert!(q.codes.iter().all(|&c| (-127..=127).contains(&(c as i32))));
+        });
+    }
+
+    #[test]
+    fn fixed_scale_clamps_outliers() {
+        let codes = quant_sym_int8_fixed_scale(&[1000.0, -1000.0, 0.5], 0.01);
+        assert_eq!(codes[0], 127);
+        assert_eq!(codes[1], -127);
+        assert_eq!(codes[2], 50);
+    }
+}

@@ -1,0 +1,191 @@
+//! `artifacts/manifest.json` — typed view of what aot.py produced.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// dtype + shape of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .context("tensor spec missing dtype")?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor spec missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("non-integer dim"))
+            .collect::<Result<_>>()?;
+        Ok(TensorSpec { dtype, shape })
+    }
+}
+
+/// One AOT artifact: file + I/O signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model geometry recorded by aot.py (single source of truth for shapes).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub max_ctx: usize,
+    pub block: usize,
+    pub n_r: f32,
+}
+
+/// Microbench kernel shapes.
+#[derive(Debug, Clone)]
+pub struct MicroInfo {
+    pub heads: usize,
+    pub seq: usize,
+    pub d_head: usize,
+    pub block: usize,
+    pub sas_rows: usize,
+    pub sas_cols: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub micro: MicroInfo,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn req_usize(j: &Json, path: &str) -> Result<usize> {
+    j.path(path)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("manifest missing {path}"))
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest json")?;
+        let model = ModelInfo {
+            vocab: req_usize(&j, "model/vocab")?,
+            d_model: req_usize(&j, "model/d_model")?,
+            n_layers: req_usize(&j, "model/n_layers")?,
+            n_heads: req_usize(&j, "model/n_heads")?,
+            d_head: req_usize(&j, "model/d_head")?,
+            max_ctx: req_usize(&j, "model/max_ctx")?,
+            block: req_usize(&j, "model/block")?,
+            n_r: j
+                .path("model/n_r")
+                .and_then(Json::as_f64)
+                .context("manifest missing model/n_r")? as f32,
+        };
+        let micro = MicroInfo {
+            heads: req_usize(&j, "micro/heads")?,
+            seq: req_usize(&j, "micro/seq")?,
+            d_head: req_usize(&j, "micro/d_head")?,
+            block: req_usize(&j, "micro/block")?,
+            sas_rows: req_usize(&j, "micro/sas_rows")?,
+            sas_cols: req_usize(&j, "micro/sas_cols")?,
+        };
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("artifact missing name")?
+                        .to_string(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .context("artifact missing file")?
+                        .to_string(),
+                    inputs: a
+                        .get("inputs")
+                        .and_then(Json::as_arr)
+                        .context("artifact missing inputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .and_then(Json::as_arr)
+                        .context("artifact missing outputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { model, micro, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"vocab": 256, "d_model": 128, "n_layers": 2, "n_heads": 4,
+                "d_head": 32, "d_ff": 256, "max_ctx": 288, "block": 32,
+                "n_r": -6.0, "int8_qmax": 119.0, "sas_poly": [1,2,3,4]},
+      "micro": {"heads": 4, "seq": 128, "d_head": 32, "block": 32,
+                "sas_rows": 128, "sas_cols": 128},
+      "artifacts": [
+        {"name": "sas_micro", "file": "sas_micro.hlo.txt",
+         "inputs": [{"shape": [128, 128], "dtype": "float32"}],
+         "outputs": [{"shape": [128, 128], "dtype": "float32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model.d_model, 128);
+        assert_eq!(m.model.n_r, -6.0);
+        assert_eq!(m.micro.seq, 128);
+        let a = m.artifact("sas_micro").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![128, 128]);
+        assert_eq!(a.inputs[0].numel(), 16384);
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

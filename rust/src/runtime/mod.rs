@@ -1,0 +1,219 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust request path.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `compile` -> `execute`). The
+//! interchange format is HLO **text** because xla_extension 0.5.1 rejects
+//! jax>=0.5's 64-bit-instruction-id protos (see DESIGN.md / aot.py).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A typed host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    I8(Vec<i8>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) | HostTensor::I8(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len(),
+            HostTensor::I32(d, _) => d.len(),
+            HostTensor::I8(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            HostTensor::I8(d, _) => Ok(d),
+            _ => bail!("tensor is not i8"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        // One untyped-bytes path covers every dtype (i8 has no NativeType
+        // impl in the xla crate, so Literal::vec1 is unavailable for it).
+        fn as_bytes<T>(s: &[T]) -> &[u8] {
+            unsafe {
+                std::slice::from_raw_parts(
+                    s.as_ptr() as *const u8,
+                    std::mem::size_of_val(s),
+                )
+            }
+        }
+        let (ty, bytes) = match self {
+            HostTensor::F32(d, _) => (xla::ElementType::F32, as_bytes(d.as_slice())),
+            HostTensor::I32(d, _) => (xla::ElementType::S32, as_bytes(d.as_slice())),
+            HostTensor::I8(d, _) => (xla::ElementType::S8, as_bytes(d.as_slice())),
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty,
+            self.shape(),
+            bytes,
+        )?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        let shape = spec.shape.clone();
+        match spec.dtype.as_str() {
+            "float32" => Ok(HostTensor::F32(lit.to_vec::<f32>()?, shape)),
+            "int32" => Ok(HostTensor::I32(lit.to_vec::<i32>()?, shape)),
+            "int8" => Ok(HostTensor::I8(lit.to_vec::<i8>()?, shape)),
+            other => bail!("unsupported artifact dtype {other}"),
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns outputs per the manifest spec.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// PJRT client + compiled-executable registry for an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read `manifest.json` from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} — run `make artifacts`"))?;
+        let client = xla::PjRtClient::cpu()?;
+        crate::info!(
+            "runtime",
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, manifest, dir, cache: HashMap::new() })
+    }
+
+    /// Compile (or fetch cached) an executable by artifact name.
+    pub fn executable(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifact(name)
+                .with_context(|| format!("artifact {name} not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            crate::info!(
+                "runtime",
+                "compiled {name} in {:.2}s",
+                t0.elapsed().as_secs_f64()
+            );
+            self.cache.insert(name.to_string(), Executable { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: compile + run in one call.
+    pub fn run(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.executable(name)?.run(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.shape(), &[2]);
+        assert_eq!(t.len(), 2);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i8().is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = HostTensor::scalar_i32(7);
+        assert!(t.shape().is_empty());
+        assert_eq!(t.as_i32().unwrap(), &[7]);
+    }
+}

@@ -1,0 +1,184 @@
+//! SAS — Sparse Activated Softmax (paper §4), Rust mirror.
+//!
+//! `e^{-t} = LUT(t_int) * POLY(t_dec)` with the cubic of Eq. 15 on [0,1)
+//! and a sparsity threshold `n_r`: after max-subtraction, any score below
+//! `n_r` contributes exactly zero. The LUT stays tiny (|n_r|+2 entries)
+//! because the threshold bounds the integer part — the "sparse" in SAS.
+//!
+//! On the GPU the win is replacing FP32 CUDA-core `exp` with FP16
+//! tensor/vector ops; on this CPU substrate the same structure replaces
+//! `libm::expf` with a fused multiply-add chain, which the §Perf pass
+//! benchmarks against the exact path.
+
+/// Cubic coefficients for e^{-x} on [0,1) — paper Eq. 15 (c3,c2,c1,c0).
+pub const SAS_POLY: [f32; 4] = [-0.1025, 0.4626, -0.9922, 0.9996];
+
+/// Default sparsity threshold (paper §5.2 fixes n_r = -6).
+pub const SAS_NR: f32 = -6.0;
+
+/// Precomputed SAS evaluator for a given threshold.
+#[derive(Debug, Clone)]
+pub struct Sas {
+    pub n_r: f32,
+    /// LUT[i] = e^{-i} for i in 0..=depth, then one trailing 0 entry.
+    lut: Vec<f32>,
+    depth: usize,
+}
+
+impl Default for Sas {
+    fn default() -> Self {
+        Sas::new(SAS_NR)
+    }
+}
+
+impl Sas {
+    pub fn new(n_r: f32) -> Sas {
+        assert!(n_r < 0.0, "n_r must be negative");
+        let depth = (-n_r) as usize;
+        let mut lut: Vec<f32> = (0..=depth).map(|i| (-(i as f32)).exp()).collect();
+        lut.push(0.0);
+        Sas { n_r, lut, depth }
+    }
+
+    /// The cubic POLY(t) ~= e^{-t} for t in [0,1), Horner form.
+    #[inline]
+    pub fn poly(t: f32) -> f32 {
+        let [c3, c2, c1, c0] = SAS_POLY;
+        ((c3 * t + c2) * t + c1) * t + c0
+    }
+
+    /// SAS approximation of e^{x} for x <= 0 (Eq. 13/14).
+    #[inline]
+    pub fn exp(&self, x: f32) -> f32 {
+        if x < self.n_r {
+            return 0.0;
+        }
+        let t = -x;
+        let ti = t as i32; // t >= 0: trunc == floor
+        let td = t - ti as f32;
+        // x >= n_r ensures ti <= depth, but guard the x == n_r edge.
+        let idx = (ti as usize).min(self.depth + 1);
+        self.lut[idx] * Self::poly(td)
+    }
+
+    /// In-place SAS softmax over one row of scores.
+    pub fn softmax_row(&self, row: &mut [f32]) {
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = self.exp(*v - m);
+            sum += *v;
+        }
+        let inv = 1.0 / sum.max(1e-20);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+
+    /// Max |SAS(x) - e^x| sampled on [lo, 0] (Figure 5 metric).
+    pub fn max_abs_error(&self, lo: f32, samples: usize) -> f32 {
+        let mut worst = 0.0f32;
+        for i in 0..=samples {
+            let x = lo * (i as f32) / (samples as f32);
+            let err = (self.exp(x) - x.exp()).abs();
+            worst = worst.max(err);
+        }
+        worst
+    }
+}
+
+/// Exact softmax row (baseline for accuracy + the FP32-exp comparator in
+/// benches).
+pub fn softmax_row_exact(row: &mut [f32]) {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum.max(1e-20);
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn poly_close_on_unit_interval() {
+        let mut worst = 0.0f32;
+        for i in 0..=1000 {
+            let t = i as f32 / 1000.0;
+            worst = worst.max((Sas::poly(t) - (-t).exp()).abs());
+        }
+        assert!(worst < 5e-4, "poly err {worst}");
+    }
+
+    #[test]
+    fn exp_matches_above_threshold() {
+        let sas = Sas::default();
+        assert!(sas.max_abs_error(-6.0, 6000) < 1e-3);
+    }
+
+    #[test]
+    fn zero_below_threshold() {
+        let sas = Sas::default();
+        assert_eq!(sas.exp(-6.0001), 0.0);
+        assert_eq!(sas.exp(-100.0), 0.0);
+        assert_eq!(sas.exp(f32::NEG_INFINITY), 0.0);
+    }
+
+    #[test]
+    fn exp_at_zero() {
+        assert!((Sas::default().exp(0.0) - 0.9996).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        prop::run("sas softmax normalization", 100, |g| {
+            let n = g.usize_in(1, 64);
+            let mut row = g.normal_vec(n, 3.0);
+            Sas::default().softmax_row(&mut row);
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "sum {sum}");
+            assert!(row.iter().all(|&p| (0.0..=1.0001).contains(&p)));
+        });
+    }
+
+    #[test]
+    fn softmax_close_to_exact() {
+        prop::run("sas vs exact softmax", 60, |g| {
+            let n = g.usize_in(2, 64);
+            let row = g.normal_vec(n, 2.5);
+            let mut a = row.clone();
+            let mut b = row;
+            Sas::default().softmax_row(&mut a);
+            softmax_row_exact(&mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 2e-2, "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn custom_threshold() {
+        let sas = Sas::new(-3.0);
+        assert_eq!(sas.exp(-3.5), 0.0);
+        assert!(sas.exp(-2.5) > 0.0);
+    }
+
+    #[test]
+    fn monotone_nonincreasing_in_t() {
+        let sas = Sas::default();
+        let mut prev = f32::INFINITY;
+        for i in 0..=800 {
+            let x = -(i as f32) / 100.0; // 0 .. -8
+            let v = sas.exp(x);
+            assert!(v <= prev + 1e-6, "non-monotone at x={x}");
+            prev = v;
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Threaded TCP serving front end.
+//!
+//! Line-delimited protocol (one request per line):
+//!
+//! ```text
+//!   GEN <max_new_tokens> <prompt...>\n   ->  OK <id> <ttft_ms> <total_ms> <text>\n
+//!   STATS\n                             ->  STATS <completed> <tokens> ...\n
+//!   QUIT\n                              ->  closes the connection
+//! ```
+//!
+//! Each client connection gets a thread; generation commands flow over an
+//! mpsc channel to the single engine thread (the PJRT client is not
+//! thread-safe), matching the leader/worker topology in DESIGN.md.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::Command;
+use crate::coordinator::GenRequest;
+use crate::info;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+pub fn next_request_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Serve on `addr` until the listener errors; `engine_tx` feeds the
+/// engine thread. Returns the bound address (port 0 supported for tests).
+pub fn serve(
+    listener: TcpListener,
+    engine_tx: Sender<Command>,
+) -> Result<()> {
+    let addr = listener.local_addr()?;
+    info!("server", "listening on {addr}");
+    let engine_tx = Arc::new(Mutex::new(engine_tx));
+    for stream in listener.incoming() {
+        let stream = stream.context("accept")?;
+        let tx = engine_tx.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_client(stream, tx) {
+                crate::debug!("server", "client error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_client(
+    stream: TcpStream,
+    engine_tx: Arc<Mutex<Sender<Command>>>,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match parse_line(line) {
+            ParsedLine::Gen { max_new, prompt } => {
+                let id = next_request_id();
+                let (tx, rx) = channel();
+                let req = GenRequest::new(id, prompt, max_new);
+                engine_tx
+                    .lock()
+                    .unwrap()
+                    .send(Command::Submit(req, tx))
+                    .context("engine gone")?;
+                // Ask the engine to flush so the reply arrives promptly.
+                let (ftx, _frx) = channel();
+                let _ = engine_tx.lock().unwrap().send(Command::Flush(ftx));
+                match rx.recv() {
+                    Ok(c) => {
+                        let text =
+                            crate::model::ByteTokenizer.decode(&c.generated);
+                        writeln!(
+                            writer,
+                            "OK {} {:.1} {:.1} {}",
+                            c.id,
+                            c.ttft * 1e3,
+                            c.total_latency * 1e3,
+                            text.replace('\n', " ")
+                        )?;
+                    }
+                    Err(_) => writeln!(writer, "ERR engine dropped request")?,
+                }
+            }
+            ParsedLine::Quit => {
+                writeln!(writer, "BYE")?;
+                break;
+            }
+            ParsedLine::Bad(msg) => {
+                writeln!(writer, "ERR {msg}")?;
+            }
+        }
+    }
+    crate::debug!("server", "client {peer} disconnected");
+    Ok(())
+}
+
+enum ParsedLine {
+    Gen { max_new: usize, prompt: Vec<u8> },
+    Quit,
+    Bad(&'static str),
+}
+
+fn parse_line(line: &str) -> ParsedLine {
+    if line == "QUIT" {
+        return ParsedLine::Quit;
+    }
+    if let Some(rest) = line.strip_prefix("GEN ") {
+        let mut parts = rest.splitn(2, ' ');
+        let Some(n) = parts.next().and_then(|p| p.parse::<usize>().ok()) else {
+            return ParsedLine::Bad("usage: GEN <max_new_tokens> <prompt>");
+        };
+        let Some(prompt) = parts.next().filter(|p| !p.is_empty()) else {
+            return ParsedLine::Bad("empty prompt");
+        };
+        return ParsedLine::Gen { max_new: n.clamp(1, 256), prompt: prompt.as_bytes().to_vec() };
+    }
+    ParsedLine::Bad("unknown command")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_gen() {
+        match parse_line("GEN 32 the router routes") {
+            ParsedLine::Gen { max_new, prompt } => {
+                assert_eq!(max_new, 32);
+                assert_eq!(prompt, b"the router routes");
+            }
+            _ => panic!("expected Gen"),
+        }
+    }
+
+    #[test]
+    fn parse_quit_and_garbage() {
+        assert!(matches!(parse_line("QUIT"), ParsedLine::Quit));
+        assert!(matches!(parse_line("NOPE"), ParsedLine::Bad(_)));
+        assert!(matches!(parse_line("GEN x y"), ParsedLine::Bad(_)));
+        assert!(matches!(parse_line("GEN 5"), ParsedLine::Bad(_)));
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert_ne!(a, b);
+    }
+}

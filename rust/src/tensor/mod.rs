@@ -1,0 +1,202 @@
+//! Minimal dense tensor types for the CPU engines.
+//!
+//! The hot paths (quantized attention, dequantization) operate on plain
+//! slices for speed; `Mat` is a row-major f32 matrix with just the
+//! operations the attention/quant substrates need.
+
+use crate::testutil::Rng;
+
+/// Row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Standard-normal entries scaled by `scale` (deterministic from rng).
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols, scale) }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Sub-matrix copy of rows [r0, r1).
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> Mat {
+        Mat {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// self @ other ([m,k] x [k,n] -> [m,n]).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let o_row = out.row_mut(i);
+            for (p, &a) in a_row.iter().enumerate().take(k) {
+                let b_row = other.row(p);
+                for j in 0..n {
+                    o_row[j] += a * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// self @ other^T ([m,k] x [n,k] -> [m,n]).
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let o_row = out.row_mut(i);
+            for j in 0..n {
+                let b_row = other.row(j);
+                o_row[j] = dot(a_row, b_row);
+            }
+        }
+        out
+    }
+
+    /// Max |x| over the whole matrix.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Mean squared error against another matrix of the same shape.
+    pub fn mse(&self, other: &Mat) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+
+    /// Relative Frobenius error ||self - other|| / ||other||.
+    pub fn rel_err(&self, other: &Mat) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        (num / den.max(1e-30)).sqrt()
+    }
+}
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Integer dot product (the INT8 tensor-core stand-in on CPU).
+#[inline]
+pub fn idot(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0i32;
+    for i in 0..a.len() {
+        s += a[i] as i32 * b[i] as i32;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let eye = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_t_equals_matmul_of_transpose() {
+        let mut rng = Rng::new(0);
+        let a = Mat::randn(&mut rng, 4, 6, 1.0);
+        let b = Mat::randn(&mut rng, 5, 6, 1.0);
+        let mut bt = Mat::zeros(6, 5);
+        for i in 0..5 {
+            for j in 0..6 {
+                bt.set(j, i, b.get(i, j));
+            }
+        }
+        let c1 = a.matmul_t(&b);
+        let c2 = a.matmul(&bt);
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn idot_matches_widening() {
+        let a: Vec<i8> = vec![127, -128, 5, -7];
+        let b: Vec<i8> = vec![127, 127, -3, 2];
+        let want: i32 =
+            a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+        assert_eq!(idot(&a, &b), want);
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(&mut rng, 3, 3, 1.0);
+        assert!(a.rel_err(&a) < 1e-12);
+    }
+}

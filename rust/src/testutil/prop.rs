@@ -1,0 +1,172 @@
+//! Property-testing mini-framework (substitute for proptest, which is not
+//! in the offline vendor set).
+//!
+//! A property is a closure over a [`Gen`] (seeded case generator). The
+//! runner executes `cases` random cases; on failure it retries the same
+//! seed to confirm, then reports the seed so the case can be replayed in a
+//! unit test. Shrinking is seed-based: we re-run with "smaller" size hints
+//! and report the smallest failing size.
+//!
+//! ```no_run
+//! use turboattention::testutil::prop::{run, Gen};
+//! run("abs is non-negative", 100, |g| {
+//!     let x = g.f32_in(-100.0, 100.0);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+
+use super::Rng;
+
+/// Per-case generator handed to properties; wraps a seeded [`Rng`] plus a
+/// size hint that the shrinking pass lowers on failure.
+pub struct Gen {
+    pub rng: Rng,
+    /// Soft bound used by the sized generators; starts at 1.0, shrinks
+    /// toward 0.0.
+    pub size: f64,
+    seed: u64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Gen {
+        Gen { rng: Rng::new(seed), size, seed }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Integer in [lo, hi), biased toward lo as size shrinks.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        let span = ((hi - lo) as f64 * self.size).ceil().max(1.0) as usize;
+        self.rng.range(lo, lo + span.min(hi - lo) + 1).min(hi - 1)
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    /// Standard-normal vector with the given scale.
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, scale)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (test failure) with the
+/// failing seed and the smallest failing size found by the shrink pass.
+pub fn run<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    prop: F,
+) {
+    run_seeded(name, cases, 0xC0FFEE, prop)
+}
+
+/// [`run`] with an explicit base seed (for replaying failures).
+pub fn run_seeded<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    base_seed: u64,
+    prop: F,
+) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E3779B9));
+        if let Err(panic) = try_case(&prop, seed, 1.0) {
+            // Shrink: binary-search the smallest failing size hint.
+            let mut lo = 0.0f64;
+            let mut hi = 1.0f64;
+            for _ in 0..12 {
+                let mid = (lo + hi) / 2.0;
+                if try_case(&prop, seed, mid).is_err() {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                }
+            }
+            let msg = panic_message(&panic);
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, case {i}, \
+                 min failing size={hi:.3}): {msg}\n\
+                 replay with run_seeded(\"{name}\", 1, {seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+fn try_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    prop: &F,
+    seed: u64,
+    size: f64,
+) -> Result<(), Box<dyn std::any::Any + Send>> {
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // silence expected panics
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(seed, size);
+        prop(&mut g);
+    });
+    std::panic::set_hook(hook);
+    result
+}
+
+fn panic_message(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run("sum commutes", 50, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        run("always fails", 5, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x > 1000, "x={x}");
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        run("bounds", 200, |g| {
+            let n = g.usize_in(1, 17);
+            assert!((1..17).contains(&n));
+            let f = g.f32_in(2.0, 3.0);
+            assert!((2.0..3.0).contains(&f));
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        // Same seed must generate the same case.
+        let mut g1 = Gen::new(42, 1.0);
+        let mut g2 = Gen::new(42, 1.0);
+        assert_eq!(g1.usize_in(0, 1000), g2.usize_in(0, 1000));
+        assert_eq!(g1.f32_in(0.0, 1.0), g2.f32_in(0.0, 1.0));
+    }
+}

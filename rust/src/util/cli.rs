@@ -1,0 +1,132 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Typed getters parse on access and surface nice errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, flags, options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: Vec<String>,
+    opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// The first non-`--` token becomes the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    /// Typed option with default; panics with a clear message on parse
+    /// failure (CLI boundary — fail fast).
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.opt(name) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                panic!("--{name}: cannot parse {s:?} as {}", std::any::type_name::<T>())
+            }),
+        }
+    }
+
+    /// Comma-separated list option: `--sizes 1,2,4`.
+    pub fn opt_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.opt(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().unwrap_or_else(|_| {
+                        panic!("--{name}: cannot parse element {p:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_opts() {
+        let a = args("serve --port 8080 --verbose --name=turbo pos1");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("name"), Some("turbo"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = args("bench --iters 100 --ratio 0.5");
+        assert_eq!(a.opt_parse("iters", 1usize), 100);
+        assert_eq!(a.opt_parse("ratio", 0.0f64), 0.5);
+        assert_eq!(a.opt_parse("missing", 7u32), 7);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = args("x --sizes 1,2,4");
+        assert_eq!(a.opt_list("sizes", &[9usize]), vec![1, 2, 4]);
+        assert_eq!(a.opt_list("other", &[9usize]), vec![9]);
+    }
+
+    #[test]
+    fn flag_at_end_without_value() {
+        let a = args("run --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("fast"), None);
+    }
+}

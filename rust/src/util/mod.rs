@@ -1,0 +1,61 @@
+//! Cross-cutting utilities: JSON, CLI parsing, logging.
+//!
+//! These are hand-rolled substrates: the offline vendor set has no serde,
+//! clap or env_logger (DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=error 2=info 3=debug
+static START: once_cell::sync::Lazy<Instant> =
+    once_cell::sync::Lazy::new(Instant::now);
+
+/// Set global log verbosity (0=off, 1=error, 2=info, 3=debug).
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_level() -> u8 {
+    LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Seconds since process start (for log timestamps).
+pub fn uptime() -> f64 {
+    START.elapsed().as_secs_f64()
+}
+
+/// Log at info level with a `[+12.345s tag]` prefix.
+#[macro_export]
+macro_rules! info {
+    ($tag:expr, $($arg:tt)*) => {
+        if $crate::util::log_level() >= 2 {
+            eprintln!("[+{:9.3}s {}] {}", $crate::util::uptime(), $tag,
+                      format!($($arg)*));
+        }
+    };
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! debug {
+    ($tag:expr, $($arg:tt)*) => {
+        if $crate::util::log_level() >= 3 {
+            eprintln!("[+{:9.3}s {} dbg] {}", $crate::util::uptime(), $tag,
+                      format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn log_level_roundtrip() {
+        let prev = super::log_level();
+        super::set_log_level(3);
+        assert_eq!(super::log_level(), 3);
+        super::set_log_level(prev);
+    }
+}

@@ -1,0 +1,183 @@
+//! Synthetic workload generation: arrival processes, prompt/output length
+//! distributions, the grammar corpus (mirroring train.py), and the
+//! calibrated QKV generators behind Figures 4/8/9/10 and Table 2.
+
+pub mod synth;
+
+pub use synth::{outlier_kv_slab, OutlierProfile};
+
+use crate::testutil::Rng;
+
+/// The training grammar, mirrored from python/compile/train.py so Rust
+/// can generate in-distribution prompts without touching Python.
+pub const SUBJECTS: [&str; 8] = [
+    "the router", "a worker", "the scheduler", "one shard", "the cache",
+    "a batch", "the kernel", "this head",
+];
+pub const VERBS: [&str; 8] = [
+    "routes", "quantizes", "merges", "streams", "evicts", "scores", "packs",
+    "flushes",
+];
+pub const OBJECTS: [&str; 8] = [
+    "the tokens", "eight pages", "a tile", "the buffer", "low bits",
+    "two heads", "the scales", "old blocks",
+];
+pub const ADVERBS: [&str; 8] = [
+    "quickly", "in order", "without loss", "per layer", "at once", "lazily",
+    "again", "safely",
+];
+
+/// One grammar sentence (ends with ". ").
+pub fn sentence(rng: &mut Rng) -> String {
+    format!(
+        "{} {} {} {}. ",
+        SUBJECTS[rng.range(0, 8)],
+        VERBS[rng.range(0, 8)],
+        OBJECTS[rng.range(0, 8)],
+        ADVERBS[rng.range(0, 8)]
+    )
+}
+
+/// A prompt of roughly `target_len` bytes of in-distribution text.
+pub fn prompt(rng: &mut Rng, target_len: usize) -> Vec<u8> {
+    let mut s = String::new();
+    while s.len() < target_len {
+        s.push_str(&sentence(rng));
+    }
+    s.truncate(target_len.max(1));
+    s.into_bytes()
+}
+
+/// Arrival process for request generation.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrivals {
+    /// Poisson with the given rate (requests/s).
+    Poisson { rate: f64 },
+    /// All at time zero (offline/batch evaluation).
+    Burst,
+    /// Fixed inter-arrival gap in seconds.
+    Uniform { gap: f64 },
+}
+
+/// A synthetic request trace entry.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Arrival offset from trace start, seconds.
+    pub at: f64,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+}
+
+/// Workload described by length distributions + arrivals.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub arrivals: Arrivals,
+    pub n_requests: usize,
+    pub prompt_len: (usize, usize),
+    pub gen_len: (usize, usize),
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// Materialize the trace (deterministic from the seed).
+    pub fn generate(&self) -> Vec<TraceEntry> {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0f64;
+        (0..self.n_requests)
+            .map(|_| {
+                let at = match self.arrivals {
+                    Arrivals::Burst => 0.0,
+                    Arrivals::Poisson { rate } => {
+                        t += rng.exponential(rate);
+                        t
+                    }
+                    Arrivals::Uniform { gap } => {
+                        t += gap;
+                        t
+                    }
+                };
+                let plen = rng.range(self.prompt_len.0, self.prompt_len.1 + 1);
+                let glen = rng.range(self.gen_len.0, self.gen_len.1 + 1);
+                TraceEntry { at, prompt: prompt(&mut rng, plen), max_new_tokens: glen }
+            })
+            .collect()
+    }
+}
+
+/// The paper's three CoT evaluation suites, re-expressed as prompt-length
+/// profiles (GSM8k ~900, AQuA ~1304, BBH ~1021 tokens with 8-shot CoT;
+/// scaled by `scale` to fit the tiny model's context).
+pub fn eval_suites(scale: f64) -> Vec<(&'static str, usize, usize)> {
+    let s = |n: usize| ((n as f64 * scale) as usize).max(16);
+    vec![
+        ("GSM8k-like", s(900), 256),
+        ("AQuA-like", s(1304), 256),
+        ("BBH-like", s(1021), 256),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_length_and_content() {
+        let mut rng = Rng::new(0);
+        let p = prompt(&mut rng, 100);
+        assert_eq!(p.len(), 100);
+        assert!(p.iter().all(|&b| b.is_ascii()));
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let spec = WorkloadSpec {
+            arrivals: Arrivals::Poisson { rate: 10.0 },
+            n_requests: 20,
+            prompt_len: (16, 64),
+            gen_len: (4, 16),
+            seed: 42,
+        };
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert!((x.at - y.at).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let spec = WorkloadSpec {
+            arrivals: Arrivals::Poisson { rate: 5.0 },
+            n_requests: 50,
+            prompt_len: (8, 16),
+            gen_len: (1, 4),
+            seed: 1,
+        };
+        let trace = spec.generate();
+        for w in trace.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn burst_all_at_zero() {
+        let spec = WorkloadSpec {
+            arrivals: Arrivals::Burst,
+            n_requests: 5,
+            prompt_len: (8, 9),
+            gen_len: (1, 2),
+            seed: 2,
+        };
+        assert!(spec.generate().iter().all(|e| e.at == 0.0));
+    }
+
+    #[test]
+    fn suites_scale() {
+        let suites = eval_suites(0.1);
+        assert_eq!(suites.len(), 3);
+        assert_eq!(suites[0].1, 90);
+        assert_eq!(suites[1].1, 130);
+    }
+}

@@ -1,0 +1,147 @@
+//! Calibrated synthetic QKV generators.
+//!
+//! Figure 4/8/9 show that real models' K (and for Phi-3, V) caches have
+//! *persistent channelwise outliers*: a few channels whose magnitude is
+//! 5-20x the rest, consistent across tokens. That structure is what makes
+//! channelwise quantization win (Figure 10) and what the head-priority
+//! metric detects. These generators reproduce it so the accuracy
+//! experiments exercise the same mechanism without model checkpoints.
+
+use crate::tensor::Mat;
+use crate::testutil::Rng;
+
+/// Outlier structure profile for a generated K/V slab.
+#[derive(Debug, Clone)]
+pub struct OutlierProfile {
+    /// Fraction of channels that are outliers.
+    pub frac_channels: f64,
+    /// Magnitude multiplier for outlier channels.
+    pub boost: f32,
+    /// Slowly-varying per-token drift (temporal correlation strength).
+    pub token_drift: f32,
+}
+
+impl OutlierProfile {
+    /// LLaMA-3-like K cache: moderate channel outliers.
+    pub fn llama_k() -> OutlierProfile {
+        OutlierProfile { frac_channels: 0.08, boost: 8.0, token_drift: 0.3 }
+    }
+
+    /// Phi-3-like V cache: pronounced channel outliers (Figure 9).
+    pub fn phi3_v() -> OutlierProfile {
+        OutlierProfile { frac_channels: 0.12, boost: 15.0, token_drift: 0.2 }
+    }
+
+    /// No outliers (control).
+    pub fn plain() -> OutlierProfile {
+        OutlierProfile { frac_channels: 0.0, boost: 1.0, token_drift: 0.0 }
+    }
+}
+
+/// Generate a `[tokens, channels]` K or V slab with the given outlier
+/// structure (deterministic from `rng`).
+pub fn outlier_kv_slab(
+    rng: &mut Rng,
+    tokens: usize,
+    channels: usize,
+    profile: &OutlierProfile,
+) -> Mat {
+    let mut m = Mat::randn(rng, tokens, channels, 1.0);
+    // Pick outlier channels.
+    let n_out = ((channels as f64) * profile.frac_channels).round() as usize;
+    let mut chans: Vec<usize> = (0..channels).collect();
+    rng.shuffle(&mut chans);
+    let outliers = &chans[..n_out];
+    for &c in outliers {
+        // Each outlier channel gets a persistent sign + magnitude.
+        let sign = if rng.bool(0.5) { 1.0 } else { -1.0 };
+        let mag = profile.boost * (0.5 + rng.f32());
+        for t in 0..tokens {
+            let v = m.get(t, c);
+            m.set(t, c, v * mag * 0.3 + sign * mag);
+        }
+    }
+    // Temporal drift: smooth low-frequency component over tokens.
+    if profile.token_drift > 0.0 {
+        for c in 0..channels {
+            let mut drift = 0.0f32;
+            for t in 0..tokens {
+                drift = 0.95 * drift + 0.05 * rng.normal();
+                let v = m.get(t, c);
+                m.set(t, c, v + drift * profile.token_drift * 3.0);
+            }
+        }
+    }
+    m
+}
+
+/// Channelwise vs tokenwise min-max gap distributions of a slab — the
+/// histogram data behind Figures 8/9.
+pub fn gap_distributions(m: &Mat) -> (Vec<f32>, Vec<f32>) {
+    let mut chan_gaps = vec![0.0f32; m.cols];
+    for c in 0..m.cols {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for r in 0..m.rows {
+            lo = lo.min(m.get(r, c));
+            hi = hi.max(m.get(r, c));
+        }
+        chan_gaps[c] = hi - lo;
+    }
+    let mut tok_gaps = vec![0.0f32; m.rows];
+    for r in 0..m.rows {
+        let row = m.row(r);
+        let lo = row.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+        let hi = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        tok_gaps[r] = hi - lo;
+    }
+    (chan_gaps, tok_gaps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outlier_channels_dominate_gaps() {
+        let mut rng = Rng::new(0);
+        let m = outlier_kv_slab(&mut rng, 256, 64, &OutlierProfile::phi3_v());
+        let (chan, _tok) = gap_distributions(&m);
+        let mut sorted = chan.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // Top channels' gap far exceeds the median channel gap.
+        let median = sorted[sorted.len() / 2];
+        assert!(sorted[0] > median * 3.0, "top {} median {median}", sorted[0]);
+    }
+
+    #[test]
+    fn plain_profile_has_no_heavy_tail() {
+        let mut rng = Rng::new(1);
+        let m = outlier_kv_slab(&mut rng, 256, 64, &OutlierProfile::plain());
+        let (chan, _) = gap_distributions(&m);
+        let max = chan.iter().fold(0.0f32, |a, &b| a.max(b));
+        let mean = chan.iter().sum::<f32>() / chan.len() as f32;
+        assert!(max < mean * 2.0, "max {max} mean {mean}");
+    }
+
+    #[test]
+    fn tokenwise_gaps_widen_with_outlier_channels() {
+        // With channel outliers, every token's row spans the outlier
+        // magnitude -> tokenwise gaps become uniformly large (Fig 8's
+        // observation that tokenwise grouping is the wrong axis).
+        let mut rng = Rng::new(2);
+        let m = outlier_kv_slab(&mut rng, 128, 32, &OutlierProfile::llama_k());
+        let (chan, tok) = gap_distributions(&m);
+        let chan_med = {
+            let mut s = chan.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s[s.len() / 2]
+        };
+        let tok_med = {
+            let mut s = tok.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s[s.len() / 2]
+        };
+        assert!(tok_med > chan_med, "tok {tok_med} chan {chan_med}");
+    }
+}

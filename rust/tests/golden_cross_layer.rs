@@ -1,0 +1,90 @@
+//! Cross-layer golden tests: the Rust CPU engines (quant/SAS/turbo) must
+//! agree with the Pallas kernels executing through PJRT on identical
+//! inputs — the contract that lets accuracy experiments run in pure Rust.
+//!
+//! Skipped when artifacts are absent.
+
+use turboattention::attention::{turbo_attention, TurboConfig};
+use turboattention::runtime::{HostTensor, Runtime};
+use turboattention::sas::Sas;
+use turboattention::tensor::Mat;
+use turboattention::testutil::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("runtime"))
+}
+
+#[test]
+fn rust_sas_matches_pallas_sas() {
+    let Some(mut rt) = runtime() else { return };
+    let micro = rt.manifest.micro.clone();
+    let mut rng = Rng::new(3);
+    let data = rng.normal_vec(micro.sas_rows * micro.sas_cols, 2.0);
+    let out = rt
+        .run(
+            "sas_micro",
+            &[HostTensor::F32(
+                data.clone(),
+                vec![micro.sas_rows, micro.sas_cols],
+            )],
+        )
+        .expect("sas");
+    let pallas = out[0].as_f32().unwrap();
+
+    let sas = Sas::default();
+    for r in 0..micro.sas_rows {
+        let mut row = data[r * micro.sas_cols..(r + 1) * micro.sas_cols].to_vec();
+        sas.softmax_row(&mut row);
+        for (c, (&a, &b)) in row
+            .iter()
+            .zip(&pallas[r * micro.sas_cols..(r + 1) * micro.sas_cols])
+            .enumerate()
+        {
+            assert!(
+                (a - b).abs() < 1e-5,
+                "row {r} col {c}: rust {a} vs pallas {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rust_turbo_engine_tracks_pallas_turbo_kernel() {
+    let Some(mut rt) = runtime() else { return };
+    let micro = rt.manifest.micro.clone();
+    let (h, n, d, blk) = (micro.heads, micro.seq, micro.d_head, micro.block);
+    let mut rng = Rng::new(5);
+    let qv = rng.normal_vec(h * n * d, 1.0);
+    let kv = rng.normal_vec(h * n * d, 1.0);
+    let vv = rng.normal_vec(h * n * d, 1.0);
+    let shape = vec![h, n, d];
+    let out = rt
+        .run(
+            "attn_turbo_micro",
+            &[
+                HostTensor::F32(qv.clone(), shape.clone()),
+                HostTensor::F32(kv.clone(), shape.clone()),
+                HostTensor::F32(vv.clone(), shape),
+            ],
+        )
+        .expect("turbo micro");
+    let pallas = out[0].as_f32().unwrap();
+
+    let cfg = TurboConfig { br: blk, bc: blk, causal: true, ..Default::default() };
+    for head in 0..h {
+        let s = head * n * d;
+        let q = Mat::from_vec(n, d, qv[s..s + n * d].to_vec());
+        let k = Mat::from_vec(n, d, kv[s..s + n * d].to_vec());
+        let v = Mat::from_vec(n, d, vv[s..s + n * d].to_vec());
+        let rust = turbo_attention(&q, &k, &v, &cfg);
+        let pall = Mat::from_vec(n, d, pallas[s..s + n * d].to_vec());
+        let rel = rust.rel_err(&pall);
+        // Same algorithm, independent implementations: differences are
+        // only float-order + knife-edge quantization codes.
+        assert!(rel < 0.03, "head {head} rel err {rel}");
+    }
+}

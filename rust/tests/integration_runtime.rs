@@ -1,0 +1,126 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! Skipped gracefully when `artifacts/` is absent (run `make artifacts`).
+
+use turboattention::runtime::{HostTensor, Runtime};
+use turboattention::testutil::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("runtime"))
+}
+
+#[test]
+fn manifest_describes_all_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "prefill_turbo",
+        "prefill_flash",
+        "decode_turbo",
+        "decode_flash",
+        "attn_turbo_micro",
+        "attn_flash_micro",
+        "sas_micro",
+    ] {
+        let spec = rt.manifest.artifact(name).expect(name);
+        assert!(!spec.inputs.is_empty(), "{name} has inputs");
+        assert!(!spec.outputs.is_empty(), "{name} has outputs");
+        assert!(
+            std::path::Path::new("artifacts").join(&spec.file).exists(),
+            "{name} file exists"
+        );
+    }
+}
+
+#[test]
+fn micro_turbo_close_to_micro_flash() {
+    let Some(mut rt) = runtime() else { return };
+    let micro = rt.manifest.micro.clone();
+    let n = micro.heads * micro.seq * micro.d_head;
+    let shape = vec![micro.heads, micro.seq, micro.d_head];
+    let mut rng = Rng::new(7);
+    let q = HostTensor::F32(rng.normal_vec(n, 1.0), shape.clone());
+    let k = HostTensor::F32(rng.normal_vec(n, 1.0), shape.clone());
+    let v = HostTensor::F32(rng.normal_vec(n, 1.0), shape.clone());
+    let t = rt
+        .run("attn_turbo_micro", &[q.clone(), k.clone(), v.clone()])
+        .expect("turbo");
+    let f = rt.run("attn_flash_micro", &[q, k, v]).expect("flash");
+    let (tv, fv) = (t[0].as_f32().unwrap(), f[0].as_f32().unwrap());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in tv.iter().zip(fv) {
+        num += ((a - b) as f64).powi(2);
+        den += (*b as f64).powi(2);
+    }
+    let rel = (num / den).sqrt();
+    assert!(rel < 0.05, "quantized micro kernel drift: {rel}");
+}
+
+#[test]
+fn sas_micro_rows_normalized() {
+    let Some(mut rt) = runtime() else { return };
+    let micro = rt.manifest.micro.clone();
+    let mut rng = Rng::new(9);
+    let x = HostTensor::F32(
+        rng.normal_vec(micro.sas_rows * micro.sas_cols, 2.5),
+        vec![micro.sas_rows, micro.sas_cols],
+    );
+    let out = rt.run("sas_micro", &[x]).expect("sas");
+    let probs = out[0].as_f32().unwrap();
+    for r in 0..micro.sas_rows {
+        let s: f32 =
+            probs[r * micro.sas_cols..(r + 1) * micro.sas_cols].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+        assert!(probs[r * micro.sas_cols..(r + 1) * micro.sas_cols]
+            .iter()
+            .all(|&p| (0.0..=1.0001).contains(&p)));
+    }
+}
+
+#[test]
+fn executable_rejects_wrong_arity() {
+    let Some(mut rt) = runtime() else { return };
+    let err = rt.run("sas_micro", &[]).unwrap_err();
+    assert!(format!("{err}").contains("expected 1 inputs"));
+}
+
+#[test]
+fn prefill_turbo_emits_quantized_cache() {
+    let Some(mut rt) = runtime() else { return };
+    let m = rt.manifest.model.clone();
+    let mut tokens = vec![0i32; m.max_ctx];
+    for (i, b) in b"the kernel packs low bits quickly. ".iter().enumerate() {
+        tokens[i] = *b as i32;
+    }
+    let n = 35usize;
+    let outs = rt
+        .run(
+            "prefill_turbo",
+            &[
+                HostTensor::I32(tokens, vec![m.max_ctx]),
+                HostTensor::scalar_i32(n as i32),
+            ],
+        )
+        .expect("prefill");
+    assert_eq!(outs.len(), 5);
+    let k8 = outs[1].as_i8().unwrap();
+    let sk = outs[3].as_f32().unwrap();
+    assert_eq!(k8.len(), m.n_layers * m.n_heads * m.max_ctx * m.d_head);
+    // Scales for the valid blocks must be positive.
+    let nb = m.max_ctx / m.block;
+    let valid_blocks = n.div_ceil(m.block);
+    for l in 0..m.n_layers {
+        for h in 0..m.n_heads {
+            for bidx in 0..valid_blocks {
+                let s = sk[(l * m.n_heads + h) * nb + bidx];
+                assert!(s > 0.0, "scale l={l} h={h} b={bidx}");
+            }
+        }
+    }
+    // Valid-region codes must not all be zero.
+    assert!(k8[..n * m.d_head].iter().any(|&c| c != 0));
+}

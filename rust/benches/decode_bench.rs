@@ -1,0 +1,238 @@
+//! Decode-step cost vs. context length — the asymptotic win of the
+//! incremental `Q1View` + persistent slabs over the seed path's
+//! per-token full-cache rematerialization.
+//!
+//! Four cases per context length (256 / 512 / 1024 tokens), all on the
+//! pure-Rust substrate (no artifacts needed):
+//!
+//! * `cache-sync(view)`  — fold one token + incremental slab sync
+//!   (`TurboSession::sync_slabs`). Should be **near-flat** in context:
+//!   pages are dequantized once when created, so steady-state work is
+//!   O(new tokens).
+//! * `cache-remat(seed)` — fold one token + fresh `read_q1_into` of every
+//!   stream (what `ModelBundle::decode_turbo` did per token). Linear in
+//!   context.
+//! * `decode-step turbo` — fold + sync + INT8 attention per (layer, head)
+//!   over the slabs (`turbo_decode_into` with a reused scratch). The
+//!   attention math is inherently O(context); the point is that cache
+//!   maintenance no longer adds a second, larger O(context) term.
+//! * `decode-step flash` — fold (one memcpy per stream) + exact float
+//!   attention, the baseline backend's step shape.
+
+use turboattention::attention::backend::TurboSession;
+use turboattention::attention::{turbo_decode_into, DecodeScratch};
+use turboattention::bench::Bencher;
+use turboattention::kvcache::{KvCache, KvCacheConfig, PrecisionMap};
+use turboattention::model::TurboSlabs;
+use turboattention::quant::Bits;
+use turboattention::testutil::Rng;
+
+const L: usize = 2;
+const H: usize = 4;
+const DH: usize = 64;
+const BLOCK: usize = 32;
+/// Headroom tokens so a bench case can fold one token per iteration
+/// (warmup + measured) without outgrowing the slabs.
+const SLACK: usize = 2048;
+
+fn new_session(ctx: usize, rng: &mut Rng) -> TurboSession {
+    let max_ctx = ctx + SLACK;
+    let pm = PrecisionMap::uniform(L, H, Bits::Int4);
+    let cache = KvCache::new(KvCacheConfig::new(L, H, DH, BLOCK, pm));
+    let mut sess = TurboSession::from_parts(
+        cache,
+        TurboSlabs::new(L, H, max_ctx, DH, BLOCK),
+    );
+    for _ in 0..ctx {
+        fold_token(&mut sess, rng);
+    }
+    sess.sync_slabs();
+    sess
+}
+
+fn fold_token(sess: &mut TurboSession, rng: &mut Rng) {
+    for l in 0..L {
+        for h in 0..H {
+            let k = rng.normal_vec(DH, 1.0);
+            let v = rng.normal_vec(DH, 1.0);
+            sess.cache.k_stream_mut(l, h).push_token(&k);
+            sess.cache.v_stream_mut(l, h).push_token(&v);
+        }
+    }
+}
+
+/// The seed path's per-token cache read: rematerialize every stream into
+/// the slabs from scratch.
+fn remat_all(sess: &mut TurboSession, scratch: &mut Vec<u8>) -> usize {
+    let max_ctx = sess.slabs.k8.len() / (L * H * DH);
+    let nb = max_ctx / BLOCK;
+    let mut nk = 0;
+    for l in 0..L {
+        for h in 0..H {
+            let base = (l * H + h) * max_ctx * DH;
+            let sbase = (l * H + h) * nb;
+            let hc = sess.cache.head(l, h);
+            nk = hc.k.read_q1_into(
+                scratch,
+                &mut sess.slabs.k8[base..base + max_ctx * DH],
+                &mut sess.slabs.sk[sbase..sbase + nb],
+            );
+            hc.v.read_q1_into(
+                scratch,
+                &mut sess.slabs.v8[base..base + max_ctx * DH],
+                &mut sess.slabs.sv[sbase..sbase + nb],
+            );
+        }
+    }
+    nk
+}
+
+/// INT8 attention over the slabs for every (layer, head) — the CPU
+/// stand-in for the decode executable.
+fn attend_all(
+    sess: &TurboSession,
+    q: &[f32],
+    nk: usize,
+    scratch: &mut DecodeScratch,
+    out: &mut [f32],
+) -> f32 {
+    let max_ctx = sess.slabs.k8.len() / (L * H * DH);
+    let nb = max_ctx / BLOCK;
+    let mut acc = 0.0f32;
+    for l in 0..L {
+        for h in 0..H {
+            let base = (l * H + h) * max_ctx * DH;
+            let sbase = (l * H + h) * nb;
+            turbo_decode_into(
+                q,
+                &sess.slabs.k8[base..base + max_ctx * DH],
+                &sess.slabs.v8[base..base + max_ctx * DH],
+                &sess.slabs.sk[sbase..sbase + nb],
+                &sess.slabs.sv[sbase..sbase + nb],
+                nk,
+                BLOCK,
+                -6.0,
+                scratch,
+                out,
+            );
+            acc += out[0];
+        }
+    }
+    acc
+}
+
+/// Exact single-query attention over a float cache (flash decode shape).
+fn flash_attend(q: &[f32], kf: &[f32], vf: &[f32], nk: usize, out: &mut [f32]) {
+    let d = q.len();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut m = f32::NEG_INFINITY;
+    let mut l_sum = 0.0f32;
+    out.fill(0.0);
+    for t in 0..nk {
+        let k_row = &kf[t * d..(t + 1) * d];
+        let s: f32 =
+            q.iter().zip(k_row).map(|(a, b)| a * b).sum::<f32>() * scale;
+        let m_new = m.max(s);
+        let alpha = if m == f32::NEG_INFINITY { 0.0 } else { (m - m_new).exp() };
+        let p = (s - m_new).exp();
+        let v_row = &vf[t * d..(t + 1) * d];
+        for (o, &vv) in out.iter_mut().zip(v_row) {
+            *o = *o * alpha + p * vv;
+        }
+        l_sum = l_sum * alpha + p;
+        m = m_new;
+    }
+    let inv = 1.0 / l_sum.max(1e-20);
+    out.iter_mut().for_each(|o| *o *= inv);
+}
+
+fn main() {
+    println!("== bench: decode step vs context (Q1View incremental slabs) ==\n");
+    // Cap iterations so a case's token folds stay within SLACK.
+    let mut b = Bencher::with_limits(
+        std::time::Duration::from_millis(50),
+        std::time::Duration::from_millis(500),
+        800,
+    );
+    let contexts = [256usize, 512, 1024];
+
+    for &ctx in &contexts {
+        let mut rng = Rng::new(42);
+        let mut sess = new_session(ctx, &mut rng);
+        b.bench(&format!("cache-sync(view) ctx={ctx}"), || {
+            fold_token(&mut sess, &mut rng);
+            sess.sync_slabs()
+        });
+
+        let mut sess = new_session(ctx, &mut rng);
+        let mut scratch8 = Vec::new();
+        b.bench(&format!("cache-remat(seed) ctx={ctx}"), || {
+            fold_token(&mut sess, &mut rng);
+            remat_all(&mut sess, &mut scratch8)
+        });
+
+        let mut sess = new_session(ctx, &mut rng);
+        let mut scratch = DecodeScratch::new();
+        let mut out = vec![0.0f32; DH];
+        b.bench(&format!("decode-step turbo ctx={ctx}"), || {
+            fold_token(&mut sess, &mut rng);
+            let nk = sess.sync_slabs();
+            let q = rng.normal_vec(DH, 1.0);
+            attend_all(&sess, &q, nk, &mut scratch, &mut out)
+        });
+
+        let max_ctx = ctx + SLACK;
+        let mut kf = vec![0.0f32; L * H * max_ctx * DH];
+        let mut vf = vec![0.0f32; L * H * max_ctx * DH];
+        let mut nk = ctx;
+        for t in 0..ctx {
+            for s in 0..L * H {
+                let base = (s * max_ctx + t) * DH;
+                kf[base..base + DH].copy_from_slice(&rng.normal_vec(DH, 1.0));
+                vf[base..base + DH].copy_from_slice(&rng.normal_vec(DH, 1.0));
+            }
+        }
+        let mut out = vec![0.0f32; DH];
+        b.bench(&format!("decode-step flash ctx={ctx}"), || {
+            for s in 0..L * H {
+                let base = (s * max_ctx + nk) * DH;
+                kf[base..base + DH].copy_from_slice(&rng.normal_vec(DH, 1.0));
+                vf[base..base + DH].copy_from_slice(&rng.normal_vec(DH, 1.0));
+            }
+            nk += 1;
+            let q = rng.normal_vec(DH, 1.0);
+            let mut acc = 0.0f32;
+            for s in 0..L * H {
+                let base = s * max_ctx * DH;
+                flash_attend(
+                    &q,
+                    &kf[base..base + max_ctx * DH],
+                    &vf[base..base + max_ctx * DH],
+                    nk,
+                    &mut out,
+                );
+                acc += out[0];
+            }
+            acc
+        });
+        println!();
+    }
+
+    let flat = |name: &str| {
+        let lo = format!("{name} ctx={}", contexts[0]);
+        let hi = format!("{name} ctx={}", contexts[contexts.len() - 1]);
+        b.speedup(&hi, &lo)
+    };
+    if let (Some(view), Some(remat)) =
+        (flat("cache-sync(view)"), flat("cache-remat(seed)"))
+    {
+        println!(
+            "cache maintenance growth {}x -> {}x context: \
+             view {:.2}x (near-flat), remat {:.2}x (linear)",
+            contexts[0],
+            contexts[contexts.len() - 1],
+            view,
+            remat
+        );
+    }
+}

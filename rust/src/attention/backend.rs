@@ -1,0 +1,597 @@
+//! Pluggable serving-path backends — the engine-facing attention/cache
+//! interface.
+//!
+//! The coordinator used to hard-code two paths (`match PathMode` in three
+//! places, per-path session fields `Option<KvCache>` /
+//! `Option<(Vec<f32>, Vec<f32>)>` living side by side in every session).
+//! This module follows the FlashInfer lesson — a serving engine stays
+//! fast and extensible when attention paths are *composable* behind one
+//! interface — and collapses each path into an [`AttentionBackend`]:
+//!
+//! * [`AttentionBackend::prefill`] runs the prompt and builds the
+//!   backend's own session state (`Self::Session`): cache, slabs,
+//!   whatever the path needs.
+//! * [`AttentionBackend::decode_step`] produces logits + the new token's
+//!   K/V for one position, reading the session's cache views.
+//! * [`AttentionBackend::fold_new_token`] absorbs the new K/V into the
+//!   session state.
+//!
+//! Adding a third path (mixed-precision cache, exact-softmax turbo, a
+//! speculative path) is one impl in one file — the engine never changes.
+//!
+//! [`TurboBackend`] is where the paper's decode economics are enforced:
+//! its session owns persistent executable-layout slabs
+//! ([`TurboSlabs`]) kept in sync *incrementally* from each stream's
+//! [`Q1View`](crate::kvcache::Q1View). Each immutable q2 page is
+//! dequantized exactly once when it appears; a decode step then does
+//! O(new tokens) cache work instead of the O(layers * heads * context *
+//! d_head) full rematerialization the previous `decode_turbo` performed
+//! on every generated token.
+//!
+//! The engine selects a backend at runtime from [`PathMode`], so the
+//! associated-type trait is wrapped by the object-safe [`DynBackend`]
+//! erasure (session state behind [`BackendState`]); the only
+//! mode-`match` left in the crate is the constructor [`backend_for`].
+
+use std::any::Any;
+
+use anyhow::Result;
+
+use crate::kvcache::{CacheStats, KvCache, KvCacheConfig, PrecisionMap};
+use crate::model::{DecodeOut, FlashSlabs, ModelBundle, TurboSlabs};
+use crate::quant::Bits;
+
+/// Which attention path serves requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathMode {
+    /// TurboAttention: quantized execution + paged q2 cache.
+    Turbo,
+    /// Exact FlashAttention baseline with an FP32 cache.
+    Flash,
+}
+
+/// One serving path: prompt prefill, per-token decode, and K/V fold, with
+/// the per-session cache state owned by the backend's `Session` type.
+pub trait AttentionBackend {
+    /// Per-request state (caches, slabs, sync cursors) — created by
+    /// `prefill`, threaded through `decode_step`/`fold_new_token`.
+    type Session;
+
+    fn name(&self) -> &'static str;
+
+    /// Run prefill over `prompt`; returns the full prefill logits buffer
+    /// (`[max_ctx * vocab]`, see `ModelBundle::logits_at`) and a fresh
+    /// session.
+    fn prefill(
+        &self,
+        bundle: &mut ModelBundle,
+        prompt: &[u8],
+    ) -> Result<(Vec<f32>, Self::Session)>;
+
+    /// One decode step: feed `token` at absolute position `pos`, attend
+    /// over the session's cache.
+    fn decode_step(
+        &self,
+        bundle: &mut ModelBundle,
+        session: &mut Self::Session,
+        token: u8,
+        pos: usize,
+    ) -> Result<DecodeOut>;
+
+    /// Fold the new token's K/V (`[L*H*dh]` each) into the session cache.
+    fn fold_new_token(
+        &self,
+        bundle: &ModelBundle,
+        session: &mut Self::Session,
+        k_new: &[f32],
+        v_new: &[f32],
+        pos: usize,
+    );
+
+    /// Cache memory statistics, if the path has a compressed cache.
+    fn cache_stats(&self, session: &Self::Session) -> Option<CacheStats>;
+}
+
+// ---------------------------------------------------------------------------
+// Turbo path
+// ---------------------------------------------------------------------------
+
+/// TurboAttention serving path: INT8 execution over the paged q2 cache.
+#[derive(Debug, Clone, Copy)]
+pub struct TurboBackend {
+    /// q2 storage width for uniform precision.
+    pub kv_bits: Bits,
+    /// Number of 2-bit heads per layer (0 = uniform `kv_bits`).
+    pub n_2bit_heads: usize,
+}
+
+/// Turbo per-request state: the paged cache plus persistent decode slabs
+/// and the cursors tracking how much of the cache they already mirror.
+pub struct TurboSession {
+    pub cache: KvCache,
+    pub slabs: TurboSlabs,
+    /// Pages already copied into the slabs (uniform across streams — all
+    /// (layer, head, K/V) streams advance in lockstep).
+    synced_pages: usize,
+    /// Buffer tokens already copied after the page region.
+    synced_buf: usize,
+}
+
+impl TurboSession {
+    pub fn new(cache: KvCache, bundle: &ModelBundle) -> TurboSession {
+        let slabs = bundle.new_turbo_slabs();
+        TurboSession::from_parts(cache, slabs)
+    }
+
+    /// Assemble from pre-built parts (tests/benches that have no PJRT
+    /// bundle).
+    pub fn from_parts(cache: KvCache, slabs: TurboSlabs) -> TurboSession {
+        TurboSession { cache, slabs, synced_pages: 0, synced_buf: 0 }
+    }
+
+    /// Copy tokens materialized since the last call from every stream's
+    /// incremental q1 view into the executable-layout slabs, and return
+    /// the valid token count `nk`.
+    ///
+    /// Cost is O(new tokens * layers * heads * d_head) — amortized O(1)
+    /// per generated token per stream — because `q1_view` dequantizes
+    /// each immutable page exactly once and the copy below starts at the
+    /// first token the slabs don't already hold. (A buffer flush converts
+    /// mirrored buffer tokens into a page, so the restart point falls
+    /// back to that page's boundary, never to zero.)
+    pub fn sync_slabs(&mut self) -> usize {
+        let l_n = self.cache.cfg.n_layers;
+        let h_n = self.cache.cfg.n_heads;
+        let dh = self.cache.cfg.d_head;
+        let block = self.cache.cfg.block;
+        let c = self.slabs.k8.len() / (l_n * h_n * dh);
+        let nb = self.slabs.sk.len() / (l_n * h_n);
+        debug_assert_eq!(nb, c / block);
+        // All streams advance in lockstep; probe (0, 0) K for the delta.
+        let (pages_now, buf_now) = {
+            let s = self.cache.head(0, 0);
+            (s.k.pages.len(), s.k.buffer.len())
+        };
+        let nk = pages_now * block + buf_now;
+        let start = if pages_now > self.synced_pages {
+            // New pages exist; the old mirrored buffer tail was flushed
+            // into the first of them — recopy from that boundary.
+            self.synced_pages * block
+        } else {
+            pages_now * block + self.synced_buf
+        };
+        let start = start.min(nk);
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let base = (l * h_n + h) * c * dh;
+                let sbase = (l * h_n + h) * nb;
+                let (codes, scales, n) = self.cache.k_stream_mut(l, h).q1_view();
+                debug_assert_eq!(n, nk, "streams out of lockstep");
+                let nbv = n.div_ceil(block).min(nb);
+                self.slabs.k8[base + start * dh..base + n * dh]
+                    .copy_from_slice(&codes[start * dh..n * dh]);
+                self.slabs.sk[sbase..sbase + nbv]
+                    .copy_from_slice(&scales[..nbv]);
+                let (codes, scales, n) = self.cache.v_stream_mut(l, h).q1_view();
+                debug_assert_eq!(n, nk, "streams out of lockstep");
+                self.slabs.v8[base + start * dh..base + n * dh]
+                    .copy_from_slice(&codes[start * dh..n * dh]);
+                self.slabs.sv[sbase..sbase + nbv]
+                    .copy_from_slice(&scales[..nbv]);
+            }
+        }
+        self.synced_pages = pages_now;
+        self.synced_buf = buf_now;
+        nk
+    }
+}
+
+impl TurboBackend {
+    /// Build the paged cache for one request from this backend's
+    /// precision policy and the model geometry.
+    fn new_cache(&self, bundle: &ModelBundle) -> KvCache {
+        let (l_n, h_n) = (bundle.n_layers(), bundle.n_heads());
+        let precision = if self.n_2bit_heads == 0 {
+            PrecisionMap::uniform(l_n, h_n, self.kv_bits)
+        } else {
+            // Static head split until calibration runs (experiments use
+            // `PrecisionMap::mixed_from_stats` with real stats).
+            let mut pm = PrecisionMap::uniform(l_n, h_n, Bits::Int4);
+            for l in 0..l_n {
+                for h in 0..self.n_2bit_heads.min(h_n) {
+                    pm.set(l, h, Bits::Int2);
+                }
+            }
+            pm
+        };
+        KvCache::new(KvCacheConfig::new(
+            l_n,
+            h_n,
+            bundle.d_head(),
+            bundle.block(),
+            precision,
+        ))
+    }
+}
+
+impl AttentionBackend for TurboBackend {
+    type Session = TurboSession;
+
+    fn name(&self) -> &'static str {
+        "turbo"
+    }
+
+    fn prefill(
+        &self,
+        bundle: &mut ModelBundle,
+        prompt: &[u8],
+    ) -> Result<(Vec<f32>, TurboSession)> {
+        let out = bundle.prefill(prompt, true)?;
+        let (k8, v8, sk, sv) =
+            out.turbo_cache.expect("turbo prefill returns cache");
+        let mut cache = self.new_cache(bundle);
+        bundle.ingest_prefill(&mut cache, &k8, &v8, &sk, &sv, prompt.len());
+        Ok((out.logits, TurboSession::new(cache, bundle)))
+    }
+
+    fn decode_step(
+        &self,
+        bundle: &mut ModelBundle,
+        session: &mut TurboSession,
+        token: u8,
+        pos: usize,
+    ) -> Result<DecodeOut> {
+        let nk = session.sync_slabs();
+        bundle.decode_turbo(&mut session.slabs, token, pos, nk)
+    }
+
+    fn fold_new_token(
+        &self,
+        _bundle: &ModelBundle,
+        session: &mut TurboSession,
+        k_new: &[f32],
+        v_new: &[f32],
+        _pos: usize,
+    ) {
+        let l_n = session.cache.cfg.n_layers;
+        let h_n = session.cache.cfg.n_heads;
+        let dh = session.cache.cfg.d_head;
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let o = (l * h_n + h) * dh;
+                session.cache.k_stream_mut(l, h).push_token(&k_new[o..o + dh]);
+                session.cache.v_stream_mut(l, h).push_token(&v_new[o..o + dh]);
+            }
+        }
+    }
+
+    fn cache_stats(&self, session: &TurboSession) -> Option<CacheStats> {
+        Some(session.cache.stats())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flash path
+// ---------------------------------------------------------------------------
+
+/// Exact FlashAttention baseline over persistent FP32 slabs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlashBackend;
+
+/// Flash per-request state: the float K/V slabs.
+pub struct FlashSession {
+    pub slabs: FlashSlabs,
+}
+
+impl AttentionBackend for FlashBackend {
+    type Session = FlashSession;
+
+    fn name(&self) -> &'static str {
+        "flash"
+    }
+
+    fn prefill(
+        &self,
+        bundle: &mut ModelBundle,
+        prompt: &[u8],
+    ) -> Result<(Vec<f32>, FlashSession)> {
+        let out = bundle.prefill(prompt, false)?;
+        let (kf, vf) = out.flash_cache.expect("flash prefill returns cache");
+        Ok((out.logits, FlashSession { slabs: FlashSlabs { kf, vf } }))
+    }
+
+    fn decode_step(
+        &self,
+        bundle: &mut ModelBundle,
+        session: &mut FlashSession,
+        token: u8,
+        pos: usize,
+    ) -> Result<DecodeOut> {
+        // The cache holds exactly the `pos` tokens before this one.
+        bundle.decode_flash(&mut session.slabs, token, pos, pos)
+    }
+
+    fn fold_new_token(
+        &self,
+        bundle: &ModelBundle,
+        session: &mut FlashSession,
+        k_new: &[f32],
+        v_new: &[f32],
+        pos: usize,
+    ) {
+        let (l_n, h_n) = (bundle.n_layers(), bundle.n_heads());
+        let (c, dh) = (bundle.max_ctx(), bundle.d_head());
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let src = (l * h_n + h) * dh;
+                let dst = ((l * h_n + h) * c + pos) * dh;
+                session.slabs.kf[dst..dst + dh]
+                    .copy_from_slice(&k_new[src..src + dh]);
+                session.slabs.vf[dst..dst + dh]
+                    .copy_from_slice(&v_new[src..src + dh]);
+            }
+        }
+    }
+
+    fn cache_stats(&self, _session: &FlashSession) -> Option<CacheStats> {
+        // Uncompressed float cache: nothing to report against the
+        // compression metrics.
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime dispatch (object-safe erasure)
+// ---------------------------------------------------------------------------
+
+/// Type-erased per-session backend state, stored by the engine.
+pub struct BackendState(Box<dyn Any>);
+
+impl BackendState {
+    pub fn new<S: Any>(state: S) -> BackendState {
+        BackendState(Box::new(state))
+    }
+
+    /// Borrow as a concrete session type. Panics on backend/session
+    /// mismatch — states never migrate between backends inside one
+    /// engine, so a mismatch is a bug, not a runtime condition.
+    pub fn downcast_ref<S: Any>(&self) -> &S {
+        self.0
+            .downcast_ref::<S>()
+            .expect("session state does not match backend")
+    }
+
+    pub fn downcast_mut<S: Any>(&mut self) -> &mut S {
+        self.0
+            .downcast_mut::<S>()
+            .expect("session state does not match backend")
+    }
+}
+
+/// Object-safe facade over [`AttentionBackend`], so the engine can pick
+/// a path at runtime without being generic over it.
+pub trait DynBackend {
+    fn name(&self) -> &'static str;
+    fn prefill(
+        &self,
+        bundle: &mut ModelBundle,
+        prompt: &[u8],
+    ) -> Result<(Vec<f32>, BackendState)>;
+    fn decode_step(
+        &self,
+        bundle: &mut ModelBundle,
+        state: &mut BackendState,
+        token: u8,
+        pos: usize,
+    ) -> Result<DecodeOut>;
+    fn fold_new_token(
+        &self,
+        bundle: &ModelBundle,
+        state: &mut BackendState,
+        k_new: &[f32],
+        v_new: &[f32],
+        pos: usize,
+    );
+    fn cache_stats(&self, state: &BackendState) -> Option<CacheStats>;
+}
+
+struct Erased<B>(B);
+
+impl<B> DynBackend for Erased<B>
+where
+    B: AttentionBackend,
+    B::Session: Any,
+{
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn prefill(
+        &self,
+        bundle: &mut ModelBundle,
+        prompt: &[u8],
+    ) -> Result<(Vec<f32>, BackendState)> {
+        let (logits, session) = self.0.prefill(bundle, prompt)?;
+        Ok((logits, BackendState::new(session)))
+    }
+
+    fn decode_step(
+        &self,
+        bundle: &mut ModelBundle,
+        state: &mut BackendState,
+        token: u8,
+        pos: usize,
+    ) -> Result<DecodeOut> {
+        self.0.decode_step(bundle, state.downcast_mut(), token, pos)
+    }
+
+    fn fold_new_token(
+        &self,
+        bundle: &ModelBundle,
+        state: &mut BackendState,
+        k_new: &[f32],
+        v_new: &[f32],
+        pos: usize,
+    ) {
+        self.0
+            .fold_new_token(bundle, state.downcast_mut(), k_new, v_new, pos)
+    }
+
+    fn cache_stats(&self, state: &BackendState) -> Option<CacheStats> {
+        self.0.cache_stats(state.downcast_ref())
+    }
+}
+
+/// Construct the backend for an engine configuration — the single place
+/// a `PathMode` is matched on.
+pub fn backend_for(
+    mode: PathMode,
+    kv_bits: Bits,
+    n_2bit_heads: usize,
+) -> Box<dyn DynBackend> {
+    match mode {
+        PathMode::Turbo => {
+            Box::new(Erased(TurboBackend { kv_bits, n_2bit_heads }))
+        }
+        PathMode::Flash => Box::new(Erased(FlashBackend)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop, Rng};
+
+    const L: usize = 2;
+    const H: usize = 2;
+    const DH: usize = 8;
+    const BLOCK: usize = 4;
+    const CTX: usize = 32;
+
+    fn session() -> TurboSession {
+        let pm = PrecisionMap::uniform(L, H, Bits::Int4);
+        let cache = KvCache::new(KvCacheConfig::new(L, H, DH, BLOCK, pm));
+        TurboSession::from_parts(cache, TurboSlabs::new(L, H, CTX, DH, BLOCK))
+    }
+
+    fn push_all(s: &mut TurboSession, rng: &mut Rng) {
+        for l in 0..L {
+            for h in 0..H {
+                let k = rng.normal_vec(DH, 1.0);
+                let v = rng.normal_vec(DH, 1.0);
+                s.cache.k_stream_mut(l, h).push_token(&k);
+                s.cache.v_stream_mut(l, h).push_token(&v);
+            }
+        }
+    }
+
+    fn ingest_all(s: &mut TurboSession, rng: &mut Rng, tokens: usize) {
+        use crate::quant::quant_sym_int8;
+        for l in 0..L {
+            for h in 0..H {
+                let k = quant_sym_int8(&rng.normal_vec(tokens * DH, 1.0));
+                s.cache.k_stream_mut(l, h).ingest_q1_block(
+                    &k.codes, k.scale, tokens,
+                );
+                let v = quant_sym_int8(&rng.normal_vec(tokens * DH, 1.0));
+                s.cache.v_stream_mut(l, h).ingest_q1_block(
+                    &v.codes, v.scale, tokens,
+                );
+            }
+        }
+    }
+
+    /// Backend-parity oracle for the slabs: however sparsely `sync_slabs`
+    /// was called along the way, the slab contents must equal a fresh
+    /// full rematerialization of every stream.
+    #[test]
+    fn incremental_slab_sync_equals_full_rematerialization() {
+        prop::run("slab sync == remat", 25, |g| {
+            let mut s = session();
+            let mut rng = Rng::new(g.seed());
+            let prefill = g.usize_in(0, 12);
+            if prefill > 0 {
+                ingest_all(&mut s, &mut rng, prefill);
+            }
+            let steps = g.usize_in(1, CTX - 1 - prefill);
+            let sync_every = g.usize_in(1, 4);
+            for i in 0..steps {
+                push_all(&mut s, &mut rng);
+                if i % sync_every == 0 {
+                    s.sync_slabs();
+                }
+            }
+            let nk = s.sync_slabs();
+            assert_eq!(nk, prefill + steps);
+            let nb = CTX / BLOCK;
+            let nbv = nk.div_ceil(BLOCK);
+            let mut scratch = Vec::new();
+            let mut q1 = vec![0i8; CTX * DH];
+            let mut sc = vec![0.0f32; nb];
+            for l in 0..L {
+                for h in 0..H {
+                    let base = (l * H + h) * CTX * DH;
+                    let sbase = (l * H + h) * nb;
+                    let hc = s.cache.head(l, h);
+                    let got = hc.k.read_q1_into(&mut scratch, &mut q1, &mut sc);
+                    assert_eq!(got, nk);
+                    assert_eq!(
+                        &s.slabs.k8[base..base + nk * DH],
+                        &q1[..nk * DH],
+                        "K codes (l={l} h={h})"
+                    );
+                    assert_eq!(
+                        &s.slabs.sk[sbase..sbase + nbv],
+                        &sc[..nbv],
+                        "K scales (l={l} h={h})"
+                    );
+                    let got = hc.v.read_q1_into(&mut scratch, &mut q1, &mut sc);
+                    assert_eq!(got, nk);
+                    assert_eq!(
+                        &s.slabs.v8[base..base + nk * DH],
+                        &q1[..nk * DH],
+                        "V codes (l={l} h={h})"
+                    );
+                    assert_eq!(
+                        &s.slabs.sv[sbase..sbase + nbv],
+                        &sc[..nbv],
+                        "V scales (l={l} h={h})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sync_is_incremental_after_warmup() {
+        let mut s = session();
+        let mut rng = Rng::new(5);
+        for _ in 0..(BLOCK * 2 + 1) {
+            push_all(&mut s, &mut rng);
+        }
+        assert_eq!(s.sync_slabs(), BLOCK * 2 + 1);
+        assert_eq!(s.synced_pages, 2);
+        assert_eq!(s.synced_buf, 1);
+        // No mutation: cursors stable, nk unchanged.
+        assert_eq!(s.sync_slabs(), BLOCK * 2 + 1);
+        assert_eq!(s.synced_pages, 2);
+        push_all(&mut s, &mut rng);
+        assert_eq!(s.sync_slabs(), BLOCK * 2 + 2);
+        assert_eq!(s.synced_buf, 2);
+    }
+
+    #[test]
+    fn backend_for_dispatches_by_mode() {
+        let t = backend_for(PathMode::Turbo, Bits::Int4, 0);
+        let f = backend_for(PathMode::Flash, Bits::Int4, 0);
+        assert_eq!(t.name(), "turbo");
+        assert_eq!(f.name(), "flash");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn state_downcast_mismatch_panics() {
+        let state = BackendState::new(42usize);
+        let _: &FlashSession = state.downcast_ref();
+    }
+}

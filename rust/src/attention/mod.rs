@@ -13,15 +13,27 @@
 //! These run the same math as the Pallas kernels (validated against the
 //! same jnp oracles via golden vectors in `rust/tests/`), so accuracy
 //! experiments can sweep configurations without a Python round trip.
+//!
+//! [`backend`] sits above the engines: the pluggable serving-path
+//! interface ([`backend::AttentionBackend`]) the coordinator drives, with
+//! the turbo and flash paths as its two implementations.
 
+pub mod backend;
 pub mod baselines;
 pub mod exact;
 pub mod flash;
 pub mod turbo;
 
+pub use backend::{
+    backend_for, AttentionBackend, BackendState, DynBackend, FlashBackend,
+    PathMode, TurboBackend,
+};
 pub use exact::attention_exact;
 pub use flash::flash_attention;
-pub use turbo::{turbo_attention, turbo_decode, TurboConfig};
+pub use turbo::{
+    turbo_attention, turbo_decode, turbo_decode_into, DecodeScratch,
+    TurboConfig,
+};
 
 /// Causal-mask helper: is key position `kpos` visible to query row `qrow`
 /// when the query block is the tail of an `nk`-token context?

@@ -7,7 +7,8 @@
 //! q2-cache effect end to end.
 
 use crate::quant::{
-    dequant_asym_int, quant_asym_int, quant_sym_int8, Bits,
+    dequant_asym_int, quant_asym_int, quant_sym_int8, quant_sym_int8_into,
+    Bits,
 };
 use crate::sas::Sas;
 use crate::tensor::{idot, Mat};
@@ -156,12 +157,108 @@ fn roundtrip_q2(blk: &mut Mat, bits: Bits) {
     }
 }
 
+/// Reusable buffers for [`turbo_decode_into`] — §Perf: once warm, the
+/// decode inner loop allocates nothing per head per step. One instance
+/// per decode thread (or per backend session) is enough; it adapts to
+/// whatever `d`/`bc` each call uses.
+#[derive(Debug, Default, Clone)]
+pub struct DecodeScratch {
+    /// Score, then probability, tile for one cache block (`bc` entries).
+    s: Vec<f32>,
+    /// INT8 codes of the probability tile.
+    p8: Vec<i8>,
+    /// Output accumulator (`d` entries).
+    acc: Vec<f32>,
+    /// INT8 codes of the query.
+    q8: Vec<i8>,
+}
+
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        DecodeScratch::default()
+    }
+}
+
 /// One TurboAttention decode step (Algorithm 2) over a q1-level cache.
 ///
 /// `k8`/`v8` are `[nk, d]` INT8 codes grouped in blocks of `bc` rows with
-/// per-block scales `sk`/`sv` (`ceil(nk/bc)` entries). Returns
-/// (output `[d]`, running max m, denominator l) so the caller can merge
-/// not-yet-cached tokens (the model's current token).
+/// per-block scales `sk`/`sv` (`ceil(nk/bc)` entries). Writes the
+/// attention output into `out` (`[d]`) and returns (running max m,
+/// denominator l) so the caller can merge not-yet-cached tokens (the
+/// model's current token). All intermediates live in `scratch`.
+#[allow(clippy::too_many_arguments)]
+pub fn turbo_decode_into(
+    q: &[f32],
+    k8: &[i8],
+    v8: &[i8],
+    sk: &[f32],
+    sv: &[f32],
+    nk: usize,
+    bc: usize,
+    n_r: f32,
+    scratch: &mut DecodeScratch,
+    out: &mut [f32],
+) -> (f32, f32) {
+    let d = q.len();
+    assert_eq!(out.len(), d);
+    assert!(k8.len() >= nk * d && v8.len() >= nk * d);
+    let scale = 1.0 / (d as f32).sqrt();
+    let sas = Sas::new(n_r);
+    let q_scale = quant_sym_int8_into(q, &mut scratch.q8);
+    scratch.acc.clear();
+    scratch.acc.resize(d, 0.0);
+    scratch.s.clear();
+    scratch.s.resize(bc, 0.0);
+
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let mut j0 = 0;
+    let mut blk = 0;
+    while j0 < nk {
+        let j1 = (j0 + bc).min(nk);
+        let cb = j1 - j0;
+        let sf = q_scale * sk[blk] * scale;
+        let mut m_new = m;
+        for c in 0..cb {
+            let k_row = &k8[(j0 + c) * d..(j0 + c + 1) * d];
+            let sc = idot(&scratch.q8, k_row) as f32 * sf;
+            scratch.s[c] = sc;
+            m_new = m_new.max(sc);
+        }
+        let alpha = if m == f32::NEG_INFINITY { 0.0 } else { sas.exp(m - m_new) };
+        let mut row_sum = 0.0;
+        for item in scratch.s.iter_mut().take(cb) {
+            *item = sas.exp(*item - m_new);
+            row_sum += *item;
+        }
+        l = alpha * l + row_sum;
+        let p_scale = quant_sym_int8_into(&scratch.s[..cb], &mut scratch.p8);
+        let pv_sf = p_scale * sv[blk];
+        for a in scratch.acc.iter_mut() {
+            *a *= alpha;
+        }
+        for (c, &pc) in scratch.p8.iter().enumerate() {
+            if pc != 0 {
+                let v_row = &v8[(j0 + c) * d..(j0 + c + 1) * d];
+                let w = pc as i32;
+                for (a, &vv) in scratch.acc.iter_mut().zip(v_row) {
+                    *a += (w * vv as i32) as f32 * pv_sf;
+                }
+            }
+        }
+        m = m_new;
+        j0 = j1;
+        blk += 1;
+    }
+    let inv = 1.0 / l.max(1e-20);
+    for (o, &a) in out.iter_mut().zip(&scratch.acc) {
+        *o = a * inv;
+    }
+    (m, l)
+}
+
+/// Allocating convenience wrapper around [`turbo_decode_into`] (tests,
+/// experiments, cold paths). Returns (output `[d]`, m, l).
 #[allow(clippy::too_many_arguments)]
 pub fn turbo_decode(
     q: &[f32],
@@ -173,56 +270,10 @@ pub fn turbo_decode(
     bc: usize,
     n_r: f32,
 ) -> (Vec<f32>, f32, f32) {
-    let d = q.len();
-    assert!(k8.len() >= nk * d && v8.len() >= nk * d);
-    let scale = 1.0 / (d as f32).sqrt();
-    let sas = Sas::new(n_r);
-    let q8 = quant_sym_int8(q);
-
-    let mut m = f32::NEG_INFINITY;
-    let mut l = 0.0f32;
-    let mut acc = vec![0.0f32; d];
-    let mut s = vec![0.0f32; bc];
-    let mut j0 = 0;
-    let mut blk = 0;
-    while j0 < nk {
-        let j1 = (j0 + bc).min(nk);
-        let cb = j1 - j0;
-        let sf = q8.scale * sk[blk] * scale;
-        let mut m_new = m;
-        for c in 0..cb {
-            let k_row = &k8[(j0 + c) * d..(j0 + c + 1) * d];
-            let sc = idot(&q8.codes, k_row) as f32 * sf;
-            s[c] = sc;
-            m_new = m_new.max(sc);
-        }
-        let alpha = if m == f32::NEG_INFINITY { 0.0 } else { sas.exp(m - m_new) };
-        let mut row_sum = 0.0;
-        for item in s.iter_mut().take(cb) {
-            *item = sas.exp(*item - m_new);
-            row_sum += *item;
-        }
-        l = alpha * l + row_sum;
-        let p8 = quant_sym_int8(&s[..cb]);
-        let pv_sf = p8.scale * sv[blk];
-        for a in acc.iter_mut() {
-            *a *= alpha;
-        }
-        for (c, &pc) in p8.codes.iter().enumerate() {
-            if pc != 0 {
-                let v_row = &v8[(j0 + c) * d..(j0 + c + 1) * d];
-                let w = pc as i32;
-                for (a, &vv) in acc.iter_mut().zip(v_row) {
-                    *a += (w * vv as i32) as f32 * pv_sf;
-                }
-            }
-        }
-        m = m_new;
-        j0 = j1;
-        blk += 1;
-    }
-    let inv = 1.0 / l.max(1e-20);
-    let out = acc.iter().map(|&a| a * inv).collect();
+    let mut scratch = DecodeScratch::new();
+    let mut out = vec![0.0f32; q.len()];
+    let (m, l) =
+        turbo_decode_into(q, k8, v8, sk, sv, nk, bc, n_r, &mut scratch, &mut out);
     (out, m, l)
 }
 
@@ -352,6 +403,39 @@ mod tests {
             let got = Mat::from_vec(1, d, out);
             let rel = got.rel_err(&want);
             assert!(rel < 0.08, "rel {rel}");
+        });
+    }
+
+    #[test]
+    fn decode_scratch_reuse_is_bit_identical() {
+        prop::run("decode scratch reuse", 30, |g| {
+            let nk = g.usize_in(1, 40);
+            let d = g.usize_in(4, 16);
+            let bc = 8;
+            let nb = nk.div_ceil(bc);
+            let q = g.normal_vec(d, 1.0);
+            let mut k8 = vec![0i8; nk * d];
+            let mut v8 = vec![0i8; nk * d];
+            for c in k8.iter_mut().chain(v8.iter_mut()) {
+                *c = (g.usize_in(0, 255) as i32 - 127) as i8;
+            }
+            let sk: Vec<f32> = (0..nb).map(|_| g.f32_in(0.01, 1.0)).collect();
+            let sv: Vec<f32> = (0..nb).map(|_| g.f32_in(0.01, 1.0)).collect();
+            let (want, wm, wl) =
+                turbo_decode(&q, &k8, &v8, &sk, &sv, nk, bc, -6.0);
+            // A warm scratch (dirtied by an unrelated call) must not
+            // change results.
+            let mut scratch = DecodeScratch::new();
+            let mut out = vec![0.0f32; d];
+            turbo_decode_into(
+                &q, &v8, &k8, &sv, &sk, nk, bc, -6.0, &mut scratch, &mut out,
+            );
+            let (m, l) = turbo_decode_into(
+                &q, &k8, &v8, &sk, &sv, nk, bc, -6.0, &mut scratch, &mut out,
+            );
+            assert_eq!(out, want);
+            assert_eq!(m, wm);
+            assert_eq!(l, wl);
         });
     }
 

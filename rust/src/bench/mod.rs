@@ -72,6 +72,17 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Bencher with a custom time budget and iteration cap (benches whose
+    /// per-iteration state grows, e.g. a cache folding one token per
+    /// iteration, use the cap to bound total growth).
+    pub fn with_limits(
+        warmup: Duration,
+        budget: Duration,
+        max_iters: u64,
+    ) -> Bencher {
+        Bencher { warmup, budget, max_iters, ..Default::default() }
+    }
+
     /// Quick-mode bencher for CI / tests.
     pub fn quick() -> Bencher {
         Bencher {

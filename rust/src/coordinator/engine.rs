@@ -1,5 +1,10 @@
-//! The serving engine: continuous batcher + PJRT model + quantized KV
-//! cache + sampling, with a threaded command loop for the server.
+//! The serving engine: continuous batcher + PJRT model + pluggable
+//! attention backend + sampling, with a threaded command loop for the
+//! server.
+//!
+//! All path-specific logic (turbo vs flash caches, decode reads, K/V
+//! folds) lives behind [`DynBackend`] — `step` drives prefill/decode/fold
+//! through the trait and never matches on the path.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
@@ -9,21 +14,14 @@ use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::request::{Completion, FinishReason, GenRequest, RequestId};
+use crate::attention::backend::{backend_for, BackendState, DynBackend};
 use crate::info;
-use crate::kvcache::{KvCache, KvCacheConfig, PrecisionMap};
 use crate::metrics::{EngineMetrics, Histogram};
 use crate::model::{ModelBundle, Sampler};
 use crate::quant::Bits;
 use crate::testutil::Rng;
 
-/// Which attention path serves requests.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PathMode {
-    /// TurboAttention: quantized execution + paged q2 cache.
-    Turbo,
-    /// Exact FlashAttention baseline with an FP32 cache.
-    Flash,
-}
+pub use crate::attention::backend::PathMode;
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -51,13 +49,13 @@ impl Default for EngineConfig {
     }
 }
 
-/// Per-request generation state.
+/// Per-request generation state. The cache lives inside `state`, owned
+/// by whichever backend created it.
 struct Session {
     req: GenRequest,
-    /// Turbo path: paged quantized cache.
-    cache: Option<KvCache>,
-    /// Flash path: float K/V slabs `[L*H*C*dh]`.
-    flash_kv: Option<(Vec<f32>, Vec<f32>)>,
+    /// Backend-owned cache/slab state (paged q2 cache + decode slabs for
+    /// turbo, float slabs for flash).
+    state: BackendState,
     generated: Vec<u8>,
     /// Next token to feed (sampled but not yet decoded).
     pending_token: u8,
@@ -79,6 +77,7 @@ pub struct Engine {
     pub cfg: EngineConfig,
     bundle: ModelBundle,
     batcher: Batcher,
+    backend: Box<dyn DynBackend>,
     sessions: HashMap<RequestId, Session>,
     rng: Rng,
     pub metrics: EngineMetrics,
@@ -90,6 +89,7 @@ impl Engine {
     pub fn new(bundle: ModelBundle, cfg: EngineConfig) -> Engine {
         Engine {
             batcher: Batcher::new(cfg.batcher.clone()),
+            backend: backend_for(cfg.mode, cfg.kv_bits, cfg.n_2bit_heads),
             sessions: HashMap::new(),
             rng: Rng::new(cfg.seed),
             metrics: EngineMetrics::default(),
@@ -112,26 +112,6 @@ impl Engine {
         self.batcher.idle()
     }
 
-    fn new_cache(&self) -> KvCache {
-        let m = &self.bundle.rt.manifest.model;
-        let precision = if self.cfg.n_2bit_heads == 0 {
-            PrecisionMap::uniform(m.n_layers, m.n_heads, self.cfg.kv_bits)
-        } else {
-            // Static head split until calibration runs (experiments use
-            // `PrecisionMap::mixed_from_stats` with real stats).
-            let mut pm = PrecisionMap::uniform(m.n_layers, m.n_heads, Bits::Int4);
-            for l in 0..m.n_layers {
-                for h in 0..self.cfg.n_2bit_heads.min(m.n_heads) {
-                    pm.set(l, h, Bits::Int2);
-                }
-            }
-            pm
-        };
-        KvCache::new(KvCacheConfig::new(
-            m.n_layers, m.n_heads, m.d_head, m.block, precision,
-        ))
-    }
-
     /// Run one scheduler iteration: admit + prefill, then one decode round.
     /// Returns completions finished this step.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
@@ -145,32 +125,21 @@ impl Engine {
                 .request(id)
                 .expect("scheduled request must exist")
                 .clone();
-            let turbo = self.cfg.mode == PathMode::Turbo;
-            let out = self.bundle.prefill(&req.prompt, turbo)?;
             let n = req.prompt.len();
-            let logits = self.bundle.logits_at(&out.logits, n - 1);
-            let first = self.cfg.sampler.sample(logits, &mut self.rng);
-            let mut session = Session {
-                cache: None,
-                flash_kv: None,
+            let (logits, state) =
+                self.backend.prefill(&mut self.bundle, &req.prompt)?;
+            let first = self
+                .cfg
+                .sampler
+                .sample(self.bundle.logits_at(&logits, n - 1), &mut self.rng);
+            let session = Session {
+                state,
                 generated: vec![first],
                 pending_token: first,
                 pos: n,
                 prefill_done_at: Instant::now(),
                 req,
             };
-            match self.cfg.mode {
-                PathMode::Turbo => {
-                    let (k8, v8, sk, sv) =
-                        out.turbo_cache.expect("turbo prefill returns cache");
-                    let mut cache = self.new_cache();
-                    self.bundle.ingest_prefill(&mut cache, &k8, &v8, &sk, &sv, n);
-                    session.cache = Some(cache);
-                }
-                PathMode::Flash => {
-                    session.flash_kv = Some(out.flash_cache.expect("flash cache"));
-                }
-            }
             self.metrics.prefill_tokens += n as u64;
             self.metrics.tokens_generated += 1;
             self.batcher.on_token(id);
@@ -193,51 +162,19 @@ impl Engine {
             }
             let token = session.pending_token;
             let pos = session.pos;
-            let out = match self.cfg.mode {
-                PathMode::Turbo => {
-                    let cache = session.cache.as_ref().expect("turbo cache");
-                    self.bundle.decode_turbo(cache, token, pos)?
-                }
-                PathMode::Flash => {
-                    let (kf, vf) = session.flash_kv.as_ref().expect("flash kv");
-                    let nk = pos;
-                    self.bundle.decode_flash(kf, vf, token, pos, nk)?
-                }
-            };
-            // Fold the new token's K/V into the cache.
-            let m_info = self.bundle.rt.manifest.model.clone();
-            match self.cfg.mode {
-                PathMode::Turbo => {
-                    let cache = session.cache.as_mut().unwrap();
-                    let dh = m_info.d_head;
-                    for l in 0..m_info.n_layers {
-                        for h in 0..m_info.n_heads {
-                            let o = (l * m_info.n_heads + h) * dh;
-                            cache
-                                .k_stream_mut(l, h)
-                                .push_token(&out.k_new[o..o + dh]);
-                            cache
-                                .v_stream_mut(l, h)
-                                .push_token(&out.v_new[o..o + dh]);
-                        }
-                    }
-                }
-                PathMode::Flash => {
-                    let (kf, vf) = session.flash_kv.as_mut().unwrap();
-                    let dh = m_info.d_head;
-                    let c = m_info.max_ctx;
-                    for l in 0..m_info.n_layers {
-                        for h in 0..m_info.n_heads {
-                            let src = (l * m_info.n_heads + h) * dh;
-                            let dst = ((l * m_info.n_heads + h) * c + pos) * dh;
-                            kf[dst..dst + dh]
-                                .copy_from_slice(&out.k_new[src..src + dh]);
-                            vf[dst..dst + dh]
-                                .copy_from_slice(&out.v_new[src..src + dh]);
-                        }
-                    }
-                }
-            }
+            let out = self.backend.decode_step(
+                &mut self.bundle,
+                &mut session.state,
+                token,
+                pos,
+            )?;
+            self.backend.fold_new_token(
+                &self.bundle,
+                &mut session.state,
+                &out.k_new,
+                &out.v_new,
+                pos,
+            );
             let next = self.cfg.sampler.sample(&out.logits, &mut self.rng);
             session.generated.push(next);
             session.pending_token = next;
@@ -246,14 +183,29 @@ impl Engine {
             self.batcher.on_token(id);
         }
         self.metrics.batches_run += 1;
-        if let Some(s) = self.sessions.values().next() {
-            if let Some(cache) = &s.cache {
-                let stats = cache.stats();
-                self.metrics.cache_bytes = stats.bytes;
-                self.metrics.cache_compression = stats.compression_ratio();
+        self.update_cache_metrics();
+        Ok(done)
+    }
+
+    /// Aggregate cache memory across *all* live sessions (a multi-request
+    /// engine's true footprint — previously this sampled an arbitrary
+    /// single session). When no session holds a compressed cache the last
+    /// observed values are kept, so a completion snapshot still reports
+    /// the memory the request used.
+    fn update_cache_metrics(&mut self) {
+        let (mut bytes, mut fp16, mut view) = (0usize, 0usize, 0usize);
+        for s in self.sessions.values() {
+            if let Some(stats) = self.backend.cache_stats(&s.state) {
+                bytes += stats.bytes;
+                fp16 += stats.fp16_equiv_bytes;
+                view += stats.view_bytes;
             }
         }
-        Ok(done)
+        if bytes > 0 {
+            self.metrics.cache_bytes = bytes;
+            self.metrics.cache_view_bytes = view;
+            self.metrics.cache_compression = fp16 as f64 / bytes as f64;
+        }
     }
 
     fn complete(session: &Session, reason: FinishReason) -> Completion {

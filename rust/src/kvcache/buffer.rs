@@ -9,6 +9,12 @@
 //! This contrasts with KIVI/GEAR's full-precision residual windows: the
 //! buffer is itself INT8, so the attention over buffered tokens is still
 //! integer inference.
+//!
+//! Invariant the incremental q1 view (`store::Q1View`) relies on: within
+//! an epoch, `codes` is **append-only** — the universal scale is fixed at
+//! the first push, so earlier tokens are never re-quantized; outliers are
+//! clamped instead. Mutate streams only through `StreamCache` methods
+//! (`push_token` / `ingest_q1_block`), or the mirrored view goes stale.
 
 use crate::quant::sym::{quant_sym_int8_fixed_scale, INT8_QMAX};
 

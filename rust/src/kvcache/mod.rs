@@ -16,6 +16,12 @@
 //! * Reads reconstruct the q1 view (INT8 codes + per-block scales) that
 //!   the decode executable consumes; q2 -> q1 is pure integer work and is
 //!   the optimized hot path.
+//! * Each stream keeps an **incrementally materialized** q1 view
+//!   ([`store::Q1View`]): pages are immutable once flushed, so each is
+//!   dequantized exactly once when it appears, and buffer tokens are
+//!   mirrored as they arrive. Decode reads are then O(new tokens) per
+//!   step instead of O(context) — the fix for the per-token full-cache
+//!   rematerialization the serving path used to do.
 
 pub mod buffer;
 pub mod page;
@@ -25,4 +31,4 @@ pub mod store;
 pub use buffer::DecodeBuffer;
 pub use page::QuantPage;
 pub use precision::PrecisionMap;
-pub use store::{CacheStats, HeadCache, KvCache, KvCacheConfig};
+pub use store::{CacheStats, HeadCache, KvCache, KvCacheConfig, Q1View};

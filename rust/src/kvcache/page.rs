@@ -1,4 +1,9 @@
 //! One q2-level cache page: `bc` tokens of K or V for one head, packed.
+//!
+//! Pages are **immutable after construction** — nothing rewrites codes or
+//! parameters once `from_q1` returns. Two §Perf optimizations lean on
+//! this: the per-channel dequant lookup table below, and the
+//! dequantize-once incremental view in `store::Q1View`.
 
 use crate::quant::{
     pack_codes, quant_asym_int, unpack_codes_into, Bits, PackedCodes,

@@ -1,5 +1,6 @@
 //! The full model-level quantized KV cache: pages + buffers per
-//! (layer, head, K/V), with memory accounting.
+//! (layer, head, K/V), with memory accounting and an incrementally
+//! materialized q1 view per stream (the decode hot path).
 
 use super::{DecodeBuffer, PrecisionMap, QuantPage};
 use crate::quant::Bits;
@@ -12,8 +13,9 @@ pub struct KvCacheConfig {
     pub d_head: usize,
     /// Page size in tokens (= the attention tile B_c).
     pub block: usize,
-    /// Decode-buffer capacity n_b (paper uses 64; must be <= block so a
-    /// flush fills at most one page).
+    /// Decode-buffer capacity n_b (paper uses 64). Must equal `block`:
+    /// a flush turns the buffer into exactly one full page, which the
+    /// page-aligned q1 view layout (and `read_q1_into`) depends on.
     pub n_b: usize,
     pub precision: PrecisionMap,
 }
@@ -30,11 +32,61 @@ impl KvCacheConfig {
     }
 }
 
+/// Incrementally materialized q1 (INT8 codes + per-block scale) view of
+/// one stream — what the decode path reads instead of re-dequantizing the
+/// whole cache on every generated token.
+///
+/// Why dequantize-once is safe: pages are immutable after flush (see
+/// [`QuantPage`]), and buffer codes are append-only within an epoch (the
+/// universal scale is fixed at the epoch's first token — paper §3.3), so
+/// a region copied into the view never changes underneath it. The single
+/// invalidation event is a buffer flush, which converts the mirrored
+/// buffer tail into a new page; the next sync rewrites exactly that
+/// region with the page's (lossier) q2 -> q1 dequantization.
+///
+/// The view is derivable metadata, like the pages' dequant tables: it is
+/// excluded from the storage accounting in [`StreamCache::bytes`] and
+/// reported separately via [`CacheStats::view_bytes`].
+#[derive(Debug, Default)]
+pub struct Q1View {
+    /// Materialized INT8 codes `[capacity_tokens * d_head]`; the first
+    /// `valid_tokens * d_head` entries are meaningful. Page-aligned: page
+    /// `i` occupies tokens `[i*block, (i+1)*block)`.
+    codes: Vec<i8>,
+    /// One q1 scale per `block` tokens (pages' `fp_scale`, then the
+    /// buffer's universal scale for the tail group).
+    scales: Vec<f32>,
+    /// Tokens currently materialized (page region + mirrored buffer tail).
+    valid_tokens: usize,
+    /// Pages dequantized so far — each exactly once.
+    valid_pages: usize,
+    /// Buffer tokens mirrored after the page region.
+    buffered: usize,
+    /// Reusable unpack scratch for the generic dequant path.
+    scratch: Vec<u8>,
+}
+
+impl Q1View {
+    pub fn valid_tokens(&self) -> usize {
+        self.valid_tokens
+    }
+
+    pub fn valid_pages(&self) -> usize {
+        self.valid_pages
+    }
+
+    /// Working-memory bytes held by the view (codes + scales + scratch).
+    pub fn overhead_bytes(&self) -> usize {
+        self.codes.len() + 4 * self.scales.len() + self.scratch.len()
+    }
+}
+
 /// One K or V stream for one (layer, head): q2 pages + INT8 buffer.
 #[derive(Debug)]
 pub struct StreamCache {
     pub pages: Vec<QuantPage>,
     pub buffer: DecodeBuffer,
+    view: Q1View,
     bits: Bits,
     d_head: usize,
     block: usize,
@@ -45,6 +97,7 @@ impl StreamCache {
         StreamCache {
             pages: Vec::new(),
             buffer: DecodeBuffer::new(d_head, n_b),
+            view: Q1View::default(),
             bits,
             d_head,
             block,
@@ -136,6 +189,71 @@ impl StreamCache {
         t
     }
 
+    /// Bring the materialized q1 view up to date and return it as
+    /// `(codes, scales, valid_tokens)` — the decode path's borrowed,
+    /// zero-copy cache read.
+    ///
+    /// Work done is proportional to what changed since the last call:
+    /// pages created since then are dequantized exactly once, and only
+    /// buffer tokens not yet mirrored are copied. Steady-state decode
+    /// (one `push_token` between syncs) costs O(d_head) per call, versus
+    /// O(tokens * d_head) for a fresh [`Self::read_q1_into`].
+    ///
+    /// `codes` may be longer than `valid_tokens * d_head` (page-aligned
+    /// backing with buffer headroom); callers must use the returned count.
+    pub fn q1_view(&mut self) -> (&[i8], &[f32], usize) {
+        let d = self.d_head;
+        let b = self.block;
+        let n_pages = self.pages.len();
+        if self.view.valid_pages < n_pages {
+            // Grow in page steps, keeping one page of headroom for the
+            // buffer tail (buffer capacity n_b <= block).
+            self.view.codes.resize((n_pages + 1) * b * d, 0);
+            self.view.scales.resize(n_pages + 1, 0.0);
+            for pi in self.view.valid_pages..n_pages {
+                let page = &self.pages[pi];
+                debug_assert_eq!(page.tokens, b, "non-final page must be full");
+                let o = pi * b * d;
+                page.dequant_q1_into(
+                    &mut self.view.scratch,
+                    &mut self.view.codes[o..o + b * d],
+                );
+                self.view.scales[pi] = page.fp_scale;
+            }
+            self.view.valid_pages = n_pages;
+            // A flush consumed the buffer tokens this view had mirrored;
+            // the page dequantization above rewrote that region.
+            self.view.buffered = 0;
+        }
+        let base = n_pages * b;
+        let bl = self.buffer.len();
+        if bl > self.view.buffered {
+            if self.view.codes.len() < (base + b) * d {
+                self.view.codes.resize((base + b) * d, 0);
+            }
+            if self.view.scales.len() <= n_pages {
+                self.view.scales.resize(n_pages + 1, 0.0);
+            }
+            let src = self.buffer.codes();
+            self.view.codes[(base + self.view.buffered) * d..(base + bl) * d]
+                .copy_from_slice(&src[self.view.buffered * d..bl * d]);
+            self.view.scales[n_pages] = self.buffer.scale();
+            self.view.buffered = bl;
+        }
+        self.view.valid_tokens = base + bl;
+        (&self.view.codes, &self.view.scales, self.view.valid_tokens)
+    }
+
+    /// Read access to the view's bookkeeping (tests / accounting).
+    pub fn view(&self) -> &Q1View {
+        &self.view
+    }
+
+    /// Working-memory bytes held by the materialized view.
+    pub fn view_bytes(&self) -> usize {
+        self.view.overhead_bytes()
+    }
+
     /// Storage bytes (packed pages + buffer codes).
     pub fn bytes(&self) -> usize {
         self.pages.iter().map(|p| p.bytes()).sum::<usize>()
@@ -148,8 +266,14 @@ impl StreamCache {
 #[derive(Debug, Clone, PartialEq)]
 pub struct CacheStats {
     pub tokens: usize,
+    /// Compressed storage bytes (packed pages + buffer codes).
     pub bytes: usize,
     pub fp16_equiv_bytes: usize,
+    /// Working memory held by the materialized q1 views — derivable
+    /// metadata, reported separately from `bytes` (the paper's
+    /// compression claim is about cache *storage*; the view is the
+    /// decode scratch that storage is expanded into, once).
+    pub view_bytes: usize,
 }
 
 impl CacheStats {
@@ -173,6 +297,15 @@ pub struct HeadCache<'a> {
 
 impl KvCache {
     pub fn new(cfg: KvCacheConfig) -> KvCache {
+        // A flush must fill exactly one page: every page-aligned consumer
+        // (`read_q1_into`, `Q1View`, the slab sync) indexes scales by
+        // `token / block` and would misalign on partial pages.
+        assert!(
+            cfg.n_b == cfg.block,
+            "n_b {} must equal block {}",
+            cfg.n_b,
+            cfg.block
+        );
         let mut k = Vec::new();
         let mut v = Vec::new();
         for layer in 0..cfg.n_layers {
@@ -213,13 +346,15 @@ impl KvCache {
     pub fn stats(&self) -> CacheStats {
         let bytes: usize =
             self.k.iter().chain(&self.v).map(|s| s.bytes()).sum();
+        let view_bytes: usize =
+            self.k.iter().chain(&self.v).map(|s| s.view_bytes()).sum();
         let tokens = self.tokens();
         let fp16 = 2 * tokens
             * self.cfg.d_head
             * self.cfg.n_layers
             * self.cfg.n_heads
             * 2; // K and V, 2 bytes each
-        CacheStats { tokens, bytes, fp16_equiv_bytes: fp16 }
+        CacheStats { tokens, bytes, fp16_equiv_bytes: fp16, view_bytes }
     }
 }
 
@@ -311,6 +446,106 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// The ISSUE's view invariant: after *any* interleaving of prefill
+    /// ingests, decode pushes, and mid-stream syncs, the incremental view
+    /// must equal a fresh full materialization.
+    #[test]
+    fn q1_view_matches_fresh_materialization() {
+        prop::run("q1 view == read_q1_into", 40, |g| {
+            let block = 4;
+            let d = 8;
+            let mut cache = KvCache::new(cfg(block));
+            let n_ops = g.usize_in(1, 40);
+            for _ in 0..n_ops {
+                match g.usize_in(0, 4) {
+                    0 => {
+                        // Prefill-style ingest of a q1 block.
+                        let tokens = g.usize_in(1, 10);
+                        let x = g.normal_vec(tokens * d, 1.0);
+                        let q1 = quant_sym_int8(&x);
+                        cache
+                            .k_stream_mut(0, 0)
+                            .ingest_q1_block(&q1.codes, q1.scale, tokens);
+                    }
+                    1 | 2 => {
+                        // Decode push.
+                        let v = g.normal_vec(d, 1.0);
+                        cache.k_stream_mut(0, 0).push_token(&v);
+                    }
+                    _ => {
+                        // Interleaved sync: exercises partial-progress
+                        // states (the incremental paths).
+                        let _ = cache.k_stream_mut(0, 0).q1_view();
+                    }
+                }
+            }
+            let s = cache.k_stream_mut(0, 0);
+            let (codes, scales, n) = s.q1_view();
+            let nb_used = n.div_ceil(block);
+            let view_codes = codes[..n * d].to_vec();
+            let view_scales = scales[..nb_used].to_vec();
+            // Fresh materialization oracle.
+            let cap = (nb_used + 1) * block;
+            let mut q1 = vec![0i8; cap * d];
+            let mut sc = vec![0.0f32; cap / block];
+            let mut scratch = Vec::new();
+            let got = s.read_q1_into(&mut scratch, &mut q1, &mut sc);
+            assert_eq!(got, n, "token counts agree");
+            assert_eq!(view_codes, q1[..n * d], "codes agree");
+            assert_eq!(view_scales, sc[..nb_used], "scales agree");
+        });
+    }
+
+    #[test]
+    fn q1_view_is_incremental_not_rebuilt() {
+        let mut cache = KvCache::new(cfg(4));
+        let mut rng = Rng::new(9);
+        for _ in 0..9 {
+            let v = rng.normal_vec(8, 1.0);
+            cache.k_stream_mut(0, 0).push_token(&v);
+        }
+        let s = cache.k_stream_mut(0, 0);
+        let (_, _, n) = s.q1_view();
+        assert_eq!(n, 9);
+        assert_eq!(s.view().valid_pages(), 2);
+        assert_eq!(s.view().valid_tokens(), 9);
+        // A sync with no mutation leaves bookkeeping untouched.
+        let (_, _, n2) = s.q1_view();
+        assert_eq!(n2, 9);
+        assert_eq!(s.view().valid_pages(), 2);
+        // One more push: only the buffer tail advances.
+        let v = rng.normal_vec(8, 1.0);
+        s.push_token(&v);
+        let (_, _, n3) = s.q1_view();
+        assert_eq!(n3, 10);
+        assert_eq!(s.view().valid_pages(), 2);
+    }
+
+    #[test]
+    fn q1_view_rewrites_buffer_region_on_flush() {
+        // Mirror the buffer tail, then flush it into a page: the view must
+        // pick up the page's (lossier) q2->q1 codes, not the raw tail.
+        let mut cache = KvCache::new(cfg(4));
+        let mut rng = Rng::new(11);
+        for _ in 0..3 {
+            let v = rng.normal_vec(8, 1.0);
+            cache.k_stream_mut(0, 0).push_token(&v);
+        }
+        let _ = cache.k_stream_mut(0, 0).q1_view(); // mirrors 3 buffer tokens
+        let v = rng.normal_vec(8, 1.0);
+        cache.k_stream_mut(0, 0).push_token(&v); // 4th push -> flush -> page
+        let s = cache.k_stream_mut(0, 0);
+        let (codes, scale0, n) = {
+            let (c, sc, n) = s.q1_view();
+            (c[..4 * 8].to_vec(), sc[0], n)
+        };
+        assert_eq!(n, 4);
+        assert_eq!(s.pages.len(), 1);
+        let want = s.pages[0].dequant_q1();
+        assert_eq!(codes, want, "page region rewritten");
+        assert_eq!(scale0, s.pages[0].fp_scale);
     }
 
     #[test]

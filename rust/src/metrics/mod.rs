@@ -163,7 +163,11 @@ pub struct EngineMetrics {
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub batches_run: u64,
+    /// Compressed cache storage, aggregated over all live sessions.
     pub cache_bytes: usize,
+    /// Working memory of the materialized q1 views (decode read scratch),
+    /// aggregated over all live sessions.
+    pub cache_view_bytes: usize,
     pub cache_compression: f64,
 }
 

@@ -28,17 +28,66 @@ pub struct DecodeOut {
     pub v_new: Vec<f32>,
 }
 
+/// Persistent per-session q1 tensors in the decode executable's layout:
+/// codes `[L, H, C, dh]` (INT8) + per-block scales `[L, H, C/block]`.
+///
+/// Owned by a turbo backend session and kept in sync *incrementally* from
+/// the cache streams' `Q1View`s — the executable input for step `t+1` is
+/// step `t`'s input plus the tokens folded in between, so nothing is
+/// rematerialized per token. The buffers round-trip through the PJRT
+/// boundary via take/restore, so a decode step allocates no cache-sized
+/// memory.
+pub struct TurboSlabs {
+    pub k8: Vec<i8>,
+    pub v8: Vec<i8>,
+    pub sk: Vec<f32>,
+    pub sv: Vec<f32>,
+}
+
+impl TurboSlabs {
+    /// Zeroed slabs for the given geometry (`scales` start at 1.0 so
+    /// untouched blocks dequantize to zero harmlessly).
+    pub fn new(
+        n_layers: usize,
+        n_heads: usize,
+        max_ctx: usize,
+        d_head: usize,
+        block: usize,
+    ) -> TurboSlabs {
+        let elems = n_layers * n_heads * max_ctx * d_head;
+        let scales = n_layers * n_heads * (max_ctx / block);
+        TurboSlabs {
+            k8: vec![0i8; elems],
+            v8: vec![0i8; elems],
+            sk: vec![1.0f32; scales],
+            sv: vec![1.0f32; scales],
+        }
+    }
+}
+
+/// Persistent per-session float K/V slabs `[L, H, C, dh]` for the flash
+/// (exact baseline) path, built directly from the prefill outputs. Same
+/// take/restore round trip as [`TurboSlabs`] — the seed path cloned both
+/// full slabs on every generated token.
+pub struct FlashSlabs {
+    pub kf: Vec<f32>,
+    pub vf: Vec<f32>,
+}
+
 /// The serving model: a `Runtime` plus the shapes from its manifest.
 pub struct ModelBundle {
     pub rt: Runtime,
-    /// Reused decode-step buffers (k8, v8, sk, sv) — §Perf: avoids four
-    /// cache-sized allocations per generated token.
-    decode_scratch: Option<(Vec<i8>, Vec<i8>, Vec<f32>, Vec<f32>)>,
 }
 
 impl ModelBundle {
     pub fn new(rt: Runtime) -> ModelBundle {
-        ModelBundle { rt, decode_scratch: None }
+        ModelBundle { rt }
+    }
+
+    /// Fresh turbo decode slabs sized for this model.
+    pub fn new_turbo_slabs(&self) -> TurboSlabs {
+        let m = &self.rt.manifest.model;
+        TurboSlabs::new(m.n_layers, m.n_heads, m.max_ctx, m.d_head, m.block)
     }
 
     pub fn vocab(&self) -> usize {
@@ -164,61 +213,36 @@ impl ModelBundle {
     }
 
     /// One turbo decode step: embed `token` at `pos`, attend over the
-    /// paged cache (q2 -> q1 reconstruction happens here, the decode hot
-    /// path), return logits and the new token's K/V.
+    /// session's q1 slabs (`nk` valid tokens), return logits and the new
+    /// token's K/V.
+    ///
+    /// The slabs are the caller's (the backend session keeps them in sync
+    /// from the cache's incremental `Q1View`s); this function no longer
+    /// rematerializes the cache — the step is O(model) not O(context).
+    /// The buffers are moved into the PJRT inputs and restored afterwards,
+    /// even on execution error.
     pub fn decode_turbo(
         &mut self,
-        cache: &KvCache,
+        slabs: &mut TurboSlabs,
         token: u8,
         pos: usize,
+        nk: usize,
     ) -> Result<DecodeOut> {
         let m = &self.rt.manifest.model;
-        let (l_n, h_n, c, dh, bc) =
-            (m.n_layers, m.n_heads, m.max_ctx, m.d_head, m.block);
-        let nb = c / bc;
-        let (mut k8, mut v8, mut sk, mut sv) =
-            self.decode_scratch.take().unwrap_or_else(|| {
-                (
-                    vec![0i8; l_n * h_n * c * dh],
-                    vec![0i8; l_n * h_n * c * dh],
-                    vec![1.0f32; l_n * h_n * nb],
-                    vec![1.0f32; l_n * h_n * nb],
-                )
-            });
-        let mut scratch = Vec::new();
-        let mut nk = 0usize;
-        for l in 0..l_n {
-            for h in 0..h_n {
-                let base = ((l * h_n) + h) * c * dh;
-                let sbase = ((l * h_n) + h) * nb;
-                let hc = cache.head(l, h);
-                nk = hc.k.read_q1_into(
-                    &mut scratch,
-                    &mut k8[base..base + c * dh],
-                    &mut sk[sbase..sbase + nb],
-                );
-                hc.v.read_q1_into(
-                    &mut scratch,
-                    &mut v8[base..base + c * dh],
-                    &mut sv[sbase..sbase + nb],
-                );
-            }
-        }
-        let shape4 = vec![l_n, h_n, c, dh];
-        let shape3 = vec![l_n, h_n, nb];
+        let shape4 = vec![m.n_layers, m.n_heads, m.max_ctx, m.d_head];
+        let shape3 = vec![m.n_layers, m.n_heads, m.max_ctx / m.block];
         let inputs = [
             HostTensor::scalar_i32(token as i32),
             HostTensor::scalar_i32(pos as i32),
-            HostTensor::I8(k8, shape4.clone()),
-            HostTensor::I8(v8, shape4),
-            HostTensor::F32(sk, shape3.clone()),
-            HostTensor::F32(sv, shape3),
+            HostTensor::I8(std::mem::take(&mut slabs.k8), shape4.clone()),
+            HostTensor::I8(std::mem::take(&mut slabs.v8), shape4),
+            HostTensor::F32(std::mem::take(&mut slabs.sk), shape3.clone()),
+            HostTensor::F32(std::mem::take(&mut slabs.sv), shape3),
             HostTensor::scalar_i32(nk as i32),
         ];
-        let outs = self.rt.run("decode_turbo", &inputs)?;
-        // Return the big buffers to the scratch pool for the next step.
-        let mut it = inputs.into_iter();
-        let (_tok, _pos) = (it.next(), it.next());
+        let outs = self.rt.run("decode_turbo", &inputs);
+        // Hand the slabs back to the session before surfacing any error.
+        let mut it = inputs.into_iter().skip(2);
         if let (
             Some(HostTensor::I8(k8, _)),
             Some(HostTensor::I8(v8, _)),
@@ -226,9 +250,12 @@ impl ModelBundle {
             Some(HostTensor::F32(sv, _)),
         ) = (it.next(), it.next(), it.next(), it.next())
         {
-            self.decode_scratch = Some((k8, v8, sk, sv));
+            slabs.k8 = k8;
+            slabs.v8 = v8;
+            slabs.sk = sk;
+            slabs.sv = sv;
         }
-        let [logits, k_new, v_new] = take3(outs)?;
+        let [logits, k_new, v_new] = take3(outs?)?;
         Ok(DecodeOut {
             logits: logits.as_f32()?.to_vec(),
             k_new: k_new.as_f32()?.to_vec(),
@@ -236,30 +263,34 @@ impl ModelBundle {
         })
     }
 
-    /// One flash (exact baseline) decode step over a float cache owned by
-    /// the caller (`[L*H*C*dh]`).
-    #[allow(clippy::too_many_arguments)]
+    /// One flash (exact baseline) decode step over the session's float
+    /// slabs. Same take/restore round trip as [`Self::decode_turbo`] —
+    /// previously this cloned both full `[L*H*C*dh]` slabs per token.
     pub fn decode_flash(
         &mut self,
-        kf: &[f32],
-        vf: &[f32],
+        slabs: &mut FlashSlabs,
         token: u8,
         pos: usize,
         nk: usize,
     ) -> Result<DecodeOut> {
         let m = &self.rt.manifest.model;
         let shape4 = vec![m.n_layers, m.n_heads, m.max_ctx, m.d_head];
-        let outs = self.rt.run(
-            "decode_flash",
-            &[
-                HostTensor::scalar_i32(token as i32),
-                HostTensor::scalar_i32(pos as i32),
-                HostTensor::F32(kf.to_vec(), shape4.clone()),
-                HostTensor::F32(vf.to_vec(), shape4),
-                HostTensor::scalar_i32(nk as i32),
-            ],
-        )?;
-        let [logits, k_new, v_new] = take3(outs)?;
+        let inputs = [
+            HostTensor::scalar_i32(token as i32),
+            HostTensor::scalar_i32(pos as i32),
+            HostTensor::F32(std::mem::take(&mut slabs.kf), shape4.clone()),
+            HostTensor::F32(std::mem::take(&mut slabs.vf), shape4),
+            HostTensor::scalar_i32(nk as i32),
+        ];
+        let outs = self.rt.run("decode_flash", &inputs);
+        let mut it = inputs.into_iter().skip(2);
+        if let (Some(HostTensor::F32(kf, _)), Some(HostTensor::F32(vf, _))) =
+            (it.next(), it.next())
+        {
+            slabs.kf = kf;
+            slabs.vf = vf;
+        }
+        let [logits, k_new, v_new] = take3(outs?)?;
         Ok(DecodeOut {
             logits: logits.as_f32()?.to_vec(),
             k_new: k_new.as_f32()?.to_vec(),

@@ -3,7 +3,9 @@
 
 pub mod bundle;
 
-pub use bundle::{DecodeOut, ModelBundle, PrefillOut};
+pub use bundle::{
+    DecodeOut, FlashSlabs, ModelBundle, PrefillOut, TurboSlabs,
+};
 
 use crate::testutil::Rng;
 

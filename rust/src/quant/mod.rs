@@ -21,7 +21,10 @@ pub use headwise::{
     head_priority, head_score, select_2bit_heads, HeadStats, SelectionRule,
 };
 pub use pack::{pack_codes, unpack_codes, unpack_codes_into, PackedCodes};
-pub use sym::{dequant_sym_int8, quant_sym_int8, QuantBlock, INT8_QMAX};
+pub use sym::{
+    dequant_sym_int8, quant_sym_int8, quant_sym_int8_into, QuantBlock,
+    INT8_QMAX,
+};
 
 /// Bit width for the q2 (storage) level of progressive quantization.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

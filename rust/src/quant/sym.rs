@@ -31,6 +31,20 @@ pub fn dequant_sym_int8(q: &QuantBlock) -> Vec<f32> {
     q.codes.iter().map(|&c| c as f32 * q.scale).collect()
 }
 
+/// Quantize into a caller-owned buffer, returning the scale — §Perf: the
+/// decode hot path quantizes a score tile per cache block per head per
+/// token, and this variant makes that allocation-free once the buffer is
+/// warm (`clear` + `extend` reuses capacity).
+pub fn quant_sym_int8_into(x: &[f32], codes: &mut Vec<i8>) -> f32 {
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = (amax / INT8_QMAX).max(1e-8);
+    codes.clear();
+    codes.extend(
+        x.iter().map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8),
+    );
+    scale
+}
+
 /// Quantize with a caller-fixed scale, clamping outliers — the enhanced
 /// KV-buffer path (paper §3.3): a universal scale avoids re-quantizing
 /// buffered tokens when a new outlier arrives.
@@ -86,6 +100,23 @@ mod tests {
             let x = g.normal_vec(n, 10.0);
             let q = quant_sym_int8(&x);
             assert!(q.codes.iter().all(|&c| (-127..=127).contains(&(c as i32))));
+        });
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_and_reuses_capacity() {
+        prop::run("quant into == alloc", 50, |g| {
+            let n = g.usize_in(1, 128);
+            let x = g.normal_vec(n, 2.0);
+            let q = quant_sym_int8(&x);
+            let mut codes = Vec::new();
+            let scale = quant_sym_int8_into(&x, &mut codes);
+            assert_eq!(codes, q.codes);
+            assert!((scale - q.scale).abs() <= f32::EPSILON * q.scale);
+            let cap = codes.capacity();
+            let scale2 = quant_sym_int8_into(&x, &mut codes);
+            assert_eq!(scale2, scale);
+            assert_eq!(codes.capacity(), cap, "no reallocation on reuse");
         });
     }
 

@@ -5,8 +5,17 @@
 //! `HloModuleProto::from_text_file` -> `compile` -> `execute`). The
 //! interchange format is HLO **text** because xla_extension 0.5.1 rejects
 //! jax>=0.5's 64-bit-instruction-id protos (see DESIGN.md / aot.py).
+//!
+//! The `xla` dependency is gated behind the `pjrt` feature; default
+//! builds alias [`stub`] in its place so the crate compiles without the
+//! native toolchain and fails gracefully at [`Runtime::load`].
 
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+#[cfg(not(feature = "pjrt"))]
+use self::stub as xla;
 
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 

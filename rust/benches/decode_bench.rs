@@ -1,29 +1,38 @@
-//! Decode-step cost vs. context length — the asymptotic win of the
-//! incremental `Q1View` + persistent slabs over the seed path's
-//! per-token full-cache rematerialization.
+//! Decode-step cost vs. context length and worker-thread count.
 //!
-//! Four cases per context length (256 / 512 / 1024 tokens), all on the
-//! pure-Rust substrate (no artifacts needed):
+//! Two questions, all on the pure-Rust substrate (no artifacts needed):
 //!
-//! * `cache-sync(view)`  — fold one token + incremental slab sync
-//!   (`TurboSession::sync_slabs`). Should be **near-flat** in context:
-//!   pages are dequantized once when created, so steady-state work is
-//!   O(new tokens).
-//! * `cache-remat(seed)` — fold one token + fresh `read_q1_into` of every
-//!   stream (what `ModelBundle::decode_turbo` did per token). Linear in
-//!   context.
-//! * `decode-step turbo` — fold + sync + INT8 attention per (layer, head)
-//!   over the slabs (`turbo_decode_into` with a reused scratch). The
-//!   attention math is inherently O(context); the point is that cache
-//!   maintenance no longer adds a second, larger O(context) term.
-//! * `decode-step flash` — fold (one memcpy per stream) + exact float
-//!   attention, the baseline backend's step shape.
+//! 1. **Asymptotics** — the incremental `Q1View` + persistent slabs vs
+//!    the seed path's per-token full-cache rematerialization:
+//!
+//!    * `cache-sync(view)`  — fold one token + incremental slab sync
+//!      (`TurboSession::sync_slabs`). Should be **near-flat** in
+//!      context: pages are dequantized once when created, so
+//!      steady-state work is O(new tokens).
+//!    * `cache-remat(seed)` — fold one token + fresh `read_q1_into` of
+//!      every stream (what `ModelBundle::decode_turbo` did per token).
+//!      Linear in context.
+//!
+//! 2. **Parallel decode** — the per-(layer, head) fan-out over the
+//!    hand-rolled worker pool (`decode_threads`):
+//!
+//!    * `decode-step turbo tN` — fold + pooled slab sync + pooled
+//!      per-stream INT8 attention (`turbo_decode_streams`, one
+//!      `DecodeScratch` per worker), for N in {1, 2, 4, 8}. `t1` is the
+//!      exact serial path; outputs are bit-identical across N (the
+//!      parallel-parity suite proves it), so the sweep measures pure
+//!      scheduling win.
+//!    * `decode-step flash` — fold (one memcpy per stream) + exact
+//!      float attention, the baseline backend's step shape.
+
+use std::sync::Arc;
 
 use turboattention::attention::backend::TurboSession;
-use turboattention::attention::{turbo_decode_into, DecodeScratch};
+use turboattention::attention::{turbo_decode_streams, DecodeScratch};
 use turboattention::bench::Bencher;
 use turboattention::kvcache::{KvCache, KvCacheConfig, PrecisionMap};
 use turboattention::model::TurboSlabs;
+use turboattention::pool::WorkerPool;
 use turboattention::quant::Bits;
 use turboattention::testutil::Rng;
 
@@ -35,18 +44,19 @@ const BLOCK: usize = 32;
 /// (warmup + measured) without outgrowing the slabs.
 const SLACK: usize = 2048;
 
-fn new_session(ctx: usize, rng: &mut Rng) -> TurboSession {
+fn new_session(ctx: usize, rng: &mut Rng, threads: usize) -> TurboSession {
     let max_ctx = ctx + SLACK;
     let pm = PrecisionMap::uniform(L, H, Bits::Int4);
     let cache = KvCache::new(KvCacheConfig::new(L, H, DH, BLOCK, pm));
-    let mut sess = TurboSession::from_parts(
+    let mut sess = TurboSession::from_parts_pooled(
         cache,
         TurboSlabs::new(L, H, max_ctx, DH, BLOCK),
+        Arc::new(WorkerPool::new(threads)),
     );
     for _ in 0..ctx {
         fold_token(&mut sess, rng);
     }
-    sess.sync_slabs();
+    sess.sync_slabs().expect("sync");
     sess
 }
 
@@ -87,40 +97,6 @@ fn remat_all(sess: &mut TurboSession, scratch: &mut Vec<u8>) -> usize {
     nk
 }
 
-/// INT8 attention over the slabs for every (layer, head) — the CPU
-/// stand-in for the decode executable.
-fn attend_all(
-    sess: &TurboSession,
-    q: &[f32],
-    nk: usize,
-    scratch: &mut DecodeScratch,
-    out: &mut [f32],
-) -> f32 {
-    let max_ctx = sess.slabs.k8.len() / (L * H * DH);
-    let nb = max_ctx / BLOCK;
-    let mut acc = 0.0f32;
-    for l in 0..L {
-        for h in 0..H {
-            let base = (l * H + h) * max_ctx * DH;
-            let sbase = (l * H + h) * nb;
-            turbo_decode_into(
-                q,
-                &sess.slabs.k8[base..base + max_ctx * DH],
-                &sess.slabs.v8[base..base + max_ctx * DH],
-                &sess.slabs.sk[sbase..sbase + nb],
-                &sess.slabs.sv[sbase..sbase + nb],
-                nk,
-                BLOCK,
-                -6.0,
-                scratch,
-                out,
-            );
-            acc += out[0];
-        }
-    }
-    acc
-}
-
 /// Exact single-query attention over a float cache (flash decode shape).
 fn flash_attend(q: &[f32], kf: &[f32], vf: &[f32], nk: usize, out: &mut [f32]) {
     let d = q.len();
@@ -147,7 +123,10 @@ fn flash_attend(q: &[f32], kf: &[f32], vf: &[f32], nk: usize, out: &mut [f32]) {
 }
 
 fn main() {
-    println!("== bench: decode step vs context (Q1View incremental slabs) ==\n");
+    println!(
+        "== bench: decode step vs context and threads \
+         (Q1View slabs + worker pool) ==\n"
+    );
     // Cap iterations so a case's token folds stay within SLACK.
     let mut b = Bencher::with_limits(
         std::time::Duration::from_millis(50),
@@ -155,31 +134,60 @@ fn main() {
         800,
     );
     let contexts = [256usize, 512, 1024];
+    let thread_sweep = [1usize, 2, 4, 8];
 
     for &ctx in &contexts {
         let mut rng = Rng::new(42);
-        let mut sess = new_session(ctx, &mut rng);
+        let mut sess = new_session(ctx, &mut rng, 1);
         b.bench(&format!("cache-sync(view) ctx={ctx}"), || {
             fold_token(&mut sess, &mut rng);
-            sess.sync_slabs()
+            sess.sync_slabs().expect("sync")
         });
 
-        let mut sess = new_session(ctx, &mut rng);
+        let mut sess = new_session(ctx, &mut rng, 1);
         let mut scratch8 = Vec::new();
         b.bench(&format!("cache-remat(seed) ctx={ctx}"), || {
             fold_token(&mut sess, &mut rng);
             remat_all(&mut sess, &mut scratch8)
         });
 
-        let mut sess = new_session(ctx, &mut rng);
-        let mut scratch = DecodeScratch::new();
-        let mut out = vec![0.0f32; DH];
-        b.bench(&format!("decode-step turbo ctx={ctx}"), || {
-            fold_token(&mut sess, &mut rng);
-            let nk = sess.sync_slabs();
-            let q = rng.normal_vec(DH, 1.0);
-            attend_all(&sess, &q, nk, &mut scratch, &mut out)
-        });
+        // Thread sweep: the full decode step (fold + pooled sync +
+        // pooled per-stream attention) at each pool width.
+        for &threads in &thread_sweep {
+            let mut sess = new_session(ctx, &mut rng, threads);
+            let pool = Arc::clone(sess.pool());
+            let mut scratches = vec![DecodeScratch::new(); threads];
+            let mut ml = vec![(0.0f32, 0.0f32); L * H];
+            let mut out = vec![0.0f32; L * H * DH];
+            let max_ctx = ctx + SLACK;
+            let nb = max_ctx / BLOCK;
+            // Fixed query per case: q values don't affect attention
+            // cost, and generating L*H*DH normals per iteration would
+            // add a serial term that dilutes the measured fan-out.
+            let q = rng.normal_vec(L * H * DH, 1.0);
+            b.bench(&format!("decode-step turbo t{threads} ctx={ctx}"), || {
+                fold_token(&mut sess, &mut rng);
+                let nk = sess.sync_slabs().expect("sync");
+                debug_assert_eq!(sess.slabs.sk.len(), L * H * nb);
+                turbo_decode_streams(
+                    &pool,
+                    &q,
+                    &sess.slabs.k8,
+                    &sess.slabs.v8,
+                    &sess.slabs.sk,
+                    &sess.slabs.sv,
+                    DH,
+                    nk,
+                    BLOCK,
+                    -6.0,
+                    &mut scratches,
+                    &mut ml,
+                    &mut out,
+                )
+                .expect("decode");
+                out[0]
+            });
+        }
 
         let max_ctx = ctx + SLACK;
         let mut kf = vec![0.0f32; L * H * max_ctx * DH];
@@ -234,5 +242,18 @@ fn main() {
             view,
             remat
         );
+    }
+    println!("\nthread-sweep speedup vs t1 (same ctx):");
+    for &ctx in &contexts {
+        let base = format!("decode-step turbo t1 ctx={ctx}");
+        let mut line = format!("  ctx={ctx:<5}");
+        for &t in &thread_sweep[1..] {
+            let name = format!("decode-step turbo t{t} ctx={ctx}");
+            match b.speedup(&base, &name) {
+                Some(s) => line.push_str(&format!("  t{t}: {s:.2}x")),
+                None => line.push_str(&format!("  t{t}: n/a")),
+            }
+        }
+        println!("{line}");
     }
 }

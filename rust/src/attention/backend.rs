@@ -34,11 +34,17 @@
 //! mode-`match` left in the crate is the constructor [`backend_for`].
 
 use std::any::Any;
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::kvcache::{CacheStats, KvCache, KvCacheConfig, PrecisionMap};
-use crate::model::{DecodeOut, FlashSlabs, ModelBundle, TurboSlabs};
+use crate::kvcache::{
+    CacheStats, HeadCacheMut, KvCache, KvCacheConfig, PrecisionMap,
+};
+use crate::model::{
+    DecodeOut, FlashSlabs, ModelBundle, SlabShardMut, TurboSlabs,
+};
+use crate::pool::{balanced_chunk_sizes, WorkerPool};
 use crate::quant::Bits;
 
 /// Which attention path serves requests.
@@ -96,13 +102,27 @@ pub trait AttentionBackend {
 // Turbo path
 // ---------------------------------------------------------------------------
 
-/// TurboAttention serving path: INT8 execution over the paged q2 cache.
-#[derive(Debug, Clone, Copy)]
+/// TurboAttention serving path: INT8 execution over the paged q2 cache,
+/// with per-(layer, head) cache sync fanned out on a shared worker pool.
+#[derive(Clone)]
 pub struct TurboBackend {
     /// q2 storage width for uniform precision.
     pub kv_bits: Bits,
     /// Number of 2-bit heads per layer (0 = uniform `kv_bits`).
     pub n_2bit_heads: usize,
+    /// Decode worker pool, shared by every session this backend creates
+    /// (a 1-thread pool is the exact serial path).
+    pool: Arc<WorkerPool>,
+}
+
+impl TurboBackend {
+    pub fn new(
+        kv_bits: Bits,
+        n_2bit_heads: usize,
+        pool: Arc<WorkerPool>,
+    ) -> TurboBackend {
+        TurboBackend { kv_bits, n_2bit_heads, pool }
+    }
 }
 
 /// Turbo per-request state: the paged cache plus persistent decode slabs
@@ -110,6 +130,8 @@ pub struct TurboBackend {
 pub struct TurboSession {
     pub cache: KvCache,
     pub slabs: TurboSlabs,
+    /// Worker pool the slab sync forks onto (serial when 1 thread).
+    pool: Arc<WorkerPool>,
     /// Pages already copied into the slabs (uniform across streams — all
     /// (layer, head, K/V) streams advance in lockstep).
     synced_pages: usize,
@@ -118,15 +140,37 @@ pub struct TurboSession {
 }
 
 impl TurboSession {
-    pub fn new(cache: KvCache, bundle: &ModelBundle) -> TurboSession {
+    pub fn new(
+        cache: KvCache,
+        bundle: &ModelBundle,
+        pool: Arc<WorkerPool>,
+    ) -> TurboSession {
         let slabs = bundle.new_turbo_slabs();
-        TurboSession::from_parts(cache, slabs)
+        TurboSession::from_parts_pooled(cache, slabs, pool)
     }
 
     /// Assemble from pre-built parts (tests/benches that have no PJRT
-    /// bundle).
+    /// bundle), on the serial path.
     pub fn from_parts(cache: KvCache, slabs: TurboSlabs) -> TurboSession {
-        TurboSession { cache, slabs, synced_pages: 0, synced_buf: 0 }
+        TurboSession::from_parts_pooled(
+            cache,
+            slabs,
+            Arc::new(WorkerPool::new(1)),
+        )
+    }
+
+    /// [`Self::from_parts`] with an explicit decode pool.
+    pub fn from_parts_pooled(
+        cache: KvCache,
+        slabs: TurboSlabs,
+        pool: Arc<WorkerPool>,
+    ) -> TurboSession {
+        TurboSession { cache, slabs, pool, synced_pages: 0, synced_buf: 0 }
+    }
+
+    /// The pool this session's decode work forks onto.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     /// Copy tokens materialized since the last call from every stream's
@@ -139,13 +183,27 @@ impl TurboSession {
     /// first token the slabs don't already hold. (A buffer flush converts
     /// mirrored buffer tokens into a page, so the restart point falls
     /// back to that page's boundary, never to zero.)
-    pub fn sync_slabs(&mut self) -> usize {
+    ///
+    /// The per-(layer, head) copies are independent — headwise
+    /// quantization gives every stream its own pages, scales, and slab
+    /// shard — so they fork onto the session's pool: each worker gets a
+    /// disjoint contiguous group of `&mut` stream pairs
+    /// ([`KvCache::streams_mut`]) with their slab shards
+    /// ([`TurboSlabs::shards_mut`]). Results are bit-identical for
+    /// every thread count (the parallel-parity suite enforces it). On a
+    /// worker panic the cursors stay put, so the next successful sync
+    /// rewrites everything the failed one may have half-written.
+    pub fn sync_slabs(&mut self) -> Result<usize> {
         let l_n = self.cache.cfg.n_layers;
         let h_n = self.cache.cfg.n_heads;
         let dh = self.cache.cfg.d_head;
         let block = self.cache.cfg.block;
-        let c = self.slabs.k8.len() / (l_n * h_n * dh);
-        let nb = self.slabs.sk.len() / (l_n * h_n);
+        let n_streams = l_n * h_n;
+        if n_streams == 0 {
+            return Ok(0);
+        }
+        let c = self.slabs.k8.len() / (n_streams * dh);
+        let nb = self.slabs.sk.len() / n_streams;
         debug_assert_eq!(nb, c / block);
         // All streams advance in lockstep; probe (0, 0) K for the delta.
         let (pages_now, buf_now) = {
@@ -161,29 +219,78 @@ impl TurboSession {
             pages_now * block + self.synced_buf
         };
         let start = start.min(nk);
-        for l in 0..l_n {
-            for h in 0..h_n {
-                let base = (l * h_n + h) * c * dh;
-                let sbase = (l * h_n + h) * nb;
-                let (codes, scales, n) = self.cache.k_stream_mut(l, h).q1_view();
-                debug_assert_eq!(n, nk, "streams out of lockstep");
-                let nbv = n.div_ceil(block).min(nb);
-                self.slabs.k8[base + start * dh..base + n * dh]
-                    .copy_from_slice(&codes[start * dh..n * dh]);
-                self.slabs.sk[sbase..sbase + nbv]
-                    .copy_from_slice(&scales[..nbv]);
-                let (codes, scales, n) = self.cache.v_stream_mut(l, h).q1_view();
-                debug_assert_eq!(n, nk, "streams out of lockstep");
-                self.slabs.v8[base + start * dh..base + n * dh]
-                    .copy_from_slice(&codes[start * dh..n * dh]);
-                self.slabs.sv[sbase..sbase + nbv]
-                    .copy_from_slice(&scales[..nbv]);
+        let pool = Arc::clone(&self.pool);
+        // Deal streams into <= threads contiguous groups (sizes differ
+        // by at most one, `balanced_chunk_sizes`): steady-state sync
+        // copies ~one token per stream, so per-stream jobs would drown
+        // in dispatch overhead. A single group — the 1-thread pool's
+        // exact old serial loop — moves the whole iterator into one
+        // inline job, allocating nothing.
+        let jobs = pool.threads().min(n_streams);
+        let mut shards =
+            self.cache.streams_mut().zip(self.slabs.shards_mut(n_streams));
+        let mut forked = 0usize;
+        pool.scope(|scope| {
+            if jobs == 1 {
+                let forked = &mut forked;
+                scope.execute(move || {
+                    for (streams, shard) in shards {
+                        *forked += 1;
+                        sync_stream_shard(
+                            streams, shard, start, nk, dh, block, nb,
+                        );
+                    }
+                });
+                return;
             }
-        }
+            for len in balanced_chunk_sizes(n_streams, jobs) {
+                let group: Vec<_> = shards.by_ref().take(len).collect();
+                forked += group.len();
+                scope.execute(move || {
+                    for (streams, shard) in group {
+                        sync_stream_shard(
+                            streams, shard, start, nk, dh, block, nb,
+                        );
+                    }
+                });
+            }
+        })?;
+        // The zip would silently truncate if the slabs were built for a
+        // different geometry than the cache — that must be loud, or
+        // decode would read stale codes for the skipped streams.
+        assert_eq!(
+            forked, n_streams,
+            "cache/slab geometry mismatch: {forked} shards for {n_streams} streams"
+        );
         self.synced_pages = pages_now;
         self.synced_buf = buf_now;
-        nk
+        Ok(nk)
     }
+}
+
+/// Per-worker body of [`TurboSession::sync_slabs`]: bring one stream
+/// pair's q1 views up to date and copy the `[start, nk)` token range
+/// (plus live scales) into the stream's slab shard.
+fn sync_stream_shard(
+    streams: HeadCacheMut<'_>,
+    shard: SlabShardMut<'_>,
+    start: usize,
+    nk: usize,
+    dh: usize,
+    block: usize,
+    nb: usize,
+) {
+    let nbv = nk.div_ceil(block).min(nb);
+    let (codes, scales, n) = streams.k.q1_view();
+    debug_assert_eq!(n, nk, "streams out of lockstep");
+    shard.k8[start * dh..nk * dh]
+        .copy_from_slice(&codes[start * dh..nk * dh]);
+    shard.sk[..nbv].copy_from_slice(&scales[..nbv]);
+    let (codes, scales, n) = streams.v.q1_view();
+    debug_assert_eq!(n, nk, "streams out of lockstep");
+    shard.v8[start * dh..nk * dh]
+        .copy_from_slice(&codes[start * dh..nk * dh]);
+    shard.sv[..nbv].copy_from_slice(&scales[..nbv]);
 }
 
 impl TurboBackend {
@@ -231,7 +338,9 @@ impl AttentionBackend for TurboBackend {
             out.turbo_cache.expect("turbo prefill returns cache");
         let mut cache = self.new_cache(bundle);
         bundle.ingest_prefill(&mut cache, &k8, &v8, &sk, &sv, prompt.len());
-        Ok((out.logits, TurboSession::new(cache, bundle)))
+        let session =
+            TurboSession::new(cache, bundle, Arc::clone(&self.pool));
+        Ok((out.logits, session))
     }
 
     fn decode_step(
@@ -241,7 +350,7 @@ impl AttentionBackend for TurboBackend {
         token: u8,
         pos: usize,
     ) -> Result<DecodeOut> {
-        let nk = session.sync_slabs();
+        let nk = session.sync_slabs()?;
         bundle.decode_turbo(&mut session.slabs, token, pos, nk)
     }
 
@@ -443,15 +552,19 @@ where
 }
 
 /// Construct the backend for an engine configuration — the single place
-/// a `PathMode` is matched on.
+/// a `PathMode` is matched on. `pool` is the decode worker pool every
+/// session of this backend forks its per-(layer, head) work onto
+/// (`EngineConfig.decode_threads` sizes it; 1 thread = the exact serial
+/// path). The flash baseline ignores it.
 pub fn backend_for(
     mode: PathMode,
     kv_bits: Bits,
     n_2bit_heads: usize,
+    pool: Arc<WorkerPool>,
 ) -> Box<dyn DynBackend> {
     match mode {
         PathMode::Turbo => {
-            Box::new(Erased(TurboBackend { kv_bits, n_2bit_heads }))
+            Box::new(Erased(TurboBackend::new(kv_bits, n_2bit_heads, pool)))
         }
         PathMode::Flash => Box::new(Erased(FlashBackend)),
     }
@@ -469,9 +582,17 @@ mod tests {
     const CTX: usize = 32;
 
     fn session() -> TurboSession {
+        session_with_threads(1)
+    }
+
+    fn session_with_threads(threads: usize) -> TurboSession {
         let pm = PrecisionMap::uniform(L, H, Bits::Int4);
         let cache = KvCache::new(KvCacheConfig::new(L, H, DH, BLOCK, pm));
-        TurboSession::from_parts(cache, TurboSlabs::new(L, H, CTX, DH, BLOCK))
+        TurboSession::from_parts_pooled(
+            cache,
+            TurboSlabs::new(L, H, CTX, DH, BLOCK),
+            Arc::new(WorkerPool::new(threads)),
+        )
     }
 
     fn push_all(s: &mut TurboSession, rng: &mut Rng) {
@@ -502,12 +623,14 @@ mod tests {
     }
 
     /// Backend-parity oracle for the slabs: however sparsely `sync_slabs`
-    /// was called along the way, the slab contents must equal a fresh
-    /// full rematerialization of every stream.
+    /// was called along the way — and whatever the worker-pool width —
+    /// the slab contents must equal a fresh full rematerialization of
+    /// every stream.
     #[test]
     fn incremental_slab_sync_equals_full_rematerialization() {
         prop::run("slab sync == remat", 25, |g| {
-            let mut s = session();
+            let threads = *g.choose(&[1usize, 2, 4, 7]);
+            let mut s = session_with_threads(threads);
             let mut rng = Rng::new(g.seed());
             let prefill = g.usize_in(0, 12);
             if prefill > 0 {
@@ -518,10 +641,10 @@ mod tests {
             for i in 0..steps {
                 push_all(&mut s, &mut rng);
                 if i % sync_every == 0 {
-                    s.sync_slabs();
+                    s.sync_slabs().expect("sync");
                 }
             }
-            let nk = s.sync_slabs();
+            let nk = s.sync_slabs().expect("sync");
             assert_eq!(nk, prefill + steps);
             let nb = CTX / BLOCK;
             let nbv = nk.div_ceil(BLOCK);
@@ -569,21 +692,22 @@ mod tests {
         for _ in 0..(BLOCK * 2 + 1) {
             push_all(&mut s, &mut rng);
         }
-        assert_eq!(s.sync_slabs(), BLOCK * 2 + 1);
+        assert_eq!(s.sync_slabs().unwrap(), BLOCK * 2 + 1);
         assert_eq!(s.synced_pages, 2);
         assert_eq!(s.synced_buf, 1);
         // No mutation: cursors stable, nk unchanged.
-        assert_eq!(s.sync_slabs(), BLOCK * 2 + 1);
+        assert_eq!(s.sync_slabs().unwrap(), BLOCK * 2 + 1);
         assert_eq!(s.synced_pages, 2);
         push_all(&mut s, &mut rng);
-        assert_eq!(s.sync_slabs(), BLOCK * 2 + 2);
+        assert_eq!(s.sync_slabs().unwrap(), BLOCK * 2 + 2);
         assert_eq!(s.synced_buf, 2);
     }
 
     #[test]
     fn backend_for_dispatches_by_mode() {
-        let t = backend_for(PathMode::Turbo, Bits::Int4, 0);
-        let f = backend_for(PathMode::Flash, Bits::Int4, 0);
+        let pool = Arc::new(WorkerPool::new(2));
+        let t = backend_for(PathMode::Turbo, Bits::Int4, 0, Arc::clone(&pool));
+        let f = backend_for(PathMode::Flash, Bits::Int4, 0, pool);
         assert_eq!(t.name(), "turbo");
         assert_eq!(f.name(), "flash");
     }

@@ -31,8 +31,8 @@ pub use backend::{
 pub use exact::attention_exact;
 pub use flash::flash_attention;
 pub use turbo::{
-    turbo_attention, turbo_decode, turbo_decode_into, DecodeScratch,
-    TurboConfig,
+    turbo_attention, turbo_decode, turbo_decode_into, turbo_decode_streams,
+    DecodeScratch, TurboConfig,
 };
 
 /// Causal-mask helper: is key position `kpos` visible to query row `qrow`

@@ -6,6 +6,7 @@
 //! optional progressive (INT4/2) round trip of K/V tiles to measure the
 //! q2-cache effect end to end.
 
+use crate::pool::{balanced_chunk_sizes, ScopeError, WorkerPool};
 use crate::quant::{
     dequant_asym_int, quant_asym_int, quant_sym_int8, quant_sym_int8_into,
     Bits,
@@ -277,6 +278,99 @@ pub fn turbo_decode(
     (out, m, l)
 }
 
+/// One decode step's attention for **every** (layer, head) stream over
+/// shared q1 slabs, fanned out on a worker pool — the parallel form of
+/// the per-head [`turbo_decode_into`] loop (headwise quantization makes
+/// the streams fully independent, paper §3).
+///
+/// Layout (matching `TurboSlabs` / `KvCache::streams_mut` stream order):
+/// `q` and `out` are `[n_streams * d]`; `k8`/`v8` are
+/// `[n_streams * C * d]` codes with per-block scales `sk`/`sv`
+/// (`[n_streams * C/bc]`); `ml` (`[n_streams]`) receives each stream's
+/// (running max, denominator) for the caller's uncached-token merge.
+/// `n_streams` is taken from `ml.len()`.
+///
+/// Streams are dealt into `min(scratches.len(), n_streams)` contiguous
+/// chunks whose sizes differ by at most one (so no worker idles when
+/// `n_streams` is not a multiple of the job count), one job per chunk,
+/// each reusing exactly one [`DecodeScratch`] — pass one scratch per
+/// pool thread for full parallelism with zero steady-state allocation.
+/// Every stream's math runs serially inside its job with the same
+/// instruction order as the serial loop, and jobs write disjoint
+/// `out`/`ml` chunks, so the result is **bit-identical for every
+/// thread count and chunking** (the parallel-parity suite enforces it).
+///
+/// Returns `Err` if a worker panicked (the pool stays usable).
+#[allow(clippy::too_many_arguments)]
+pub fn turbo_decode_streams(
+    pool: &WorkerPool,
+    q: &[f32],
+    k8: &[i8],
+    v8: &[i8],
+    sk: &[f32],
+    sv: &[f32],
+    d: usize,
+    nk: usize,
+    bc: usize,
+    n_r: f32,
+    scratches: &mut [DecodeScratch],
+    ml: &mut [(f32, f32)],
+    out: &mut [f32],
+) -> Result<(), ScopeError> {
+    let n_streams = ml.len();
+    if n_streams == 0 {
+        return Ok(());
+    }
+    assert!(!scratches.is_empty(), "need at least one DecodeScratch");
+    assert_eq!(q.len(), n_streams * d, "q is [n_streams * d]");
+    assert_eq!(out.len(), n_streams * d, "out is [n_streams * d]");
+    let c = k8.len() / (n_streams * d);
+    let nb = sk.len() / n_streams;
+    assert!(nk <= c, "nk {nk} exceeds per-stream capacity {c}");
+    assert!(v8.len() >= n_streams * c * d && sv.len() >= n_streams * nb);
+    let n_jobs_cap = scratches.len();
+    pool.scope(move |scope| {
+        let mut out_rest = out;
+        let mut ml_rest = ml;
+        let mut first = 0usize;
+        let mut scratch_it = scratches.iter_mut();
+        for len in balanced_chunk_sizes(n_streams, n_jobs_cap) {
+            let scratch =
+                scratch_it.next().expect("one scratch per dealt group");
+            let (out_c, tail) =
+                std::mem::take(&mut out_rest).split_at_mut(len * d);
+            out_rest = tail;
+            let (ml_c, tail) =
+                std::mem::take(&mut ml_rest).split_at_mut(len);
+            ml_rest = tail;
+            let start = first;
+            first += len;
+            scope.execute(move || {
+                for (j, (o, ml_slot)) in
+                    out_c.chunks_mut(d).zip(ml_c.iter_mut()).enumerate()
+                {
+                    let i = start + j;
+                    let base = i * c * d;
+                    let sbase = i * nb;
+                    *ml_slot = turbo_decode_into(
+                        &q[i * d..(i + 1) * d],
+                        &k8[base..base + c * d],
+                        &v8[base..base + c * d],
+                        &sk[sbase..sbase + nb],
+                        &sv[sbase..sbase + nb],
+                        nk,
+                        bc,
+                        n_r,
+                        scratch,
+                        o,
+                    );
+                }
+            });
+        }
+    })?;
+    Ok(())
+}
+
 /// Merge one extra (uncached) token into a decode result via SAS online
 /// softmax — the model-side float merge (model.py `_sas_merge_token`).
 pub fn sas_merge_token(
@@ -436,6 +530,65 @@ mod tests {
             assert_eq!(out, want);
             assert_eq!(m, wm);
             assert_eq!(l, wl);
+        });
+    }
+
+    #[test]
+    fn decode_streams_bit_identical_to_serial_loop() {
+        // The parallel fan-out is a pure scheduler: for any pool width
+        // and scratch count it must reproduce the serial per-stream
+        // loop to the bit.
+        prop::run("decode streams == serial", 15, |g| {
+            let n_streams = g.usize_in(1, 9);
+            let d = g.usize_in(4, 12);
+            let bc = 4;
+            let c = 16;
+            let nb = c / bc;
+            let nk = g.usize_in(1, c);
+            let q = g.normal_vec(n_streams * d, 1.0);
+            let mut k8 = vec![0i8; n_streams * c * d];
+            let mut v8 = vec![0i8; n_streams * c * d];
+            for x in k8.iter_mut().chain(v8.iter_mut()) {
+                *x = (g.usize_in(0, 255) as i32 - 127) as i8;
+            }
+            let sk: Vec<f32> =
+                (0..n_streams * nb).map(|_| g.f32_in(0.01, 1.0)).collect();
+            let sv: Vec<f32> =
+                (0..n_streams * nb).map(|_| g.f32_in(0.01, 1.0)).collect();
+            // Serial oracle: the old per-head loop.
+            let mut want = vec![0.0f32; n_streams * d];
+            let mut want_ml = vec![(0.0f32, 0.0f32); n_streams];
+            let mut scratch = DecodeScratch::new();
+            for i in 0..n_streams {
+                let base = i * c * d;
+                let sbase = i * nb;
+                want_ml[i] = turbo_decode_into(
+                    &q[i * d..(i + 1) * d],
+                    &k8[base..base + c * d],
+                    &v8[base..base + c * d],
+                    &sk[sbase..sbase + nb],
+                    &sv[sbase..sbase + nb],
+                    nk,
+                    bc,
+                    -6.0,
+                    &mut scratch,
+                    &mut want[i * d..(i + 1) * d],
+                );
+            }
+            for threads in [1usize, 2, 4] {
+                let pool = WorkerPool::new(threads);
+                let n_scratch = g.usize_in(1, threads + 2);
+                let mut scratches = vec![DecodeScratch::new(); n_scratch];
+                let mut out = vec![0.0f32; n_streams * d];
+                let mut ml = vec![(0.0f32, 0.0f32); n_streams];
+                turbo_decode_streams(
+                    &pool, &q, &k8, &v8, &sk, &sv, d, nk, bc, -6.0,
+                    &mut scratches, &mut ml, &mut out,
+                )
+                .expect("no panics");
+                assert_eq!(out, want, "outputs (threads={threads})");
+                assert_eq!(ml, want_ml, "(m, l) (threads={threads})");
+            }
         });
     }
 

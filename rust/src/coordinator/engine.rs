@@ -8,6 +8,7 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -18,6 +19,7 @@ use crate::attention::backend::{backend_for, BackendState, DynBackend};
 use crate::info;
 use crate::metrics::{EngineMetrics, Histogram};
 use crate::model::{ModelBundle, Sampler};
+use crate::pool::{default_threads, WorkerPool};
 use crate::quant::Bits;
 use crate::testutil::Rng;
 
@@ -33,6 +35,17 @@ pub struct EngineConfig {
     pub kv_bits: Bits,
     /// Number of 2-bit heads per layer (0 = uniform `kv_bits`).
     pub n_2bit_heads: usize,
+    /// Worker threads for per-(layer, head) decode work. In the
+    /// serving path this parallelizes the turbo slab sync
+    /// (`TurboSession::sync_slabs`); per-stream attention itself runs
+    /// in the decode executable when artifacts are present, and its
+    /// CPU-substrate fan-out (`turbo_decode_streams`) uses the same
+    /// pool in benches/tests. Default = the machine's available
+    /// parallelism; `1` (or `0`) = the exact old serial path. Decode
+    /// output is thread-count-invariant — the determinism contract the
+    /// parallel-parity suite enforces — so this is purely a throughput
+    /// knob.
+    pub decode_threads: usize,
     pub seed: u64,
 }
 
@@ -44,6 +57,7 @@ impl Default for EngineConfig {
             sampler: Sampler::Greedy,
             kv_bits: Bits::Int4,
             n_2bit_heads: 0,
+            decode_threads: default_threads(),
             seed: 0,
         }
     }
@@ -78,6 +92,9 @@ pub struct Engine {
     bundle: ModelBundle,
     batcher: Batcher,
     backend: Box<dyn DynBackend>,
+    /// Decode worker pool, shared with the backend's sessions; the
+    /// engine keeps its own handle for the wall/busy decode metrics.
+    pool: Arc<WorkerPool>,
     sessions: HashMap<RequestId, Session>,
     rng: Rng,
     pub metrics: EngineMetrics,
@@ -87,9 +104,22 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(bundle: ModelBundle, cfg: EngineConfig) -> Engine {
+        // Only the turbo path forks decode work; a flash engine gets a
+        // serial (thread-free) pool instead of parked workers.
+        let pool_threads = match cfg.mode {
+            PathMode::Turbo => cfg.decode_threads,
+            PathMode::Flash => 1,
+        };
+        let pool = Arc::new(WorkerPool::new(pool_threads));
         Engine {
             batcher: Batcher::new(cfg.batcher.clone()),
-            backend: backend_for(cfg.mode, cfg.kv_bits, cfg.n_2bit_heads),
+            backend: backend_for(
+                cfg.mode,
+                cfg.kv_bits,
+                cfg.n_2bit_heads,
+                Arc::clone(&pool),
+            ),
+            pool,
             sessions: HashMap::new(),
             rng: Rng::new(cfg.seed),
             metrics: EngineMetrics::default(),
@@ -102,6 +132,11 @@ impl Engine {
 
     pub fn bundle(&mut self) -> &mut ModelBundle {
         &mut self.bundle
+    }
+
+    /// The decode worker pool (1-thread = serial path).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
     }
 
     pub fn submit(&mut self, req: GenRequest) {
@@ -148,7 +183,11 @@ impl Engine {
             self.sessions.insert(id, session);
         }
 
-        // Decode round: one step per running request.
+        // Decode round: one step per running request. Wall time vs the
+        // pool's busy time over the round is the parallel-efficiency
+        // signal (`EngineMetrics::decode_parallelism`).
+        let decode_round = (!decision.decode.is_empty())
+            .then(|| (Instant::now(), self.pool.busy()));
         for id in decision.decode {
             let Some(session) = self.sessions.get_mut(&id) else { continue };
             if let Some(reason) = finished(session, self.bundle.max_ctx()) {
@@ -181,6 +220,11 @@ impl Engine {
             session.pos += 1;
             self.metrics.tokens_generated += 1;
             self.batcher.on_token(id);
+        }
+        if let Some((wall0, busy0)) = decode_round {
+            self.metrics.decode_wall_s += wall0.elapsed().as_secs_f64();
+            self.metrics.decode_busy_s +=
+                (self.pool.busy() - busy0).as_secs_f64();
         }
         self.metrics.batches_run += 1;
         self.update_cache_metrics();

@@ -31,4 +31,6 @@ pub mod store;
 pub use buffer::DecodeBuffer;
 pub use page::QuantPage;
 pub use precision::PrecisionMap;
-pub use store::{CacheStats, HeadCache, KvCache, KvCacheConfig, Q1View};
+pub use store::{
+    CacheStats, HeadCache, HeadCacheMut, KvCache, KvCacheConfig, Q1View,
+};

@@ -295,6 +295,16 @@ pub struct HeadCache<'a> {
     pub v: &'a StreamCache,
 }
 
+/// One (layer, head) pair of **exclusive** K/V streams — the unit the
+/// parallel decode sync hands to a worker. Produced only by
+/// [`KvCache::streams_mut`], whose iterator yields each pair exactly
+/// once, so two workers can never alias a stream (the borrow checker
+/// proves non-overlap instead of a runtime lock).
+pub struct HeadCacheMut<'a> {
+    pub k: &'a mut StreamCache,
+    pub v: &'a mut StreamCache,
+}
+
 impl KvCache {
     pub fn new(cfg: KvCacheConfig) -> KvCache {
         // A flush must fill exactly one page: every page-aligned consumer
@@ -335,6 +345,22 @@ impl KvCache {
     pub fn v_stream_mut(&mut self, layer: usize, head: usize) -> &mut StreamCache {
         let i = self.idx(layer, head);
         &mut self.v[i]
+    }
+
+    /// Disjoint `&mut` K/V stream pairs for every (layer, head), in
+    /// layer-major order — stream `i` of the iterator is
+    /// `(layer, head) = (i / n_heads, i % n_heads)`, matching the slab
+    /// layout of [`crate::model::TurboSlabs`]. This is the shard axis of
+    /// the parallel decode sync: each worker takes one pair, and because
+    /// the pairs come from one pass over the underlying storage, no two
+    /// shards can overlap.
+    pub fn streams_mut(
+        &mut self,
+    ) -> impl Iterator<Item = HeadCacheMut<'_>> + '_ {
+        self.k
+            .iter_mut()
+            .zip(self.v.iter_mut())
+            .map(|(k, v)| HeadCacheMut { k, v })
     }
 
     /// Token count of the (layer 0, head 0) K stream — by construction all
@@ -546,6 +572,37 @@ mod tests {
         let want = s.pages[0].dequant_q1();
         assert_eq!(codes, want, "page region rewritten");
         assert_eq!(scale0, s.pages[0].fp_scale);
+    }
+
+    /// Shard-coverage invariant behind the parallel sync: the mutable
+    /// stream iterator visits every (layer, head) exactly once, in the
+    /// layer-major order the slab layout assumes.
+    #[test]
+    fn streams_mut_covers_each_head_exactly_once_in_order() {
+        let mut cache = KvCache::new(cfg(4));
+        let mut rng = Rng::new(8);
+        // Tag each stream with a distinct token count: (l, h) gets
+        // l * H + h + 1 tokens in K and 2x that in V.
+        for l in 0..2 {
+            for h in 0..2 {
+                let n = l * 2 + h + 1;
+                for _ in 0..n {
+                    let t = rng.normal_vec(8, 1.0);
+                    cache.k_stream_mut(l, h).push_token(&t);
+                }
+                for _ in 0..2 * n {
+                    let t = rng.normal_vec(8, 1.0);
+                    cache.v_stream_mut(l, h).push_token(&t);
+                }
+            }
+        }
+        let mut seen = 0usize;
+        for (i, shard) in cache.streams_mut().enumerate() {
+            assert_eq!(shard.k.tokens(), i + 1, "K order, shard {i}");
+            assert_eq!(shard.v.tokens(), 2 * (i + 1), "V order, shard {i}");
+            seen += 1;
+        }
+        assert_eq!(seen, 4, "exactly n_layers * n_heads shards");
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod experiments;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod pool;
 pub mod quant;
 pub mod runtime;
 pub mod sas;

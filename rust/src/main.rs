@@ -76,6 +76,10 @@ fn engine_config(args: &Args) -> EngineConfig {
         kv_bits,
         sampler,
         n_2bit_heads: args.opt_parse("n-2bit-heads", 0usize),
+        decode_threads: args.opt_parse(
+            "decode-threads",
+            turboattention::pool::default_threads(),
+        ),
         seed: args.opt_parse("seed", 0u64),
         ..Default::default()
     };

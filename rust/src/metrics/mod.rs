@@ -169,6 +169,30 @@ pub struct EngineMetrics {
     /// aggregated over all live sessions.
     pub cache_view_bytes: usize,
     pub cache_compression: f64,
+    /// Wall-clock seconds spent in decode rounds (engine thread).
+    pub decode_wall_s: f64,
+    /// Seconds of per-(layer, head) work executed during those rounds,
+    /// summed over every decode worker — with an `N`-thread pool this
+    /// can exceed wall time by up to `N`x.
+    pub decode_busy_s: f64,
+}
+
+impl EngineMetrics {
+    /// Pooled-work seconds per decode-round wall second. The wall side
+    /// spans the whole round (model execution, sampling, bookkeeping),
+    /// not just the pooled region, so this is a *fraction-of-round*
+    /// signal, not a thread count: it stays well below 1.0 when model
+    /// execution dominates, and only approaches `decode_threads` in
+    /// the limit where pooled shard work is the entire round. Compare
+    /// runs at different `decode_threads` to see the fan-out's effect.
+    /// 0.0 before any decode round has run.
+    pub fn decode_parallelism(&self) -> f64 {
+        if self.decode_wall_s <= 0.0 {
+            0.0
+        } else {
+            self.decode_busy_s / self.decode_wall_s
+        }
+    }
 }
 
 #[cfg(test)]
@@ -220,5 +244,14 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.p99(), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn decode_parallelism_ratio() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.decode_parallelism(), 0.0, "no rounds yet");
+        m.decode_wall_s = 2.0;
+        m.decode_busy_s = 7.0;
+        assert!((m.decode_parallelism() - 3.5).abs() < 1e-12);
     }
 }

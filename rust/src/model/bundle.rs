@@ -54,6 +54,16 @@ impl TurboSlabs {
         d_head: usize,
         block: usize,
     ) -> TurboSlabs {
+        // The page-aligned layout gives every block of tokens exactly
+        // one scale slot; a ragged tail block would be silently capped
+        // by the sync (`nbv.min(nb)`) and then indexed out of bounds in
+        // the decode hot path — fail loudly here instead (same contract
+        // as the `n_b == block` assert in `KvCache::new`).
+        assert_eq!(
+            max_ctx % block,
+            0,
+            "max_ctx {max_ctx} must be a multiple of block {block}"
+        );
         let elems = n_layers * n_heads * max_ctx * d_head;
         let scales = n_layers * n_heads * (max_ctx / block);
         TurboSlabs {
@@ -63,6 +73,67 @@ impl TurboSlabs {
             sv: vec![1.0f32; scales],
         }
     }
+
+    /// Split into `n_streams` equal, **disjoint** mutable shards — one
+    /// per (layer, head), in the same layer-major order as
+    /// [`KvCache::streams_mut`](crate::kvcache::KvCache::streams_mut).
+    /// Shard `i` owns codes `[i * C * dh, (i + 1) * C * dh)` and scales
+    /// `[i * nb, (i + 1) * nb)` of each slab. Built from `chunks_mut`,
+    /// so the borrow checker proves no two workers alias a byte; this
+    /// is what lets the parallel slab sync write with no locks.
+    pub fn shards_mut(
+        &mut self,
+        n_streams: usize,
+    ) -> impl Iterator<Item = SlabShardMut<'_>> + '_ {
+        // Hard asserts (cost: once per sync): a ragged split would
+        // produce shard offsets that disagree with the contiguous
+        // `c = len / n_streams` stride every reader assumes, and the
+        // zip-truncation guard downstream cannot catch that case.
+        assert!(
+            n_streams == 0
+                || (self.k8.len() % n_streams == 0
+                    && self.sk.len() % n_streams == 0),
+            "slabs not evenly divisible into {n_streams} shards"
+        );
+        assert!(
+            n_streams == 0 || self.k8.is_empty() || !self.sk.is_empty(),
+            "codes without scales: max_ctx must be >= block"
+        );
+        // On empty geometry the slabs are empty and any positive chunk
+        // size yields the correct zero shards.
+        let code_chunk = if n_streams == 0 {
+            1
+        } else {
+            (self.k8.len() / n_streams).max(1)
+        };
+        let scale_chunk = if n_streams == 0 {
+            1
+        } else {
+            (self.sk.len() / n_streams).max(1)
+        };
+        self.k8
+            .chunks_mut(code_chunk)
+            .zip(self.v8.chunks_mut(code_chunk))
+            .zip(
+                self.sk
+                    .chunks_mut(scale_chunk)
+                    .zip(self.sv.chunks_mut(scale_chunk)),
+            )
+            .map(|((k8, v8), (sk, sv))| SlabShardMut { k8, v8, sk, sv })
+    }
+}
+
+/// One (layer, head) slice of every decode slab, handed to exactly one
+/// worker per sync (see [`TurboSlabs::shards_mut`]).
+pub struct SlabShardMut<'a> {
+    /// K codes `[C * d_head]` for this stream.
+    pub k8: &'a mut [i8],
+    /// V codes `[C * d_head]` for this stream.
+    pub v8: &'a mut [i8],
+    /// K per-block scales `[C / block]`.
+    pub sk: &'a mut [f32],
+    /// V per-block scales `[C / block]`.
+    pub sv: &'a mut [f32],
 }
 
 /// Persistent per-session float K/V slabs `[L, H, C, dh]` for the flash
@@ -325,4 +396,54 @@ fn take5(mut v: Vec<HostTensor>) -> Result<[HostTensor; 5]> {
     let b = v.pop().unwrap();
     let a = v.pop().unwrap();
     Ok([a, b, c, d, e])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiling invariant behind the lock-free parallel sync: the shard
+    /// iterator covers every slab element exactly once, in stream
+    /// order, with no gaps and no overlap.
+    #[test]
+    fn slab_shards_tile_the_slabs_exactly() {
+        let (l_n, h_n, c, dh, block) = (2usize, 3, 16, 4, 4);
+        let n_streams = l_n * h_n;
+        let mut slabs = TurboSlabs::new(l_n, h_n, c, dh, block);
+        let mut count = 0usize;
+        for (i, shard) in slabs.shards_mut(n_streams).enumerate() {
+            assert_eq!(shard.k8.len(), c * dh);
+            assert_eq!(shard.v8.len(), c * dh);
+            assert_eq!(shard.sk.len(), c / block);
+            assert_eq!(shard.sv.len(), c / block);
+            // Tag every element with its shard id (+1 so untouched
+            // elements stay distinguishable at 0 / 1.0 defaults).
+            shard.k8.fill(i as i8 + 1);
+            shard.v8.fill(-(i as i8 + 1));
+            shard.sk.fill(i as f32 + 2.0);
+            shard.sv.fill(-(i as f32 + 2.0));
+            count += 1;
+        }
+        assert_eq!(count, n_streams, "one shard per (layer, head)");
+        // Full coverage + ordering: element j belongs to shard
+        // j / (c * dh) (codes) or j / (c / block) (scales).
+        for (j, &v) in slabs.k8.iter().enumerate() {
+            assert_eq!(v, (j / (c * dh)) as i8 + 1, "k8[{j}]");
+        }
+        for (j, &v) in slabs.v8.iter().enumerate() {
+            assert_eq!(v, -((j / (c * dh)) as i8 + 1), "v8[{j}]");
+        }
+        for (j, &v) in slabs.sk.iter().enumerate() {
+            assert_eq!(v, (j / (c / block)) as f32 + 2.0, "sk[{j}]");
+        }
+        for (j, &v) in slabs.sv.iter().enumerate() {
+            assert_eq!(v, -((j / (c / block)) as f32 + 2.0), "sv[{j}]");
+        }
+    }
+
+    #[test]
+    fn slab_shards_zero_streams_is_empty() {
+        let mut slabs = TurboSlabs::new(0, 0, 16, 4, 4);
+        assert_eq!(slabs.shards_mut(0).count(), 0);
+    }
 }

@@ -4,7 +4,7 @@
 pub mod bundle;
 
 pub use bundle::{
-    DecodeOut, FlashSlabs, ModelBundle, PrefillOut, TurboSlabs,
+    DecodeOut, FlashSlabs, ModelBundle, PrefillOut, SlabShardMut, TurboSlabs,
 };
 
 use crate::testutil::Rng;

@@ -1,0 +1,629 @@
+//! Hand-rolled worker pool for per-(layer, head) decode parallelism.
+//!
+//! TurboAttention's headwise quantization (paper §3) makes every
+//! (layer, head) stream independent during decode: slab sync copies
+//! disjoint ranges and the INT8 attention reads shared immutable slabs.
+//! This module supplies the fork/join substrate that exploits that —
+//! with **no new dependencies** (std only; crossbeam/rayon are not in
+//! the offline vendor set):
+//!
+//! * [`WorkerPool`] owns a fixed set of worker threads fed from one
+//!   mpsc channel (jobs are pulled, not pushed, so uneven shards
+//!   load-balance naturally, FlashInfer-style).
+//! * [`WorkerPool::scope`] is a scoped fork/join region: jobs may
+//!   borrow stack data (`&mut` slab shards, stream caches) because the
+//!   scope blocks until every job submitted inside it has finished
+//!   before returning — the same contract as `std::thread::scope`, but
+//!   over persistent threads so a decode step spawns nothing.
+//! * A panic inside a job is caught on the worker, reported as a
+//!   [`ScopeError`] from `scope`, and leaves the pool fully usable —
+//!   workers never die with the job, so one poisoned step cannot poison
+//!   the next.
+//! * `threads <= 1` builds a **serial** pool: no threads are spawned
+//!   and jobs run inline on the caller in submission order — the exact
+//!   old serial decode path, used as the determinism oracle by the
+//!   parity tests.
+//!
+//! Determinism contract: the pool only ever runs jobs whose writes are
+//! disjoint by construction (the borrow checker proves it at the call
+//! site), and each job's own arithmetic is sequential — so results are
+//! bit-identical for every thread count, including 1.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A unit of work after lifetime erasure (see `Scope::execute`).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Number of worker threads to use when the caller does not specify:
+/// the machine's available parallelism (1 if it cannot be queried).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Sizes for dealing `n_items` into at most `max_jobs` contiguous
+/// groups whose sizes differ by at most one (the first groups take the
+/// remainder). Yields `min(max_jobs.max(1), n_items)` positive sizes
+/// summing to `n_items`; empty when `n_items == 0`.
+///
+/// Both decode fan-outs (`TurboSession::sync_slabs` and
+/// `turbo_decode_streams`) partition streams with this one helper, so
+/// their group boundaries — part of the bit-determinism story — cannot
+/// drift apart.
+pub fn balanced_chunk_sizes(
+    n_items: usize,
+    max_jobs: usize,
+) -> impl Iterator<Item = usize> {
+    let jobs = max_jobs.max(1).min(n_items);
+    let per = n_items.checked_div(jobs).unwrap_or(0);
+    let extra = n_items.checked_rem(jobs).unwrap_or(0);
+    (0..jobs).map(move |ji| per + usize::from(ji < extra))
+}
+
+/// Error returned by [`WorkerPool::scope`] when one or more jobs
+/// panicked. The pool itself remains usable.
+#[derive(Debug, Clone)]
+pub struct ScopeError {
+    /// How many jobs in the scope panicked.
+    pub panicked_jobs: usize,
+    /// Payload of the first panic observed (caught on the worker).
+    pub first_panic: String,
+}
+
+impl std::fmt::Display for ScopeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} pool job(s) panicked; first: {}",
+            self.panicked_jobs, self.first_panic
+        )
+    }
+}
+
+impl std::error::Error for ScopeError {}
+
+/// Fork/join bookkeeping shared between one scope and its jobs.
+#[derive(Default)]
+struct ScopeSync {
+    state: Mutex<ScopeState>,
+    done: Condvar,
+}
+
+#[derive(Default)]
+struct ScopeState {
+    pending: usize,
+    panicked_jobs: usize,
+    first_panic: Option<String>,
+}
+
+impl ScopeSync {
+    fn fork(&self) {
+        self.state.lock().expect("scope state").pending += 1;
+    }
+
+    /// Mark one job finished (with its panic payload, if any) and wake
+    /// the joining thread when it was the last.
+    fn join_one(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut st = self.state.lock().expect("scope state");
+        if let Some(p) = panic {
+            st.panicked_jobs += 1;
+            if st.first_panic.is_none() {
+                st.first_panic = Some(panic_message(p.as_ref()));
+            }
+        }
+        st.pending -= 1;
+        if st.pending == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Record a panic from an inline (serial-mode) job.
+    fn record_panic(&self, p: Box<dyn std::any::Any + Send>) {
+        let mut st = self.state.lock().expect("scope state");
+        st.panicked_jobs += 1;
+        if st.first_panic.is_none() {
+            st.first_panic = Some(panic_message(p.as_ref()));
+        }
+    }
+
+    fn wait_all(&self) {
+        let mut st = self.state.lock().expect("scope state");
+        while st.pending > 0 {
+            st = self.done.wait(st).expect("scope wait");
+        }
+    }
+
+    fn take_failure(&self) -> Option<ScopeError> {
+        let mut st = self.state.lock().expect("scope state");
+        if st.panicked_jobs == 0 {
+            return None;
+        }
+        let err = ScopeError {
+            panicked_jobs: st.panicked_jobs,
+            first_panic: st
+                .first_panic
+                .take()
+                .unwrap_or_else(|| "<no payload>".into()),
+        };
+        st.panicked_jobs = 0;
+        Some(err)
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".into()
+    }
+}
+
+/// Handle onto a pool's live-worker counter that outlives the pool —
+/// lets tests assert that dropping the pool joins every thread (the
+/// no-leak bookkeeping the stress suite checks across 1k steps).
+#[derive(Clone)]
+pub struct PoolProbe(Arc<AtomicUsize>);
+
+impl PoolProbe {
+    /// Worker threads currently alive in the probed pool.
+    pub fn live(&self) -> usize {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Decrements the live counter even if a worker unwinds.
+struct LiveGuard(Arc<AtomicUsize>);
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Fixed set of worker threads around one channel-based work queue.
+pub struct WorkerPool {
+    /// Job sender; `None` in serial mode. Dropping it (pool drop) is the
+    /// workers' shutdown signal.
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    live: Arc<AtomicUsize>,
+    /// Cumulative nanoseconds of job execution (all scopes) — the
+    /// "busy" side of the engine's parallel wall/busy decode metrics.
+    busy_ns: Arc<AtomicU64>,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` workers. `threads <= 1` spawns nothing and
+    /// runs jobs inline on the caller (the exact serial path).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return WorkerPool {
+                tx: None,
+                workers: Vec::new(),
+                threads,
+                live: Arc::new(AtomicUsize::new(0)),
+                busy_ns: Arc::new(AtomicU64::new(0)),
+            };
+        }
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let live = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let live = Arc::clone(&live);
+                live.fetch_add(1, Ordering::SeqCst);
+                std::thread::Builder::new()
+                    .name(format!("turbo-pool-{i}"))
+                    .spawn(move || worker_loop(rx, live))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            tx: Some(tx),
+            workers,
+            threads,
+            live,
+            busy_ns: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn with_default_threads() -> WorkerPool {
+        WorkerPool::new(default_threads())
+    }
+
+    /// Configured parallelism (1 for the serial pool).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when jobs run inline on the caller.
+    pub fn is_serial(&self) -> bool {
+        self.tx.is_none()
+    }
+
+    /// Cumulative time spent executing jobs, summed across all workers
+    /// and all scopes. Sample before/after a region to get its busy
+    /// time. A serial pool accumulates whole-scope time instead of
+    /// per-job time — same total, but the inline fast path pays no
+    /// per-job clock reads.
+    pub fn busy(&self) -> Duration {
+        Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed))
+    }
+
+    /// Counter handle for leak tests — see [`PoolProbe`].
+    pub fn probe(&self) -> PoolProbe {
+        PoolProbe(Arc::clone(&self.live))
+    }
+
+    /// Fork/join region. Jobs submitted via [`Scope::execute`] may
+    /// borrow anything that outlives the `scope` call; the call returns
+    /// only after every job has finished. Returns the closure's value,
+    /// or [`ScopeError`] if any job panicked (the pool stays usable).
+    ///
+    /// If `f` itself panics, already-submitted jobs are still joined
+    /// before the panic resumes unwinding (borrowed data must outlive
+    /// running jobs).
+    pub fn scope<'pool, 'scope, R, F>(&'pool self, f: F) -> Result<R, ScopeError>
+    where
+        F: FnOnce(&Scope<'pool, 'scope>) -> R,
+    {
+        let scope = Scope {
+            pool: self,
+            sync: Arc::new(ScopeSync::default()),
+            _scope: std::marker::PhantomData,
+        };
+        // Serial pools time the whole scope (inline jobs are the body),
+        // keeping the per-job fast path free of clock reads.
+        let serial_t0 = self.tx.is_none().then(Instant::now);
+        let out = {
+            // Join-on-drop guard: runs on normal exit *and* if `f`
+            // unwinds, so no job can outlive its borrows either way.
+            let _join = JoinGuard(&scope.sync);
+            f(&scope)
+        };
+        if let Some(t0) = serial_t0 {
+            self.busy_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        match scope.sync.take_failure() {
+            Some(err) => Err(err),
+            None => Ok(out),
+        }
+    }
+}
+
+struct JoinGuard<'a>(&'a ScopeSync);
+
+impl Drop for JoinGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait_all();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channel is the shutdown signal; then join so no
+        // worker outlives the pool (leak-free across sessions).
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, live: Arc<AtomicUsize>) {
+    let _guard = LiveGuard(live);
+    loop {
+        // Take the lock only to pull the next job; run it unlocked so
+        // workers execute concurrently.
+        let job = {
+            let rx = rx.lock().expect("pool queue");
+            rx.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => break, // channel closed: pool dropped
+        }
+    }
+}
+
+/// Fork handle passed to the closure of [`WorkerPool::scope`].
+///
+/// Invariant in `'scope` (the `Cell` marker) so borrows captured by
+/// jobs cannot be shortened below the scope region — the same trick as
+/// `std::thread::scope`.
+pub struct Scope<'pool, 'scope> {
+    pool: &'pool WorkerPool,
+    sync: Arc<ScopeSync>,
+    _scope: std::marker::PhantomData<std::cell::Cell<&'scope ()>>,
+}
+
+impl<'pool, 'scope> Scope<'pool, 'scope> {
+    /// Submit one job. On a serial pool it runs immediately, inline, in
+    /// submission order; otherwise it is queued for the workers. Panics
+    /// are caught either way and surface as the scope's `ScopeError`.
+    pub fn execute<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        let Some(tx) = &self.pool.tx else {
+            // Serial inline path: no per-job timing (the enclosing
+            // scope is timed as a whole), no queue round trip.
+            if let Err(p) = catch_unwind(AssertUnwindSafe(f)) {
+                self.sync.record_panic(p);
+            }
+            return;
+        };
+        let busy = Arc::clone(&self.pool.busy_ns);
+        self.sync.fork();
+        let sync = Arc::clone(&self.sync);
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+            let t0 = Instant::now();
+            let result = catch_unwind(AssertUnwindSafe(f));
+            busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            sync.join_one(result.err());
+        });
+        // SAFETY: the job cannot outlive `'scope`: every path out of
+        // `WorkerPool::scope` (normal return or unwind) first blocks on
+        // `ScopeSync::wait_all`, so the closure — and every borrow it
+        // captured — is consumed before the borrows can expire. The
+        // transmute only erases the lifetime; layout is identical.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+        };
+        tx.send(job).expect("worker pool queue closed");
+    }
+
+    /// The pool this scope forks onto.
+    pub fn pool(&self) -> &'pool WorkerPool {
+        self.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scope_runs_all_jobs_and_returns_value() {
+        for threads in [1, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let hits = AtomicUsize::new(0);
+            let r = pool
+                .scope(|s| {
+                    for _ in 0..17 {
+                        s.execute(|| {
+                            hits.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                    "done"
+                })
+                .expect("no panics");
+            assert_eq!(r, "done");
+            assert_eq!(hits.load(Ordering::SeqCst), 17, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn disjoint_mut_borrows_cross_into_jobs() {
+        // The whole point of the scoped design: jobs borrow disjoint
+        // &mut shards of caller-owned data, no 'static required.
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0usize; 32];
+        pool.scope(|s| {
+            for (i, chunk) in data.chunks_mut(8).enumerate() {
+                s.execute(move || {
+                    for (j, x) in chunk.iter_mut().enumerate() {
+                        *x = i * 8 + j;
+                    }
+                });
+            }
+        })
+        .expect("no panics");
+        let want: Vec<usize> = (0..32).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn empty_scope_is_fine() {
+        let pool = WorkerPool::new(4);
+        let r = pool.scope(|_| 7).expect("empty scope");
+        assert_eq!(r, 7);
+    }
+
+    #[test]
+    fn more_jobs_than_threads_and_fewer() {
+        let pool = WorkerPool::new(8);
+        for n_jobs in [1usize, 3, 8, 40] {
+            let hits = AtomicUsize::new(0);
+            pool.scope(|s| {
+                for _ in 0..n_jobs {
+                    s.execute(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            })
+            .expect("no panics");
+            assert_eq!(hits.load(Ordering::SeqCst), n_jobs);
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_inline_in_order() {
+        let pool = WorkerPool::new(1);
+        assert!(pool.is_serial());
+        assert_eq!(pool.threads(), 1);
+        let caller = std::thread::current().id();
+        let order = Mutex::new(Vec::new());
+        pool.scope(|s| {
+            for i in 0..5 {
+                let order = &order;
+                s.execute(move || {
+                    assert_eq!(std::thread::current().id(), caller);
+                    order.lock().unwrap().push(i);
+                });
+            }
+        })
+        .expect("no panics");
+        assert_eq!(order.into_inner().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_pool_uses_worker_threads() {
+        let pool = WorkerPool::new(2);
+        let caller = std::thread::current().id();
+        pool.scope(|s| {
+            s.execute(move || {
+                assert_ne!(std::thread::current().id(), caller);
+            });
+        })
+        .expect("no panics");
+    }
+
+    #[test]
+    fn panic_in_job_is_err_not_poison() {
+        for threads in [1, 4] {
+            let pool = WorkerPool::new(threads);
+            let err = pool
+                .scope(|s| {
+                    s.execute(|| panic!("shard exploded"));
+                    s.execute(|| {}); // healthy sibling still runs
+                })
+                .expect_err("must surface the panic");
+            assert_eq!(err.panicked_jobs, 1);
+            assert!(err.first_panic.contains("shard exploded"), "{err}");
+            // Later steps are unaffected: same pool, clean scope.
+            let hits = AtomicUsize::new(0);
+            pool.scope(|s| {
+                for _ in 0..4 {
+                    s.execute(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            })
+            .expect("pool not poisoned");
+            assert_eq!(hits.load(Ordering::SeqCst), 4);
+        }
+    }
+
+    #[test]
+    fn multiple_panics_counted() {
+        let pool = WorkerPool::new(2);
+        let err = pool
+            .scope(|s| {
+                for i in 0..3 {
+                    s.execute(move || panic!("boom {i}"));
+                }
+            })
+            .expect_err("panics");
+        assert_eq!(err.panicked_jobs, 3);
+        assert!(err.first_panic.contains("boom"));
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(3);
+        let probe = pool.probe();
+        assert_eq!(probe.live(), 3);
+        pool.scope(|s| {
+            for _ in 0..6 {
+                s.execute(|| {});
+            }
+        })
+        .expect("no panics");
+        assert_eq!(probe.live(), 3, "scopes neither spawn nor kill workers");
+        drop(pool);
+        assert_eq!(probe.live(), 0, "drop must join every worker");
+    }
+
+    #[test]
+    fn reuse_across_many_steps_leaks_no_threads() {
+        // The decode loop calls one scope per step for the lifetime of a
+        // session; 1k steps must keep the worker set exactly fixed.
+        let pool = WorkerPool::new(2);
+        let probe = pool.probe();
+        let total = AtomicUsize::new(0);
+        for _ in 0..1000 {
+            pool.scope(|s| {
+                for _ in 0..4 {
+                    s.execute(|| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            })
+            .expect("no panics");
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4000);
+        assert_eq!(probe.live(), 2);
+        drop(pool);
+        assert_eq!(probe.live(), 0);
+    }
+
+    #[test]
+    fn busy_time_accumulates() {
+        for threads in [1, 2] {
+            let pool = WorkerPool::new(threads);
+            let before = pool.busy();
+            pool.scope(|s| {
+                for _ in 0..2 {
+                    s.execute(|| {
+                        std::thread::sleep(Duration::from_millis(5));
+                    });
+                }
+            })
+            .expect("no panics");
+            let busy = pool.busy() - before;
+            assert!(
+                busy >= Duration::from_millis(9),
+                "threads={threads}: busy {busy:?} must sum both jobs"
+            );
+        }
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+        assert!(WorkerPool::with_default_threads().threads() >= 1);
+    }
+
+    #[test]
+    fn scope_error_formats() {
+        let e = ScopeError { panicked_jobs: 2, first_panic: "k".into() };
+        let s = format!("{e}");
+        assert!(s.contains('2') && s.contains('k'));
+    }
+
+    #[test]
+    fn balanced_chunks_cover_exactly() {
+        for n_items in 0..40usize {
+            for max_jobs in 1..10usize {
+                let sizes: Vec<usize> =
+                    balanced_chunk_sizes(n_items, max_jobs).collect();
+                assert_eq!(
+                    sizes.iter().sum::<usize>(),
+                    n_items,
+                    "n={n_items} jobs={max_jobs}"
+                );
+                assert_eq!(sizes.len(), max_jobs.min(n_items));
+                if let (Some(max), Some(min)) =
+                    (sizes.iter().max(), sizes.iter().min())
+                {
+                    assert!(max - min <= 1, "{sizes:?}");
+                    assert!(*min >= 1, "no empty group: {sizes:?}");
+                }
+            }
+        }
+        assert_eq!(balanced_chunk_sizes(5, 0).sum::<usize>(), 5);
+    }
+}

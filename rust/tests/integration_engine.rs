@@ -175,6 +175,39 @@ fn mixed_precision_engine_still_generates() {
 }
 
 #[test]
+fn decode_threads_do_not_change_generation() {
+    // Engine-level arm of the determinism contract (the library-level
+    // arm is rust/tests/parallel_parity.rs): the same prompt under
+    // greedy decoding must generate identical bytes for every
+    // decode_threads, since the pool only reorders disjoint per-stream
+    // work. Needs artifacts because engine decode runs the executable.
+    let run = |threads: usize| -> Option<Vec<u8>> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let rt = Runtime::load("artifacts").expect("runtime");
+        let cfg = EngineConfig {
+            mode: PathMode::Turbo,
+            sampler: Sampler::Greedy,
+            decode_threads: threads,
+            ..Default::default()
+        };
+        let mut e = Engine::new(ModelBundle::new(rt), cfg);
+        e.submit(GenRequest::new(1, b"the pool shards heads ".to_vec(), 24));
+        Some(e.run_to_completion().expect("run")[0].generated.clone())
+    };
+    let Some(serial) = run(1) else { return };
+    for threads in [2usize, 4, 7] {
+        let parallel = run(threads).unwrap();
+        assert_eq!(
+            serial, parallel,
+            "decode_threads={threads} changed greedy generation"
+        );
+    }
+}
+
+#[test]
 fn deterministic_given_seed() {
     let run = || {
         let mut e = engine(PathMode::Turbo)?;

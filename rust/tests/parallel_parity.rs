@@ -1,0 +1,391 @@
+//! Parallel-decode determinism/parity suite — the contract behind
+//! `EngineConfig.decode_threads`.
+//!
+//! The headline property: for random model geometries, precision maps,
+//! prompts, and decode traces, running the turbo decode path with
+//! `decode_threads ∈ {1, 2, 4, 7}` must produce **byte-identical**
+//! results — attention outputs and (m, l) merge states compared with
+//! `f32::to_bits` (no tolerance), and `CacheStats` compared exactly.
+//! Parallelism is purely a throughput knob; a single flipped bit here is
+//! a scheduling bug, not noise.
+//!
+//! Plus the pool soundness corners the decode loop relies on: worker
+//! panics surface as `Err` without poisoning later steps, zero-head and
+//! heads-smaller-than-pool geometries, and thread-leak-free reuse across
+//! 1k decode steps.
+
+use std::sync::Arc;
+
+use turboattention::attention::backend::TurboSession;
+use turboattention::attention::{turbo_decode_streams, DecodeScratch};
+use turboattention::kvcache::{
+    CacheStats, KvCache, KvCacheConfig, PrecisionMap,
+};
+use turboattention::model::TurboSlabs;
+use turboattention::pool::WorkerPool;
+use turboattention::quant::{quant_sym_int8, Bits};
+use turboattention::testutil::prop::Gen;
+use turboattention::testutil::{prop, Rng};
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+
+/// One randomized decode trace, fully determined by its fields — the
+/// same `Case` replayed at any thread count consumes randomness
+/// identically, so any output difference is the scheduler's fault.
+#[derive(Debug, Clone, Copy)]
+struct Case {
+    l_n: usize,
+    h_n: usize,
+    dh: usize,
+    block: usize,
+    /// Slab capacity in tokens (page-aligned).
+    ctx: usize,
+    /// Prompt tokens ingested q1-block-style before decode.
+    prefill: usize,
+    /// Decode steps (one folded token each).
+    steps: usize,
+    /// Call `sync_slabs` every this many steps (plus a final sync).
+    sync_every: usize,
+    /// Heads per layer stored at 2-bit (mixed precision).
+    n_2bit: usize,
+    seed: u64,
+}
+
+impl Case {
+    fn gen(g: &mut Gen) -> Case {
+        let l_n = g.usize_in(1, 4);
+        let h_n = g.usize_in(1, 5);
+        let block = 4;
+        let ctx = 32;
+        let prefill = g.usize_in(0, 12);
+        Case {
+            l_n,
+            h_n,
+            dh: g.usize_in(4, 16),
+            block,
+            ctx,
+            prefill,
+            steps: g.usize_in(1, ctx - 1 - prefill),
+            sync_every: g.usize_in(1, 4),
+            n_2bit: g.usize_in(0, h_n + 1).min(h_n),
+            seed: g.seed(),
+        }
+    }
+}
+
+/// Everything the decode path produced, bit-exact.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    out_bits: Vec<u32>,
+    ml_bits: Vec<(u32, u32)>,
+    nk: usize,
+    stats: CacheStats,
+}
+
+fn run_case(case: &Case, threads: usize) -> Trace {
+    let Case { l_n, h_n, dh, block, ctx, .. } = *case;
+    let n_streams = l_n * h_n;
+    let pool = Arc::new(WorkerPool::new(threads));
+    let mut pm = PrecisionMap::uniform(l_n, h_n, Bits::Int4);
+    for l in 0..l_n {
+        for h in 0..case.n_2bit {
+            pm.set(l, h, Bits::Int2);
+        }
+    }
+    let cache = KvCache::new(KvCacheConfig::new(l_n, h_n, dh, block, pm));
+    let mut sess = TurboSession::from_parts_pooled(
+        cache,
+        TurboSlabs::new(l_n, h_n, ctx, dh, block),
+        Arc::clone(&pool),
+    );
+    let mut rng = Rng::new(case.seed);
+    // "Prompt": q1 blocks ingested per stream, like `ingest_prefill`.
+    if case.prefill > 0 {
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let k = quant_sym_int8(&rng.normal_vec(case.prefill * dh, 1.0));
+                sess.cache.k_stream_mut(l, h).ingest_q1_block(
+                    &k.codes,
+                    k.scale,
+                    case.prefill,
+                );
+                let v = quant_sym_int8(&rng.normal_vec(case.prefill * dh, 1.0));
+                sess.cache.v_stream_mut(l, h).ingest_q1_block(
+                    &v.codes,
+                    v.scale,
+                    case.prefill,
+                );
+            }
+        }
+    }
+    // Decode trace: fold one token per step, sync at intervals (so the
+    // incremental paths — partial buffers, flush rewrites — all fire).
+    for i in 0..case.steps {
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let k = rng.normal_vec(dh, 1.0);
+                let v = rng.normal_vec(dh, 1.0);
+                sess.cache.k_stream_mut(l, h).push_token(&k);
+                sess.cache.v_stream_mut(l, h).push_token(&v);
+            }
+        }
+        if i % case.sync_every == 0 {
+            sess.sync_slabs().expect("mid-trace sync");
+        }
+    }
+    let nk = sess.sync_slabs().expect("final sync");
+    // The decode step's attention over every (layer, head) stream.
+    let q = rng.normal_vec(n_streams * dh, 1.0);
+    let mut scratches = vec![DecodeScratch::new(); threads.max(1)];
+    let mut ml = vec![(0.0f32, 0.0f32); n_streams];
+    let mut out = vec![0.0f32; n_streams * dh];
+    turbo_decode_streams(
+        &pool,
+        &q,
+        &sess.slabs.k8,
+        &sess.slabs.v8,
+        &sess.slabs.sk,
+        &sess.slabs.sv,
+        dh,
+        nk,
+        block,
+        -6.0,
+        &mut scratches,
+        &mut ml,
+        &mut out,
+    )
+    .expect("decode streams");
+    Trace {
+        out_bits: out.iter().map(|x| x.to_bits()).collect(),
+        ml_bits: ml
+            .iter()
+            .map(|&(m, l)| (m.to_bits(), l.to_bits()))
+            .collect(),
+        nk,
+        stats: sess.cache.stats(),
+    }
+}
+
+/// The headline test: thread count must never change a bit of decode
+/// output or a byte of cache accounting.
+#[test]
+fn decode_bit_identical_across_thread_counts() {
+    prop::run("parallel decode parity", 20, |g| {
+        let case = Case::gen(g);
+        let want = run_case(&case, 1);
+        assert_eq!(want.nk, case.prefill + case.steps, "trace sanity");
+        for &threads in &THREADS[1..] {
+            let got = run_case(&case, threads);
+            assert_eq!(
+                got, want,
+                "threads={threads} diverged from serial ({case:?})"
+            );
+        }
+    });
+}
+
+/// Repeating the same trace on the same multi-thread pool is also
+/// deterministic (no cross-step scheduler state bleeds into results).
+#[test]
+fn repeated_runs_on_same_thread_count_identical() {
+    let g_case = Case {
+        l_n: 2,
+        h_n: 4,
+        dh: 8,
+        block: 4,
+        ctx: 32,
+        prefill: 5,
+        steps: 17,
+        sync_every: 2,
+        n_2bit: 1,
+        seed: 0xFEED,
+    };
+    let a = run_case(&g_case, 4);
+    let b = run_case(&g_case, 4);
+    assert_eq!(a, b);
+}
+
+/// Heads < threads: a 7-thread pool over a single (layer, head) stream
+/// still matches serial exactly.
+#[test]
+fn single_head_with_wide_pool_matches_serial() {
+    let case = Case {
+        l_n: 1,
+        h_n: 1,
+        dh: 8,
+        block: 4,
+        ctx: 32,
+        prefill: 3,
+        steps: 9,
+        sync_every: 1,
+        n_2bit: 0,
+        seed: 0xBEE,
+    };
+    assert_eq!(run_case(&case, 1), run_case(&case, 7));
+}
+
+/// Zero heads: degenerate geometry must be a clean no-op, not a panic.
+#[test]
+fn zero_head_geometry_syncs_to_empty() {
+    let pm = PrecisionMap::uniform(0, 0, Bits::Int4);
+    let cache = KvCache::new(KvCacheConfig::new(0, 0, 8, 4, pm));
+    let mut sess = TurboSession::from_parts_pooled(
+        cache,
+        TurboSlabs::new(0, 0, 32, 8, 4),
+        Arc::new(WorkerPool::new(4)),
+    );
+    assert_eq!(sess.sync_slabs().expect("empty sync"), 0);
+    // Decode over zero streams is likewise a no-op.
+    let pool = WorkerPool::new(4);
+    let mut scratches = vec![DecodeScratch::new(); 4];
+    turbo_decode_streams(
+        &pool,
+        &[],
+        &[],
+        &[],
+        &[],
+        &[],
+        8,
+        0,
+        4,
+        -6.0,
+        &mut scratches,
+        &mut [],
+        &mut [],
+    )
+    .expect("zero streams");
+}
+
+/// A panicked scope on the session's pool must not poison later decode
+/// steps: the same pool keeps serving, and results still match a fresh
+/// serial replay of the same trace.
+#[test]
+fn worker_panic_does_not_poison_later_decode_steps() {
+    let case = Case {
+        l_n: 2,
+        h_n: 3,
+        dh: 8,
+        block: 4,
+        ctx: 32,
+        prefill: 4,
+        steps: 11,
+        sync_every: 3,
+        n_2bit: 0,
+        seed: 0xD00D,
+    };
+    let pool = Arc::new(WorkerPool::new(4));
+    // Crash a shard-shaped job on the shared pool before any decode.
+    let err = pool
+        .scope(|s| {
+            s.execute(|| panic!("injected shard failure"));
+            s.execute(|| {});
+        })
+        .expect_err("panic must surface");
+    assert!(err.first_panic.contains("injected shard failure"));
+    // The very same pool now runs a full trace; byte-parity with serial.
+    let pm = PrecisionMap::uniform(case.l_n, case.h_n, Bits::Int4);
+    let cache = KvCache::new(KvCacheConfig::new(
+        case.l_n, case.h_n, case.dh, case.block, pm,
+    ));
+    let mut sess = TurboSession::from_parts_pooled(
+        cache,
+        TurboSlabs::new(case.l_n, case.h_n, case.ctx, case.dh, case.block),
+        Arc::clone(&pool),
+    );
+    let mut rng = Rng::new(case.seed);
+    for _ in 0..case.steps {
+        for l in 0..case.l_n {
+            for h in 0..case.h_n {
+                let k = rng.normal_vec(case.dh, 1.0);
+                let v = rng.normal_vec(case.dh, 1.0);
+                sess.cache.k_stream_mut(l, h).push_token(&k);
+                sess.cache.v_stream_mut(l, h).push_token(&v);
+            }
+        }
+        sess.sync_slabs().expect("post-panic sync");
+    }
+    // Oracle: same trace, fresh serial session. Compare the slabs the
+    // decode executable would read.
+    let pm = PrecisionMap::uniform(case.l_n, case.h_n, Bits::Int4);
+    let cache = KvCache::new(KvCacheConfig::new(
+        case.l_n, case.h_n, case.dh, case.block, pm,
+    ));
+    let mut serial = TurboSession::from_parts(
+        cache,
+        TurboSlabs::new(case.l_n, case.h_n, case.ctx, case.dh, case.block),
+    );
+    let mut rng = Rng::new(case.seed);
+    for _ in 0..case.steps {
+        for l in 0..case.l_n {
+            for h in 0..case.h_n {
+                let k = rng.normal_vec(case.dh, 1.0);
+                let v = rng.normal_vec(case.dh, 1.0);
+                serial.cache.k_stream_mut(l, h).push_token(&k);
+                serial.cache.v_stream_mut(l, h).push_token(&v);
+            }
+        }
+        serial.sync_slabs().expect("serial sync");
+    }
+    assert_eq!(sess.slabs.k8, serial.slabs.k8);
+    assert_eq!(sess.slabs.v8, serial.slabs.v8);
+    assert_eq!(sess.slabs.sk, serial.slabs.sk);
+    assert_eq!(sess.slabs.sv, serial.slabs.sv);
+}
+
+/// 1k decode steps on one pool: the worker set stays exactly fixed (no
+/// thread leaks from per-step scopes) and is fully joined on drop.
+#[test]
+fn thousand_step_decode_loop_leaks_no_threads() {
+    let (l_n, h_n, dh, block) = (1usize, 2, 4, 8);
+    let steps = 1000usize;
+    let ctx = steps + block; // slab headroom, page-aligned
+    let pool = Arc::new(WorkerPool::new(2));
+    let probe = pool.probe();
+    assert_eq!(probe.live(), 2);
+    let pm = PrecisionMap::uniform(l_n, h_n, Bits::Int4);
+    let cache = KvCache::new(KvCacheConfig::new(l_n, h_n, dh, block, pm));
+    let mut sess = TurboSession::from_parts_pooled(
+        cache,
+        TurboSlabs::new(l_n, h_n, ctx, dh, block),
+        Arc::clone(&pool),
+    );
+    let mut rng = Rng::new(7);
+    let mut scratches = vec![DecodeScratch::new(); 2];
+    let mut ml = vec![(0.0f32, 0.0f32); l_n * h_n];
+    let mut out = vec![0.0f32; l_n * h_n * dh];
+    for step in 0..steps {
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let k = rng.normal_vec(dh, 1.0);
+                let v = rng.normal_vec(dh, 1.0);
+                sess.cache.k_stream_mut(l, h).push_token(&k);
+                sess.cache.v_stream_mut(l, h).push_token(&v);
+            }
+        }
+        let nk = sess.sync_slabs().expect("sync");
+        assert_eq!(nk, step + 1);
+        if step % 100 == 0 {
+            let q = rng.normal_vec(l_n * h_n * dh, 1.0);
+            turbo_decode_streams(
+                &pool,
+                &q,
+                &sess.slabs.k8,
+                &sess.slabs.v8,
+                &sess.slabs.sk,
+                &sess.slabs.sv,
+                dh,
+                nk,
+                block,
+                -6.0,
+                &mut scratches,
+                &mut ml,
+                &mut out,
+            )
+            .expect("decode");
+        }
+    }
+    assert_eq!(probe.live(), 2, "pool must neither grow nor shrink");
+    drop(sess);
+    drop(pool);
+    assert_eq!(probe.live(), 0, "drop must join every worker");
+}

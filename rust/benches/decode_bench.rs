@@ -1,6 +1,7 @@
-//! Decode-step cost vs. context length and worker-thread count.
+//! Decode-step cost vs. context length, worker-thread count, and
+//! kernelization.
 //!
-//! Two questions, all on the pure-Rust substrate (no artifacts needed):
+//! Three questions, all on the pure-Rust substrate (no artifacts needed):
 //!
 //! 1. **Asymptotics** — the incremental `Q1View` + persistent slabs vs
 //!    the seed path's per-token full-cache rematerialization:
@@ -24,17 +25,32 @@
 //!      scheduling win.
 //!    * `decode-step flash` — fold (one memcpy per stream) + exact
 //!      float attention, the baseline backend's step shape.
+//!
+//! 3. **Kernels vs scalar** — the integer micro-kernels
+//!    (`qk_dot_block`/`ipv_acc`/`Sas::exp_block` inside
+//!    `turbo_decode_into`) against the seed scalar loop
+//!    (`turbo_decode_into_scalar`), at every (ctx, threads) point:
+//!    `attn turbo tN` / `attn turbo-scalar tN` time **only** the
+//!    stream fan-out over a pre-synced frozen cache (no fold, sync, or
+//!    RNG in the timed body), so the speedup isolates the
+//!    kernelization.
+//!
+//! `--json` additionally writes every case plus the computed speedups to
+//! `BENCH_decode.json` (the perf-trajectory artifact).
 
 use std::sync::Arc;
 
 use turboattention::attention::backend::TurboSession;
-use turboattention::attention::{turbo_decode_streams, DecodeScratch};
+use turboattention::attention::{
+    turbo_decode_streams, turbo_decode_streams_scalar, DecodeScratch,
+};
 use turboattention::bench::Bencher;
 use turboattention::kvcache::{KvCache, KvCacheConfig, PrecisionMap};
 use turboattention::model::TurboSlabs;
 use turboattention::pool::WorkerPool;
 use turboattention::quant::Bits;
 use turboattention::testutil::Rng;
+use turboattention::util::cli::Args;
 
 const L: usize = 2;
 const H: usize = 4;
@@ -123,8 +139,10 @@ fn flash_attend(q: &[f32], kf: &[f32], vf: &[f32], nk: usize, out: &mut [f32]) {
 }
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let emit_json = args.flag("json");
     println!(
-        "== bench: decode step vs context and threads \
+        "== bench: decode step vs context, threads, and kernelization \
          (Q1View slabs + worker pool) ==\n"
     );
     // Cap iterations so a case's token folds stay within SLACK.
@@ -189,6 +207,46 @@ fn main() {
             });
         }
 
+        // Kernel vs scalar, attention only: a pre-synced frozen session
+        // (no fold, no sync, no RNG in the timed body), so the recorded
+        // speedup isolates the kernelization of `turbo_decode_into`.
+        for &threads in &thread_sweep {
+            let mut sess = new_session(ctx, &mut rng, threads);
+            let pool = Arc::clone(sess.pool());
+            let nk = sess.sync_slabs().expect("sync");
+            let mut scratches = vec![DecodeScratch::new(); threads];
+            let mut ml = vec![(0.0f32, 0.0f32); L * H];
+            let mut out = vec![0.0f32; L * H * DH];
+            let q = rng.normal_vec(L * H * DH, 1.0);
+            for scalar in [false, true] {
+                let run = if scalar {
+                    turbo_decode_streams_scalar
+                } else {
+                    turbo_decode_streams
+                };
+                let variant = if scalar { "turbo-scalar" } else { "turbo" };
+                b.bench(&format!("attn {variant} t{threads} ctx={ctx}"), || {
+                    run(
+                        &pool,
+                        &q,
+                        &sess.slabs.k8,
+                        &sess.slabs.v8,
+                        &sess.slabs.sk,
+                        &sess.slabs.sv,
+                        DH,
+                        nk,
+                        BLOCK,
+                        -6.0,
+                        &mut scratches,
+                        &mut ml,
+                        &mut out,
+                    )
+                    .expect("decode");
+                    out[0]
+                });
+            }
+        }
+
         let max_ctx = ctx + SLACK;
         let mut kf = vec![0.0f32; L * H * max_ctx * DH];
         let mut vf = vec![0.0f32; L * H * max_ctx * DH];
@@ -243,17 +301,57 @@ fn main() {
             remat
         );
     }
-    println!("\nthread-sweep speedup vs t1 (same ctx):");
+    println!("\nthread-sweep speedup vs t1 (same ctx, kernelized):");
+    let mut thread_speedups = Vec::new();
     for &ctx in &contexts {
         let base = format!("decode-step turbo t1 ctx={ctx}");
         let mut line = format!("  ctx={ctx:<5}");
         for &t in &thread_sweep[1..] {
             let name = format!("decode-step turbo t{t} ctx={ctx}");
             match b.speedup(&base, &name) {
-                Some(s) => line.push_str(&format!("  t{t}: {s:.2}x")),
+                Some(s) => {
+                    line.push_str(&format!("  t{t}: {s:.2}x"));
+                    thread_speedups.push(format!(
+                        "{{\"ctx\":{ctx},\"threads\":{t},\"speedup\":{s:.4}}}"
+                    ));
+                }
                 None => line.push_str(&format!("  t{t}: n/a")),
             }
         }
         println!("{line}");
+    }
+    println!("\nkernel speedup over scalar (attention only, same ctx/threads):");
+    let mut kernel_speedups = Vec::new();
+    for &ctx in &contexts {
+        let mut line = format!("  ctx={ctx:<5}");
+        for &t in &thread_sweep {
+            let scalar = format!("attn turbo-scalar t{t} ctx={ctx}");
+            let kernel = format!("attn turbo t{t} ctx={ctx}");
+            match b.speedup(&scalar, &kernel) {
+                Some(s) => {
+                    line.push_str(&format!("  t{t}: {s:.2}x"));
+                    kernel_speedups.push(format!(
+                        "{{\"ctx\":{ctx},\"threads\":{t},\"speedup\":{s:.4}}}"
+                    ));
+                }
+                None => line.push_str(&format!("  t{t}: n/a")),
+            }
+        }
+        println!("{line}");
+    }
+
+    if emit_json {
+        let payload = format!(
+            "{{\n  \"bench\": \"decode\",\n  \"geometry\": {{\"layers\": {L}, \
+             \"heads\": {H}, \"d_head\": {DH}, \"block\": {BLOCK}}},\n  \
+             \"cases\": {},\n  \"kernel_vs_scalar\": [{}],\n  \
+             \"thread_speedup_vs_t1\": [{}]\n}}\n",
+            b.results_json(),
+            kernel_speedups.join(","),
+            thread_speedups.join(",")
+        );
+        std::fs::write("BENCH_decode.json", &payload)
+            .expect("write BENCH_decode.json");
+        println!("\nwrote BENCH_decode.json");
     }
 }

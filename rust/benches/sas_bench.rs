@@ -1,12 +1,30 @@
 //! SAS microbenchmarks (Figure 5 + the §4 "softmax is 30% of attention"
 //! claim): exact FP32 exp softmax vs SAS LUT+POLY softmax on the CPU
-//! substrate, plus accuracy of the fit.
+//! substrate — scalar `Sas::exp` vs the branch-free batched
+//! `Sas::exp_block` the decode kernels use — plus accuracy of the fit.
+//!
+//! `--json` writes every case and the computed speedups to
+//! `BENCH_sas.json`.
 
 use turboattention::bench::Bencher;
 use turboattention::sas::{softmax_row_exact, Sas};
 use turboattention::testutil::Rng;
+use turboattention::util::cli::Args;
+
+/// Row softmax through the batched evaluator (max + `exp_block` + one
+/// normalization pass) — the decode-loop shape.
+fn softmax_row_block(sas: &Sas, row: &mut [f32]) {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let sum = sas.exp_block(row, m);
+    let inv = 1.0 / sum.max(1e-20);
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let emit_json = args.flag("json");
     println!("== bench: SAS softmax (Figure 5 / §4) ==\n");
     let mut rng = Rng::new(0);
     let rows = 256;
@@ -22,39 +40,96 @@ fn main() {
         }
         m
     });
-    b.bench("softmax/SAS 256x1024", || {
+    b.bench("softmax/SAS-scalar 256x1024", || {
         let mut m = data.clone();
         for r in 0..rows {
             sas.softmax_row(&mut m[r * cols..(r + 1) * cols]);
         }
         m
     });
-    if let Some(s) = b.speedup("softmax/exact-exp 256x1024", "softmax/SAS 256x1024") {
-        println!("\nSAS speedup over exact exp: {s:.2}x");
-    }
-
-    // Element-level exp throughput.
-    let xs: Vec<f32> = (0..65536).map(|i| -(i as f32) / 11000.0).collect();
-    b.bench("exp/libm 64k elems", || {
-        xs.iter().map(|&x| x.exp()).sum::<f32>()
+    b.bench("softmax/SAS-block 256x1024", || {
+        let mut m = data.clone();
+        for r in 0..rows {
+            softmax_row_block(&sas, &mut m[r * cols..(r + 1) * cols]);
+        }
+        m
     });
-    b.bench("exp/SAS 64k elems", || {
-        xs.iter().map(|&x| sas.exp(x)).sum::<f32>()
-    });
-    if let Some(s) = b.speedup("exp/libm 64k elems", "exp/SAS 64k elems") {
-        println!("\nSAS elementwise speedup over libm expf: {s:.2}x");
-    }
-
-    println!(
-        "\naccuracy: poly max err on [0,1] = {:.2e}, SAS max err on [-6,0] = {:.2e}",
-        {
-            let mut w = 0.0f32;
-            for i in 0..=1000 {
-                let t = i as f32 / 1000.0;
-                w = w.max((Sas::poly(t) - (-t).exp()).abs());
-            }
-            w
-        },
-        sas.max_abs_error(-6.0, 6000)
+    let sas_vs_exact =
+        b.speedup("softmax/exact-exp 256x1024", "softmax/SAS-block 256x1024");
+    let block_vs_scalar_softmax = b.speedup(
+        "softmax/SAS-scalar 256x1024",
+        "softmax/SAS-block 256x1024",
     );
+    if let Some(s) = sas_vs_exact {
+        println!("\nSAS (block) speedup over exact exp: {s:.2}x");
+    }
+    if let Some(s) = block_vs_scalar_softmax {
+        println!("exp_block speedup over scalar SAS softmax: {s:.2}x");
+    }
+
+    // Element-level exp throughput. Every case pays the same input
+    // copy (exp_block mutates in place), so the speedups isolate the
+    // exp itself.
+    let xs: Vec<f32> = (0..65536).map(|i| -(i as f32) / 11000.0).collect();
+    let mut buf = vec![0.0f32; xs.len()];
+    b.bench("exp/libm 64k elems", || {
+        buf.copy_from_slice(&xs);
+        buf.iter().map(|&x| x.exp()).sum::<f32>()
+    });
+    b.bench("exp/SAS-scalar 64k elems", || {
+        buf.copy_from_slice(&xs);
+        buf.iter().map(|&x| sas.exp(x)).sum::<f32>()
+    });
+    b.bench("exp/SAS-block 64k elems", || {
+        buf.copy_from_slice(&xs);
+        sas.exp_block(&mut buf, 0.0)
+    });
+    let sas_vs_libm =
+        b.speedup("exp/libm 64k elems", "exp/SAS-block 64k elems");
+    let block_vs_scalar_exp =
+        b.speedup("exp/SAS-scalar 64k elems", "exp/SAS-block 64k elems");
+    if let Some(s) = sas_vs_libm {
+        println!("\nSAS (block) elementwise speedup over libm expf: {s:.2}x");
+    }
+    if let Some(s) = block_vs_scalar_exp {
+        println!("exp_block elementwise speedup over scalar exp: {s:.2}x");
+    }
+
+    let poly_err = {
+        let mut w = 0.0f32;
+        for i in 0..=1000 {
+            let t = i as f32 / 1000.0;
+            w = w.max((Sas::poly(t) - (-t).exp()).abs());
+        }
+        w
+    };
+    let sas_err = sas.max_abs_error(-6.0, 6000);
+    println!(
+        "\naccuracy: poly max err on [0,1] = {poly_err:.2e}, \
+         SAS max err on [-6,0] = {sas_err:.2e}"
+    );
+
+    if emit_json {
+        let opt = |v: Option<f64>| match v {
+            Some(s) => format!("{s:.4}"),
+            None => "null".to_string(),
+        };
+        let payload = format!(
+            "{{\n  \"bench\": \"sas\",\n  \"cases\": {},\n  \"speedups\": \
+             {{\"sas_block_vs_exact_softmax\": {}, \
+             \"block_vs_scalar_softmax\": {}, \
+             \"sas_block_vs_libm_exp\": {}, \
+             \"block_vs_scalar_exp\": {}}},\n  \
+             \"accuracy\": {{\"poly_max_err\": {poly_err:e}, \
+             \"sas_max_err\": {sas_err:e}}}\n}}\n",
+            b.results_json(),
+            opt(sas_vs_exact),
+            opt(block_vs_scalar_softmax),
+            opt(sas_vs_libm),
+            opt(block_vs_scalar_exp)
+        );
+        std::fs::write("BENCH_sas.json", &payload)
+            .expect("write BENCH_sas.json");
+        println!("wrote BENCH_sas.json");
+    }
 }

@@ -16,7 +16,10 @@
 //!
 //! [`backend`] sits above the engines: the pluggable serving-path
 //! interface ([`backend::AttentionBackend`]) the coordinator drives, with
-//! the turbo and flash paths as its two implementations.
+//! three implementations — the executable-backed turbo path, the exact
+//! flash baseline, and the artifact-free `TurboCpu` path that serves
+//! through these CPU engines (integer kernels + `turbo_decode_streams`)
+//! directly.
 
 pub mod backend;
 pub mod baselines;
@@ -26,13 +29,15 @@ pub mod turbo;
 
 pub use backend::{
     backend_for, AttentionBackend, BackendState, DynBackend, FlashBackend,
-    PathMode, TurboBackend,
+    PathMode, TurboBackend, TurboCpuBackend,
 };
+pub use crate::kernels::{idot_mr, ipv_acc, qk_dot_block};
 pub use exact::attention_exact;
 pub use flash::flash_attention;
 pub use turbo::{
-    turbo_attention, turbo_decode, turbo_decode_into, turbo_decode_streams,
-    DecodeScratch, TurboConfig,
+    turbo_attention, turbo_decode, turbo_decode_into,
+    turbo_decode_into_scalar, turbo_decode_streams,
+    turbo_decode_streams_scalar, DecodeScratch, TurboConfig,
 };
 
 /// Causal-mask helper: is key position `kpos` visible to query row `qrow`

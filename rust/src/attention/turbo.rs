@@ -6,13 +6,14 @@
 //! optional progressive (INT4/2) round trip of K/V tiles to measure the
 //! q2-cache effect end to end.
 
+use crate::kernels::{ipv_acc, qk_dot_block};
 use crate::pool::{balanced_chunk_sizes, ScopeError, WorkerPool};
 use crate::quant::{
     dequant_asym_int, quant_asym_int, quant_sym_int8, quant_sym_int8_into,
     Bits,
 };
 use crate::sas::Sas;
-use crate::tensor::{idot, Mat};
+use crate::tensor::Mat;
 
 /// Engine configuration (paper defaults: 64/64 tiles, n_r = -6).
 #[derive(Debug, Clone)]
@@ -42,6 +43,12 @@ impl Default for TurboConfig {
 }
 
 /// TurboAttention prefill over a single head (Algorithm 1).
+///
+/// §Perf: both block loops run on the integer micro-kernels — the score
+/// tile through [`qk_dot_block`] (4 key rows per pass, no per-index
+/// bounds checks) and the P·V update through [`ipv_acc`] (exact `i32`
+/// block accumulation, one `p_scale * v_scale` multiply per output
+/// element per block instead of one per INT8 product).
 pub fn turbo_attention(q: &Mat, k: &Mat, v: &Mat, cfg: &TurboConfig) -> Mat {
     assert_eq!(q.cols, k.cols);
     assert_eq!(k.rows, v.rows);
@@ -51,6 +58,9 @@ pub fn turbo_attention(q: &Mat, k: &Mat, v: &Mat, cfg: &TurboConfig) -> Mat {
     let sas = Sas::new(cfg.n_r);
     let ex = |x: f32| if cfg.exact_exp { x.exp() } else { sas.exp(x) };
     let mut out = Mat::zeros(nq, d);
+    // Reused integer tiles (scores for one row / P·V lanes for one row).
+    let mut s32 = vec![0i32; cfg.bc];
+    let mut pv = vec![0i32; d];
 
     let mut i0 = 0;
     while i0 < nq {
@@ -76,17 +86,26 @@ pub fn turbo_attention(q: &Mat, k: &Mat, v: &Mat, cfg: &TurboConfig) -> Mat {
             let v8 = quant_sym_int8(&v_blk.data);
             let sf = q8.scale * k8.scale * scale;
 
-            // INT8 score tile.
+            // INT8 score tile: per query row, one multi-row integer
+            // QK^T over the row's *visible* prefix of the key block
+            // (causality truncates contiguously — key c is visible iff
+            // j0 + c <= limit), then a single scale to f32.
             let mut s = vec![f32::NEG_INFINITY; rb * cb];
             for r in 0..rb {
-                let limit =
-                    if cfg.causal { i0 + r + nk - nq } else { usize::MAX };
+                let vis = if cfg.causal {
+                    let limit = i0 + r + nk - nq;
+                    if limit < j0 { 0 } else { (limit - j0 + 1).min(cb) }
+                } else {
+                    cb
+                };
+                if vis == 0 {
+                    continue;
+                }
                 let q_row = &q8.codes[r * d..(r + 1) * d];
-                for c in 0..cb {
-                    if j0 + c <= limit {
-                        let k_row = &k8.codes[c * d..(c + 1) * d];
-                        s[r * cb + c] = idot(q_row, k_row) as f32 * sf;
-                    }
+                qk_dot_block(q_row, &k8.codes[..vis * d], d, &mut s32[..vis]);
+                let s_row = &mut s[r * cb..r * cb + vis];
+                for (sv, &si) in s_row.iter_mut().zip(&s32[..vis]) {
+                    *sv = si as f32 * sf;
                 }
             }
 
@@ -118,19 +137,13 @@ pub fn turbo_attention(q: &Mat, k: &Mat, v: &Mat, cfg: &TurboConfig) -> Mat {
                 };
                 let p_row = &p[r * cb..(r + 1) * cb];
                 l[r] = alpha * l[r] + p_row.iter().sum::<f32>();
+                // Exact integer P·V for this row, folded into the f32
+                // accumulator with one fused scale per element.
                 let p8_row = &p8.codes[r * cb..(r + 1) * cb];
+                ipv_acc(p8_row, &v8.codes, d, &mut pv);
                 let acc_row = acc.row_mut(r);
-                for a in acc_row.iter_mut() {
-                    *a *= alpha;
-                }
-                for (c, &pc) in p8_row.iter().enumerate() {
-                    if pc != 0 {
-                        let v_row = &v8.codes[c * d..(c + 1) * d];
-                        let w = pc as i32;
-                        for (a, &vv) in acc_row.iter_mut().zip(v_row) {
-                            *a += (w * vv as i32) as f32 * pv_sf;
-                        }
-                    }
+                for (a, &pvi) in acc_row.iter_mut().zip(&pv) {
+                    *a = *a * alpha + pvi as f32 * pv_sf;
                 }
                 m[r] = m_new[r];
             }
@@ -166,8 +179,12 @@ fn roundtrip_q2(blk: &mut Mat, bits: Bits) {
 pub struct DecodeScratch {
     /// Score, then probability, tile for one cache block (`bc` entries).
     s: Vec<f32>,
+    /// INT32 QK^T scores for one block (before the single f32 scale).
+    s32: Vec<i32>,
     /// INT8 codes of the probability tile.
     p8: Vec<i8>,
+    /// Exact INT32 P·V accumulator for one block (`d` entries).
+    pv: Vec<i32>,
     /// Output accumulator (`d` entries).
     acc: Vec<f32>,
     /// INT8 codes of the query.
@@ -187,6 +204,18 @@ impl DecodeScratch {
 /// attention output into `out` (`[d]`) and returns (running max m,
 /// denominator l) so the caller can merge not-yet-cached tokens (the
 /// model's current token). All intermediates live in `scratch`.
+///
+/// §Perf: the block loop is built on the integer micro-kernels —
+/// [`qk_dot_block`] computes the whole block's QK^T in `i32` (4 key rows
+/// per pass) with one scale-to-f32 per score, [`Sas::exp_block`] runs
+/// the shifted SAS exp branch-free over the block, and [`ipv_acc`] keeps
+/// P·V accumulation **exactly** in `i32` so `p_scale * v_scale` is
+/// applied once per output element per block (the paper's "one
+/// dequantization per tile"), not once per INT8 product. Exact integer
+/// accumulation is order-independent, which strengthens the decode
+/// determinism contract. [`turbo_decode_into_scalar`] preserves the old
+/// single-accumulator loop as the reference the kernels are benchmarked
+/// and property-tested against.
 #[allow(clippy::too_many_arguments)]
 pub fn turbo_decode_into(
     q: &[f32],
@@ -200,6 +229,85 @@ pub fn turbo_decode_into(
     scratch: &mut DecodeScratch,
     out: &mut [f32],
 ) -> (f32, f32) {
+    let d = q.len();
+    assert_eq!(out.len(), d);
+    assert!(k8.len() >= nk * d && v8.len() >= nk * d);
+    let scale = 1.0 / (d as f32).sqrt();
+    let sas = Sas::new(n_r);
+    let q_scale = quant_sym_int8_into(q, &mut scratch.q8);
+    scratch.acc.clear();
+    scratch.acc.resize(d, 0.0);
+    scratch.s.clear();
+    scratch.s.resize(bc, 0.0);
+    scratch.s32.clear();
+    scratch.s32.resize(bc, 0);
+    scratch.pv.clear();
+    scratch.pv.resize(d, 0);
+
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let mut j0 = 0;
+    let mut blk = 0;
+    while j0 < nk {
+        let j1 = (j0 + bc).min(nk);
+        let cb = j1 - j0;
+        let sf = q_scale * sk[blk] * scale;
+        // Integer QK^T for the whole block, then one scale per score.
+        qk_dot_block(
+            &scratch.q8,
+            &k8[j0 * d..j1 * d],
+            d,
+            &mut scratch.s32[..cb],
+        );
+        let mut m_new = m;
+        for (sc, &si) in scratch.s[..cb].iter_mut().zip(&scratch.s32[..cb]) {
+            let v = si as f32 * sf;
+            *sc = v;
+            m_new = m_new.max(v);
+        }
+        let alpha = if m == f32::NEG_INFINITY { 0.0 } else { sas.exp(m - m_new) };
+        let row_sum = sas.exp_block(&mut scratch.s[..cb], m_new);
+        l = alpha * l + row_sum;
+        let p_scale = quant_sym_int8_into(&scratch.s[..cb], &mut scratch.p8);
+        let pv_sf = p_scale * sv[blk];
+        // Exact i32 P·V for the block; fold with one fused scale.
+        ipv_acc(&scratch.p8, &v8[j0 * d..j1 * d], d, &mut scratch.pv);
+        for (a, &pvi) in scratch.acc.iter_mut().zip(&scratch.pv) {
+            *a = *a * alpha + pvi as f32 * pv_sf;
+        }
+        m = m_new;
+        j0 = j1;
+        blk += 1;
+    }
+    let inv = 1.0 / l.max(1e-20);
+    for (o, &a) in out.iter_mut().zip(&scratch.acc) {
+        *o = a * inv;
+    }
+    (m, l)
+}
+
+/// The seed scalar decode loop — single-accumulator [`idot`] per key
+/// row, per-element float conversion and scale in the P·V update. Kept
+/// verbatim as the reference implementation the kernelized
+/// [`turbo_decode_into`] is property-tested and benchmarked against
+/// (`decode_bench --json` records the speedup); not for hot-path use.
+///
+/// [`idot`]: crate::tensor::idot
+#[allow(clippy::too_many_arguments)]
+#[allow(deprecated)] // deliberately built on the deprecated scalar idot
+pub fn turbo_decode_into_scalar(
+    q: &[f32],
+    k8: &[i8],
+    v8: &[i8],
+    sk: &[f32],
+    sv: &[f32],
+    nk: usize,
+    bc: usize,
+    n_r: f32,
+    scratch: &mut DecodeScratch,
+    out: &mut [f32],
+) -> (f32, f32) {
+    use crate::tensor::idot;
     let d = q.len();
     assert_eq!(out.len(), d);
     assert!(k8.len() >= nk * d && v8.len() >= nk * d);
@@ -317,6 +425,98 @@ pub fn turbo_decode_streams(
     ml: &mut [(f32, f32)],
     out: &mut [f32],
 ) -> Result<(), ScopeError> {
+    turbo_decode_streams_with(
+        pool,
+        q,
+        k8,
+        v8,
+        sk,
+        sv,
+        d,
+        nk,
+        bc,
+        n_r,
+        scratches,
+        ml,
+        out,
+        turbo_decode_into,
+    )
+}
+
+/// [`turbo_decode_streams`] with the scalar reference body
+/// ([`turbo_decode_into_scalar`]) in place of the kernels — the
+/// like-for-like baseline `decode_bench` pits the kernelized fan-out
+/// against at every (ctx, threads) point.
+#[allow(clippy::too_many_arguments)]
+pub fn turbo_decode_streams_scalar(
+    pool: &WorkerPool,
+    q: &[f32],
+    k8: &[i8],
+    v8: &[i8],
+    sk: &[f32],
+    sv: &[f32],
+    d: usize,
+    nk: usize,
+    bc: usize,
+    n_r: f32,
+    scratches: &mut [DecodeScratch],
+    ml: &mut [(f32, f32)],
+    out: &mut [f32],
+) -> Result<(), ScopeError> {
+    turbo_decode_streams_with(
+        pool,
+        q,
+        k8,
+        v8,
+        sk,
+        sv,
+        d,
+        nk,
+        bc,
+        n_r,
+        scratches,
+        ml,
+        out,
+        turbo_decode_into_scalar,
+    )
+}
+
+/// Per-stream decode body a stream fan-out runs — the kernelized
+/// [`turbo_decode_into`] or the scalar [`turbo_decode_into_scalar`].
+type DecodeStreamFn = fn(
+    &[f32],
+    &[i8],
+    &[i8],
+    &[f32],
+    &[f32],
+    usize,
+    usize,
+    f32,
+    &mut DecodeScratch,
+    &mut [f32],
+) -> (f32, f32);
+
+/// Shared fan-out driver behind both stream entry points; the scheduling
+/// (dealing, chunk sizes, write disjointness) is identical, so the
+/// bit-determinism argument covers the kernelized and scalar paths the
+/// same way.
+#[allow(clippy::too_many_arguments)]
+fn turbo_decode_streams_with(
+    pool: &WorkerPool,
+    q: &[f32],
+    k8: &[i8],
+    v8: &[i8],
+    sk: &[f32],
+    sv: &[f32],
+    d: usize,
+    nk: usize,
+    bc: usize,
+    n_r: f32,
+    scratches: &mut [DecodeScratch],
+    ml: &mut [(f32, f32)],
+    out: &mut [f32],
+    decode: DecodeStreamFn,
+) -> Result<(), ScopeError> {
     let n_streams = ml.len();
     if n_streams == 0 {
         return Ok(());
@@ -352,7 +552,7 @@ pub fn turbo_decode_streams(
                     let i = start + j;
                     let base = i * c * d;
                     let sbase = i * nb;
-                    *ml_slot = turbo_decode_into(
+                    *ml_slot = decode(
                         &q[i * d..(i + 1) * d],
                         &k8[base..base + c * d],
                         &v8[base..base + c * d],
@@ -397,7 +597,7 @@ mod tests {
     use super::*;
     use crate::attention::attention_exact;
     use crate::quant::quant_sym_int8;
-    use crate::testutil::prop;
+    use crate::testutil::{prop, Rng};
 
     #[test]
     fn close_to_exact_attention() {
@@ -590,6 +790,101 @@ mod tests {
                 assert_eq!(ml, want_ml, "(m, l) (threads={threads})");
             }
         });
+    }
+
+    #[test]
+    fn kernelized_decode_tracks_scalar_reference() {
+        // The kernels change only *where* rounding happens in the P·V
+        // fold (exact i32 sum + one scale vs per-product f32 scale), so
+        // against the scalar reference: scores, the running max and the
+        // denominator are **bit-identical**, and the output agrees to
+        // f32 rounding.
+        prop::run("kernel decode ~ scalar decode", 40, |g| {
+            let nk = g.usize_in(1, 64);
+            let d = g.usize_in(1, 24);
+            let bc = *g.choose(&[3usize, 4, 8, 16]);
+            let nb = nk.div_ceil(bc);
+            let q = g.normal_vec(d, 1.0);
+            let mut k8 = vec![0i8; nk * d];
+            let mut v8 = vec![0i8; nk * d];
+            for x in k8.iter_mut().chain(v8.iter_mut()) {
+                *x = match g.usize_in(0, 9) {
+                    0 => 127,
+                    1 => -127,
+                    2 => -128,
+                    _ => (g.usize_in(0, 255) as i32 - 127) as i8,
+                };
+            }
+            let sk: Vec<f32> = (0..nb).map(|_| g.f32_in(0.01, 1.0)).collect();
+            let sv: Vec<f32> = (0..nb).map(|_| g.f32_in(0.01, 1.0)).collect();
+            let mut scratch = DecodeScratch::new();
+            let mut want = vec![0.0f32; d];
+            let (wm, wl) = turbo_decode_into_scalar(
+                &q, &k8, &v8, &sk, &sv, nk, bc, -6.0, &mut scratch, &mut want,
+            );
+            let mut got = vec![0.0f32; d];
+            let (m, l) = turbo_decode_into(
+                &q, &k8, &v8, &sk, &sv, nk, bc, -6.0, &mut scratch, &mut got,
+            );
+            assert_eq!(m.to_bits(), wm.to_bits(), "running max");
+            assert_eq!(l.to_bits(), wl.to_bits(), "denominator");
+            let a = Mat::from_vec(1, d, got);
+            let b = Mat::from_vec(1, d, want);
+            let rel = a.rel_err(&b);
+            assert!(rel < 1e-4, "rel {rel} (nk={nk} d={d} bc={bc})");
+        });
+    }
+
+    #[test]
+    fn scalar_streams_fanout_matches_scalar_serial_loop() {
+        // The shared fan-out driver must be a pure scheduler for the
+        // scalar body too (decode_bench relies on it as the baseline).
+        let (n_streams, d, bc, c) = (5usize, 8usize, 4usize, 16usize);
+        let nb = c / bc;
+        let nk = 13;
+        let mut rng = Rng::new(0x5CA1A);
+        let q = rng.normal_vec(n_streams * d, 1.0);
+        let mut k8 = vec![0i8; n_streams * c * d];
+        let mut v8 = vec![0i8; n_streams * c * d];
+        for x in k8.iter_mut().chain(v8.iter_mut()) {
+            *x = (rng.range(0, 255) as i32 - 127) as i8;
+        }
+        let sk: Vec<f32> =
+            (0..n_streams * nb).map(|_| rng.f32() + 0.01).collect();
+        let sv: Vec<f32> =
+            (0..n_streams * nb).map(|_| rng.f32() + 0.01).collect();
+        let mut scratch = DecodeScratch::new();
+        let mut want = vec![0.0f32; n_streams * d];
+        let mut want_ml = vec![(0.0f32, 0.0f32); n_streams];
+        for i in 0..n_streams {
+            let base = i * c * d;
+            let sbase = i * nb;
+            want_ml[i] = turbo_decode_into_scalar(
+                &q[i * d..(i + 1) * d],
+                &k8[base..base + c * d],
+                &v8[base..base + c * d],
+                &sk[sbase..sbase + nb],
+                &sv[sbase..sbase + nb],
+                nk,
+                bc,
+                -6.0,
+                &mut scratch,
+                &mut want[i * d..(i + 1) * d],
+            );
+        }
+        for threads in [1usize, 3] {
+            let pool = WorkerPool::new(threads);
+            let mut scratches = vec![DecodeScratch::new(); threads];
+            let mut ml = vec![(0.0f32, 0.0f32); n_streams];
+            let mut out = vec![0.0f32; n_streams * d];
+            turbo_decode_streams_scalar(
+                &pool, &q, &k8, &v8, &sk, &sv, d, nk, bc, -6.0,
+                &mut scratches, &mut ml, &mut out,
+            )
+            .expect("no panics");
+            assert_eq!(out, want, "threads={threads}");
+            assert_eq!(ml, want_ml, "threads={threads}");
+        }
     }
 
     #[test]

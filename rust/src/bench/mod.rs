@@ -22,6 +22,20 @@ impl BenchStats {
         self.mean.as_secs_f64()
     }
 
+    /// One JSON object with the case's statistics (seconds).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"name\":{},\"iters\":{},\"mean_s\":{:e},\"median_s\":{:e},\
+             \"min_s\":{:e},\"stddev_s\":{:e}}}",
+            json_str(&self.name),
+            self.iters,
+            self.mean.as_secs_f64(),
+            self.median.as_secs_f64(),
+            self.min.as_secs_f64(),
+            self.stddev.as_secs_f64()
+        )
+    }
+
     /// `name  mean ± σ  (median, min, n)` line.
     pub fn line(&self) -> String {
         format!(
@@ -34,6 +48,25 @@ impl BenchStats {
             self.iters
         )
     }
+}
+
+/// Minimal JSON string escaping for bench-case names.
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// Human duration formatting at ns/us/ms/s granularity.
@@ -143,6 +176,13 @@ impl Bencher {
         &self.results
     }
 
+    /// All cases as one JSON array (machine-readable bench output).
+    pub fn results_json(&self) -> String {
+        let items: Vec<String> =
+            self.results.iter().map(BenchStats::json).collect();
+        format!("[{}]", items.join(","))
+    }
+
     /// Speedup of `base` over `new` by case name.
     pub fn speedup(&self, base: &str, new: &str) -> Option<f64> {
         let b = self.results.iter().find(|r| r.name == base)?;
@@ -220,6 +260,19 @@ mod tests {
         b.bench("fast", || std::thread::sleep(Duration::from_micros(50)));
         let s = b.speedup("slow", "fast").unwrap();
         assert!(s > 1.5, "speedup {s}");
+    }
+
+    #[test]
+    fn json_output_is_wellformed() {
+        let mut b = Bencher::quick();
+        b.bench("a \"quoted\" name", || 1 + 1);
+        let s = b.results_json();
+        assert!(s.starts_with('[') && s.ends_with(']'), "{s}");
+        assert!(s.contains("\\\"quoted\\\""), "{s}");
+        assert!(s.contains("\"mean_s\":"), "{s}");
+        // And it parses with the crate's own JSON reader.
+        let parsed = crate::util::json::Json::parse(&s).expect("valid json");
+        assert!(parsed.as_arr().is_some());
     }
 
     #[test]

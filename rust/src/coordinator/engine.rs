@@ -35,16 +35,16 @@ pub struct EngineConfig {
     pub kv_bits: Bits,
     /// Number of 2-bit heads per layer (0 = uniform `kv_bits`).
     pub n_2bit_heads: usize,
-    /// Worker threads for per-(layer, head) decode work. In the
-    /// serving path this parallelizes the turbo slab sync
-    /// (`TurboSession::sync_slabs`); per-stream attention itself runs
-    /// in the decode executable when artifacts are present, and its
-    /// CPU-substrate fan-out (`turbo_decode_streams`) uses the same
-    /// pool in benches/tests. Default = the machine's available
-    /// parallelism; `1` (or `0`) = the exact old serial path. Decode
-    /// output is thread-count-invariant — the determinism contract the
-    /// parallel-parity suite enforces — so this is purely a throughput
-    /// knob.
+    /// Worker threads for per-(layer, head) decode work. On the
+    /// `Turbo` path this parallelizes the slab sync
+    /// (`TurboSession::sync_slabs`; attention runs in the decode
+    /// executable); on the `TurboCpu` path it additionally fans out
+    /// per-stream attention itself (`turbo_decode_streams` over the
+    /// integer kernels) and prefill's per-head tiles. Default = the
+    /// machine's available parallelism; `1` (or `0`) = the exact
+    /// serial path. Decode output is thread-count-invariant — the
+    /// determinism contract the parallel-parity suite enforces — so
+    /// this is purely a throughput knob.
     pub decode_threads: usize,
     pub seed: u64,
 }
@@ -104,10 +104,10 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(bundle: ModelBundle, cfg: EngineConfig) -> Engine {
-        // Only the turbo path forks decode work; a flash engine gets a
-        // serial (thread-free) pool instead of parked workers.
+        // Only the turbo-family paths fork decode work; a flash engine
+        // gets a serial (thread-free) pool instead of parked workers.
         let pool_threads = match cfg.mode {
-            PathMode::Turbo => cfg.decode_threads,
+            PathMode::Turbo | PathMode::TurboCpu => cfg.decode_threads,
             PathMode::Flash => 1,
         };
         let pool = Arc::new(WorkerPool::new(pool_threads));
@@ -117,6 +117,8 @@ impl Engine {
                 cfg.mode,
                 cfg.kv_bits,
                 cfg.n_2bit_heads,
+                cfg.seed,
+                &bundle.rt.manifest.model,
                 Arc::clone(&pool),
             ),
             pool,
@@ -237,17 +239,20 @@ impl Engine {
     /// observed values are kept, so a completion snapshot still reports
     /// the memory the request used.
     fn update_cache_metrics(&mut self) {
-        let (mut bytes, mut fp16, mut view) = (0usize, 0usize, 0usize);
+        let (mut bytes, mut fp16, mut view, mut slab) =
+            (0usize, 0usize, 0usize, 0usize);
         for s in self.sessions.values() {
             if let Some(stats) = self.backend.cache_stats(&s.state) {
                 bytes += stats.bytes;
                 fp16 += stats.fp16_equiv_bytes;
                 view += stats.view_bytes;
+                slab += stats.slab_bytes;
             }
         }
         if bytes > 0 {
             self.metrics.cache_bytes = bytes;
             self.metrics.cache_view_bytes = view;
+            self.metrics.cache_slab_bytes = slab;
             self.metrics.cache_compression = fp16 as f64 / bytes as f64;
         }
     }

@@ -1,0 +1,320 @@
+//! Integer-domain attention micro-kernels — the CPU stand-ins for the
+//! paper's INT8 tensor-core tiles, written so rustc's autovectorizer can
+//! keep the hot loops in SIMD integer arithmetic.
+//!
+//! Three kernels cover both Turbo block loops (Algorithm 1 prefill tiles
+//! and Algorithm 2 decode blocks):
+//!
+//! * [`idot_mr`] / [`qk_dot_block`] — multi-row QK^T: [`MR`] key rows per
+//!   pass against one quantized query, with one independent `i32`
+//!   accumulator per row and fixed-width chunked slices, so there are no
+//!   per-index bounds checks and the query chunk is loaded once per pass
+//!   instead of once per row.
+//! * [`ipv_acc`] — P·V accumulation kept **entirely in `i32`**. The
+//!   caller applies the fused `p_scale * v_scale` product once per block
+//!   per output element, instead of converting and scaling every
+//!   `i32` product individually (§3's "one dequantization per tile").
+//! * The batched SAS evaluator lives with its tables:
+//!   [`Sas::exp_block`](crate::sas::Sas::exp_block).
+//!
+//! # No-overflow contract
+//!
+//! INT8 codes are bounded by 128 in magnitude (the quantizers emit
+//! [-127, 127]; the kernels stay exact even for a hostile `-128`), so a
+//! product is at most `128 * 128 = 16384` and an `i32` accumulator holds
+//! at least [`ACC_MAX_ROWS`] (= `i32::MAX / 16384` = 131071) terms with
+//! **zero** possibility of wraparound. Both accumulation kernels assert
+//! this bound. Attention blocks are `bc` tokens (64 in the paper, ≤ 1024
+//! anywhere in this repo), so the bound is ~128x away from real
+//! workloads; the assert exists to make the contract loud, not to be
+//! hit. Within the bound, integer accumulation is *exact* and therefore
+//! order-independent — reordering rows or chunks cannot change a bit of
+//! the result, which strengthens the decode determinism contract.
+//!
+//! # Who owns scales
+//!
+//! Kernels never see scales. Quantization scales (`q_scale * k_scale *
+//! 1/sqrt(d)` for scores, `p_scale * v_scale` for P·V) are owned by the
+//! caller ([`crate::attention::turbo`]), which applies them exactly once
+//! per block on the `i32` results. Keeping scales out of the inner loops
+//! is what keeps them integer-only.
+
+/// Key rows computed per [`idot_mr`] pass.
+pub const MR: usize = 4;
+
+/// Lanes per inner-loop chunk — wide enough for one AVX2 register of
+/// i16 products after widening, small enough that the ragged tail stays
+/// cheap at the repo's head dims (16–64).
+const LANES: usize = 16;
+
+/// Largest number of i8·i8 products one `i32` accumulator is proven to
+/// hold exactly: `i32::MAX / (128 * 128)`.
+pub const ACC_MAX_ROWS: usize = (i32::MAX / (128 * 128)) as usize;
+
+/// Single-row chunked integer dot product (the `MR`-kernel's tail case).
+///
+/// Same result as the scalar reference [`crate::tensor::idot`] — integer
+/// accumulation is exact, so chunking cannot change the sum.
+#[inline]
+fn idot_1(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        let mut s = 0i32;
+        for j in 0..LANES {
+            s += xa[j] as i32 * xb[j] as i32;
+        }
+        acc += s;
+    }
+    for (&xa, &xb) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += xa as i32 * xb as i32;
+    }
+    acc
+}
+
+/// Multi-row QK^T micro-kernel: dot `q` against [`MR`] key rows stored
+/// contiguously in `k4` (`k4.len() == MR * q.len()`), returning one
+/// independent `i32` accumulator per row.
+///
+/// One pass over `q` serves all four rows — the query chunk is loaded
+/// once per [`LANES`]-wide step instead of once per row, and the four
+/// accumulators give the autovectorizer independent dependency chains.
+/// All slices are consumed through `chunks_exact`, so the inner loop has
+/// no bounds checks.
+///
+/// `q.len()` (the head dim) counts one product per accumulator term and
+/// is far below [`ACC_MAX_ROWS`] everywhere in this repo; the result is
+/// exact for every i8 value including `-128`.
+#[inline]
+pub fn idot_mr(q: &[i8], k4: &[i8]) -> [i32; MR] {
+    let d = q.len();
+    assert_eq!(k4.len(), MR * d, "k4 must hold exactly MR rows");
+    debug_assert!(d <= ACC_MAX_ROWS);
+    let (k0, rest) = k4.split_at(d);
+    let (k1, rest) = rest.split_at(d);
+    let (k2, k3) = rest.split_at(d);
+    let mut acc = [0i32; MR];
+    let mut cq = q.chunks_exact(LANES);
+    let mut c0 = k0.chunks_exact(LANES);
+    let mut c1 = k1.chunks_exact(LANES);
+    let mut c2 = k2.chunks_exact(LANES);
+    let mut c3 = k3.chunks_exact(LANES);
+    loop {
+        let (Some(xq), Some(x0), Some(x1), Some(x2), Some(x3)) =
+            (cq.next(), c0.next(), c1.next(), c2.next(), c3.next())
+        else {
+            break;
+        };
+        let mut s = [0i32; MR];
+        for j in 0..LANES {
+            let qv = xq[j] as i32;
+            s[0] += qv * x0[j] as i32;
+            s[1] += qv * x1[j] as i32;
+            s[2] += qv * x2[j] as i32;
+            s[3] += qv * x3[j] as i32;
+        }
+        for (a, sv) in acc.iter_mut().zip(s) {
+            *a += sv;
+        }
+    }
+    let rq = cq.remainder();
+    let tails = [
+        c0.remainder(),
+        c1.remainder(),
+        c2.remainder(),
+        c3.remainder(),
+    ];
+    for (a, tail) in acc.iter_mut().zip(tails) {
+        for (&qv, &kv) in rq.iter().zip(tail) {
+            *a += qv as i32 * kv as i32;
+        }
+    }
+    acc
+}
+
+/// QK^T over one whole key block: `k` holds `k.len() / d` contiguous
+/// rows of width `d`; writes `out[r] = q · k_row[r]` for every row.
+/// Rows are processed [`MR`] at a time via [`idot_mr`] with a chunked
+/// single-row tail, so ragged block lengths (the last cache block) cost
+/// only the remainder rows.
+#[inline]
+pub fn qk_dot_block(q: &[i8], k: &[i8], d: usize, out: &mut [i32]) {
+    assert!(d > 0, "head dim must be positive");
+    debug_assert_eq!(k.len() % d, 0);
+    let rows = k.len() / d;
+    assert!(out.len() >= rows, "out must hold one score per key row");
+    let mut r = 0usize;
+    while r + MR <= rows {
+        let scores = idot_mr(q, &k[r * d..(r + MR) * d]);
+        out[r..r + MR].copy_from_slice(&scores);
+        r += MR;
+    }
+    for rr in r..rows {
+        out[rr] = idot_1(q, &k[rr * d..(rr + 1) * d]);
+    }
+}
+
+/// P·V accumulation for one block, exact in `i32`:
+/// `acc[j] = Σ_c p8[c] * v8[c * d + j]` over all `p8.len()` rows of `v8`.
+///
+/// `acc` is overwritten (per-block accumulator — the caller folds it
+/// into the running f32 output with a **single** `p_scale * v_scale`
+/// multiply per element). Zero probability codes skip their row — SAS
+/// sparsity makes whole rows zero below the `n_r` threshold, and a
+/// skipped row adds exactly 0, so the short-circuit cannot change the
+/// (exact) sum.
+///
+/// Panics if the row count exceeds [`ACC_MAX_ROWS`] — beyond that the
+/// `i32` no-overflow proof (`rows * 128 * 128 <= i32::MAX`) stops
+/// holding. Every caller in this crate passes `bc <= 1024` rows.
+#[inline]
+pub fn ipv_acc(p8: &[i8], v8: &[i8], d: usize, acc: &mut [i32]) {
+    assert!(d > 0, "head dim must be positive");
+    let rows = p8.len();
+    assert!(
+        rows <= ACC_MAX_ROWS,
+        "{rows} rows can overflow an i32 accumulator (max {ACC_MAX_ROWS})"
+    );
+    assert!(v8.len() >= rows * d, "v8 must hold one row per p code");
+    assert!(acc.len() >= d, "acc must hold d lanes");
+    let acc = &mut acc[..d];
+    acc.fill(0);
+    for (c, &pc) in p8.iter().enumerate() {
+        if pc == 0 {
+            continue;
+        }
+        let w = pc as i32;
+        let v_row = &v8[c * d..(c + 1) * d];
+        for (a, &vv) in acc.iter_mut().zip(v_row) {
+            *a += w * vv as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(deprecated)] // tensor::idot stays the scalar oracle here
+
+    use super::*;
+    use crate::tensor::idot;
+    use crate::testutil::prop;
+
+    fn gen_codes(g: &mut prop::Gen, n: usize) -> Vec<i8> {
+        (0..n)
+            .map(|_| {
+                // Bias toward the edge values the contract calls out.
+                match g.usize_in(0, 8) {
+                    0 => 127,
+                    1 => -127,
+                    2 => -128,
+                    _ => (g.usize_in(0, 255) as i32 - 127) as i8,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn idot_mr_matches_scalar_reference() {
+        prop::run("idot_mr == idot x4", 60, |g| {
+            // Ragged widths around the chunk size, incl. d < LANES.
+            let d = g.usize_in(1, 3 * LANES + 3);
+            let q = gen_codes(g, d);
+            let k4 = gen_codes(g, MR * d);
+            let got = idot_mr(&q, &k4);
+            for (r, &s) in got.iter().enumerate() {
+                let want = idot(&q, &k4[r * d..(r + 1) * d]);
+                assert_eq!(s, want, "row {r} (d={d})");
+            }
+        });
+    }
+
+    #[test]
+    fn idot_mr_exact_at_i8_extremes() {
+        // 4 rows of -128 against a query of -128: products are +16384,
+        // summed exactly (this is the worst case of the overflow proof).
+        let d = 64;
+        let q = vec![-128i8; d];
+        let k4 = vec![-128i8; MR * d];
+        for s in idot_mr(&q, &k4) {
+            assert_eq!(s, (d as i32) * 16384);
+        }
+        let k4 = vec![127i8; MR * d];
+        for s in idot_mr(&q, &k4) {
+            assert_eq!(s, (d as i32) * (-128 * 127));
+        }
+    }
+
+    #[test]
+    fn qk_dot_block_covers_ragged_row_counts() {
+        prop::run("qk_dot_block == idot rows", 60, |g| {
+            let d = g.usize_in(1, 40);
+            // 0..=11 rows: exercises 0, sub-MR, exact-MR and ragged tails.
+            let rows = g.usize_in(0, 12);
+            let q = gen_codes(g, d);
+            let k = gen_codes(g, rows * d);
+            let mut out = vec![0i32; rows + 2];
+            out.fill(7); // poison: untouched slots must stay put
+            qk_dot_block(&q, &k, d, &mut out);
+            for r in 0..rows {
+                assert_eq!(out[r], idot(&q, &k[r * d..(r + 1) * d]), "row {r}");
+            }
+            assert_eq!(&out[rows..], &[7, 7], "no write past the rows");
+        });
+    }
+
+    #[test]
+    fn ipv_acc_matches_widening_reference() {
+        prop::run("ipv_acc == scalar sum", 60, |g| {
+            let d = g.usize_in(1, 40);
+            let rows = g.usize_in(0, 12);
+            let p8 = gen_codes(g, rows);
+            let v8 = gen_codes(g, rows * d);
+            let mut acc = vec![-1i32; d];
+            ipv_acc(&p8, &v8, d, &mut acc);
+            for (j, &a) in acc.iter().enumerate() {
+                let want: i32 = (0..rows)
+                    .map(|c| p8[c] as i32 * v8[c * d + j] as i32)
+                    .sum();
+                assert_eq!(a, want, "lane {j}");
+            }
+        });
+    }
+
+    #[test]
+    fn ipv_acc_overwrites_stale_accumulator() {
+        let mut acc = vec![i32::MAX; 3];
+        ipv_acc(&[], &[], 3, &mut acc);
+        assert_eq!(acc, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn ipv_acc_exact_at_the_overflow_bound() {
+        // ACC_MAX_ROWS worst-case products must sum without wrap.
+        let rows = ACC_MAX_ROWS;
+        let p8 = vec![-128i8; rows];
+        let v8 = vec![-128i8; rows];
+        let mut acc = vec![0i32; 1];
+        ipv_acc(&p8, &v8, 1, &mut acc);
+        assert_eq!(acc[0] as i64, rows as i64 * 16384);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn ipv_acc_rejects_rows_beyond_the_proof() {
+        let rows = ACC_MAX_ROWS + 1;
+        let p8 = vec![1i8; rows];
+        let v8 = vec![1i8; rows];
+        let mut acc = vec![0i32; 1];
+        ipv_acc(&p8, &v8, 1, &mut acc);
+    }
+
+    #[test]
+    fn constants_are_consistent() {
+        assert_eq!(ACC_MAX_ROWS, 131071);
+        // The paper block (64) and every block in this repo are far
+        // below the proof bound.
+        assert!(1024 < ACC_MAX_ROWS);
+    }
+}

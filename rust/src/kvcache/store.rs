@@ -274,6 +274,13 @@ pub struct CacheStats {
     /// compression claim is about cache *storage*; the view is the
     /// decode scratch that storage is expanded into, once).
     pub view_bytes: usize,
+    /// Working-set bytes of the session's executable-layout decode
+    /// slabs (`TurboSlabs`: two full `[L*H*max_ctx*dh]` INT8 slabs plus
+    /// per-block scales — usually *larger* than the compressed cache).
+    /// `KvCache` itself owns no slabs, so [`KvCache::stats`] reports 0;
+    /// the owning backend session fills this in. Capacity planning from
+    /// `bytes` alone under-provisions without it.
+    pub slab_bytes: usize,
 }
 
 impl CacheStats {
@@ -380,7 +387,13 @@ impl KvCache {
             * self.cfg.n_layers
             * self.cfg.n_heads
             * 2; // K and V, 2 bytes each
-        CacheStats { tokens, bytes, fp16_equiv_bytes: fp16, view_bytes }
+        CacheStats {
+            tokens,
+            bytes,
+            fp16_equiv_bytes: fp16,
+            view_bytes,
+            slab_bytes: 0,
+        }
     }
 }
 

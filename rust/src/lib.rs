@@ -17,6 +17,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod costmodel;
 pub mod experiments;
+pub mod kernels;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

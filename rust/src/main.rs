@@ -8,8 +8,14 @@
 //!
 //! Examples:
 //!   turboattn gen --prompt "the router " --max-new 48 --mode turbo
+//!   turboattn gen --path turbo-cpu --greedy     # no artifacts needed
 //!   turboattn serve --port 7100 --mode turbo
 //!   turboattn experiment fig6
+//!
+//! `--path` (alias `--mode`) selects the serving backend: `turbo`
+//! (quantized execution in the AOT executables), `turbo-cpu` (the pure-
+//! Rust integer-kernel substrate — runs with no artifacts and no PJRT
+//! toolchain), or `flash` (exact FP32 baseline).
 
 use std::net::TcpListener;
 use std::sync::mpsc::channel;
@@ -56,10 +62,13 @@ fn main() -> Result<()> {
 }
 
 fn engine_config(args: &Args) -> EngineConfig {
-    let mode = match args.opt_or("mode", "turbo") {
+    // `--path` is the canonical spelling; `--mode` stays as an alias.
+    let path = args.opt("path").or_else(|| args.opt("mode"));
+    let mode = match path.unwrap_or("turbo") {
         "turbo" => PathMode::Turbo,
+        "turbo-cpu" | "turbocpu" => PathMode::TurboCpu,
         "flash" => PathMode::Flash,
-        other => panic!("--mode must be turbo|flash, got {other}"),
+        other => panic!("--path must be turbo|turbo-cpu|flash, got {other}"),
     };
     let kv_bits = Bits::from_bits(args.opt_parse("kv-bits", 4u32))
         .expect("--kv-bits must be 2|3|4|8");
@@ -88,10 +97,19 @@ fn engine_config(args: &Args) -> EngineConfig {
     cfg
 }
 
+/// Runtime for a config: the CPU-substrate path needs no artifacts (its
+/// geometry is built in); everything else loads the artifact directory.
+fn runtime_for(cfg: &EngineConfig, dir: &str) -> Result<Runtime> {
+    if cfg.mode == PathMode::TurboCpu {
+        return Ok(Runtime::cpu_substrate());
+    }
+    Runtime::load(dir)
+}
+
 fn load_engine(args: &Args) -> Result<Engine> {
-    let dir = args.opt_or("artifacts", "artifacts");
-    let rt = Runtime::load(dir)?;
-    Ok(Engine::new(ModelBundle::new(rt), engine_config(args)))
+    let cfg = engine_config(args);
+    let rt = runtime_for(&cfg, args.opt_or("artifacts", "artifacts"))?;
+    Ok(Engine::new(ModelBundle::new(rt), cfg))
 }
 
 fn gen(args: &Args) -> Result<()> {
@@ -125,7 +143,7 @@ fn serve(args: &Args) -> Result<()> {
     let cfg = engine_config(args);
     let dir = args.opt_or("artifacts", "artifacts").to_string();
     let engine_thread = std::thread::spawn(move || -> Result<()> {
-        let rt = Runtime::load(&dir)?;
+        let rt = runtime_for(&cfg, &dir)?;
         let engine = Engine::new(ModelBundle::new(rt), cfg);
         engine.run_loop(rx)
     });

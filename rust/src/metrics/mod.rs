@@ -168,6 +168,10 @@ pub struct EngineMetrics {
     /// Working memory of the materialized q1 views (decode read scratch),
     /// aggregated over all live sessions.
     pub cache_view_bytes: usize,
+    /// Working-set bytes of per-session decode slabs (`TurboSlabs`),
+    /// aggregated over all live sessions — the dominant decode memory
+    /// term the compressed-cache numbers alone under-report.
+    pub cache_slab_bytes: usize,
     pub cache_compression: f64,
     /// Wall-clock seconds spent in decode rounds (engine thread).
     pub decode_wall_s: f64,

@@ -74,6 +74,13 @@ impl TurboSlabs {
         }
     }
 
+    /// Working-set bytes held by the slabs (codes + f32 scales) — the
+    /// decode working memory `CacheStats::slab_bytes` reports next to
+    /// the compressed-cache storage.
+    pub fn bytes(&self) -> usize {
+        self.k8.len() + self.v8.len() + 4 * (self.sk.len() + self.sv.len())
+    }
+
     /// Split into `n_streams` equal, **disjoint** mutable shards — one
     /// per (layer, head), in the same layer-major order as
     /// [`KvCache::streams_mut`](crate::kvcache::KvCache::streams_mut).

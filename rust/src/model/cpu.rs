@@ -1,0 +1,492 @@
+//! Pure-Rust CPU-substrate transformer — the model behind the
+//! `TurboCpu` serving backend.
+//!
+//! The PJRT paths run prefill/decode inside AOT executables, which means
+//! the engine can only serve where artifacts (and the `pjrt` toolchain)
+//! exist, and the CPU attention substrate (`turbo_decode_streams` + the
+//! integer kernels) is never on a serving path. This module closes that
+//! gap: a tiny byte-LM transformer whose weights are generated
+//! **deterministically** from a seed and whose attention runs entirely
+//! through the Turbo engines —
+//!
+//! * prefill: per-head [`turbo_attention`] (Algorithm 1 tiles on the
+//!   integer kernels), heads fanned out on the decode worker pool;
+//! * decode: [`turbo_decode_streams`] over the session's q1 slabs (one
+//!   layer's heads per fan-out, because layers are sequential), with the
+//!   current token merged via the SAS online-softmax float merge.
+//!
+//! Everything outside attention (embedding + sinusoidal positions, QKV /
+//! output projections, a ReLU MLP, RMS pre-norms, the logit head) is
+//! plain serial `Mat` arithmetic, so decode output is bit-identical for
+//! every `decode_threads` — the same determinism contract the parity
+//! suite enforces for the slab sync and the stream fan-out.
+//!
+//! The model is untrained (random weights): it exists to serve the
+//! *system* — scheduling, caching, quantized execution — not language
+//! quality, exactly like the artifact tiny-LM before calibration.
+
+use anyhow::{bail, Result};
+
+use crate::attention::turbo::sas_merge_token;
+use crate::attention::{
+    turbo_attention, turbo_decode_streams, DecodeScratch, TurboConfig,
+};
+use crate::kvcache::KvCache;
+use crate::model::{DecodeOut, TurboSlabs};
+use crate::pool::WorkerPool;
+use crate::quant::quant_sym_int8;
+use crate::runtime::ModelInfo;
+use crate::tensor::{dot, Mat};
+use crate::testutil::Rng;
+
+/// One transformer block's weights.
+struct CpuLayer {
+    wq: Mat,
+    wk: Mat,
+    wv: Mat,
+    wo: Mat,
+    /// MLP up-projection `[d_model, d_ff]`.
+    w1: Mat,
+    /// MLP down-projection `[d_ff, d_model]`.
+    w2: Mat,
+}
+
+/// Deterministic tiny transformer serving the artifact-free CPU path.
+pub struct CpuModel {
+    pub info: ModelInfo,
+    /// Seed the weights were generated from (identical seed + geometry
+    /// => bit-identical model, so sessions and engines can rebuild it).
+    pub seed: u64,
+    embed: Mat,
+    layers: Vec<CpuLayer>,
+    w_out: Mat,
+}
+
+impl CpuModel {
+    /// Build the model for a geometry; all weights derive from `seed`
+    /// via the crate's deterministic PRNG.
+    pub fn new(info: &ModelInfo, seed: u64) -> CpuModel {
+        assert_eq!(
+            info.d_model,
+            info.n_heads * info.d_head,
+            "d_model must equal n_heads * d_head"
+        );
+        assert_eq!(
+            info.max_ctx % info.block,
+            0,
+            "max_ctx must be page-aligned to block"
+        );
+        let mut rng = Rng::new(seed ^ 0x7452_B0A7_7E17_10D5);
+        let dm = info.d_model;
+        let d_ff = 2 * dm;
+        let proj = 1.0 / (dm as f32).sqrt();
+        let embed = Mat::randn(&mut rng, info.vocab, dm, 1.0);
+        let layers = (0..info.n_layers)
+            .map(|_| CpuLayer {
+                wq: Mat::randn(&mut rng, dm, dm, proj),
+                wk: Mat::randn(&mut rng, dm, dm, proj),
+                wv: Mat::randn(&mut rng, dm, dm, proj),
+                wo: Mat::randn(&mut rng, dm, dm, proj),
+                w1: Mat::randn(&mut rng, dm, d_ff, proj),
+                w2: Mat::randn(&mut rng, d_ff, dm, 1.0 / (d_ff as f32).sqrt()),
+            })
+            .collect();
+        let w_out = Mat::randn(&mut rng, dm, info.vocab, proj);
+        CpuModel { info: info.clone(), seed, embed, layers, w_out }
+    }
+
+    /// Run the prompt, ingesting every layer/head's K/V into `cache` as
+    /// q1 blocks (per-block symmetric scales — the same write-back shape
+    /// as `ModelBundle::ingest_prefill`), and return the prefill logits
+    /// (`[prompt_len * vocab]`, row `i` predicting token `i + 1`).
+    ///
+    /// Per-head attention fans out on `pool`; each head's tile math is
+    /// sequential and writes its own output, so the result is
+    /// bit-identical for every pool width.
+    pub fn prefill(
+        &self,
+        prompt: &[u8],
+        pool: &WorkerPool,
+        cache: &mut KvCache,
+    ) -> Result<Vec<f32>> {
+        let m = &self.info;
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > m.max_ctx {
+            bail!("prompt len {} exceeds max_ctx {}", prompt.len(), m.max_ctx);
+        }
+        let (n, dm, dh, h_n) = (prompt.len(), m.d_model, m.d_head, m.n_heads);
+        let tcfg = TurboConfig {
+            br: m.block,
+            bc: m.block,
+            n_r: m.n_r,
+            causal: true,
+            kv_bits: None,
+            exact_exp: false,
+        };
+        let mut x = Mat::zeros(n, dm);
+        for (pos, (&tok, row)) in
+            prompt.iter().zip(x.data.chunks_mut(dm)).enumerate()
+        {
+            row.copy_from_slice(self.embed.row(tok as usize));
+            add_pos_embed(row, pos);
+        }
+        for (l, lw) in self.layers.iter().enumerate() {
+            let xn = rms_rows(&x);
+            let qm = xn.matmul(&lw.wq);
+            let km = xn.matmul(&lw.wk);
+            let vm = xn.matmul(&lw.wv);
+            let heads: Vec<(Mat, Mat, Mat)> = (0..h_n)
+                .map(|h| {
+                    (
+                        cols_slice(&qm, h * dh, dh),
+                        cols_slice(&km, h * dh, dh),
+                        cols_slice(&vm, h * dh, dh),
+                    )
+                })
+                .collect();
+            // Quantized causal attention per head, fanned on the pool.
+            let mut outs: Vec<Mat> = vec![Mat::zeros(0, 0); h_n];
+            pool.scope(|scope| {
+                let tcfg = &tcfg;
+                for (hm, out_h) in heads.iter().zip(outs.iter_mut()) {
+                    scope.execute(move || {
+                        *out_h = turbo_attention(&hm.0, &hm.1, &hm.2, tcfg);
+                    });
+                }
+            })?;
+            let mut att = Mat::zeros(n, dm);
+            for (h, out_h) in outs.iter().enumerate() {
+                for r in 0..n {
+                    att.row_mut(r)[h * dh..(h + 1) * dh]
+                        .copy_from_slice(out_h.row(r));
+                }
+            }
+            // Write this layer's K/V into the paged cache, one q1 block
+            // (codes + symmetric scale) at a time.
+            for (h, hm) in heads.iter().enumerate() {
+                ingest_stream(cache.k_stream_mut(l, h), &hm.1, m.block, dh);
+                ingest_stream(cache.v_stream_mut(l, h), &hm.2, m.block, dh);
+            }
+            let o = att.matmul(&lw.wo);
+            add_assign(&mut x.data, &o.data);
+            let xn2 = rms_rows(&x);
+            let mut hid = xn2.matmul(&lw.w1);
+            for v in hid.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+            let down = hid.matmul(&lw.w2);
+            add_assign(&mut x.data, &down.data);
+        }
+        Ok(rms_rows(&x).matmul(&self.w_out).data)
+    }
+
+    /// One decode step over the session's synced q1 slabs (`nk` valid
+    /// tokens): returns next-token logits and the new token's K/V
+    /// (`[n_layers * d_model]` each, layer-major — the fold layout).
+    ///
+    /// Attention runs through [`turbo_decode_streams`] one layer at a
+    /// time (layers are sequential; a layer's heads are the parallel
+    /// axis), then the current token — not yet in the cache — merges in
+    /// via the SAS online-softmax float merge.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_step(
+        &self,
+        slabs: &TurboSlabs,
+        nk: usize,
+        token: u8,
+        pos: usize,
+        pool: &WorkerPool,
+        scratches: &mut [DecodeScratch],
+    ) -> Result<DecodeOut> {
+        let m = &self.info;
+        let (dm, dh, h_n, l_n) = (m.d_model, m.d_head, m.n_heads, m.n_layers);
+        if pos >= m.max_ctx {
+            bail!("pos {pos} exceeds max_ctx {}", m.max_ctx);
+        }
+        let n_streams = l_n * h_n;
+        let c = slabs.k8.len() / (n_streams * dh);
+        let nb = slabs.sk.len() / n_streams;
+        if nk > c {
+            bail!("nk {nk} exceeds slab capacity {c}");
+        }
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut x = self.embed.row(token as usize).to_vec();
+        add_pos_embed(&mut x, pos);
+        let mut k_new = vec![0.0f32; l_n * dm];
+        let mut v_new = vec![0.0f32; l_n * dm];
+        // Fully overwritten by every layer's fan-out, so allocated once.
+        let mut att = vec![0.0f32; dm];
+        let mut ml = vec![(0.0f32, 0.0f32); h_n];
+        for (l, lw) in self.layers.iter().enumerate() {
+            let xn = rms_vec(&x);
+            let qv = vec_mat(&xn, &lw.wq);
+            let kv = vec_mat(&xn, &lw.wk);
+            let vv = vec_mat(&xn, &lw.wv);
+            k_new[l * dm..(l + 1) * dm].copy_from_slice(&kv);
+            v_new[l * dm..(l + 1) * dm].copy_from_slice(&vv);
+            let base = l * h_n * c * dh;
+            let sbase = l * h_n * nb;
+            turbo_decode_streams(
+                pool,
+                &qv,
+                &slabs.k8[base..base + h_n * c * dh],
+                &slabs.v8[base..base + h_n * c * dh],
+                &slabs.sk[sbase..sbase + h_n * nb],
+                &slabs.sv[sbase..sbase + h_n * nb],
+                dh,
+                nk,
+                m.block,
+                m.n_r,
+                scratches,
+                &mut ml,
+                &mut att,
+            )?;
+            for (h, &(am, al)) in ml.iter().enumerate() {
+                let q_h = &qv[h * dh..(h + 1) * dh];
+                let k_h = &kv[h * dh..(h + 1) * dh];
+                let v_h = &vv[h * dh..(h + 1) * dh];
+                let s_new = dot(q_h, k_h) * scale;
+                let merged = sas_merge_token(
+                    &att[h * dh..(h + 1) * dh],
+                    am,
+                    al,
+                    s_new,
+                    v_h,
+                    m.n_r,
+                );
+                att[h * dh..(h + 1) * dh].copy_from_slice(&merged);
+            }
+            let o = vec_mat(&att, &lw.wo);
+            add_assign(&mut x, &o);
+            let xn2 = rms_vec(&x);
+            let mut hid = vec_mat(&xn2, &lw.w1);
+            for v in hid.iter_mut() {
+                *v = v.max(0.0);
+            }
+            let down = vec_mat(&hid, &lw.w2);
+            add_assign(&mut x, &down);
+        }
+        let logits = vec_mat(&rms_vec(&x), &self.w_out);
+        Ok(DecodeOut { logits, k_new, v_new })
+    }
+}
+
+/// Quantize `mat`'s rows (`[n, d]`) into q1 blocks of `block` tokens and
+/// ingest them into one cache stream.
+fn ingest_stream(
+    stream: &mut crate::kvcache::store::StreamCache,
+    mat: &Mat,
+    block: usize,
+    d: usize,
+) {
+    let n = mat.rows;
+    let mut t0 = 0usize;
+    while t0 < n {
+        let t1 = (t0 + block).min(n);
+        let q = quant_sym_int8(&mat.data[t0 * d..t1 * d]);
+        stream.ingest_q1_block(&q.codes, q.scale, t1 - t0);
+        t0 = t1;
+    }
+}
+
+/// Copy a column band `[c0, c0 + w)` of a row-major matrix.
+fn cols_slice(m: &Mat, c0: usize, w: usize) -> Mat {
+    let mut out = Mat::zeros(m.rows, w);
+    for (dst, src) in out.data.chunks_mut(w).zip(m.data.chunks(m.cols)) {
+        dst.copy_from_slice(&src[c0..c0 + w]);
+    }
+    out
+}
+
+/// RMS-normalize every row (pre-norm without a learned gain).
+fn rms_rows(m: &Mat) -> Mat {
+    let mut out = m.clone();
+    for row in out.data.chunks_mut(m.cols) {
+        rms_inplace(row);
+    }
+    out
+}
+
+/// RMS-normalize one vector into a fresh buffer.
+fn rms_vec(x: &[f32]) -> Vec<f32> {
+    let mut out = x.to_vec();
+    rms_inplace(&mut out);
+    out
+}
+
+fn rms_inplace(x: &mut [f32]) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len().max(1) as f32;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// `x @ W` for a single row vector (`x.len() == w.rows`).
+fn vec_mat(x: &[f32], w: &Mat) -> Vec<f32> {
+    debug_assert_eq!(x.len(), w.rows);
+    let mut out = vec![0.0f32; w.cols];
+    for (&xi, row) in x.iter().zip(w.data.chunks(w.cols)) {
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += xi * wv;
+        }
+    }
+    out
+}
+
+fn add_assign(x: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (a, &b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+/// Sinusoidal position features added onto the token embedding.
+fn add_pos_embed(x: &mut [f32], pos: usize) {
+    let d = x.len();
+    let mut c = 0usize;
+    while c < d {
+        let freq = 1.0 / 10000f32.powf(c as f32 / d as f32);
+        let angle = pos as f32 * freq;
+        x[c] += angle.sin();
+        if c + 1 < d {
+            x[c + 1] += angle.cos();
+        }
+        c += 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{KvCacheConfig, PrecisionMap};
+    use crate::quant::Bits;
+
+    fn tiny_info() -> ModelInfo {
+        ModelInfo {
+            vocab: 256,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 8,
+            max_ctx: 32,
+            block: 4,
+            n_r: -6.0,
+        }
+    }
+
+    fn cache_for(info: &ModelInfo) -> KvCache {
+        let pm =
+            PrecisionMap::uniform(info.n_layers, info.n_heads, Bits::Int4);
+        KvCache::new(KvCacheConfig::new(
+            info.n_layers,
+            info.n_heads,
+            info.d_head,
+            info.block,
+            pm,
+        ))
+    }
+
+    #[test]
+    fn prefill_returns_logits_and_fills_cache() {
+        let info = tiny_info();
+        let model = CpuModel::new(&info, 7);
+        let pool = WorkerPool::new(2);
+        let mut cache = cache_for(&info);
+        let prompt = b"the cpu substrate ";
+        let logits =
+            model.prefill(prompt, &pool, &mut cache).expect("prefill");
+        assert_eq!(logits.len(), prompt.len() * info.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(cache.tokens(), prompt.len());
+    }
+
+    #[test]
+    fn prefill_rejects_bad_prompts() {
+        let info = tiny_info();
+        let model = CpuModel::new(&info, 7);
+        let pool = WorkerPool::new(1);
+        let mut cache = cache_for(&info);
+        assert!(model.prefill(b"", &pool, &mut cache).is_err());
+        let long = vec![b'a'; info.max_ctx + 1];
+        assert!(model.prefill(&long, &pool, &mut cache).is_err());
+    }
+
+    #[test]
+    fn same_seed_same_model_bit_for_bit() {
+        let info = tiny_info();
+        let a = CpuModel::new(&info, 42);
+        let b = CpuModel::new(&info, 42);
+        let pool = WorkerPool::new(1);
+        let la = a
+            .prefill(b"determinism", &pool, &mut cache_for(&info))
+            .unwrap();
+        let lb = b
+            .prefill(b"determinism", &pool, &mut cache_for(&info))
+            .unwrap();
+        let bits = |v: &[f32]| -> Vec<u32> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&la), bits(&lb));
+        let c = CpuModel::new(&info, 43);
+        let lc = c
+            .prefill(b"determinism", &pool, &mut cache_for(&info))
+            .unwrap();
+        assert_ne!(bits(&la), bits(&lc), "different seed, different model");
+    }
+
+    #[test]
+    fn prefill_pool_width_does_not_change_bits() {
+        let info = tiny_info();
+        let model = CpuModel::new(&info, 3);
+        let mut want: Option<Vec<u32>> = None;
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let logits = model
+                .prefill(b"thread sweep", &pool, &mut cache_for(&info))
+                .unwrap();
+            let bits: Vec<u32> =
+                logits.iter().map(|x| x.to_bits()).collect();
+            match &want {
+                None => want = Some(bits),
+                Some(w) => assert_eq!(w, &bits, "threads={threads}"),
+            }
+        }
+    }
+
+    #[test]
+    fn decode_step_shapes_and_finiteness() {
+        let info = tiny_info();
+        let model = CpuModel::new(&info, 9);
+        let pool = WorkerPool::new(2);
+        let mut cache = cache_for(&info);
+        model.prefill(b"abcdefg", &pool, &mut cache).unwrap();
+        // Sync the slabs the way a session would.
+        let slabs = {
+            use crate::attention::backend::TurboSession;
+            let mut sess = TurboSession::from_parts(
+                cache,
+                TurboSlabs::new(
+                    info.n_layers,
+                    info.n_heads,
+                    info.max_ctx,
+                    info.d_head,
+                    info.block,
+                ),
+            );
+            let nk = sess.sync_slabs().unwrap();
+            assert_eq!(nk, 7);
+            sess
+        };
+        let mut scratches = vec![DecodeScratch::new(); 2];
+        let out = model
+            .decode_step(&slabs.slabs, 7, b'h', 7, &pool, &mut scratches)
+            .expect("decode");
+        assert_eq!(out.logits.len(), info.vocab);
+        assert_eq!(out.k_new.len(), info.n_layers * info.d_model);
+        assert_eq!(out.v_new.len(), info.n_layers * info.d_model);
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+    }
+}

@@ -2,10 +2,12 @@
 //! the prefill/decode AOT executables.
 
 pub mod bundle;
+pub mod cpu;
 
 pub use bundle::{
     DecodeOut, FlashSlabs, ModelBundle, PrefillOut, SlabShardMut, TurboSlabs,
 };
+pub use cpu::CpuModel;
 
 use crate::testutil::Rng;
 

@@ -83,6 +83,35 @@ fn req_usize(j: &Json, path: &str) -> Result<usize> {
 }
 
 impl Manifest {
+    /// Built-in manifest for the artifact-free CPU substrate: the model
+    /// geometry the pure-Rust `TurboCpu` path serves (vocab 256 — a byte
+    /// LM — with `d_model = n_heads * d_head` and a page-aligned
+    /// context), no compiled artifacts. Shapes are deliberately small so
+    /// the no-toolchain engine path stays fast in tests and benches.
+    pub fn cpu_substrate() -> Manifest {
+        Manifest {
+            model: ModelInfo {
+                vocab: 256,
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 4,
+                d_head: 16,
+                max_ctx: 256,
+                block: 32,
+                n_r: -6.0,
+            },
+            micro: MicroInfo {
+                heads: 4,
+                seq: 64,
+                d_head: 16,
+                block: 32,
+                sas_rows: 64,
+                sas_cols: 64,
+            },
+            artifacts: Vec::new(),
+        }
+    }
+
     pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {:?}", path.as_ref()))?;

@@ -17,7 +17,9 @@ pub mod stub;
 #[cfg(not(feature = "pjrt"))]
 use self::stub as xla;
 
-pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use manifest::{
+    ArtifactSpec, Manifest, MicroInfo, ModelInfo, TensorSpec,
+};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -152,8 +154,13 @@ impl Executable {
 }
 
 /// PJRT client + compiled-executable registry for an artifact directory.
+///
+/// The client is `None` for a [`Runtime::cpu_substrate`] runtime: the
+/// manifest (model geometry) is served from a built-in default and any
+/// attempt to run a compiled artifact fails with a clear error — the
+/// pure-Rust `TurboCpu` backend never calls one.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    client: Option<xla::PjRtClient>,
     pub manifest: Manifest,
     dir: PathBuf,
     cache: HashMap<String, Executable>,
@@ -172,12 +179,36 @@ impl Runtime {
             client.platform_name(),
             client.device_count()
         );
-        Ok(Runtime { client, manifest, dir, cache: HashMap::new() })
+        Ok(Runtime {
+            client: Some(client),
+            manifest,
+            dir,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Artifact-free runtime for the pure-Rust CPU substrate: built-in
+    /// geometry ([`Manifest::cpu_substrate`]), no PJRT client, no
+    /// executables. The `TurboCpu` serving path runs against this with
+    /// no toolchain and no `make artifacts`.
+    pub fn cpu_substrate() -> Runtime {
+        Runtime {
+            client: None,
+            manifest: Manifest::cpu_substrate(),
+            dir: PathBuf::new(),
+            cache: HashMap::new(),
+        }
     }
 
     /// Compile (or fetch cached) an executable by artifact name.
     pub fn executable(&mut self, name: &str) -> Result<&Executable> {
         if !self.cache.contains_key(name) {
+            let client = self.client.as_ref().with_context(|| {
+                format!(
+                    "artifact {name} requested on a CPU-substrate runtime \
+                     (no PJRT client; use Runtime::load for artifact paths)"
+                )
+            })?;
             let spec = self
                 .manifest
                 .artifact(name)
@@ -189,7 +220,7 @@ impl Runtime {
                 path.to_str().context("non-utf8 path")?,
             )?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
+            let exe = client.compile(&comp)?;
             crate::info!(
                 "runtime",
                 "compiled {name} in {:.2}s",
@@ -224,5 +255,19 @@ mod tests {
         let t = HostTensor::scalar_i32(7);
         assert!(t.shape().is_empty());
         assert_eq!(t.as_i32().unwrap(), &[7]);
+    }
+
+    #[test]
+    fn cpu_substrate_serves_geometry_but_refuses_artifacts() {
+        let mut rt = Runtime::cpu_substrate();
+        let m = &rt.manifest.model;
+        assert_eq!(m.vocab, 256, "byte LM");
+        assert_eq!(m.d_model, m.n_heads * m.d_head);
+        assert_eq!(m.max_ctx % m.block, 0, "page-aligned context");
+        let err = rt.run("decode_turbo", &[]).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("CPU-substrate"),
+            "clear no-client error, got: {err:#}"
+        );
     }
 }

@@ -61,6 +61,40 @@ impl Sas {
         self.lut[idx] * Self::poly(td)
     }
 
+    /// Batched SAS evaluation over one block of scores: `row[i] <-
+    /// SAS_exp(row[i] - m)` for the whole slice, returning the sum of
+    /// the results — the decode block loop's shift-exp-and-sum step in
+    /// one pass.
+    ///
+    /// Bit-identical to calling [`Sas::exp`] per element (summing in
+    /// slice order), but **branch-free**: the sparsity threshold becomes
+    /// a 0/1 mask multiplied into the result, and the LUT index is
+    /// clamped instead of tested, so the loop body is straight-line
+    /// clamp + LUT gather + Horner cubic that the autovectorizer can
+    /// keep in SIMD lanes (no per-element early exit to flush the
+    /// pipeline on sparse rows).
+    #[inline]
+    pub fn exp_block(&self, row: &mut [f32], m: f32) -> f32 {
+        let cap = (self.depth + 1) as f32;
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            let xx = *x - m;
+            // 1.0 when x is above the sparsity threshold, else 0.0.
+            let live = (xx >= self.n_r) as u32 as f32;
+            // Clamp keeps the LUT index in range for dead lanes; live
+            // lanes satisfy -xx <= -n_r < depth + 1, so the min is a
+            // no-op there and t/ti/td match the scalar path exactly.
+            let t = (-xx).min(cap);
+            let ti = t as i32; // t >= 0: trunc == floor
+            let td = t - ti as f32;
+            let idx = (ti as usize).min(self.depth + 1);
+            let v = (live * self.lut[idx]) * Self::poly(td);
+            *x = v;
+            sum += v;
+        }
+        sum
+    }
+
     /// In-place SAS softmax over one row of scores.
     pub fn softmax_row(&self, row: &mut [f32]) {
         let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
@@ -161,6 +195,46 @@ mod tests {
                 assert!((x - y).abs() < 2e-2, "{x} vs {y}");
             }
         });
+    }
+
+    #[test]
+    fn exp_block_bit_identical_to_scalar_exp() {
+        // The batched evaluator is a pure de-branching of `exp`: for any
+        // shift and any score mix (deep below the threshold, at it,
+        // above it) every element and the running sum must match the
+        // scalar path to the bit.
+        prop::run("exp_block == exp", 80, |g| {
+            let sas = if g.bool() { Sas::default() } else { Sas::new(-3.5) };
+            let n = g.usize_in(0, 64);
+            let m = g.f32_in(-2.0, 8.0);
+            let mut row: Vec<f32> = (0..n)
+                .map(|_| match g.usize_in(0, 5) {
+                    0 => m + sas.n_r, // exactly at the threshold
+                    1 => m + sas.n_r - 1e-3, // just below: must be zero
+                    2 => m - 20.0,    // deep in the sparse region
+                    _ => m + g.f32_in(sas.n_r, 0.0),
+                })
+                .collect();
+            let want: Vec<f32> = row.iter().map(|&x| sas.exp(x - m)).collect();
+            let want_sum = want.iter().fold(0.0f32, |a, &b| a + b);
+            let sum = sas.exp_block(&mut row, m);
+            assert_eq!(sum.to_bits(), want_sum.to_bits(), "sum");
+            for (i, (got, want)) in row.iter().zip(&want).enumerate() {
+                assert_eq!(got.to_bits(), want.to_bits(), "elem {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn exp_block_zeroes_below_threshold() {
+        let sas = Sas::default();
+        let mut row = vec![-6.0001f32, -100.0, f32::NEG_INFINITY, -0.5];
+        let sum = sas.exp_block(&mut row, 0.0);
+        assert_eq!(row[0], 0.0);
+        assert_eq!(row[1], 0.0);
+        assert_eq!(row[2], 0.0);
+        assert!(row[3] > 0.0);
+        assert_eq!(sum, row[3]);
     }
 
     #[test]

@@ -136,7 +136,21 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// Integer dot product (the INT8 tensor-core stand-in on CPU).
+// The integer micro-kernels the hot paths actually run; re-exported here
+// so old `tensor::idot` call sites migrate without a crate-wide rename.
+pub use crate::kernels::{idot_mr, ipv_acc, qk_dot_block, ACC_MAX_ROWS, MR};
+
+/// Integer dot product — the single-accumulator scalar *reference*.
+///
+/// Kept for oracles and property tests; hot paths use the multi-row
+/// chunked kernels in [`crate::kernels`] (`idot_mr` / `qk_dot_block`),
+/// which compute the same exact integer result with one accumulator per
+/// key row and no per-index bounds checks.
+#[deprecated(
+    since = "0.1.0",
+    note = "scalar reference only — hot paths use \
+            kernels::qk_dot_block / kernels::idot_mr"
+)]
 #[inline]
 pub fn idot(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
@@ -149,6 +163,8 @@ pub fn idot(a: &[i8], b: &[i8]) -> i32 {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // idot stays the reference oracle in tests
+
     use super::*;
 
     #[test]

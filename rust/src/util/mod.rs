@@ -7,11 +7,13 @@ pub mod cli;
 pub mod json;
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 static LOG_LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=error 2=info 3=debug
-static START: once_cell::sync::Lazy<Instant> =
-    once_cell::sync::Lazy::new(Instant::now);
+// std::sync::OnceLock instead of once_cell: the offline vendor set has
+// no once_cell, and the crate only depends on anyhow.
+static START: OnceLock<Instant> = OnceLock::new();
 
 /// Set global log verbosity (0=off, 1=error, 2=info, 3=debug).
 pub fn set_log_level(level: u8) {
@@ -22,9 +24,9 @@ pub fn log_level() -> u8 {
     LOG_LEVEL.load(Ordering::Relaxed)
 }
 
-/// Seconds since process start (for log timestamps).
+/// Seconds since first use (for log timestamps).
 pub fn uptime() -> f64 {
-    START.elapsed().as_secs_f64()
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 /// Log at info level with a `[+12.345s tag]` prefix.

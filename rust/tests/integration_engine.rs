@@ -1,10 +1,84 @@
 //! Integration tests over the full serving engine (batcher + runtime +
-//! quantized KV cache). Skipped when artifacts are absent.
+//! quantized KV cache). The executable-backed paths skip when artifacts
+//! are absent; the `TurboCpu` path needs none and always runs.
 
 use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
 use turboattention::model::{ModelBundle, Sampler};
 use turboattention::quant::Bits;
 use turboattention::runtime::Runtime;
+
+fn cpu_engine(decode_threads: usize) -> Engine {
+    let cfg = EngineConfig {
+        mode: PathMode::TurboCpu,
+        sampler: Sampler::Greedy,
+        decode_threads,
+        ..Default::default()
+    };
+    Engine::new(ModelBundle::new(Runtime::cpu_substrate()), cfg)
+}
+
+/// The CPU-substrate serving path end to end through the engine —
+/// batcher, prefill, decode rounds, folds, completion — with **no
+/// artifacts on disk** (the suite's other paths all skip without them).
+#[test]
+fn turbo_cpu_engine_serves_without_artifacts() {
+    let mut e = cpu_engine(2);
+    e.submit(GenRequest::new(1, b"the cpu engine ".to_vec(), 12));
+    let done = e.run_to_completion().expect("run");
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].generated.len(), 12);
+    assert!(done[0].ttft > 0.0 && done[0].total_latency >= done[0].ttft);
+    assert!(
+        e.metrics.cache_slab_bytes > 0,
+        "slab working set aggregated into engine metrics"
+    );
+    assert!(
+        e.metrics.cache_slab_bytes > e.metrics.cache_bytes,
+        "slabs ({}) dominate the compressed cache ({})",
+        e.metrics.cache_slab_bytes,
+        e.metrics.cache_bytes
+    );
+    assert!(e.metrics.cache_compression > 1.0, "INT8 buffer beats FP16");
+}
+
+/// Engine-level arm of the TurboCpu determinism contract: greedy
+/// generation is byte-identical for every `decode_threads` (the
+/// library-level logits-bit arm lives in `parallel_parity.rs`).
+#[test]
+fn turbo_cpu_engine_decode_threads_do_not_change_generation() {
+    let run = |threads: usize| -> Vec<u8> {
+        let mut e = cpu_engine(threads);
+        e.submit(GenRequest::new(1, b"the pool shards heads ".to_vec(), 40));
+        e.run_to_completion().expect("run")[0].generated.clone()
+    };
+    let serial = run(1);
+    for threads in [2usize, 4, 7] {
+        assert_eq!(serial, run(threads), "decode_threads={threads}");
+    }
+}
+
+/// Multiple interleaved requests complete on the CPU substrate (the
+/// continuous batcher drives a real multi-session decode).
+#[test]
+fn turbo_cpu_engine_interleaves_requests() {
+    let mut e = cpu_engine(4);
+    for (i, prompt) in
+        [b"the cache ".as_slice(), b"one shard ", b"this head "]
+            .iter()
+            .enumerate()
+    {
+        e.submit(GenRequest::new(i as u64, prompt.to_vec(), 6 + i * 3));
+    }
+    let done = e.run_to_completion().expect("run");
+    assert_eq!(done.len(), 3);
+    let mut ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+    ids.sort();
+    assert_eq!(ids, vec![0, 1, 2]);
+    for c in &done {
+        assert_eq!(c.generated.len(), 6 + c.id as usize * 3);
+    }
+    assert_eq!(e.metrics.requests_completed, 3);
+}
 
 fn engine(mode: PathMode) -> Option<Engine> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {

@@ -9,6 +9,13 @@
 //! Parallelism is purely a throughput knob; a single flipped bit here is
 //! a scheduling bug, not noise.
 //!
+//! The contract covers **both** turbo backends: the library-level slab
+//! sync + `turbo_decode_streams` trace (the `Turbo` path's CPU
+//! substrate), and — since the third backend landed — a full serving
+//! trace through the `TurboCpu` `DynBackend` (prefill + greedy decode +
+//! fold, attention on the integer kernels), compared logits-bits-exact
+//! across `decode_threads`.
+//!
 //! Plus the pool soundness corners the decode loop relies on: worker
 //! panics surface as `Err` without poisoning later steps, zero-head and
 //! heads-smaller-than-pool geometries, and thread-leak-free reuse across
@@ -17,13 +24,16 @@
 use std::sync::Arc;
 
 use turboattention::attention::backend::TurboSession;
-use turboattention::attention::{turbo_decode_streams, DecodeScratch};
+use turboattention::attention::{
+    backend_for, turbo_decode_streams, DecodeScratch, DynBackend, PathMode,
+};
 use turboattention::kvcache::{
     CacheStats, KvCache, KvCacheConfig, PrecisionMap,
 };
-use turboattention::model::TurboSlabs;
+use turboattention::model::{argmax, ModelBundle, TurboSlabs};
 use turboattention::pool::WorkerPool;
 use turboattention::quant::{quant_sym_int8, Bits};
+use turboattention::runtime::{Manifest, Runtime};
 use turboattention::testutil::prop::Gen;
 use turboattention::testutil::{prop, Rng};
 
@@ -182,6 +192,70 @@ fn decode_bit_identical_across_thread_counts() {
             );
         }
     });
+}
+
+/// One full serving trace through the `TurboCpu` backend: prefill,
+/// `steps` greedy decode steps with K/V folds, all attention on the
+/// integer kernels and the worker pool. Fully determined by
+/// (prompt, steps, seed) — thread count must not change a bit.
+#[derive(Debug, PartialEq)]
+struct CpuTrace {
+    /// Every logits value the backend produced (prefill + each step),
+    /// as bits — `to_bits` equality, no tolerance.
+    logits_bits: Vec<u32>,
+    /// Greedy token choices (argmax of each step's logits).
+    generated: Vec<u8>,
+    stats: CacheStats,
+}
+
+fn run_cpu_case(prompt: &[u8], steps: usize, threads: usize) -> CpuTrace {
+    let info = Manifest::cpu_substrate().model;
+    let pool = Arc::new(WorkerPool::new(threads));
+    // n_2bit_heads = 1: the mixed-precision q2 path is in the trace too.
+    let backend =
+        backend_for(PathMode::TurboCpu, Bits::Int4, 1, 7, &info, pool);
+    let mut bundle = ModelBundle::new(Runtime::cpu_substrate());
+    let (logits, mut state) =
+        backend.prefill(&mut bundle, prompt).expect("prefill");
+    let mut logits_bits: Vec<u32> =
+        logits.iter().map(|x| x.to_bits()).collect();
+    let last =
+        &logits[(prompt.len() - 1) * info.vocab..prompt.len() * info.vocab];
+    let mut token = argmax(last) as u8;
+    let mut generated = vec![token];
+    for i in 0..steps {
+        let pos = prompt.len() + i;
+        let out = backend
+            .decode_step(&mut bundle, &mut state, token, pos)
+            .expect("decode");
+        backend
+            .fold_new_token(&bundle, &mut state, &out.k_new, &out.v_new, pos);
+        logits_bits.extend(out.logits.iter().map(|x| x.to_bits()));
+        token = argmax(&out.logits) as u8;
+        generated.push(token);
+    }
+    CpuTrace {
+        logits_bits,
+        generated,
+        stats: backend.cache_stats(&state).expect("turbo-family stats"),
+    }
+}
+
+/// The TurboCpu arm of the headline property: the serving path built on
+/// `turbo_decode_streams` + the integer kernels is logits-bit-identical
+/// for every `decode_threads`.
+#[test]
+fn turbo_cpu_backend_bit_identical_across_thread_counts() {
+    // 31-token prompt + 12 steps crosses the 32-token page boundary, so
+    // the trace includes a buffer flush (view rewrite) mid-decode.
+    let prompt = b"the turbo cpu substrate serves ";
+    let want = run_cpu_case(prompt, 12, 1);
+    assert_eq!(want.stats.tokens, prompt.len() + 12, "trace sanity");
+    assert!(want.stats.slab_bytes > 0, "slab accounting present");
+    for &threads in &THREADS[1..] {
+        let got = run_cpu_case(prompt, 12, threads);
+        assert_eq!(got, want, "threads={threads} diverged from serial");
+    }
 }
 
 /// Repeating the same trace on the same multi-thread pool is also

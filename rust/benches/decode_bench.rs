@@ -35,8 +35,14 @@
 //!    RNG in the timed body), so the speedup isolates the
 //!    kernelization.
 //!
-//! `--json` additionally writes every case plus the computed speedups to
-//! `BENCH_decode.json` (the perf-trajectory artifact).
+//! 4. **Shared-prefix batched decode** — B ∈ {2, 4, 8} sessions forked
+//!    from one 512-token page-aligned common prefix on the refcounted
+//!    page pool: per-token decode latency plus the pool's measured
+//!    dedup ratio (exactly (B-1)/B with only the prefix resident).
+//!
+//! `--json` additionally writes every case plus the computed speedups and
+//! the shared-prefix scenario to `BENCH_decode.json` (the perf-trajectory
+//! artifact).
 
 use std::sync::Arc;
 
@@ -45,10 +51,10 @@ use turboattention::attention::{
     turbo_decode_streams, turbo_decode_streams_scalar, DecodeScratch,
 };
 use turboattention::bench::Bencher;
-use turboattention::kvcache::{KvCache, KvCacheConfig, PrecisionMap};
+use turboattention::kvcache::{KvCache, KvCacheConfig, PagePool, PrecisionMap};
 use turboattention::model::TurboSlabs;
 use turboattention::pool::WorkerPool;
-use turboattention::quant::Bits;
+use turboattention::quant::{quant_sym_int8, Bits};
 use turboattention::testutil::Rng;
 use turboattention::util::cli::Args;
 
@@ -284,6 +290,112 @@ fn main() {
         println!();
     }
 
+    // Shared-prefix batched decode: B sessions forked from one donor's
+    // 512-token page-aligned prefix (all on one refcounted page pool).
+    // The timed body is one decode round — every session folds a token,
+    // syncs its slabs, and runs the stream attention — so
+    // `per_token_s = mean / B`. The dedup ratio is read off the pool:
+    // with only the prefix resident it is exactly (B-1)/B.
+    let prefix_ctx = 512usize;
+    let mut shared_json = Vec::new();
+    println!("shared-prefix batched decode ({prefix_ctx}-token common prefix):");
+    for &b_sessions in &[2usize, 4, 8] {
+        let mut rng = Rng::new(7);
+        let pool_pages = PagePool::new_shared();
+        let wpool = Arc::new(WorkerPool::new(4));
+        let pm = PrecisionMap::uniform(L, H, Bits::Int4);
+        let mk_cache = || {
+            KvCache::with_pool(
+                KvCacheConfig::new(L, H, DH, BLOCK, pm.clone()),
+                Arc::clone(&pool_pages),
+            )
+        };
+        // Donor ingests the common prefix once.
+        let mut donor = mk_cache();
+        for l in 0..L {
+            for h in 0..H {
+                let k = quant_sym_int8(&rng.normal_vec(prefix_ctx * DH, 1.0));
+                donor
+                    .k_stream_mut(l, h)
+                    .ingest_q1_block(&k.codes, k.scale, prefix_ctx);
+                let v = quant_sym_int8(&rng.normal_vec(prefix_ctx * DH, 1.0));
+                donor
+                    .v_stream_mut(l, h)
+                    .ingest_q1_block(&v.codes, v.scale, prefix_ctx);
+            }
+        }
+        let max_ctx = prefix_ctx + SLACK;
+        let mut sessions: Vec<TurboSession> = (0..b_sessions)
+            .map(|_| {
+                let mut cache = mk_cache();
+                for l in 0..L {
+                    for h in 0..H {
+                        let kh = donor.head(l, h).k.pages.clone();
+                        cache.k_stream_mut(l, h).adopt_pages(&kh);
+                        let vh = donor.head(l, h).v.pages.clone();
+                        cache.v_stream_mut(l, h).adopt_pages(&vh);
+                    }
+                }
+                let mut sess = TurboSession::from_parts_pooled(
+                    cache,
+                    TurboSlabs::new(L, H, max_ctx, DH, BLOCK),
+                    Arc::clone(&wpool),
+                );
+                sess.sync_slabs().expect("sync");
+                sess
+            })
+            .collect();
+        // Donor out of the picture: only the B sessions own the prefix,
+        // so the pool dedup is exactly (B-1)/B.
+        drop(donor);
+        let dedup = pool_pages.read().expect("pool").stats().dedup_ratio();
+        let mut scratches = vec![DecodeScratch::new(); wpool.threads()];
+        let mut ml = vec![(0.0f32, 0.0f32); L * H];
+        let mut out = vec![0.0f32; L * H * DH];
+        let q = rng.normal_vec(L * H * DH, 1.0);
+        let name =
+            format!("decode-round shared B={b_sessions} ctx={prefix_ctx}");
+        let mean_s = {
+            let wpool = &wpool;
+            b.bench(&name, || {
+                let mut acc = 0.0f32;
+                for sess in sessions.iter_mut() {
+                    fold_token(sess, &mut rng);
+                    let nk = sess.sync_slabs().expect("sync");
+                    turbo_decode_streams(
+                        wpool,
+                        &q,
+                        &sess.slabs.k8,
+                        &sess.slabs.v8,
+                        &sess.slabs.sk,
+                        &sess.slabs.sv,
+                        DH,
+                        nk,
+                        BLOCK,
+                        -6.0,
+                        &mut scratches,
+                        &mut ml,
+                        &mut out,
+                    )
+                    .expect("decode");
+                    acc += out[0];
+                }
+                acc
+            })
+            .mean_s()
+        };
+        let per_token = mean_s / b_sessions as f64;
+        println!(
+            "  B={b_sessions}: dedup {dedup:.3}, {:.3}ms/token",
+            per_token * 1e3
+        );
+        shared_json.push(format!(
+            "{{\"sessions\":{b_sessions},\"prefix_tokens\":{prefix_ctx},\
+             \"dedup_ratio\":{dedup:.4},\"per_token_s\":{per_token:e}}}"
+        ));
+    }
+    println!();
+
     let flat = |name: &str| {
         let lo = format!("{name} ctx={}", contexts[0]);
         let hi = format!("{name} ctx={}", contexts[contexts.len() - 1]);
@@ -345,10 +457,12 @@ fn main() {
             "{{\n  \"bench\": \"decode\",\n  \"geometry\": {{\"layers\": {L}, \
              \"heads\": {H}, \"d_head\": {DH}, \"block\": {BLOCK}}},\n  \
              \"cases\": {},\n  \"kernel_vs_scalar\": [{}],\n  \
-             \"thread_speedup_vs_t1\": [{}]\n}}\n",
+             \"thread_speedup_vs_t1\": [{}],\n  \
+             \"shared_prefix\": [{}]\n}}\n",
             b.results_json(),
             kernel_speedups.join(","),
-            thread_speedups.join(",")
+            thread_speedups.join(","),
+            shared_json.join(",")
         );
         std::fs::write("BENCH_decode.json", &payload)
             .expect("write BENCH_decode.json");

@@ -42,11 +42,14 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::attention::turbo::DecodeScratch;
+use crate::coordinator::prefix::SharedPrefix;
 use crate::kvcache::{
-    CacheStats, HeadCacheMut, KvCache, KvCacheConfig, PrecisionMap,
+    CacheStats, HeadCacheMut, KvCache, KvCacheConfig, PagePool, PrecisionMap,
+    SharedPagePool,
 };
 use crate::model::{
-    CpuModel, DecodeOut, FlashSlabs, ModelBundle, SlabShardMut, TurboSlabs,
+    CpuModel, DecodeOut, FlashSlabs, ModelBundle, ModelScratch, SlabShardMut,
+    TurboSlabs,
 };
 use crate::pool::{balanced_chunk_sizes, WorkerPool};
 use crate::quant::Bits;
@@ -78,13 +81,22 @@ pub trait AttentionBackend {
     fn name(&self) -> &'static str;
 
     /// Run prefill over `prompt`; returns the full prefill logits buffer
-    /// (`[max_ctx * vocab]`, see `ModelBundle::logits_at`) and a fresh
-    /// session.
+    /// (`[max_ctx * vocab]`, see `ModelBundle::logits_at`), a fresh
+    /// session, and — on paths with a shared page pool — the session's
+    /// page-aligned prompt-prefix handles for prefix-index registration.
+    ///
+    /// `shared`, when given, is a page-aligned prefix of `prompt` whose
+    /// pooled q2 pages an earlier session already built: the new session
+    /// forks from those pages (retaining them) and prefill stores only
+    /// the tail. The decode buffer is never shared (it is mutable), and
+    /// backends without a page pool ignore `shared` and register
+    /// nothing.
     fn prefill(
         &self,
         bundle: &mut ModelBundle,
         prompt: &[u8],
-    ) -> Result<(Vec<f32>, Self::Session)>;
+        shared: Option<&SharedPrefix>,
+    ) -> Result<(Vec<f32>, Self::Session, Option<SharedPrefix>)>;
 
     /// One decode step: feed `token` at absolute position `pos`, attend
     /// over the session's cache.
@@ -108,6 +120,13 @@ pub trait AttentionBackend {
 
     /// Cache memory statistics, if the path has a compressed cache.
     fn cache_stats(&self, session: &Self::Session) -> Option<CacheStats>;
+
+    /// The refcounted page pool every session of this backend stores
+    /// its flushed q2 pages in, if the path has one — what admission
+    /// uses for prefix lookups and the engine for dedup metrics.
+    fn page_pool(&self) -> Option<&SharedPagePool> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -125,6 +144,9 @@ pub struct TurboBackend {
     /// Decode worker pool, shared by every session this backend creates
     /// (a 1-thread pool is the exact serial path).
     pool: Arc<WorkerPool>,
+    /// Refcounted q2 page store shared by every session — prefix-
+    /// sharing sessions fork from it.
+    pages: SharedPagePool,
 }
 
 impl TurboBackend {
@@ -133,7 +155,12 @@ impl TurboBackend {
         n_2bit_heads: usize,
         pool: Arc<WorkerPool>,
     ) -> TurboBackend {
-        TurboBackend { kv_bits, n_2bit_heads, pool }
+        TurboBackend {
+            kv_bits,
+            n_2bit_heads,
+            pool,
+            pages: PagePool::new_shared(),
+        }
     }
 }
 
@@ -306,7 +333,9 @@ fn sync_stream_shard(
 }
 
 /// Build the paged q2 cache for one request from a precision policy and
-/// the model geometry — shared by every turbo-family backend.
+/// the model geometry — shared by every turbo-family backend. Pages go
+/// into `pages`, the backend's shared refcounted pool.
+#[allow(clippy::too_many_arguments)]
 fn turbo_cache_for(
     l_n: usize,
     h_n: usize,
@@ -314,6 +343,7 @@ fn turbo_cache_for(
     block: usize,
     kv_bits: Bits,
     n_2bit_heads: usize,
+    pages: SharedPagePool,
 ) -> KvCache {
     let precision = if n_2bit_heads == 0 {
         PrecisionMap::uniform(l_n, h_n, kv_bits)
@@ -328,7 +358,67 @@ fn turbo_cache_for(
         }
         pm
     };
-    KvCache::new(KvCacheConfig::new(l_n, h_n, d_head, block, precision))
+    KvCache::with_pool(
+        KvCacheConfig::new(l_n, h_n, d_head, block, precision),
+        pages,
+    )
+}
+
+/// Retain a shared prompt prefix's pooled pages into a fresh cache —
+/// the fork point of prefix sharing. Only immutable q2 pages are
+/// shared; each stream's mutable decode buffer stays private, and the
+/// adopted pages form the page-aligned head of every stream.
+fn adopt_shared_prefix(cache: &mut KvCache, shared: &SharedPrefix) {
+    let l_n = cache.cfg.n_layers;
+    let h_n = cache.cfg.n_heads;
+    assert_eq!(
+        shared.n_streams,
+        l_n * h_n,
+        "shared prefix geometry mismatch"
+    );
+    assert_eq!(
+        shared.tokens,
+        shared.n_pages * cache.cfg.block,
+        "shared prefix must be whole pages"
+    );
+    for l in 0..l_n {
+        for h in 0..h_n {
+            let s = l * h_n + h;
+            cache.k_stream_mut(l, h).adopt_pages(shared.k_pages(s));
+            cache.v_stream_mut(l, h).adopt_pages(shared.v_pages(s));
+        }
+    }
+}
+
+/// Collect a freshly prefilled cache's page-aligned prompt-prefix
+/// handles for prefix-index registration (weak — no retains; the
+/// session's own refs keep the pages alive while it runs, and forks
+/// that adopt them extend that lifetime).
+fn collect_prefix(cache: &KvCache, prompt_len: usize) -> Option<SharedPrefix> {
+    let block = cache.cfg.block;
+    let n_pages = prompt_len / block;
+    if n_pages == 0 {
+        return None;
+    }
+    let l_n = cache.cfg.n_layers;
+    let h_n = cache.cfg.n_heads;
+    let mut k = Vec::with_capacity(l_n * h_n * n_pages);
+    let mut v = Vec::with_capacity(l_n * h_n * n_pages);
+    for l in 0..l_n {
+        for h in 0..h_n {
+            let hc = cache.head(l, h);
+            debug_assert!(hc.k.pages.len() >= n_pages, "prefill short");
+            k.extend_from_slice(&hc.k.pages[..n_pages]);
+            v.extend_from_slice(&hc.v.pages[..n_pages]);
+        }
+    }
+    Some(SharedPrefix {
+        tokens: n_pages * block,
+        n_pages,
+        n_streams: l_n * h_n,
+        k,
+        v,
+    })
 }
 
 /// Append one decoded token's K/V (`[L*H*dh]`, layer-major) to every
@@ -357,6 +447,7 @@ impl TurboBackend {
             bundle.block(),
             self.kv_bits,
             self.n_2bit_heads,
+            Arc::clone(&self.pages),
         )
     }
 }
@@ -372,15 +463,33 @@ impl AttentionBackend for TurboBackend {
         &self,
         bundle: &mut ModelBundle,
         prompt: &[u8],
-    ) -> Result<(Vec<f32>, TurboSession)> {
+        shared: Option<&SharedPrefix>,
+    ) -> Result<(Vec<f32>, TurboSession, Option<SharedPrefix>)> {
         let out = bundle.prefill(prompt, true)?;
         let (k8, v8, sk, sv) =
             out.turbo_cache.expect("turbo prefill returns cache");
         let mut cache = self.new_cache(bundle);
-        bundle.ingest_prefill(&mut cache, &k8, &v8, &sk, &sv, prompt.len());
+        let skip = match shared {
+            Some(sp) => {
+                debug_assert!(sp.tokens <= prompt.len());
+                adopt_shared_prefix(&mut cache, sp);
+                sp.tokens
+            }
+            None => 0,
+        };
+        bundle.ingest_prefill_from(
+            &mut cache,
+            &k8,
+            &v8,
+            &sk,
+            &sv,
+            prompt.len(),
+            skip,
+        );
+        let reg = collect_prefix(&cache, prompt.len());
         let session =
             TurboSession::new(cache, bundle, Arc::clone(&self.pool));
-        Ok((out.logits, session))
+        Ok((out.logits, session, reg))
     }
 
     fn decode_step(
@@ -410,6 +519,10 @@ impl AttentionBackend for TurboBackend {
         stats.slab_bytes = session.slabs.bytes();
         Some(stats)
     }
+
+    fn page_pool(&self) -> Option<&SharedPagePool> {
+        Some(&self.pages)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -437,6 +550,8 @@ pub struct TurboCpuBackend {
     model: Arc<CpuModel>,
     /// Decode worker pool shared by every session this backend creates.
     pool: Arc<WorkerPool>,
+    /// Refcounted q2 page store shared by every session.
+    pages: SharedPagePool,
 }
 
 impl TurboCpuBackend {
@@ -453,6 +568,7 @@ impl TurboCpuBackend {
             n_2bit_heads,
             model: Arc::new(CpuModel::new(info, seed)),
             pool,
+            pages: PagePool::new_shared(),
         }
     }
 
@@ -464,11 +580,12 @@ impl TurboCpuBackend {
 
 /// TurboCpu per-request state: the same paged cache + slabs + sync
 /// cursors as the executable path ([`TurboSession`]), plus the decode
-/// scratches the CPU attention fan-out reuses (one per pool thread —
-/// zero steady-state allocation).
+/// scratches the CPU attention fan-out reuses (one per pool thread)
+/// and the model-math scratch — zero steady-state allocation.
 pub struct TurboCpuSession {
     pub inner: TurboSession,
     scratches: Vec<DecodeScratch>,
+    model_scratch: ModelScratch,
 }
 
 impl AttentionBackend for TurboCpuBackend {
@@ -482,7 +599,8 @@ impl AttentionBackend for TurboCpuBackend {
         &self,
         _bundle: &mut ModelBundle,
         prompt: &[u8],
-    ) -> Result<(Vec<f32>, TurboCpuSession)> {
+        shared: Option<&SharedPrefix>,
+    ) -> Result<(Vec<f32>, TurboCpuSession, Option<SharedPrefix>)> {
         let m = &self.model.info;
         let mut cache = turbo_cache_for(
             m.n_layers,
@@ -491,8 +609,19 @@ impl AttentionBackend for TurboCpuBackend {
             m.block,
             self.kv_bits,
             self.n_2bit_heads,
+            Arc::clone(&self.pages),
         );
-        let logits = self.model.prefill(prompt, &self.pool, &mut cache)?;
+        let skip = match shared {
+            Some(sp) => {
+                debug_assert!(sp.tokens <= prompt.len());
+                adopt_shared_prefix(&mut cache, sp);
+                sp.tokens
+            }
+            None => 0,
+        };
+        let logits =
+            self.model.prefill_from(prompt, skip, &self.pool, &mut cache)?;
+        let reg = collect_prefix(&cache, prompt.len());
         let slabs = TurboSlabs::new(
             m.n_layers,
             m.n_heads,
@@ -506,7 +635,12 @@ impl AttentionBackend for TurboCpuBackend {
             Arc::clone(&self.pool),
         );
         let scratches = vec![DecodeScratch::new(); self.pool.threads()];
-        Ok((logits, TurboCpuSession { inner, scratches }))
+        let session = TurboCpuSession {
+            inner,
+            scratches,
+            model_scratch: ModelScratch::new(),
+        };
+        Ok((logits, session, reg))
     }
 
     fn decode_step(
@@ -524,6 +658,7 @@ impl AttentionBackend for TurboCpuBackend {
             pos,
             &self.pool,
             &mut session.scratches,
+            &mut session.model_scratch,
         )
     }
 
@@ -542,6 +677,10 @@ impl AttentionBackend for TurboCpuBackend {
         let mut stats = session.inner.cache.stats();
         stats.slab_bytes = session.inner.slabs.bytes();
         Some(stats)
+    }
+
+    fn page_pool(&self) -> Option<&SharedPagePool> {
+        Some(&self.pages)
     }
 }
 
@@ -569,10 +708,13 @@ impl AttentionBackend for FlashBackend {
         &self,
         bundle: &mut ModelBundle,
         prompt: &[u8],
-    ) -> Result<(Vec<f32>, FlashSession)> {
+        _shared: Option<&SharedPrefix>,
+    ) -> Result<(Vec<f32>, FlashSession, Option<SharedPrefix>)> {
+        // No page pool on the float baseline: nothing to fork from or
+        // register.
         let out = bundle.prefill(prompt, false)?;
         let (kf, vf) = out.flash_cache.expect("flash prefill returns cache");
-        Ok((out.logits, FlashSession { slabs: FlashSlabs { kf, vf } }))
+        Ok((out.logits, FlashSession { slabs: FlashSlabs { kf, vf } }, None))
     }
 
     fn decode_step(
@@ -651,7 +793,8 @@ pub trait DynBackend {
         &self,
         bundle: &mut ModelBundle,
         prompt: &[u8],
-    ) -> Result<(Vec<f32>, BackendState)>;
+        shared: Option<&SharedPrefix>,
+    ) -> Result<(Vec<f32>, BackendState, Option<SharedPrefix>)>;
     fn decode_step(
         &self,
         bundle: &mut ModelBundle,
@@ -668,6 +811,8 @@ pub trait DynBackend {
         pos: usize,
     );
     fn cache_stats(&self, state: &BackendState) -> Option<CacheStats>;
+    /// See [`AttentionBackend::page_pool`].
+    fn page_pool(&self) -> Option<&SharedPagePool>;
 }
 
 struct Erased<B>(B);
@@ -685,9 +830,10 @@ where
         &self,
         bundle: &mut ModelBundle,
         prompt: &[u8],
-    ) -> Result<(Vec<f32>, BackendState)> {
-        let (logits, session) = self.0.prefill(bundle, prompt)?;
-        Ok((logits, BackendState::new(session)))
+        shared: Option<&SharedPrefix>,
+    ) -> Result<(Vec<f32>, BackendState, Option<SharedPrefix>)> {
+        let (logits, session, reg) = self.0.prefill(bundle, prompt, shared)?;
+        Ok((logits, BackendState::new(session), reg))
     }
 
     fn decode_step(
@@ -714,6 +860,10 @@ where
 
     fn cache_stats(&self, state: &BackendState) -> Option<CacheStats> {
         self.0.cache_stats(state.downcast_ref())
+    }
+
+    fn page_pool(&self) -> Option<&SharedPagePool> {
+        self.0.page_pool()
     }
 }
 
@@ -921,8 +1071,8 @@ mod tests {
             crate::runtime::Runtime::cpu_substrate(),
         );
         let prompt = b"turbo cpu serves ".to_vec();
-        let (logits, mut state) =
-            backend.prefill(&mut bundle, &prompt).expect("prefill");
+        let (logits, mut state, _reg) =
+            backend.prefill(&mut bundle, &prompt, None).expect("prefill");
         assert_eq!(logits.len(), prompt.len() * info.vocab);
         let mut pos = prompt.len();
         let mut token = 42u8;
@@ -962,5 +1112,94 @@ mod tests {
     fn state_downcast_mismatch_panics() {
         let state = BackendState::new(42usize);
         let _: &FlashSession = state.downcast_ref();
+    }
+
+    /// Prefix sharing through the `DynBackend` interface: a session
+    /// forked from a registered prefix decodes **bit-identically** to a
+    /// fully private session, while its cache stats show the prefix as
+    /// shared storage.
+    #[test]
+    fn forked_session_decodes_bit_identical_to_private() {
+        let info = crate::runtime::Manifest::cpu_substrate().model;
+        let pool = Arc::new(WorkerPool::new(2));
+        let backend =
+            backend_for(PathMode::TurboCpu, Bits::Int4, 1, 7, &info, pool);
+        let mut bundle = ModelBundle::new(
+            crate::runtime::Runtime::cpu_substrate(),
+        );
+        // Prompt crossing one page boundary (block = 32): 40 tokens.
+        let prompt: Vec<u8> =
+            (0..40).map(|i| b'a' + (i % 17) as u8).collect();
+
+        // Donor session registers its prefix.
+        let (_, _donor, reg) =
+            backend.prefill(&mut bundle, &prompt, None).expect("donor");
+        let reg = reg.expect("page-crossing prompt registers a prefix");
+        assert_eq!(reg.tokens, 32);
+        assert_eq!(reg.n_pages, 1);
+        assert_eq!(reg.n_streams, info.n_layers * info.n_heads);
+
+        // Forked vs private session, same decode trace.
+        let decode = |state: &mut BackendState,
+                      bundle: &mut ModelBundle|
+         -> Vec<u32> {
+            let mut bits = Vec::new();
+            let mut token = 42u8;
+            let mut pos = prompt.len();
+            for _ in 0..8 {
+                let out = backend
+                    .decode_step(bundle, state, token, pos)
+                    .expect("decode");
+                backend.fold_new_token(
+                    bundle, state, &out.k_new, &out.v_new, pos,
+                );
+                bits.extend(out.logits.iter().map(|x| x.to_bits()));
+                token = crate::model::argmax(&out.logits) as u8;
+                pos += 1;
+            }
+            bits
+        };
+        let (fl, mut forked, _) = backend
+            .prefill(&mut bundle, &prompt, Some(&reg))
+            .expect("forked");
+        let (pl, mut private, _) =
+            backend.prefill(&mut bundle, &prompt, None).expect("private");
+        let bits =
+            |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&fl), bits(&pl), "prefill logits bitwise");
+        let fbits = decode(&mut forked, &mut bundle);
+        let pbits = decode(&mut private, &mut bundle);
+        assert_eq!(fbits, pbits, "decode logits bitwise");
+
+        // Accounting: the forked session shares its prefix pages, the
+        // private one owns everything (refs taken by donor+fork make
+        // even the donor's copy "shared", but private's *tail* pages and
+        // its own stats stay meaningful).
+        let fstats = backend.cache_stats(&forked).expect("stats");
+        assert!(fstats.shared_page_bytes > 0, "prefix shared");
+        let pool_stats = backend
+            .page_pool()
+            .expect("turbo-family pool")
+            .read()
+            .expect("pool")
+            .stats();
+        assert!(pool_stats.shared_bytes > 0);
+        assert!(pool_stats.dedup_ratio() > 0.0);
+    }
+
+    /// Sub-page prompts register nothing and fork from nothing.
+    #[test]
+    fn short_prompt_registers_no_prefix() {
+        let info = crate::runtime::Manifest::cpu_substrate().model;
+        let pool = Arc::new(WorkerPool::new(1));
+        let backend =
+            backend_for(PathMode::TurboCpu, Bits::Int4, 0, 3, &info, pool);
+        let mut bundle = ModelBundle::new(
+            crate::runtime::Runtime::cpu_substrate(),
+        );
+        let (_, _s, reg) = backend
+            .prefill(&mut bundle, b"short", None)
+            .expect("prefill");
+        assert!(reg.is_none(), "5 tokens < one 32-token page");
     }
 }

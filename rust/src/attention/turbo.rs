@@ -572,7 +572,29 @@ fn turbo_decode_streams_with(
 }
 
 /// Merge one extra (uncached) token into a decode result via SAS online
-/// softmax — the model-side float merge (model.py `_sas_merge_token`).
+/// softmax — the model-side float merge (model.py `_sas_merge_token`),
+/// **in place** over `out` so the decode hot loop allocates nothing.
+/// Element order and arithmetic match [`sas_merge_token`] exactly.
+pub fn sas_merge_token_into(
+    out: &mut [f32],
+    m: f32,
+    l: f32,
+    s_new: f32,
+    v_new: &[f32],
+    n_r: f32,
+) {
+    let sas = Sas::new(n_r);
+    let m_tot = m.max(s_new);
+    let alpha = if m == f32::NEG_INFINITY { 0.0 } else { sas.exp(m - m_tot) };
+    let p_new = sas.exp(s_new - m_tot);
+    let l_tot = (alpha * l + p_new).max(1e-20);
+    for (o, &v) in out.iter_mut().zip(v_new) {
+        *o = (alpha * l * *o + p_new * v) / l_tot;
+    }
+}
+
+/// Allocating convenience form of [`sas_merge_token_into`] (tests and
+/// cold paths).
 pub fn sas_merge_token(
     out: &[f32],
     m: f32,
@@ -581,15 +603,9 @@ pub fn sas_merge_token(
     v_new: &[f32],
     n_r: f32,
 ) -> Vec<f32> {
-    let sas = Sas::new(n_r);
-    let m_tot = m.max(s_new);
-    let alpha = if m == f32::NEG_INFINITY { 0.0 } else { sas.exp(m - m_tot) };
-    let p_new = sas.exp(s_new - m_tot);
-    let l_tot = (alpha * l + p_new).max(1e-20);
-    out.iter()
-        .zip(v_new)
-        .map(|(&o, &v)| (alpha * l * o + p_new * v) / l_tot)
-        .collect()
+    let mut merged = out.to_vec();
+    sas_merge_token_into(&mut merged, m, l, s_new, v_new, n_r);
+    merged
 }
 
 #[cfg(test)]

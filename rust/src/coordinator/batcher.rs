@@ -46,16 +46,36 @@ pub struct SchedDecision {
     pub decode: Vec<RequestId>,
 }
 
+/// Starvation observability: how often (and how deep) admission had to
+/// wait for capacity. A silently deep waiting queue was previously
+/// invisible — these counters make the capacity-wait branch a metric.
+#[derive(Debug, Default, Clone)]
+pub struct BatcherMetrics {
+    /// Scheduler iterations that deferred admission because the token
+    /// budget or running-slot cap was exhausted (with work waiting).
+    pub capacity_waits: u64,
+    /// Waiting-queue depth at the most recent capacity wait.
+    pub last_wait_depth: usize,
+    /// Deepest waiting queue seen at any capacity wait.
+    pub max_wait_depth: usize,
+}
+
 /// The continuous batcher: waiting queue + running set.
 pub struct Batcher {
     pub cfg: BatcherConfig,
+    pub metrics: BatcherMetrics,
     waiting: VecDeque<Tracked>,
     running: Vec<Tracked>,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Batcher {
-        Batcher { cfg, waiting: VecDeque::new(), running: Vec::new() }
+        Batcher {
+            cfg,
+            metrics: BatcherMetrics::default(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+        }
     }
 
     pub fn submit(&mut self, req: GenRequest) {
@@ -76,22 +96,42 @@ impl Batcher {
         self.running.iter().map(|t| t.context).sum()
     }
 
+    /// Record one capacity-wait observation (see [`BatcherMetrics`]).
+    fn note_capacity_wait(&mut self) {
+        let depth = self.waiting.len();
+        self.metrics.capacity_waits += 1;
+        self.metrics.last_wait_depth = depth;
+        self.metrics.max_wait_depth = self.metrics.max_wait_depth.max(depth);
+    }
+
     /// Compute the next scheduling decision. Admission: FIFO waiting
-    /// requests move to running while slots and token budget allow.
+    /// requests move to running while slots and token budget allow; a
+    /// deferred admission is recorded in [`BatcherMetrics`] so
+    /// starvation is observable.
     pub fn schedule(&mut self) -> SchedDecision {
         let mut d = SchedDecision::default();
         let mut budget_used = self.running_tokens();
         let mut admitted = 0;
-        while admitted < self.cfg.prefill_per_step
-            && self.running.len() < self.cfg.max_running
-        {
+        while admitted < self.cfg.prefill_per_step {
+            if self.running.len() >= self.cfg.max_running {
+                if !self.waiting.is_empty() {
+                    self.note_capacity_wait(); // slot-cap wait
+                }
+                break;
+            }
             let Some(head) = self.waiting.front() else { break };
             let need = head.context + head.req.max_new_tokens;
             if budget_used + need > self.cfg.token_budget && !self.running.is_empty()
             {
-                break; // wait for capacity (never deadlock an empty engine)
+                // Wait for capacity (never deadlock an empty engine) —
+                // and make the wait observable instead of silent.
+                self.note_capacity_wait();
+                break;
             }
-            let t = self.waiting.pop_front().unwrap();
+            // Checked pop: the head we just inspected must still be
+            // there, but a silent `.unwrap()` on that assumption was the
+            // one panic path in the scheduler — fail soft instead.
+            let Some(t) = self.waiting.pop_front() else { break };
             budget_used += need;
             d.prefill.push(t.req.id);
             self.running.push(t);
@@ -182,6 +222,36 @@ mod tests {
         assert!(d.prefill.is_empty(), "budget must defer #2");
         b.finish(1);
         assert_eq!(b.schedule().prefill, vec![2]);
+    }
+
+    #[test]
+    fn capacity_waits_are_observable() {
+        // Budget wait: #2 deferred while #1 holds the budget.
+        let mut b = batcher(8, 100);
+        b.submit(req(1, 50, 20));
+        b.submit(req(2, 40, 20));
+        b.schedule();
+        assert_eq!(b.metrics.capacity_waits, 0, "no wait while admitting");
+        b.schedule();
+        assert_eq!(b.metrics.capacity_waits, 1);
+        assert_eq!(b.metrics.last_wait_depth, 1);
+        b.schedule();
+        assert_eq!(b.metrics.capacity_waits, 2, "every deferred iteration counts");
+        assert_eq!(b.metrics.max_wait_depth, 1);
+        b.finish(1);
+        b.schedule();
+        assert_eq!(b.metrics.capacity_waits, 2, "admission clears the wait");
+
+        // Slot-cap wait with a deeper queue.
+        let mut b = batcher(1, 10_000);
+        for id in 0..4 {
+            b.submit(req(id, 10, 5));
+        }
+        b.schedule(); // admits #0
+        b.schedule(); // slots full, 3 waiting
+        assert_eq!(b.metrics.capacity_waits, 1);
+        assert_eq!(b.metrics.last_wait_depth, 3);
+        assert_eq!(b.metrics.max_wait_depth, 3);
     }
 
     #[test]

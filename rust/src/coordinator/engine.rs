@@ -14,6 +14,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig};
+use super::prefix::PrefixIndex;
 use super::request::{Completion, FinishReason, GenRequest, RequestId};
 use crate::attention::backend::{backend_for, BackendState, DynBackend};
 use crate::info;
@@ -46,6 +47,17 @@ pub struct EngineConfig {
     /// determinism contract the parallel-parity suite enforces — so
     /// this is purely a throughput knob.
     pub decode_threads: usize,
+    /// Prompt-prefix KV sharing: at admission, match the new request's
+    /// prompt against the prefix index of previously prefilled prompts
+    /// and fork the session from the shared pool pages at the
+    /// page-aligned split point — N requests with a common prefix then
+    /// store those q2 pages once. Decode output is bit-identical with
+    /// sharing on or off (shared pages hold exactly the codes a private
+    /// prefill would produce; the mutable decode buffer is never
+    /// shared), so this is purely a memory/ingest-work knob. Only the
+    /// turbo-family backends have a page pool; the flash baseline
+    /// ignores it.
+    pub share_prefixes: bool,
     pub seed: u64,
 }
 
@@ -58,6 +70,7 @@ impl Default for EngineConfig {
             kv_bits: Bits::Int4,
             n_2bit_heads: 0,
             decode_threads: default_threads(),
+            share_prefixes: false,
             seed: 0,
         }
     }
@@ -96,11 +109,18 @@ pub struct Engine {
     /// engine keeps its own handle for the wall/busy decode metrics.
     pool: Arc<WorkerPool>,
     sessions: HashMap<RequestId, Session>,
+    /// Admission-time prompt-prefix index (Some iff
+    /// `cfg.share_prefixes`); the page handles it holds are weak — the
+    /// backend's pool refcounts own the memory.
+    prefix_index: Option<PrefixIndex>,
     rng: Rng,
     pub metrics: EngineMetrics,
     pub ttft_hist: Histogram,
     pub latency_hist: Histogram,
 }
+
+/// Registered prompts kept by the prefix index before stalest eviction.
+const PREFIX_INDEX_CAP: usize = 64;
 
 impl Engine {
     pub fn new(bundle: ModelBundle, cfg: EngineConfig) -> Engine {
@@ -111,6 +131,9 @@ impl Engine {
             PathMode::Flash => 1,
         };
         let pool = Arc::new(WorkerPool::new(pool_threads));
+        let prefix_index = cfg
+            .share_prefixes
+            .then(|| PrefixIndex::new(PREFIX_INDEX_CAP));
         Engine {
             batcher: Batcher::new(cfg.batcher.clone()),
             backend: backend_for(
@@ -123,6 +146,7 @@ impl Engine {
             ),
             pool,
             sessions: HashMap::new(),
+            prefix_index,
             rng: Rng::new(cfg.seed),
             metrics: EngineMetrics::default(),
             ttft_hist: Histogram::new(),
@@ -155,7 +179,9 @@ impl Engine {
         let decision = self.batcher.schedule();
         let mut done = Vec::new();
 
-        // Prefill admitted requests.
+        // Prefill admitted requests, with admission-time prefix
+        // detection: match the prompt against the index of live
+        // registered prefixes and fork from the shared pages on a hit.
         for id in decision.prefill {
             let req = self
                 .batcher
@@ -163,8 +189,26 @@ impl Engine {
                 .expect("scheduled request must exist")
                 .clone();
             let n = req.prompt.len();
-            let (logits, state) =
-                self.backend.prefill(&mut self.bundle, &req.prompt)?;
+            let shared = match (&mut self.prefix_index, self.backend.page_pool())
+            {
+                (Some(ix), Some(pool)) => {
+                    let pool = pool.read().unwrap_or_else(|e| e.into_inner());
+                    ix.lookup(&req.prompt, self.bundle.block(), &pool)
+                }
+                _ => None,
+            };
+            if let Some(sp) = &shared {
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefix_shared_tokens += sp.tokens as u64;
+            }
+            let (logits, state, reg) = self.backend.prefill(
+                &mut self.bundle,
+                &req.prompt,
+                shared.as_ref(),
+            )?;
+            if let (Some(ix), Some(reg)) = (&mut self.prefix_index, reg) {
+                ix.insert(req.prompt.clone(), reg);
+            }
             let first = self
                 .cfg
                 .sampler
@@ -238,6 +282,10 @@ impl Engine {
     /// single session). When no session holds a compressed cache the last
     /// observed values are kept, so a completion snapshot still reports
     /// the memory the request used.
+    ///
+    /// `cache_bytes` sums per-session (logical) footprints, so a page
+    /// shared by N sessions counts N times there; the pool-level
+    /// shared/private/dedup numbers below are the physical truth.
     fn update_cache_metrics(&mut self) {
         let (mut bytes, mut fp16, mut view, mut slab) =
             (0usize, 0usize, 0usize, 0usize);
@@ -255,6 +303,25 @@ impl Engine {
             self.metrics.cache_slab_bytes = slab;
             self.metrics.cache_compression = fp16 as f64 / bytes as f64;
         }
+        if let Some(pool) = self.backend.page_pool() {
+            let stats =
+                pool.read().unwrap_or_else(|e| e.into_inner()).stats();
+            // Same keep-last rule as the cache bytes above: when the
+            // last session drains, its pages are freed and a fresh
+            // snapshot would read all-zero — keep the last live values
+            // so completion-time reporting (e.g. `gen --batch`) still
+            // shows the dedup the batch actually achieved.
+            if stats.physical_bytes > 0 {
+                self.metrics.shared_page_bytes = stats.shared_bytes;
+                self.metrics.private_page_bytes = stats.private_bytes;
+                self.metrics.page_dedup_ratio = stats.dedup_ratio();
+                self.metrics.page_q1_memo_bytes = stats.q1_memo_bytes;
+            }
+        }
+        self.metrics.batcher_capacity_waits =
+            self.batcher.metrics.capacity_waits;
+        self.metrics.batcher_wait_depth =
+            self.batcher.metrics.last_wait_depth as u64;
     }
 
     fn complete(session: &Session, reason: FinishReason) -> Completion {

@@ -21,8 +21,10 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod prefix;
 pub mod request;
 
-pub use batcher::{Batcher, BatcherConfig, SchedDecision};
+pub use batcher::{Batcher, BatcherConfig, BatcherMetrics, SchedDecision};
 pub use engine::{Engine, EngineConfig, PathMode};
+pub use prefix::{PrefixIndex, SharedPrefix};
 pub use request::{Completion, GenRequest, RequestId, RequestState};

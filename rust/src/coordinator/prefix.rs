@@ -1,0 +1,385 @@
+//! Admission-time prompt-prefix detection for KV page sharing.
+//!
+//! When a request is admitted, the engine asks this index whether any
+//! previously prefilled prompt shares a page-aligned prefix with it. On
+//! a hit, the new session *forks* from the registered pages (retaining
+//! them in the [`PagePool`]) and prefill quantizes/stores only the tail
+//! — N batched requests with a common prompt prefix then hold one
+//! physical copy of those q2 pages instead of N.
+//!
+//! The index is a **sorted map** over full prompts. Longest-common-
+//! prefix lookup uses the classic property of byte-sorted keys: the key
+//! maximizing the LCP with a probe is one of the probe's two neighbors
+//! in sort order, so a lookup is two `BTreeMap::range` probes, not a
+//! scan.
+//!
+//! Entries are **weak**: the index holds page handles without retaining
+//! them, so it pins no memory — a prefix is shareable for exactly as
+//! long as some live session still owns its pages (donor or any fork
+//! that adopted them; adoption chains keep hot prefixes alive across
+//! donor completions). Dead entries are pruned lazily when a lookup
+//! touches them, and a small capacity bound evicts the stalest entries
+//! so the map cannot grow with request history.
+
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+use crate::kvcache::{PageHandle, PagePool};
+
+/// Page handles covering the page-aligned prefix of one prompt, for
+/// every (layer, head) K and V stream in layer-major order — the unit a
+/// forking session adopts and a prefilled session registers.
+#[derive(Debug, Clone)]
+pub struct SharedPrefix {
+    /// Tokens covered (= `n_pages * block`).
+    pub tokens: usize,
+    /// Pages per stream.
+    pub n_pages: usize,
+    /// Stream count (`n_layers * n_heads`).
+    pub n_streams: usize,
+    /// K handles, `[n_streams * n_pages]`, stream-major.
+    pub k: Vec<PageHandle>,
+    /// V handles, same layout.
+    pub v: Vec<PageHandle>,
+}
+
+impl SharedPrefix {
+    /// K handles of one stream (layer-major stream index).
+    pub fn k_pages(&self, stream: usize) -> &[PageHandle] {
+        &self.k[stream * self.n_pages..(stream + 1) * self.n_pages]
+    }
+
+    /// V handles of one stream.
+    pub fn v_pages(&self, stream: usize) -> &[PageHandle] {
+        &self.v[stream * self.n_pages..(stream + 1) * self.n_pages]
+    }
+
+    /// Longest page-aligned head of this prefix whose handles are all
+    /// still live (pages die from the tail: shorter-prompt forks retain
+    /// only the head, so when a donor completes the tail pages free
+    /// first). 0 means nothing shareable survives.
+    fn live_pages(&self, pool: &PagePool) -> usize {
+        for p in 0..self.n_pages {
+            for s in 0..self.n_streams {
+                let i = s * self.n_pages + p;
+                if !pool.is_live(self.k[i]) || !pool.is_live(self.v[i]) {
+                    return p;
+                }
+            }
+        }
+        self.n_pages
+    }
+
+    /// The first `n_pages` pages of every stream — the shareable overlap
+    /// with a new prompt.
+    fn clipped(&self, n_pages: usize, block: usize) -> SharedPrefix {
+        debug_assert!(n_pages <= self.n_pages);
+        let mut k = Vec::with_capacity(self.n_streams * n_pages);
+        let mut v = Vec::with_capacity(self.n_streams * n_pages);
+        for s in 0..self.n_streams {
+            let o = s * self.n_pages;
+            k.extend_from_slice(&self.k[o..o + n_pages]);
+            v.extend_from_slice(&self.v[o..o + n_pages]);
+        }
+        SharedPrefix {
+            tokens: n_pages * block,
+            n_pages,
+            n_streams: self.n_streams,
+            k,
+            v,
+        }
+    }
+}
+
+struct Entry {
+    prefix: SharedPrefix,
+    /// Insertion stamp for stalest-first eviction.
+    stamp: u64,
+}
+
+/// Sorted-map index of live/registered prompt prefixes.
+pub struct PrefixIndex {
+    entries: BTreeMap<Vec<u8>, Entry>,
+    cap: usize,
+    clock: u64,
+    /// Lookup counters (engine telemetry / tests).
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PrefixIndex {
+    /// Index bounded to `cap` registered prompts (stalest evicted).
+    pub fn new(cap: usize) -> PrefixIndex {
+        PrefixIndex {
+            entries: BTreeMap::new(),
+            cap: cap.max(1),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Nearest key at or below `prompt` in sort order whose entry still
+    /// holds live pages. Fully dead entries met on the way are pruned;
+    /// a partially dead entry (its tail pages freed because only
+    /// shorter-prefix forks survive) is **clipped** to its live head
+    /// rather than discarded — the live pages stay shareable.
+    fn live_neighbor(
+        &mut self,
+        prompt: &[u8],
+        below: bool,
+        pool: &PagePool,
+    ) -> Option<Vec<u8>> {
+        loop {
+            let key = if below {
+                self.entries
+                    .range::<[u8], _>((Bound::Unbounded, Bound::Included(prompt)))
+                    .next_back()
+                    .map(|(k, _)| k.clone())?
+            } else {
+                self.entries
+                    .range::<[u8], _>((Bound::Excluded(prompt), Bound::Unbounded))
+                    .next()
+                    .map(|(k, _)| k.clone())?
+            };
+            let live = self
+                .entries
+                .get(&key)
+                .map(|e| e.prefix.live_pages(pool))
+                .unwrap_or(0);
+            if live == 0 {
+                self.entries.remove(&key);
+                continue;
+            }
+            let entry = self.entries.get_mut(&key).expect("checked above");
+            if live < entry.prefix.n_pages {
+                let block = entry.prefix.tokens / entry.prefix.n_pages;
+                let clipped = entry.prefix.clipped(live, block);
+                entry.prefix = clipped;
+            }
+            return Some(key);
+        }
+    }
+
+    /// Longest page-aligned shared prefix between `prompt` and any live
+    /// registered prompt, clipped to whole pages of `block` tokens.
+    /// Returns handles the caller must adopt (retain) before the owning
+    /// sessions can go away.
+    pub fn lookup(
+        &mut self,
+        prompt: &[u8],
+        block: usize,
+        pool: &PagePool,
+    ) -> Option<SharedPrefix> {
+        let mut best: Option<(usize, Vec<u8>)> = None;
+        for below in [true, false] {
+            let Some(key) = self.live_neighbor(prompt, below, pool) else {
+                continue;
+            };
+            let lcp = lcp_len(prompt, &key);
+            let entry = self.entries.get(&key).expect("neighbor exists");
+            let pages = (lcp / block).min(entry.prefix.n_pages);
+            if pages == 0 {
+                continue;
+            }
+            if best.as_ref().map(|&(p, _)| pages > p).unwrap_or(true) {
+                best = Some((pages, key));
+            }
+        }
+        match best {
+            Some((pages, key)) => {
+                self.hits += 1;
+                let entry = self.entries.get(&key).expect("best exists");
+                Some(entry.prefix.clipped(pages, block))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Register a freshly prefilled prompt's page-aligned prefix. A
+    /// re-registered prompt replaces its entry (newer handles win).
+    pub fn insert(&mut self, prompt: Vec<u8>, prefix: SharedPrefix) {
+        if prefix.n_pages == 0 {
+            return;
+        }
+        self.clock += 1;
+        let stamp = self.clock;
+        self.entries.insert(prompt, Entry { prefix, stamp });
+        if self.entries.len() > self.cap {
+            if let Some(key) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone())
+            {
+                self.entries.remove(&key);
+            }
+        }
+    }
+}
+
+/// Length of the byte-wise longest common prefix.
+fn lcp_len(a: &[u8], b: &[u8]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::QuantPage;
+    use crate::quant::{quant_sym_int8, Bits};
+    use crate::testutil::Rng;
+
+    const BLOCK: usize = 4;
+    const D: usize = 8;
+
+    fn page(rng: &mut Rng, pool: &mut PagePool) -> PageHandle {
+        let x = rng.normal_vec(BLOCK * D, 1.0);
+        let q1 = quant_sym_int8(&x);
+        pool.insert(QuantPage::from_q1(&q1.codes, BLOCK, D, q1.scale, Bits::Int4))
+    }
+
+    /// A 1-stream prefix of `n_pages` pages backed by real pooled pages.
+    fn prefix(rng: &mut Rng, pool: &mut PagePool, n_pages: usize) -> SharedPrefix {
+        let k = (0..n_pages).map(|_| page(rng, pool)).collect();
+        let v = (0..n_pages).map(|_| page(rng, pool)).collect();
+        SharedPrefix {
+            tokens: n_pages * BLOCK,
+            n_pages,
+            n_streams: 1,
+            k,
+            v,
+        }
+    }
+
+    #[test]
+    fn exact_prompt_match_shares_all_pages() {
+        let mut rng = Rng::new(1);
+        let mut pool = PagePool::new();
+        let mut ix = PrefixIndex::new(8);
+        let p = prefix(&mut rng, &mut pool, 2);
+        ix.insert(b"abcdefgh".to_vec(), p.clone());
+        let got = ix.lookup(b"abcdefgh", BLOCK, &pool).expect("hit");
+        assert_eq!(got.tokens, 8);
+        assert_eq!(got.n_pages, 2);
+        assert_eq!(got.k, p.k);
+        assert_eq!(got.v, p.v);
+        assert_eq!(ix.hits, 1);
+    }
+
+    #[test]
+    fn partial_overlap_clips_to_page_boundary() {
+        let mut rng = Rng::new(2);
+        let mut pool = PagePool::new();
+        let mut ix = PrefixIndex::new(8);
+        ix.insert(b"abcdefgh".to_vec(), prefix(&mut rng, &mut pool, 2));
+        // 6 common bytes -> 1 whole page of 4.
+        let got = ix.lookup(b"abcdefZZZZ", BLOCK, &pool).expect("hit");
+        assert_eq!(got.n_pages, 1);
+        assert_eq!(got.tokens, 4);
+        // < 1 page of overlap -> miss.
+        assert!(ix.lookup(b"abZZZZZZ", BLOCK, &pool).is_none());
+        assert_eq!(ix.misses, 1);
+    }
+
+    #[test]
+    fn picks_longest_of_multiple_candidates() {
+        let mut rng = Rng::new(3);
+        let mut pool = PagePool::new();
+        let mut ix = PrefixIndex::new(8);
+        ix.insert(b"aaaabbbb".to_vec(), prefix(&mut rng, &mut pool, 2));
+        ix.insert(b"aaaacccc".to_vec(), prefix(&mut rng, &mut pool, 2));
+        ix.insert(b"zzzz".to_vec(), prefix(&mut rng, &mut pool, 1));
+        let got = ix.lookup(b"aaaabbbbXXXX", BLOCK, &pool).expect("hit");
+        assert_eq!(got.n_pages, 2, "full 8-byte overlap beats the 4-byte one");
+    }
+
+    #[test]
+    fn dead_entries_are_pruned_on_lookup() {
+        let mut rng = Rng::new(4);
+        let mut pool = PagePool::new();
+        let mut ix = PrefixIndex::new(8);
+        let p = prefix(&mut rng, &mut pool, 1);
+        let handles = p.k.clone();
+        ix.insert(b"aaaa".to_vec(), p);
+        // The owning session goes away; entries are weak, so the pages die.
+        for h in handles {
+            pool.release(h);
+        }
+        // (v pages still live, but any dead handle kills the entry.)
+        assert!(ix.lookup(b"aaaa", BLOCK, &pool).is_none());
+        assert!(ix.is_empty(), "dead entry pruned");
+    }
+
+    /// A partially dead entry (tail pages freed, head still owned by a
+    /// shorter-prefix fork) is clipped to its live head, not discarded:
+    /// the surviving pages stay shareable.
+    #[test]
+    fn partially_dead_entry_is_clipped_not_dropped() {
+        let mut rng = Rng::new(7);
+        let mut pool = PagePool::new();
+        let mut ix = PrefixIndex::new(8);
+        let p = prefix(&mut rng, &mut pool, 2);
+        let (head_k, tail_k) = (p.k[0], p.k[1]);
+        let tail_v = p.v[1];
+        ix.insert(b"abcdefgh".to_vec(), p);
+        // Donor dies; a fork retained only page 1, so page 2 frees.
+        pool.release(tail_k);
+        pool.release(tail_v);
+        let got = ix.lookup(b"abcdefgh", BLOCK, &pool).expect("clipped hit");
+        assert_eq!(got.n_pages, 1, "live head survives");
+        assert_eq!(got.tokens, BLOCK);
+        assert_eq!(got.k, vec![head_k]);
+        assert_eq!(ix.len(), 1, "entry kept, clipped in place");
+    }
+
+    #[test]
+    fn capacity_evicts_stalest() {
+        let mut rng = Rng::new(5);
+        let mut pool = PagePool::new();
+        let mut ix = PrefixIndex::new(2);
+        ix.insert(b"aaaa".to_vec(), prefix(&mut rng, &mut pool, 1));
+        ix.insert(b"bbbb".to_vec(), prefix(&mut rng, &mut pool, 1));
+        ix.insert(b"cccc".to_vec(), prefix(&mut rng, &mut pool, 1));
+        assert_eq!(ix.len(), 2);
+        assert!(ix.lookup(b"aaaa", BLOCK, &pool).is_none(), "stalest evicted");
+        assert!(ix.lookup(b"cccc", BLOCK, &pool).is_some());
+    }
+
+    #[test]
+    fn clipped_prefix_respects_stream_layout() {
+        let mut rng = Rng::new(6);
+        let mut pool = PagePool::new();
+        // 2 streams x 3 pages.
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        for _ in 0..2 * 3 {
+            k.push(page(&mut rng, &mut pool));
+            v.push(page(&mut rng, &mut pool));
+        }
+        let p = SharedPrefix {
+            tokens: 3 * BLOCK,
+            n_pages: 3,
+            n_streams: 2,
+            k: k.clone(),
+            v: v.clone(),
+        };
+        let c = p.clipped(2, BLOCK);
+        assert_eq!(c.n_pages, 2);
+        assert_eq!(c.tokens, 2 * BLOCK);
+        assert_eq!(c.k_pages(0), &k[0..2]);
+        assert_eq!(c.k_pages(1), &k[3..5]);
+        assert_eq!(c.v_pages(1), &v[3..5]);
+    }
+}

@@ -22,15 +22,27 @@
 //!   mirrored as they arrive. Decode reads are then O(new tokens) per
 //!   step instead of O(context) — the fix for the per-token full-cache
 //!   rematerialization the serving path used to do.
+//! * Flushed pages live in a shared, **refcounted** [`pagepool::PagePool`]
+//!   rather than inside the stream: sessions whose prompts share a
+//!   page-aligned prefix adopt the same physical pages
+//!   ([`store::StreamCache::adopt_pages`]), the pool memoizes each
+//!   page's q1 dequantization once globally, and exact shared/private
+//!   byte accounting ([`pagepool::PoolStats`]) feeds the engine's dedup
+//!   metrics.
 
 pub mod buffer;
 pub mod page;
+pub mod pagepool;
 pub mod precision;
 pub mod store;
 
 pub use buffer::DecodeBuffer;
 pub use page::QuantPage;
+pub use pagepool::{
+    PageHandle, PagePool, PoolEpoch, PoolStats, SharedPagePool,
+};
 pub use precision::PrecisionMap;
 pub use store::{
     CacheStats, HeadCache, HeadCacheMut, KvCache, KvCacheConfig, Q1View,
+    StreamCache,
 };

@@ -1,0 +1,429 @@
+//! Shared, refcounted pool of immutable flushed q2 pages.
+//!
+//! PR 1 made flushed pages immutable (`QuantPage` never mutates after
+//! `from_q1`), which is exactly the property that makes them *shareable*:
+//! N batched sessions whose prompts share a page-aligned prefix can read
+//! the same physical pages instead of each quantizing and storing a
+//! private copy (the FlashInfer lesson — composable/shared page formats
+//! are where serving-throughput memory wins live). This module is the
+//! ownership layer that makes that safe:
+//!
+//! * [`PagePool`] owns every page behind an **explicit refcount** —
+//!   `insert` creates a page with one owner, `retain`/`release` move
+//!   ownership edges, and the page is freed exactly when the last owner
+//!   releases it. Pages are *not* `Arc<QuantPage>`: an opaque `Arc`
+//!   count could not distinguish shared from private storage, and the
+//!   shared/private byte split ([`PoolStats`]) must stay exact for the
+//!   dedup accounting in `EngineMetrics`.
+//! * [`PageHandle`] is a generational index: a freed slot bumps its
+//!   generation, so any handle kept past its last `release` is detected
+//!   (`get`/`retain` panic on a stale handle) instead of silently
+//!   reading a recycled page — the use-after-free check the refcount
+//!   property tests lean on.
+//! * Every page free bumps the pool **epoch**. Dependent incremental
+//!   views (`store::Q1View`) record the epoch they were built under and
+//!   re-verify their handles when it moves — the PR-1 invariant
+//!   ("eviction/rewrite must invalidate the view") extended to the
+//!   pooled world. A live stream's handles can never actually dangle
+//!   (it holds a ref), so the check is free in steady state and loud
+//!   the moment a future eviction path violates the contract.
+//! * The pool memoizes each page's q1 dequantization at `insert`
+//!   ([`PagePool::q1`]): the dequantize-once property that PR 1 gave
+//!   each stream now amortizes across *sessions* — a page shared by N
+//!   sessions is dequantized once globally, and every session's view
+//!   sync is a memcpy.
+//!
+//! The pool itself is shared via [`SharedPagePool`]
+//! (`Arc<RwLock<PagePool>>`, like the decode `WorkerPool`): the decode
+//! hot path only ever takes the read lock (view sync from worker
+//! threads is lock-concurrent), and mutations (insert on flush,
+//! retain/release at session fork/teardown) are brief engine-thread
+//! write locks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::QuantPage;
+
+/// Shared handle onto one [`PagePool`] — cloned into every
+/// [`StreamCache`](super::store::StreamCache) built over the pool.
+pub type SharedPagePool = Arc<RwLock<PagePool>>;
+
+/// Lock-free handle onto a pool's epoch counter (same shape as the
+/// worker pool's `PoolProbe`): lets a view's steady-state sync check
+/// "has anything been freed since I last looked?" with one relaxed
+/// atomic load instead of taking the pool's read lock — the lock is
+/// only acquired when pages actually need copying or the epoch moved.
+#[derive(Debug, Clone)]
+pub struct PoolEpoch(Arc<AtomicU64>);
+
+impl PoolEpoch {
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Generational index of one pooled page. Copyable and cheap; validity
+/// is checked against the slot's generation on every access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PageHandle {
+    index: u32,
+    gen: u32,
+}
+
+/// One pool slot: the page (if live), its q1 memo, and the refcount.
+#[derive(Debug, Default)]
+struct Slot {
+    page: Option<QuantPage>,
+    /// Memoized q2 -> q1 dequantization (`tokens * channels` codes),
+    /// computed once at insert — derivable metadata, like the per-page
+    /// dequant tables.
+    q1: Vec<i8>,
+    refs: u32,
+    gen: u32,
+}
+
+/// Aggregate pool accounting — the dedup signal next to the per-session
+/// `CacheStats`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PoolStats {
+    /// Pages currently live.
+    pub live_pages: usize,
+    /// Live pages with more than one owner.
+    pub shared_pages: usize,
+    /// Storage bytes actually held (each live page counted once).
+    pub physical_bytes: usize,
+    /// Storage bytes the owners *reference* (each page counted once per
+    /// ref) — what the same sessions would hold with private caches.
+    pub logical_bytes: usize,
+    /// Physical bytes of pages with refs > 1.
+    pub shared_bytes: usize,
+    /// Physical bytes of pages with exactly one owner.
+    pub private_bytes: usize,
+    /// Bytes of the memoized q1 dequantizations (working memory, not
+    /// storage — the pooled analogue of `CacheStats::view_bytes`).
+    pub q1_memo_bytes: usize,
+}
+
+impl PoolStats {
+    /// Fraction of referenced storage deduplicated away by sharing:
+    /// `1 - physical / logical`. For B sessions sharing one prefix of P
+    /// page-bytes (and nothing else), this is (B-1)/B.
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.logical_bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.physical_bytes as f64 / self.logical_bytes as f64
+        }
+    }
+}
+
+/// The refcounted page store. See the module docs for the contract.
+#[derive(Debug, Default)]
+pub struct PagePool {
+    slots: Vec<Slot>,
+    /// Indices of freed slots available for reuse.
+    free: Vec<u32>,
+    /// Bumped on every page free — the view-invalidation signal.
+    /// Atomic (and handed out via [`Self::epoch_probe`]) so the decode
+    /// hot path can poll it without the pool lock.
+    epoch: Arc<AtomicU64>,
+}
+
+impl PagePool {
+    pub fn new() -> PagePool {
+        PagePool::default()
+    }
+
+    /// A fresh pool behind the shared `Arc<RwLock<_>>` handle.
+    pub fn new_shared() -> SharedPagePool {
+        Arc::new(RwLock::new(PagePool::new()))
+    }
+
+    /// Move a page into the pool with one owner; dequantizes the q1
+    /// memo once, here, so every later read is a copy.
+    pub fn insert(&mut self, page: QuantPage) -> PageHandle {
+        let q1 = page.dequant_q1();
+        let index = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(Slot::default());
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let slot = &mut self.slots[index as usize];
+        debug_assert!(slot.page.is_none(), "free list handed out a live slot");
+        slot.page = Some(page);
+        slot.q1 = q1;
+        slot.refs = 1;
+        PageHandle { index, gen: slot.gen }
+    }
+
+    fn slot(&self, h: PageHandle) -> &Slot {
+        let slot = &self.slots[h.index as usize];
+        assert!(
+            slot.page.is_some() && slot.gen == h.gen,
+            "stale page handle (use-after-free): {h:?}"
+        );
+        slot
+    }
+
+    /// The page behind a handle. Panics on a stale handle — a stale
+    /// access is an ownership bug, never a runtime condition.
+    pub fn get(&self, h: PageHandle) -> &QuantPage {
+        self.slot(h).page.as_ref().expect("checked live")
+    }
+
+    /// The page's memoized q1 codes (`tokens * channels`).
+    pub fn q1(&self, h: PageHandle) -> &[i8] {
+        &self.slot(h).q1
+    }
+
+    /// Current owner count of a live page.
+    pub fn refs(&self, h: PageHandle) -> u32 {
+        self.slot(h).refs
+    }
+
+    /// Whether the handle still points at a live page (non-panicking —
+    /// what index pruning and epoch re-verification use).
+    pub fn is_live(&self, h: PageHandle) -> bool {
+        self.slots
+            .get(h.index as usize)
+            .map(|s| s.page.is_some() && s.gen == h.gen)
+            .unwrap_or(false)
+    }
+
+    /// Add one owner to a live page.
+    pub fn retain(&mut self, h: PageHandle) {
+        let slot = &mut self.slots[h.index as usize];
+        assert!(
+            slot.page.is_some() && slot.gen == h.gen,
+            "retain of stale page handle: {h:?}"
+        );
+        slot.refs += 1;
+    }
+
+    /// Drop one owner; frees the page (and bumps the epoch + slot
+    /// generation) when it was the last.
+    pub fn release(&mut self, h: PageHandle) {
+        let slot = &mut self.slots[h.index as usize];
+        assert!(
+            slot.page.is_some() && slot.gen == h.gen,
+            "release of stale page handle: {h:?}"
+        );
+        slot.refs -= 1;
+        if slot.refs == 0 {
+            slot.page = None;
+            slot.q1 = Vec::new();
+            slot.gen = slot.gen.wrapping_add(1);
+            self.free.push(h.index);
+            self.epoch.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Teardown-path variant of [`Self::release`]: a no-op on a stale
+    /// handle. Used by `StreamCache::drop` so that unwinding after a
+    /// *detected* invariant violation (a page freed under a live view)
+    /// cannot panic again inside drop and abort the process. Regular
+    /// code paths must use the strict [`Self::release`].
+    pub fn release_if_live(&mut self, h: PageHandle) {
+        if self.is_live(h) {
+            self.release(h);
+        }
+    }
+
+    /// Monotone counter bumped on every page free — dependent views
+    /// compare it to re-verify their handles (PR-1 invariant).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Lock-free epoch handle for the steady-state view fast path.
+    pub fn epoch_probe(&self) -> PoolEpoch {
+        PoolEpoch(Arc::clone(&self.epoch))
+    }
+
+    /// Live page count.
+    pub fn live_pages(&self) -> usize {
+        self.slots.iter().filter(|s| s.page.is_some()).count()
+    }
+
+    /// Exact shared/private accounting over every live page.
+    pub fn stats(&self) -> PoolStats {
+        let mut st = PoolStats::default();
+        for slot in &self.slots {
+            let Some(page) = &slot.page else { continue };
+            let bytes = page.bytes();
+            st.live_pages += 1;
+            st.physical_bytes += bytes;
+            st.logical_bytes += bytes * slot.refs as usize;
+            st.q1_memo_bytes += slot.q1.len();
+            if slot.refs > 1 {
+                st.shared_pages += 1;
+                st.shared_bytes += bytes;
+            } else {
+                st.private_bytes += bytes;
+            }
+        }
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quant_sym_int8, Bits};
+    use crate::testutil::{prop, Rng};
+
+    fn page(rng: &mut Rng, tokens: usize, channels: usize) -> QuantPage {
+        let x = rng.normal_vec(tokens * channels, 1.0);
+        let q1 = quant_sym_int8(&x);
+        QuantPage::from_q1(&q1.codes, tokens, channels, q1.scale, Bits::Int4)
+    }
+
+    #[test]
+    fn insert_get_roundtrip_and_q1_memo() {
+        let mut rng = Rng::new(1);
+        let mut pool = PagePool::new();
+        let p = page(&mut rng, 4, 8);
+        let want = p.dequant_q1();
+        let h = pool.insert(p);
+        assert_eq!(pool.refs(h), 1);
+        assert_eq!(pool.q1(h), &want[..], "memo == fresh dequantization");
+        assert_eq!(pool.get(h).tokens, 4);
+        assert_eq!(pool.live_pages(), 1);
+    }
+
+    #[test]
+    fn release_frees_and_bumps_epoch() {
+        let mut rng = Rng::new(2);
+        let mut pool = PagePool::new();
+        let h = pool.insert(page(&mut rng, 4, 8));
+        pool.retain(h);
+        assert_eq!(pool.refs(h), 2);
+        let e0 = pool.epoch();
+        pool.release(h);
+        assert_eq!(pool.epoch(), e0, "non-final release must not bump epoch");
+        assert!(pool.is_live(h));
+        pool.release(h);
+        assert_eq!(pool.epoch(), e0 + 1, "final release bumps the epoch");
+        assert!(!pool.is_live(h));
+        assert_eq!(pool.live_pages(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "use-after-free")]
+    fn stale_handle_get_panics() {
+        let mut rng = Rng::new(3);
+        let mut pool = PagePool::new();
+        let h = pool.insert(page(&mut rng, 4, 8));
+        pool.release(h);
+        let _ = pool.get(h);
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of stale")]
+    fn stale_handle_retain_panics() {
+        let mut rng = Rng::new(4);
+        let mut pool = PagePool::new();
+        let h = pool.insert(page(&mut rng, 4, 8));
+        pool.release(h);
+        pool.retain(h);
+    }
+
+    #[test]
+    fn slot_reuse_changes_generation() {
+        let mut rng = Rng::new(5);
+        let mut pool = PagePool::new();
+        let h0 = pool.insert(page(&mut rng, 4, 8));
+        pool.release(h0);
+        // The freed slot is reused for the next insert...
+        let h1 = pool.insert(page(&mut rng, 4, 8));
+        assert_ne!(h0, h1, "generation must differ on slot reuse");
+        // ...and the old handle stays dead even though the slot is live.
+        assert!(!pool.is_live(h0));
+        assert!(pool.is_live(h1));
+    }
+
+    #[test]
+    fn stats_split_shared_and_private() {
+        let mut rng = Rng::new(6);
+        let mut pool = PagePool::new();
+        let a = pool.insert(page(&mut rng, 4, 8)); // stays private
+        let b = pool.insert(page(&mut rng, 4, 8));
+        pool.retain(b); // shared by 2
+        pool.retain(b); // shared by 3
+        let st = pool.stats();
+        assert_eq!(st.live_pages, 2);
+        assert_eq!(st.shared_pages, 1);
+        let ab = pool.get(a).bytes();
+        let bb = pool.get(b).bytes();
+        assert_eq!(st.physical_bytes, ab + bb);
+        assert_eq!(st.logical_bytes, ab + 3 * bb);
+        assert_eq!(st.private_bytes, ab);
+        assert_eq!(st.shared_bytes, bb);
+        assert!(st.q1_memo_bytes >= 2 * 4 * 8);
+        let want = 1.0 - (ab + bb) as f64 / (ab + 3 * bb) as f64;
+        assert!((st.dedup_ratio() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_pool_stats_are_zero() {
+        let pool = PagePool::new();
+        let st = pool.stats();
+        assert_eq!(st, PoolStats::default());
+        assert_eq!(st.dedup_ratio(), 0.0);
+    }
+
+    /// Refcount conservation under random retain/release interleavings:
+    /// every page is freed exactly when its last owner releases it, and
+    /// the epoch counts exactly the frees.
+    #[test]
+    fn refcount_balance_property() {
+        prop::run("pool refcount balance", 30, |g| {
+            let mut rng = Rng::new(g.seed());
+            let mut pool = PagePool::new();
+            // (handle, remaining owners) ledger mirrored outside the pool.
+            let mut ledger: Vec<(PageHandle, u32)> = Vec::new();
+            let mut frees = 0u64;
+            for _ in 0..g.usize_in(1, 60) {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        let h = pool.insert(page(&mut rng, 2, 4));
+                        ledger.push((h, 1));
+                    }
+                    1 if !ledger.is_empty() => {
+                        let i = g.usize_in(0, ledger.len());
+                        pool.retain(ledger[i].0);
+                        ledger[i].1 += 1;
+                    }
+                    _ if !ledger.is_empty() => {
+                        let i = g.usize_in(0, ledger.len());
+                        pool.release(ledger[i].0);
+                        ledger[i].1 -= 1;
+                        if ledger[i].1 == 0 {
+                            let (h, _) = ledger.swap_remove(i);
+                            frees += 1;
+                            assert!(!pool.is_live(h), "freed at zero refs");
+                        }
+                    }
+                    _ => {}
+                }
+                // Invariants after every op.
+                assert_eq!(pool.live_pages(), ledger.len());
+                assert_eq!(pool.epoch(), frees);
+                for &(h, refs) in &ledger {
+                    assert!(pool.is_live(h));
+                    assert_eq!(pool.refs(h), refs);
+                }
+            }
+            // Drain: releasing every remaining owner empties the pool.
+            for (h, refs) in ledger {
+                for _ in 0..refs {
+                    pool.release(h);
+                }
+            }
+            assert_eq!(pool.live_pages(), 0);
+        });
+    }
+}

@@ -1,7 +1,15 @@
-//! The full model-level quantized KV cache: pages + buffers per
+//! The full model-level quantized KV cache: pooled pages + buffers per
 //! (layer, head, K/V), with memory accounting and an incrementally
 //! materialized q1 view per stream (the decode hot path).
+//!
+//! Since the shared-pool refactor, a stream does not *own* its flushed
+//! q2 pages: it holds [`PageHandle`]s into a refcounted [`PagePool`]
+//! shared by every session of a backend. Private sessions behave as
+//! before (every page has one owner); prefix-sharing sessions adopt the
+//! donor's handles ([`StreamCache::adopt_pages`]) so N sessions with a
+//! common prompt prefix store those pages once.
 
+use super::pagepool::{PageHandle, PagePool, PoolEpoch, SharedPagePool};
 use super::{DecodeBuffer, PrecisionMap, QuantPage};
 use crate::quant::Bits;
 
@@ -39,10 +47,15 @@ impl KvCacheConfig {
 /// Why dequantize-once is safe: pages are immutable after flush (see
 /// [`QuantPage`]), and buffer codes are append-only within an epoch (the
 /// universal scale is fixed at the epoch's first token — paper §3.3), so
-/// a region copied into the view never changes underneath it. The single
-/// invalidation event is a buffer flush, which converts the mirrored
-/// buffer tail into a new page; the next sync rewrites exactly that
-/// region with the page's (lossier) q2 -> q1 dequantization.
+/// a region copied into the view never changes underneath it. The
+/// invalidation events are (1) a buffer flush, which converts the
+/// mirrored buffer tail into a new page — the next sync rewrites exactly
+/// that region with the page's (lossier) q2 -> q1 dequantization — and
+/// (2) a [`PagePool`] epoch move (some page somewhere was freed), after
+/// which the view re-verifies that every handle it mirrors is still
+/// live. A live stream holds a ref on each of its pages, so (2) is a
+/// pure invariant check: it fires only if an eviction path violates the
+/// refcount contract, and then it fires loudly.
 ///
 /// The view is derivable metadata, like the pages' dequant tables: it is
 /// excluded from the storage accounting in [`StreamCache::bytes`] and
@@ -58,12 +71,13 @@ pub struct Q1View {
     scales: Vec<f32>,
     /// Tokens currently materialized (page region + mirrored buffer tail).
     valid_tokens: usize,
-    /// Pages dequantized so far — each exactly once.
+    /// Pages copied from the pool memo so far — each exactly once.
     valid_pages: usize,
     /// Buffer tokens mirrored after the page region.
     buffered: usize,
-    /// Reusable unpack scratch for the generic dequant path.
-    scratch: Vec<u8>,
+    /// Pool epoch the view was last verified against; a moved epoch
+    /// triggers handle re-verification (see type docs).
+    pool_epoch: u64,
 }
 
 impl Q1View {
@@ -75,17 +89,27 @@ impl Q1View {
         self.valid_pages
     }
 
-    /// Working-memory bytes held by the view (codes + scales + scratch).
+    /// Working-memory bytes held by the view (codes + scales).
     pub fn overhead_bytes(&self) -> usize {
-        self.codes.len() + 4 * self.scales.len() + self.scratch.len()
+        self.codes.len() + 4 * self.scales.len()
     }
 }
 
-/// One K or V stream for one (layer, head): q2 pages + INT8 buffer.
+/// One K or V stream for one (layer, head): pooled q2 page handles + the
+/// INT8 decode buffer. Holds one ref on every page it lists; refs are
+/// released on drop.
 #[derive(Debug)]
 pub struct StreamCache {
-    pub pages: Vec<QuantPage>,
+    /// Handles of this stream's pages, oldest first. Every page is
+    /// exactly `block` tokens (`ingest_q1_block` only pages full groups
+    /// and a flush drains a full buffer), which keeps `tokens()` and the
+    /// page-aligned view layout pool-free.
+    pub pages: Vec<PageHandle>,
     pub buffer: DecodeBuffer,
+    pool: SharedPagePool,
+    /// Lock-free mirror of the pool's epoch — the steady-state sync
+    /// polls this instead of taking the pool read lock.
+    epoch: PoolEpoch,
     view: Q1View,
     bits: Bits,
     d_head: usize,
@@ -93,10 +117,19 @@ pub struct StreamCache {
 }
 
 impl StreamCache {
-    fn new(d_head: usize, block: usize, n_b: usize, bits: Bits) -> StreamCache {
+    fn new(
+        d_head: usize,
+        block: usize,
+        n_b: usize,
+        bits: Bits,
+        pool: SharedPagePool,
+        epoch: PoolEpoch,
+    ) -> StreamCache {
         StreamCache {
             pages: Vec::new(),
             buffer: DecodeBuffer::new(d_head, n_b),
+            pool,
+            epoch,
             view: Q1View::default(),
             bits,
             d_head,
@@ -104,9 +137,45 @@ impl StreamCache {
         }
     }
 
-    /// Tokens stored (pages + buffer).
+    /// Tokens stored (pages + buffer). Pool-free: every page holds
+    /// exactly `block` tokens by construction.
     pub fn tokens(&self) -> usize {
-        self.pages.iter().map(|p| p.tokens).sum::<usize>() + self.buffer.len()
+        self.pages.len() * self.block + self.buffer.len()
+    }
+
+    /// The pool this stream's pages live in.
+    pub fn page_pool(&self) -> &SharedPagePool {
+        &self.pool
+    }
+
+    /// Move a freshly built page into the pool and append its handle.
+    fn push_page(&mut self, page: QuantPage) {
+        let h = self
+            .pool
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(page);
+        self.pages.push(h);
+    }
+
+    /// Adopt already-pooled pages as this stream's prefix (prefix
+    /// sharing): retains one ref per handle. The stream must be empty —
+    /// adopted pages form the page-aligned head of the stream.
+    pub fn adopt_pages(&mut self, handles: &[PageHandle]) {
+        assert!(
+            self.pages.is_empty() && self.buffer.is_empty(),
+            "adopt_pages into a non-empty stream"
+        );
+        let mut pool = self.pool.write().unwrap_or_else(|e| e.into_inner());
+        for &h in handles {
+            debug_assert_eq!(
+                pool.get(h).tokens,
+                self.block,
+                "adopted page must be one full block"
+            );
+            pool.retain(h);
+            self.pages.push(h);
+        }
     }
 
     /// Ingest a prefill q1 block (INT8 codes, one fp scale, `tokens`
@@ -120,7 +189,7 @@ impl StreamCache {
             let t1 = (t0 + self.block).min(tokens);
             let chunk = &codes[t0 * self.d_head..t1 * self.d_head];
             if t1 - t0 == self.block && self.buffer.is_empty() {
-                self.pages.push(QuantPage::from_q1(
+                self.push_page(QuantPage::from_q1(
                     chunk,
                     self.block,
                     self.d_head,
@@ -149,7 +218,7 @@ impl StreamCache {
         let full = self.buffer.push(values);
         if full {
             let (codes, scale, tokens) = self.buffer.drain();
-            self.pages.push(QuantPage::from_q1(
+            self.push_page(QuantPage::from_q1(
                 &codes,
                 tokens,
                 self.d_head,
@@ -162,6 +231,10 @@ impl StreamCache {
     /// Materialize the q1 view into caller buffers:
     /// `q1` is `[capacity_tokens, d_head]` (page-aligned capacity), and
     /// `scales` one entry per `block` tokens. Returns valid token count.
+    ///
+    /// This is the from-scratch oracle the incremental view is tested
+    /// against, so it dequantizes the pages directly rather than reading
+    /// the pool's q1 memo.
     pub fn read_q1_into(
         &self,
         scratch: &mut Vec<u8>,
@@ -169,8 +242,10 @@ impl StreamCache {
         scales: &mut [f32],
     ) -> usize {
         let d = self.d_head;
+        let pool = self.pool.read().unwrap_or_else(|e| e.into_inner());
         let mut t = 0usize;
-        for (pi, page) in self.pages.iter().enumerate() {
+        for (pi, &h) in self.pages.iter().enumerate() {
+            let page = pool.get(h);
             debug_assert_eq!(page.tokens, self.block, "non-final page must be full");
             page.dequant_q1_into(
                 scratch,
@@ -194,10 +269,13 @@ impl StreamCache {
     /// zero-copy cache read.
     ///
     /// Work done is proportional to what changed since the last call:
-    /// pages created since then are dequantized exactly once, and only
-    /// buffer tokens not yet mirrored are copied. Steady-state decode
-    /// (one `push_token` between syncs) costs O(d_head) per call, versus
-    /// O(tokens * d_head) for a fresh [`Self::read_q1_into`].
+    /// pages created since then are copied from the pool's
+    /// dequantize-once q1 memo (the dequantization itself happened at
+    /// page insert, once globally — shared pages pay it once across all
+    /// sessions), and only buffer tokens not yet mirrored are copied.
+    /// Steady-state decode (one `push_token` between syncs) costs
+    /// O(d_head) per call, versus O(tokens * d_head) for a fresh
+    /// [`Self::read_q1_into`].
     ///
     /// `codes` may be longer than `valid_tokens * d_head` (page-aligned
     /// backing with buffer headroom); callers must use the returned count.
@@ -205,25 +283,50 @@ impl StreamCache {
         let d = self.d_head;
         let b = self.block;
         let n_pages = self.pages.len();
-        if self.view.valid_pages < n_pages {
-            // Grow in page steps, keeping one page of headroom for the
-            // buffer tail (buffer capacity n_b <= block).
-            self.view.codes.resize((n_pages + 1) * b * d, 0);
-            self.view.scales.resize(n_pages + 1, 0.0);
-            for pi in self.view.valid_pages..n_pages {
-                let page = &self.pages[pi];
-                debug_assert_eq!(page.tokens, b, "non-final page must be full");
-                let o = pi * b * d;
-                page.dequant_q1_into(
-                    &mut self.view.scratch,
-                    &mut self.view.codes[o..o + b * d],
-                );
-                self.view.scales[pi] = page.fp_scale;
+        // Steady-state fast path: nothing freed anywhere (lock-free
+        // epoch poll) and no new pages to copy — the pool is not
+        // touched at all, so B sharing sessions' syncs don't contend
+        // on the pool lock. The slow path below re-reads the epoch
+        // under the lock before trusting it.
+        if self.epoch.get() != self.view.pool_epoch
+            || self.view.valid_pages < n_pages
+        {
+            let pool = self.pool.read().unwrap_or_else(|e| e.into_inner());
+            let ep = pool.epoch();
+            if ep != self.view.pool_epoch {
+                // Some page somewhere was freed since the last sync. Our
+                // refs should make that impossible for *our* pages —
+                // verify it (the PR-1 eviction-invalidates-views rule).
+                for &h in &self.pages {
+                    assert!(
+                        pool.is_live(h),
+                        "page freed under a live view (pool epoch {ep})"
+                    );
+                }
+                self.view.pool_epoch = ep;
             }
-            self.view.valid_pages = n_pages;
-            // A flush consumed the buffer tokens this view had mirrored;
-            // the page dequantization above rewrote that region.
-            self.view.buffered = 0;
+            if self.view.valid_pages < n_pages {
+                // Grow in page steps, keeping one page of headroom for the
+                // buffer tail (buffer capacity n_b <= block).
+                self.view.codes.resize((n_pages + 1) * b * d, 0);
+                self.view.scales.resize(n_pages + 1, 0.0);
+                for pi in self.view.valid_pages..n_pages {
+                    let h = self.pages[pi];
+                    debug_assert_eq!(
+                        pool.get(h).tokens,
+                        b,
+                        "non-final page must be full"
+                    );
+                    let o = pi * b * d;
+                    self.view.codes[o..o + b * d]
+                        .copy_from_slice(pool.q1(h));
+                    self.view.scales[pi] = pool.get(h).fp_scale;
+                }
+                self.view.valid_pages = n_pages;
+                // A flush consumed the buffer tokens this view had
+                // mirrored; the page copy above rewrote that region.
+                self.view.buffered = 0;
+            }
         }
         let base = n_pages * b;
         let bl = self.buffer.len();
@@ -254,11 +357,61 @@ impl StreamCache {
         self.view.overhead_bytes()
     }
 
-    /// Storage bytes (packed pages + buffer codes).
+    /// Storage bytes referenced by this stream (packed pages + buffer
+    /// codes). Shared pages are counted in full here — this is the
+    /// *logical* per-session footprint; the physical/shared split lives
+    /// in [`CacheStats::shared_page_bytes`] and the pool stats.
     pub fn bytes(&self) -> usize {
-        self.pages.iter().map(|p| p.bytes()).sum::<usize>()
+        let pool = self.pool.read().unwrap_or_else(|e| e.into_inner());
+        self.bytes_in(&pool)
+    }
+
+    /// [`Self::bytes`] against an already-locked pool.
+    pub fn bytes_in(&self, pool: &PagePool) -> usize {
+        self.pages.iter().map(|&h| pool.get(h).bytes()).sum::<usize>()
             + self.buffer.len() * self.d_head
             + 4
+    }
+
+    /// (shared, private) page-storage bytes of this stream, judged by
+    /// the pool's current refcounts.
+    pub fn shared_private_bytes_in(&self, pool: &PagePool) -> (usize, usize) {
+        let mut shared = 0usize;
+        let mut private = 0usize;
+        for &h in &self.pages {
+            let b = pool.get(h).bytes();
+            if pool.refs(h) > 1 {
+                shared += b;
+            } else {
+                private += b;
+            }
+        }
+        (shared, private)
+    }
+}
+
+impl Drop for StreamCache {
+    fn drop(&mut self) {
+        if self.pages.is_empty() {
+            return;
+        }
+        let mut pool = self.pool.write().unwrap_or_else(|e| e.into_inner());
+        if std::thread::panicking() {
+            // Unwinding (possibly from a detected invariant violation —
+            // a page freed under a live view): a strict release would
+            // panic in drop and abort the process, so be lenient here
+            // and only here.
+            for &h in &self.pages {
+                pool.release_if_live(h);
+            }
+        } else {
+            // Normal teardown stays strict: a stale handle at drop time
+            // means some eviction path broke the refcount contract, and
+            // that must stay loud, not be silently swallowed.
+            for &h in &self.pages {
+                pool.release(h);
+            }
+        }
     }
 }
 
@@ -266,7 +419,8 @@ impl StreamCache {
 #[derive(Debug, Clone, PartialEq)]
 pub struct CacheStats {
     pub tokens: usize,
-    /// Compressed storage bytes (packed pages + buffer codes).
+    /// Storage bytes referenced by this cache (packed pages + buffer
+    /// codes). Shared pages count in full — the logical footprint.
     pub bytes: usize,
     pub fp16_equiv_bytes: usize,
     /// Working memory held by the materialized q1 views — derivable
@@ -281,6 +435,11 @@ pub struct CacheStats {
     /// the owning backend session fills this in. Capacity planning from
     /// `bytes` alone under-provisions without it.
     pub slab_bytes: usize,
+    /// Of `bytes`, page storage this cache shares with at least one
+    /// other owner (pool refcount > 1).
+    pub shared_page_bytes: usize,
+    /// Of `bytes`, page storage owned by this cache alone.
+    pub private_page_bytes: usize,
 }
 
 impl CacheStats {
@@ -289,9 +448,11 @@ impl CacheStats {
     }
 }
 
-/// Full-model cache: `[n_layers][n_heads]` K and V streams.
+/// Full-model cache: `[n_layers][n_heads]` K and V streams over one
+/// (possibly shared) page pool.
 pub struct KvCache {
     pub cfg: KvCacheConfig,
+    pool: SharedPagePool,
     k: Vec<StreamCache>,
     v: Vec<StreamCache>,
 }
@@ -306,14 +467,23 @@ pub struct HeadCache<'a> {
 /// parallel decode sync hands to a worker. Produced only by
 /// [`KvCache::streams_mut`], whose iterator yields each pair exactly
 /// once, so two workers can never alias a stream (the borrow checker
-/// proves non-overlap instead of a runtime lock).
+/// proves non-overlap instead of a runtime lock; the shared page pool
+/// is only ever *read* inside the sync, so pool access stays
+/// lock-concurrent).
 pub struct HeadCacheMut<'a> {
     pub k: &'a mut StreamCache,
     pub v: &'a mut StreamCache,
 }
 
 impl KvCache {
+    /// Cache over a fresh private pool (the non-sharing default).
     pub fn new(cfg: KvCacheConfig) -> KvCache {
+        KvCache::with_pool(cfg, PagePool::new_shared())
+    }
+
+    /// Cache whose pages live in `pool` — what a sharing backend passes
+    /// so every session's flushed pages land in one refcounted store.
+    pub fn with_pool(cfg: KvCacheConfig, pool: SharedPagePool) -> KvCache {
         // A flush must fill exactly one page: every page-aligned consumer
         // (`read_q1_into`, `Q1View`, the slab sync) indexes scales by
         // `token / block` and would misalign on partial pages.
@@ -323,16 +493,39 @@ impl KvCache {
             cfg.n_b,
             cfg.block
         );
+        let epoch = pool
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .epoch_probe();
         let mut k = Vec::new();
         let mut v = Vec::new();
         for layer in 0..cfg.n_layers {
             for head in 0..cfg.n_heads {
                 let bits = cfg.precision.get(layer, head);
-                k.push(StreamCache::new(cfg.d_head, cfg.block, cfg.n_b, bits));
-                v.push(StreamCache::new(cfg.d_head, cfg.block, cfg.n_b, bits));
+                k.push(StreamCache::new(
+                    cfg.d_head,
+                    cfg.block,
+                    cfg.n_b,
+                    bits,
+                    std::sync::Arc::clone(&pool),
+                    epoch.clone(),
+                ));
+                v.push(StreamCache::new(
+                    cfg.d_head,
+                    cfg.block,
+                    cfg.n_b,
+                    bits,
+                    std::sync::Arc::clone(&pool),
+                    epoch.clone(),
+                ));
             }
         }
-        KvCache { cfg, k, v }
+        KvCache { cfg, pool, k, v }
+    }
+
+    /// The pool this cache's pages live in.
+    pub fn page_pool(&self) -> &SharedPagePool {
+        &self.pool
     }
 
     fn idx(&self, layer: usize, head: usize) -> usize {
@@ -377,10 +570,18 @@ impl KvCache {
     }
 
     pub fn stats(&self) -> CacheStats {
-        let bytes: usize =
-            self.k.iter().chain(&self.v).map(|s| s.bytes()).sum();
-        let view_bytes: usize =
-            self.k.iter().chain(&self.v).map(|s| s.view_bytes()).sum();
+        let pool = self.pool.read().unwrap_or_else(|e| e.into_inner());
+        let mut bytes = 0usize;
+        let mut view_bytes = 0usize;
+        let mut shared = 0usize;
+        let mut private = 0usize;
+        for s in self.k.iter().chain(&self.v) {
+            bytes += s.bytes_in(&pool);
+            view_bytes += s.view_bytes();
+            let (sh, pr) = s.shared_private_bytes_in(&pool);
+            shared += sh;
+            private += pr;
+        }
         let tokens = self.tokens();
         let fp16 = 2 * tokens
             * self.cfg.d_head
@@ -393,6 +594,8 @@ impl KvCache {
             fp16_equiv_bytes: fp16,
             view_bytes,
             slab_bytes: 0,
+            shared_page_bytes: shared,
+            private_page_bytes: private,
         }
     }
 }
@@ -582,9 +785,11 @@ mod tests {
         };
         assert_eq!(n, 4);
         assert_eq!(s.pages.len(), 1);
-        let want = s.pages[0].dequant_q1();
+        let h = s.pages[0];
+        let pool = cache.page_pool().read().expect("pool");
+        let want = pool.get(h).dequant_q1();
         assert_eq!(codes, want, "page region rewritten");
-        assert_eq!(scale0, s.pages[0].fp_scale);
+        assert_eq!(scale0, pool.get(h).fp_scale);
     }
 
     /// Shard-coverage invariant behind the parallel sync: the mutable
@@ -639,6 +844,9 @@ mod tests {
         assert_eq!(stats.tokens, 64);
         // INT4 pages + small buffer: better than 2.5x vs FP16.
         assert!(stats.compression_ratio() > 2.5, "{}", stats.compression_ratio());
+        // Fully private cache: no shared storage.
+        assert_eq!(stats.shared_page_bytes, 0);
+        assert!(stats.private_page_bytes > 0);
     }
 
     #[test]
@@ -657,5 +865,112 @@ mod tests {
         let b4 = cache.head(0, 0).k.bytes();
         let b2 = cache.head(0, 1).k.bytes();
         assert!(b2 < b4, "2-bit head {b2}B vs 4-bit head {b4}B");
+    }
+
+    // -- shared-pool behavior ------------------------------------------
+
+    /// Two caches over one pool: adopting a prefix shares the physical
+    /// pages (refs = 2), the adopter's view is byte-identical to the
+    /// donor's, and pages outlive the donor while the adopter holds them.
+    #[test]
+    fn adopted_pages_share_storage_across_caches() {
+        let pool = PagePool::new_shared();
+        let mut donor =
+            KvCache::with_pool(cfg(4), std::sync::Arc::clone(&pool));
+        let mut rng = Rng::new(21);
+        let x = rng.normal_vec(8 * 8, 1.0); // 2 full pages
+        let q1 = quant_sym_int8(&x);
+        donor.k_stream_mut(0, 0).ingest_q1_block(&q1.codes, q1.scale, 8);
+        let handles = donor.head(0, 0).k.pages.clone();
+        assert_eq!(handles.len(), 2);
+
+        let mut fork = KvCache::with_pool(cfg(4), std::sync::Arc::clone(&pool));
+        fork.k_stream_mut(0, 0).adopt_pages(&handles);
+        {
+            let p = pool.read().expect("pool");
+            assert_eq!(p.refs(handles[0]), 2);
+            assert_eq!(p.refs(handles[1]), 2);
+            let st = p.stats();
+            assert_eq!(st.live_pages, 2);
+            assert_eq!(st.shared_pages, 2);
+            assert_eq!(st.private_bytes, 0);
+            assert!(st.shared_bytes > 0);
+        }
+        // The adopter reads exactly the donor's codes and scales.
+        let (dc, ds, dn) = donor.k_stream_mut(0, 0).q1_view();
+        let (want_codes, want_scales) = (dc[..8 * 8].to_vec(), ds[..2].to_vec());
+        assert_eq!(dn, 8);
+        let (fc, fs, fn_) = fork.k_stream_mut(0, 0).q1_view();
+        assert_eq!(fn_, 8);
+        assert_eq!(&fc[..8 * 8], &want_codes[..]);
+        assert_eq!(&fs[..2], &want_scales[..]);
+        // Donor teardown releases its refs but the pages live on.
+        drop(donor);
+        {
+            let p = pool.read().expect("pool");
+            assert_eq!(p.live_pages(), 2);
+            assert_eq!(p.refs(handles[0]), 1);
+        }
+        // The adopter can still read them after the donor is gone.
+        let (_, _, n) = fork.k_stream_mut(0, 0).q1_view();
+        assert_eq!(n, 8);
+        // Last owner out frees everything.
+        drop(fork);
+        assert_eq!(pool.read().expect("pool").live_pages(), 0);
+    }
+
+    /// Per-cache stats split shared vs private page storage exactly.
+    #[test]
+    fn stats_split_shared_and_private_pages() {
+        let pool = PagePool::new_shared();
+        let mut donor =
+            KvCache::with_pool(cfg(4), std::sync::Arc::clone(&pool));
+        let mut rng = Rng::new(22);
+        let x = rng.normal_vec(4 * 8, 1.0); // 1 full page
+        let q1 = quant_sym_int8(&x);
+        donor.k_stream_mut(0, 0).ingest_q1_block(&q1.codes, q1.scale, 4);
+        let handles = donor.head(0, 0).k.pages.clone();
+
+        let mut fork = KvCache::with_pool(cfg(4), std::sync::Arc::clone(&pool));
+        fork.k_stream_mut(0, 0).adopt_pages(&handles);
+        // Fork grows a private page of its own on top of the shared one.
+        for _ in 0..4 {
+            let v = rng.normal_vec(8, 1.0);
+            fork.k_stream_mut(0, 0).push_token(&v);
+        }
+        let st = fork.stats();
+        assert!(st.shared_page_bytes > 0, "adopted page is shared");
+        assert!(st.private_page_bytes > 0, "own flushed page is private");
+        // Every non-page byte is the buffers' (empty buffers still cost
+        // their 4-byte scale slot; 2 layers x 2 heads x {K, V} = 8
+        // streams), so the shared/private split covers all page storage.
+        assert_eq!(
+            st.bytes,
+            st.shared_page_bytes + st.private_page_bytes + 8 * 4,
+            "page bytes + buffer bytes == total"
+        );
+    }
+
+    /// The pooled arm of the PR-1 invariant: if a page is freed while a
+    /// view still mirrors it (a buggy eviction path would do this), the
+    /// next sync detects it via the pool epoch instead of serving stale
+    /// codes.
+    #[test]
+    #[should_panic(expected = "page freed under a live view")]
+    fn view_detects_page_freed_underneath() {
+        let mut cache = KvCache::new(cfg(4));
+        let mut rng = Rng::new(23);
+        let x = rng.normal_vec(4 * 8, 1.0);
+        let q1 = quant_sym_int8(&x);
+        cache.k_stream_mut(0, 0).ingest_q1_block(&q1.codes, q1.scale, 4);
+        let _ = cache.k_stream_mut(0, 0).q1_view();
+        // Simulate an eviction that ignores the refcount contract.
+        let h = cache.head(0, 0).k.pages[0];
+        cache
+            .page_pool()
+            .write()
+            .expect("pool")
+            .release(h);
+        let _ = cache.k_stream_mut(0, 0).q1_view();
     }
 }

@@ -16,6 +16,11 @@
 //! (quantized execution in the AOT executables), `turbo-cpu` (the pure-
 //! Rust integer-kernel substrate — runs with no artifacts and no PJRT
 //! toolchain), or `flash` (exact FP32 baseline).
+//!
+//! Prompt-prefix KV sharing (`--share-prefixes` / `--no-share-prefixes`,
+//! default on for `turbo-cpu`): batched requests with a common prompt
+//! prefix share the same refcounted q2 pages instead of each storing a
+//! copy; `gen --batch N` submits the prompt N times to exercise it.
 
 use std::net::TcpListener;
 use std::sync::mpsc::channel;
@@ -80,6 +85,15 @@ fn engine_config(args: &Args) -> EngineConfig {
             temp: args.opt_parse("temp", 0.8f32),
         }
     };
+    // Prompt-prefix KV sharing: default ON for the artifact-free
+    // turbo-cpu path (where every session shares one page pool), off
+    // elsewhere unless forced; `--no-share-prefixes` always wins.
+    let share_default = mode == PathMode::TurboCpu;
+    let share_prefixes = if args.flag("no-share-prefixes") {
+        false
+    } else {
+        share_default || args.flag("share-prefixes")
+    };
     let mut cfg = EngineConfig {
         mode,
         kv_bits,
@@ -89,6 +103,7 @@ fn engine_config(args: &Args) -> EngineConfig {
             "decode-threads",
             turboattention::pool::default_threads(),
         ),
+        share_prefixes,
         seed: args.opt_parse("seed", 0u64),
         ..Default::default()
     };
@@ -116,9 +131,15 @@ fn gen(args: &Args) -> Result<()> {
     let mut engine = load_engine(args)?;
     let prompt = args.opt_or("prompt", "the router routes the tokens ");
     let max_new = args.opt_parse("max-new", 48usize);
+    // `--batch N` submits the prompt N times — with prefix sharing on,
+    // requests 2..N fork from the first request's pages.
+    let batch = args.opt_parse("batch", 1usize).max(1);
     let tok = ByteTokenizer;
-    engine.submit(GenRequest::new(1, tok.encode(prompt), max_new));
-    let completions = engine.run_to_completion()?;
+    for id in 0..batch as u64 {
+        engine.submit(GenRequest::new(id + 1, tok.encode(prompt), max_new));
+    }
+    let mut completions = engine.run_to_completion()?;
+    completions.sort_by_key(|c| c.id);
     for c in completions {
         println!("prompt : {prompt}");
         println!("output : {}", tok.decode(&c.generated));
@@ -128,6 +149,14 @@ fn gen(args: &Args) -> Result<()> {
             c.total_latency * 1e3,
             c.tpot * 1e3,
             engine.metrics.cache_compression.max(1.0)
+        );
+    }
+    if engine.cfg.share_prefixes {
+        println!(
+            "prefix sharing: {} hits | {} shared tokens | dedup {:.3}",
+            engine.metrics.prefix_hits,
+            engine.metrics.prefix_shared_tokens,
+            engine.metrics.page_dedup_ratio
         );
     }
     Ok(())

@@ -173,6 +173,31 @@ pub struct EngineMetrics {
     /// term the compressed-cache numbers alone under-report.
     pub cache_slab_bytes: usize,
     pub cache_compression: f64,
+    /// Physical page storage shared by more than one session (pool
+    /// refcount > 1) — the prefix-sharing dedup win, next to
+    /// `cache_view_bytes`/`cache_slab_bytes`.
+    pub shared_page_bytes: usize,
+    /// Physical page storage with a single owner.
+    pub private_page_bytes: usize,
+    /// `1 - physical/logical` over the shared page pool: the fraction
+    /// of referenced page storage deduplicated away. For B sessions
+    /// sharing one prompt prefix this is ≈ (B-1)/B of the prefix pages.
+    pub page_dedup_ratio: f64,
+    /// Working memory of the pool's per-page q1 memos (dequantized once
+    /// at insert, shared by every owner's view sync) — the pool-level
+    /// analogue of `cache_view_bytes`, and the price of cross-session
+    /// dequantize-once. Excluded from `cache_bytes` like all derivable
+    /// metadata.
+    pub page_q1_memo_bytes: usize,
+    /// Admissions that forked from a shared prefix.
+    pub prefix_hits: u64,
+    /// Prompt tokens served from shared pages instead of re-quantized.
+    pub prefix_shared_tokens: u64,
+    /// Scheduler iterations that deferred admission for capacity
+    /// (token budget or running-slot cap) — the starvation signal.
+    pub batcher_capacity_waits: u64,
+    /// Waiting-queue depth at the most recent capacity wait.
+    pub batcher_wait_depth: u64,
     /// Wall-clock seconds spent in decode rounds (engine thread).
     pub decode_wall_s: f64,
     /// Seconds of per-(layer, head) work executed during those rounds,

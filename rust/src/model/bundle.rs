@@ -257,18 +257,42 @@ impl ModelBundle {
         sv: &[f32],
         n_tokens: usize,
     ) {
+        self.ingest_prefill_from(cache, k8, v8, sk, sv, n_tokens, 0)
+    }
+
+    /// [`Self::ingest_prefill`] starting at the page-aligned token
+    /// `skip_tokens`: the earlier tokens belong to an adopted shared
+    /// prompt prefix whose pooled pages are already in the cache, so
+    /// only the tail is quantized into new pages (prefix sharing).
+    #[allow(clippy::too_many_arguments)]
+    pub fn ingest_prefill_from(
+        &self,
+        cache: &mut KvCache,
+        k8: &[i8],
+        v8: &[i8],
+        sk: &[f32],
+        sv: &[f32],
+        n_tokens: usize,
+        skip_tokens: usize,
+    ) {
         let m = &self.rt.manifest.model;
         assert_eq!(k8.len(), self.cache_elems());
         assert_eq!(sk.len(), self.scale_elems());
         let (l_n, h_n, c, dh, bc) =
             (m.n_layers, m.n_heads, m.max_ctx, m.d_head, m.block);
+        assert_eq!(
+            skip_tokens % bc,
+            0,
+            "shared prefix must be page-aligned"
+        );
+        assert!(skip_tokens <= n_tokens);
         let nb = c / bc;
         for l in 0..l_n {
             for h in 0..h_n {
                 let base = ((l * h_n) + h) * c * dh;
                 let sbase = ((l * h_n) + h) * nb;
-                let mut t0 = 0usize;
-                let mut bi = 0usize;
+                let mut t0 = skip_tokens;
+                let mut bi = skip_tokens / bc;
                 while t0 < n_tokens {
                     let t1 = (t0 + bc).min(n_tokens);
                     let codes = &k8[base + t0 * dh..base + t1 * dh];

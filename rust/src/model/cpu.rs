@@ -17,9 +17,24 @@
 //!
 //! Everything outside attention (embedding + sinusoidal positions, QKV /
 //! output projections, a ReLU MLP, RMS pre-norms, the logit head) is
-//! plain serial `Mat` arithmetic, so decode output is bit-identical for
+//! plain serial arithmetic, so decode output is bit-identical for
 //! every `decode_threads` — the same determinism contract the parity
 //! suite enforces for the slab sync and the stream fan-out.
+//!
+//! Decode-step intermediates live in a session-owned [`ModelScratch`]:
+//! after the first step, the model math allocates nothing (the only
+//! per-step allocations left are the three `DecodeOut` result vectors
+//! the engine consumes). [`ModelScratch::grows`] counts buffer
+//! (re)allocations so tests can assert the steady state.
+//!
+//! Prefix sharing hook: [`CpuModel::prefill_from`] runs the *full*
+//! float forward (tail positions attend over exact prefix K/V — the
+//! decode bit-parity contract between shared and private sessions
+//! requires it) but quantizes and stores only the tokens past the
+//! page-aligned `skip` point; the session adopted the prefix's pooled
+//! q2 pages instead of rebuilding them, so the storage and page-
+//! quantization work for the prefix is paid once per unique prefix,
+//! not once per session.
 //!
 //! The model is untrained (random weights): it exists to serve the
 //! *system* — scheduling, caching, quantized execution — not language
@@ -27,7 +42,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::attention::turbo::sas_merge_token;
+use crate::attention::turbo::sas_merge_token_into;
 use crate::attention::{
     turbo_attention, turbo_decode_streams, DecodeScratch, TurboConfig,
 };
@@ -49,6 +64,57 @@ struct CpuLayer {
     w1: Mat,
     /// MLP down-projection `[d_ff, d_model]`.
     w2: Mat,
+}
+
+/// Session-owned scratch for [`CpuModel::decode_step`]'s model math —
+/// the per-token `vec_mat`/`rms` intermediates that used to be fresh
+/// allocations. Buffers grow to their steady-state sizes on the first
+/// step and are reused verbatim afterwards.
+#[derive(Debug, Default)]
+pub struct ModelScratch {
+    /// Residual stream (`d_model`).
+    x: Vec<f32>,
+    /// RMS-normalized copy of `x`.
+    xn: Vec<f32>,
+    /// Q/K/V projections (`d_model` each).
+    qv: Vec<f32>,
+    kv: Vec<f32>,
+    vv: Vec<f32>,
+    /// Attention output (`d_model`), reused across layers.
+    att: Vec<f32>,
+    /// Per-head (running max, denominator) from the stream fan-out.
+    ml: Vec<(f32, f32)>,
+    /// Output projection (`d_model`).
+    o: Vec<f32>,
+    /// MLP hidden (`d_ff`).
+    hid: Vec<f32>,
+    /// MLP down-projection (`d_model`).
+    down: Vec<f32>,
+    /// Buffer (re)allocation events — stays flat once warmed up; the
+    /// allocation-free-steady-state tests assert on it.
+    grows: u64,
+}
+
+impl ModelScratch {
+    pub fn new() -> ModelScratch {
+        ModelScratch::default()
+    }
+
+    /// How many times any scratch buffer had to (re)allocate. After the
+    /// first decode step this must not move.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+}
+
+/// Size `v` to `n` zeroed entries, reusing capacity; counts real
+/// allocations into `grows`.
+fn scratch_buf<T: Clone + Default>(v: &mut Vec<T>, n: usize, grows: &mut u64) {
+    if v.capacity() < n {
+        *grows += 1;
+    }
+    v.clear();
+    v.resize(n, T::default());
 }
 
 /// Deterministic tiny transformer serving the artifact-free CPU path.
@@ -109,12 +175,42 @@ impl CpuModel {
         pool: &WorkerPool,
         cache: &mut KvCache,
     ) -> Result<Vec<f32>> {
+        self.prefill_from(prompt, 0, pool, cache)
+    }
+
+    /// [`Self::prefill`] for a session that adopted a shared,
+    /// page-aligned `skip`-token prompt prefix: the float forward still
+    /// covers the whole prompt (tail K/V must be computed against the
+    /// *exact* prefix floats or shared and private decode would diverge
+    /// bit-wise), but only tokens `[skip, len)` are quantized and
+    /// written back — the prefix's pages are already in the cache as
+    /// pooled handles.
+    pub fn prefill_from(
+        &self,
+        prompt: &[u8],
+        skip_tokens: usize,
+        pool: &WorkerPool,
+        cache: &mut KvCache,
+    ) -> Result<Vec<f32>> {
         let m = &self.info;
         if prompt.is_empty() {
             bail!("empty prompt");
         }
         if prompt.len() > m.max_ctx {
             bail!("prompt len {} exceeds max_ctx {}", prompt.len(), m.max_ctx);
+        }
+        if skip_tokens > prompt.len() {
+            bail!("skip {} exceeds prompt len {}", skip_tokens, prompt.len());
+        }
+        if skip_tokens % m.block != 0 {
+            bail!("skip {} not page-aligned to block {}", skip_tokens, m.block);
+        }
+        if cache.tokens() != skip_tokens {
+            bail!(
+                "cache holds {} tokens, expected the {}-token adopted prefix",
+                cache.tokens(),
+                skip_tokens
+            );
         }
         let (n, dm, dh, h_n) = (prompt.len(), m.d_model, m.d_head, m.n_heads);
         let tcfg = TurboConfig {
@@ -164,10 +260,23 @@ impl CpuModel {
                 }
             }
             // Write this layer's K/V into the paged cache, one q1 block
-            // (codes + symmetric scale) at a time.
+            // (codes + symmetric scale) at a time — starting past the
+            // adopted shared prefix, whose pages are already there.
             for (h, hm) in heads.iter().enumerate() {
-                ingest_stream(cache.k_stream_mut(l, h), &hm.1, m.block, dh);
-                ingest_stream(cache.v_stream_mut(l, h), &hm.2, m.block, dh);
+                ingest_stream(
+                    cache.k_stream_mut(l, h),
+                    &hm.1,
+                    m.block,
+                    dh,
+                    skip_tokens,
+                );
+                ingest_stream(
+                    cache.v_stream_mut(l, h),
+                    &hm.2,
+                    m.block,
+                    dh,
+                    skip_tokens,
+                );
             }
             let o = att.matmul(&lw.wo);
             add_assign(&mut x.data, &o.data);
@@ -189,7 +298,11 @@ impl CpuModel {
     /// Attention runs through [`turbo_decode_streams`] one layer at a
     /// time (layers are sequential; a layer's heads are the parallel
     /// axis), then the current token — not yet in the cache — merges in
-    /// via the SAS online-softmax float merge.
+    /// via the SAS online-softmax float merge, in place.
+    ///
+    /// All model-math intermediates live in the session-owned `sc`
+    /// ([`ModelScratch`]); in steady state the only allocations in this
+    /// function are the three returned `DecodeOut` vectors.
     #[allow(clippy::too_many_arguments)]
     pub fn decode_step(
         &self,
@@ -199,6 +312,7 @@ impl CpuModel {
         pos: usize,
         pool: &WorkerPool,
         scratches: &mut [DecodeScratch],
+        sc: &mut ModelScratch,
     ) -> Result<DecodeOut> {
         let m = &self.info;
         let (dm, dh, h_n, l_n) = (m.d_model, m.d_head, m.n_heads, m.n_layers);
@@ -212,25 +326,28 @@ impl CpuModel {
             bail!("nk {nk} exceeds slab capacity {c}");
         }
         let scale = 1.0 / (dh as f32).sqrt();
-        let mut x = self.embed.row(token as usize).to_vec();
-        add_pos_embed(&mut x, pos);
+        scratch_buf(&mut sc.x, dm, &mut sc.grows);
+        sc.x.copy_from_slice(self.embed.row(token as usize));
+        add_pos_embed(&mut sc.x, pos);
+        // Result buffers (consumed by the engine): the step's only
+        // steady-state allocations.
         let mut k_new = vec![0.0f32; l_n * dm];
         let mut v_new = vec![0.0f32; l_n * dm];
-        // Fully overwritten by every layer's fan-out, so allocated once.
-        let mut att = vec![0.0f32; dm];
-        let mut ml = vec![(0.0f32, 0.0f32); h_n];
+        // Fully overwritten by every layer's fan-out.
+        scratch_buf(&mut sc.att, dm, &mut sc.grows);
+        scratch_buf(&mut sc.ml, h_n, &mut sc.grows);
         for (l, lw) in self.layers.iter().enumerate() {
-            let xn = rms_vec(&x);
-            let qv = vec_mat(&xn, &lw.wq);
-            let kv = vec_mat(&xn, &lw.wk);
-            let vv = vec_mat(&xn, &lw.wv);
-            k_new[l * dm..(l + 1) * dm].copy_from_slice(&kv);
-            v_new[l * dm..(l + 1) * dm].copy_from_slice(&vv);
+            rms_vec_into(&sc.x, &mut sc.xn, &mut sc.grows);
+            vec_mat_into(&sc.xn, &lw.wq, &mut sc.qv, &mut sc.grows);
+            vec_mat_into(&sc.xn, &lw.wk, &mut sc.kv, &mut sc.grows);
+            vec_mat_into(&sc.xn, &lw.wv, &mut sc.vv, &mut sc.grows);
+            k_new[l * dm..(l + 1) * dm].copy_from_slice(&sc.kv);
+            v_new[l * dm..(l + 1) * dm].copy_from_slice(&sc.vv);
             let base = l * h_n * c * dh;
             let sbase = l * h_n * nb;
             turbo_decode_streams(
                 pool,
-                &qv,
+                &sc.qv,
                 &slabs.k8[base..base + h_n * c * dh],
                 &slabs.v8[base..base + h_n * c * dh],
                 &slabs.sk[sbase..sbase + h_n * nb],
@@ -240,49 +357,52 @@ impl CpuModel {
                 m.block,
                 m.n_r,
                 scratches,
-                &mut ml,
-                &mut att,
+                &mut sc.ml,
+                &mut sc.att,
             )?;
-            for (h, &(am, al)) in ml.iter().enumerate() {
-                let q_h = &qv[h * dh..(h + 1) * dh];
-                let k_h = &kv[h * dh..(h + 1) * dh];
-                let v_h = &vv[h * dh..(h + 1) * dh];
+            for h in 0..h_n {
+                let (am, al) = sc.ml[h];
+                let q_h = &sc.qv[h * dh..(h + 1) * dh];
+                let k_h = &sc.kv[h * dh..(h + 1) * dh];
+                let v_h = &sc.vv[h * dh..(h + 1) * dh];
                 let s_new = dot(q_h, k_h) * scale;
-                let merged = sas_merge_token(
-                    &att[h * dh..(h + 1) * dh],
+                sas_merge_token_into(
+                    &mut sc.att[h * dh..(h + 1) * dh],
                     am,
                     al,
                     s_new,
                     v_h,
                     m.n_r,
                 );
-                att[h * dh..(h + 1) * dh].copy_from_slice(&merged);
             }
-            let o = vec_mat(&att, &lw.wo);
-            add_assign(&mut x, &o);
-            let xn2 = rms_vec(&x);
-            let mut hid = vec_mat(&xn2, &lw.w1);
-            for v in hid.iter_mut() {
+            vec_mat_into(&sc.att, &lw.wo, &mut sc.o, &mut sc.grows);
+            add_assign(&mut sc.x, &sc.o);
+            rms_vec_into(&sc.x, &mut sc.xn, &mut sc.grows);
+            vec_mat_into(&sc.xn, &lw.w1, &mut sc.hid, &mut sc.grows);
+            for v in sc.hid.iter_mut() {
                 *v = v.max(0.0);
             }
-            let down = vec_mat(&hid, &lw.w2);
-            add_assign(&mut x, &down);
+            vec_mat_into(&sc.hid, &lw.w2, &mut sc.down, &mut sc.grows);
+            add_assign(&mut sc.x, &sc.down);
         }
-        let logits = vec_mat(&rms_vec(&x), &self.w_out);
+        rms_vec_into(&sc.x, &mut sc.xn, &mut sc.grows);
+        let logits = vec_mat(&sc.xn, &self.w_out);
         Ok(DecodeOut { logits, k_new, v_new })
     }
 }
 
 /// Quantize `mat`'s rows (`[n, d]`) into q1 blocks of `block` tokens and
-/// ingest them into one cache stream.
+/// ingest them into one cache stream, starting at row `skip` (rows
+/// before it belong to an adopted shared prefix already in the cache).
 fn ingest_stream(
-    stream: &mut crate::kvcache::store::StreamCache,
+    stream: &mut crate::kvcache::StreamCache,
     mat: &Mat,
     block: usize,
     d: usize,
+    skip: usize,
 ) {
     let n = mat.rows;
-    let mut t0 = 0usize;
+    let mut t0 = skip;
     while t0 < n {
         let t1 = (t0 + block).min(n);
         let q = quant_sym_int8(&mat.data[t0 * d..t1 * d]);
@@ -309,11 +429,11 @@ fn rms_rows(m: &Mat) -> Mat {
     out
 }
 
-/// RMS-normalize one vector into a fresh buffer.
-fn rms_vec(x: &[f32]) -> Vec<f32> {
-    let mut out = x.to_vec();
-    rms_inplace(&mut out);
-    out
+/// RMS-normalize `x` into the reusable scratch buffer `out`.
+fn rms_vec_into(x: &[f32], out: &mut Vec<f32>, grows: &mut u64) {
+    scratch_buf(out, x.len(), grows);
+    out.copy_from_slice(x);
+    rms_inplace(out);
 }
 
 fn rms_inplace(x: &mut [f32]) {
@@ -326,14 +446,21 @@ fn rms_inplace(x: &mut [f32]) {
 
 /// `x @ W` for a single row vector (`x.len() == w.rows`).
 fn vec_mat(x: &[f32], w: &Mat) -> Vec<f32> {
+    let mut out = Vec::new();
+    let mut grows = 0u64;
+    vec_mat_into(x, w, &mut out, &mut grows);
+    out
+}
+
+/// [`vec_mat`] into a reusable scratch buffer.
+fn vec_mat_into(x: &[f32], w: &Mat, out: &mut Vec<f32>, grows: &mut u64) {
     debug_assert_eq!(x.len(), w.rows);
-    let mut out = vec![0.0f32; w.cols];
+    scratch_buf(out, w.cols, grows);
     for (&xi, row) in x.iter().zip(w.data.chunks(w.cols)) {
         for (o, &wv) in out.iter_mut().zip(row) {
             *o += xi * wv;
         }
     }
-    out
 }
 
 fn add_assign(x: &mut [f32], y: &[f32]) {
@@ -361,7 +488,7 @@ fn add_pos_embed(x: &mut [f32], pos: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::{KvCacheConfig, PrecisionMap};
+    use crate::kvcache::{KvCacheConfig, PagePool, PrecisionMap};
     use crate::quant::Bits;
 
     fn tiny_info() -> ModelInfo {
@@ -412,6 +539,22 @@ mod tests {
         assert!(model.prefill(b"", &pool, &mut cache).is_err());
         let long = vec![b'a'; info.max_ctx + 1];
         assert!(model.prefill(&long, &pool, &mut cache).is_err());
+        // Sharing-path argument validation.
+        let mut cache = cache_for(&info);
+        assert!(
+            model.prefill_from(b"abcdefgh", 3, &pool, &mut cache).is_err(),
+            "unaligned skip"
+        );
+        let mut cache = cache_for(&info);
+        assert!(
+            model.prefill_from(b"abcd", 8, &pool, &mut cache).is_err(),
+            "skip beyond prompt"
+        );
+        let mut cache = cache_for(&info);
+        assert!(
+            model.prefill_from(b"abcdefgh", 4, &pool, &mut cache).is_err(),
+            "cache missing the adopted prefix"
+        );
     }
 
     #[test]
@@ -481,12 +624,149 @@ mod tests {
             sess
         };
         let mut scratches = vec![DecodeScratch::new(); 2];
+        let mut sc = ModelScratch::new();
         let out = model
-            .decode_step(&slabs.slabs, 7, b'h', 7, &pool, &mut scratches)
+            .decode_step(&slabs.slabs, 7, b'h', 7, &pool, &mut scratches, &mut sc)
             .expect("decode");
         assert_eq!(out.logits.len(), info.vocab);
         assert_eq!(out.k_new.len(), info.n_layers * info.d_model);
         assert_eq!(out.v_new.len(), info.n_layers * info.d_model);
         assert!(out.logits.iter().all(|v| v.is_finite()));
+    }
+
+    /// The ROADMAP allocation item: after the first decode step, the
+    /// model scratch never (re)allocates — the TurboCpu decode step's
+    /// model math is allocation-free in steady state.
+    #[test]
+    fn decode_scratch_is_allocation_free_in_steady_state() {
+        let info = tiny_info();
+        let model = CpuModel::new(&info, 13);
+        let pool = WorkerPool::new(2);
+        let mut cache = cache_for(&info);
+        model.prefill(b"warmup prompt", &pool, &mut cache).unwrap();
+        use crate::attention::backend::TurboSession;
+        let mut sess = TurboSession::from_parts(
+            cache,
+            TurboSlabs::new(
+                info.n_layers,
+                info.n_heads,
+                info.max_ctx,
+                info.d_head,
+                info.block,
+            ),
+        );
+        let mut nk = sess.sync_slabs().unwrap();
+        let mut scratches = vec![DecodeScratch::new(); 2];
+        let mut sc = ModelScratch::new();
+        let mut pos = nk;
+        let mut token = b'x';
+        let out = model
+            .decode_step(&sess.slabs, nk, token, pos, &pool, &mut scratches, &mut sc)
+            .expect("warmup step");
+        let warmed = sc.grows();
+        assert!(warmed > 0, "first step must size the buffers");
+        // Keep decoding (with real folds, so buffer flushes happen too):
+        // the counter must not move again.
+        for _ in 0..6 {
+            for l in 0..info.n_layers {
+                for h in 0..info.n_heads {
+                    let o = (l * info.n_heads + h) * info.d_head;
+                    sess.cache
+                        .k_stream_mut(l, h)
+                        .push_token(&out.k_new[o..o + info.d_head]);
+                    sess.cache
+                        .v_stream_mut(l, h)
+                        .push_token(&out.v_new[o..o + info.d_head]);
+                }
+            }
+            nk = sess.sync_slabs().unwrap();
+            pos += 1;
+            let step = model
+                .decode_step(
+                    &sess.slabs, nk, token, pos, &pool, &mut scratches, &mut sc,
+                )
+                .expect("steady step");
+            token = crate::model::argmax(&step.logits) as u8;
+        }
+        assert_eq!(
+            sc.grows(),
+            warmed,
+            "steady-state decode must not grow the model scratch"
+        );
+    }
+
+    /// Prefix-sharing arm: a session that adopts the donor's pooled
+    /// prefix pages and prefills only the tail ends up with a cache
+    /// byte-identical (q1 view) to a fully private prefill, and the
+    /// prefill logits are bit-identical (the float pass is unchanged).
+    #[test]
+    fn prefill_from_shared_prefix_matches_private_bitwise() {
+        let info = tiny_info();
+        let model = CpuModel::new(&info, 17);
+        let wpool = WorkerPool::new(2);
+        let prompt = b"abcdefghij"; // 10 tokens: 2 pages of 4 + 2 buffered
+        let skip = 8usize;
+
+        let pages_pool = PagePool::new_shared();
+        let pm =
+            PrecisionMap::uniform(info.n_layers, info.n_heads, Bits::Int4);
+        let mk_cache = || {
+            KvCache::with_pool(
+                KvCacheConfig::new(
+                    info.n_layers,
+                    info.n_heads,
+                    info.d_head,
+                    info.block,
+                    pm.clone(),
+                ),
+                std::sync::Arc::clone(&pages_pool),
+            )
+        };
+        let mut donor = mk_cache();
+        let full_logits = model.prefill(prompt, &wpool, &mut donor).unwrap();
+
+        let mut forked = mk_cache();
+        for l in 0..info.n_layers {
+            for h in 0..info.n_heads {
+                let kh = donor.head(l, h).k.pages[..skip / info.block].to_vec();
+                forked.k_stream_mut(l, h).adopt_pages(&kh);
+                let vh = donor.head(l, h).v.pages[..skip / info.block].to_vec();
+                forked.v_stream_mut(l, h).adopt_pages(&vh);
+            }
+        }
+        let tail_logits = model
+            .prefill_from(prompt, skip, &wpool, &mut forked)
+            .unwrap();
+        let bits =
+            |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&full_logits), bits(&tail_logits), "logits bitwise");
+        assert_eq!(forked.tokens(), prompt.len());
+
+        // The forked cache reads identically to a fully private one.
+        let mut private = cache_for(&info);
+        model.prefill(prompt, &wpool, &mut private).unwrap();
+        for l in 0..info.n_layers {
+            for h in 0..info.n_heads {
+                let (fc, fs, fnk) = {
+                    let (c, s, n) = forked.k_stream_mut(l, h).q1_view();
+                    (c.to_vec(), s.to_vec(), n)
+                };
+                let (pc, ps, pnk) = {
+                    let (c, s, n) = private.k_stream_mut(l, h).q1_view();
+                    (c.to_vec(), s.to_vec(), n)
+                };
+                assert_eq!(fnk, pnk, "token count (l={l} h={h})");
+                assert_eq!(
+                    fc[..fnk * info.d_head],
+                    pc[..pnk * info.d_head],
+                    "K codes (l={l} h={h})"
+                );
+                let nb = fnk.div_ceil(info.block);
+                assert_eq!(fs[..nb], ps[..nb], "K scales (l={l} h={h})");
+            }
+        }
+        // And the prefix really is shared storage.
+        let st = forked.stats();
+        assert!(st.shared_page_bytes > 0, "prefix pages shared");
     }
 }

@@ -7,7 +7,7 @@ pub mod cpu;
 pub use bundle::{
     DecodeOut, FlashSlabs, ModelBundle, PrefillOut, SlabShardMut, TurboSlabs,
 };
-pub use cpu::CpuModel;
+pub use cpu::{CpuModel, ModelScratch};
 
 use crate::testutil::Rng;
 

@@ -80,6 +80,77 @@ fn turbo_cpu_engine_interleaves_requests() {
     assert_eq!(e.metrics.requests_completed, 3);
 }
 
+fn cpu_engine_sharing(decode_threads: usize, share: bool) -> Engine {
+    let cfg = EngineConfig {
+        mode: PathMode::TurboCpu,
+        sampler: Sampler::Greedy,
+        decode_threads,
+        share_prefixes: share,
+        ..Default::default()
+    };
+    Engine::new(ModelBundle::new(Runtime::cpu_substrate()), cfg)
+}
+
+/// Prefix sharing is output-invisible: B identical greedy requests
+/// generate the same bytes with sharing on and off (shared pages hold
+/// exactly the codes a private prefill would have produced).
+#[test]
+fn prefix_sharing_does_not_change_generation() {
+    let run = |share: bool| -> Vec<Vec<u8>> {
+        let mut e = cpu_engine_sharing(2, share);
+        // 40 tokens: one shared 32-token page + 8-token tail.
+        let prompt: Vec<u8> =
+            (0..40).map(|i| b'a' + (i % 11) as u8).collect();
+        for id in 0..3u64 {
+            e.submit(GenRequest::new(id, prompt.clone(), 10));
+        }
+        let mut done = e.run_to_completion().expect("run");
+        done.sort_by_key(|c| c.id);
+        done.into_iter().map(|c| c.generated).collect()
+    };
+    let shared = run(true);
+    let private = run(false);
+    assert_eq!(shared, private, "sharing changed greedy output");
+    assert_eq!(shared.len(), 3);
+}
+
+/// The acceptance criterion's metrics arm: B sessions over one common
+/// prompt prefix report `shared_page_bytes > 0` and a dedup ratio of
+/// exactly (B-1)/B while only the prefix pages exist in the pool.
+#[test]
+fn prefix_sharing_metrics_report_dedup() {
+    let b_sessions = 4u64;
+    let mut e = cpu_engine_sharing(2, true);
+    // 64 tokens = exactly two 32-token pages, nothing buffered.
+    let prompt: Vec<u8> = (0..64).map(|i| b'a' + (i % 13) as u8).collect();
+    for id in 0..b_sessions {
+        e.submit(GenRequest::new(id, prompt.clone(), 48));
+    }
+    // 8 iterations: all 4 admitted (1 prefill/step) and decoding, but
+    // each has generated < 32 tokens, so no decode buffer has flushed —
+    // the pool holds exactly the shared prefix pages.
+    for _ in 0..8 {
+        e.step().expect("step");
+    }
+    assert_eq!(e.metrics.prefix_hits, b_sessions - 1, "later requests fork");
+    assert_eq!(
+        e.metrics.prefix_shared_tokens,
+        (b_sessions - 1) * prompt.len() as u64
+    );
+    assert!(e.metrics.shared_page_bytes > 0, "prefix pages shared");
+    assert_eq!(e.metrics.private_page_bytes, 0, "no private pages yet");
+    let want = (b_sessions - 1) as f64 / b_sessions as f64;
+    assert!(
+        (e.metrics.page_dedup_ratio - want).abs() < 1e-9,
+        "dedup {} != (B-1)/B = {want}",
+        e.metrics.page_dedup_ratio
+    );
+    // Drain; completions release their refs and the pool empties with
+    // the engine's sessions (the index holds no refs of its own).
+    let done = e.run_to_completion().expect("drain");
+    assert_eq!(done.len(), b_sessions as usize);
+}
+
 fn engine(mode: PathMode) -> Option<Engine> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: artifacts not built");

@@ -215,8 +215,8 @@ fn run_cpu_case(prompt: &[u8], steps: usize, threads: usize) -> CpuTrace {
     let backend =
         backend_for(PathMode::TurboCpu, Bits::Int4, 1, 7, &info, pool);
     let mut bundle = ModelBundle::new(Runtime::cpu_substrate());
-    let (logits, mut state) =
-        backend.prefill(&mut bundle, prompt).expect("prefill");
+    let (logits, mut state, _reg) =
+        backend.prefill(&mut bundle, prompt, None).expect("prefill");
     let mut logits_bits: Vec<u32> =
         logits.iter().map(|x| x.to_bits()).collect();
     let last =
@@ -255,6 +255,95 @@ fn turbo_cpu_backend_bit_identical_across_thread_counts() {
     for &threads in &THREADS[1..] {
         let got = run_cpu_case(prompt, 12, threads);
         assert_eq!(got, want, "threads={threads} diverged from serial");
+    }
+}
+
+/// One decode trace of a session that may have forked from a shared
+/// prompt prefix: (logits bits, greedy bytes) — `CacheStats` is checked
+/// separately because the shared/private byte split legitimately
+/// differs between the sharing modes.
+fn run_cpu_shared_trace(
+    prompt: &[u8],
+    steps: usize,
+    threads: usize,
+    share: bool,
+) -> (Vec<u32>, Vec<u8>, CacheStats) {
+    let info = Manifest::cpu_substrate().model;
+    let pool = Arc::new(WorkerPool::new(threads));
+    let backend =
+        backend_for(PathMode::TurboCpu, Bits::Int4, 1, 7, &info, pool);
+    let mut bundle = ModelBundle::new(Runtime::cpu_substrate());
+    // Donor session builds (and would register) the prefix pages; it
+    // stays alive for the whole trace, like a batched neighbor.
+    let (_, _donor, reg) =
+        backend.prefill(&mut bundle, prompt, None).expect("donor prefill");
+    let shared = if share {
+        Some(reg.expect("page-crossing prompt registers a prefix"))
+    } else {
+        None
+    };
+    let (logits, mut state, _) = backend
+        .prefill(&mut bundle, prompt, shared.as_ref())
+        .expect("prefill");
+    let mut logits_bits: Vec<u32> =
+        logits.iter().map(|x| x.to_bits()).collect();
+    let last =
+        &logits[(prompt.len() - 1) * info.vocab..prompt.len() * info.vocab];
+    let mut token = argmax(last) as u8;
+    let mut generated = vec![token];
+    for i in 0..steps {
+        let pos = prompt.len() + i;
+        let out = backend
+            .decode_step(&mut bundle, &mut state, token, pos)
+            .expect("decode");
+        backend
+            .fold_new_token(&bundle, &mut state, &out.k_new, &out.v_new, pos);
+        logits_bits.extend(out.logits.iter().map(|x| x.to_bits()));
+        token = argmax(&out.logits) as u8;
+        generated.push(token);
+    }
+    let stats = backend.cache_stats(&state).expect("turbo-family stats");
+    (logits_bits, generated, stats)
+}
+
+/// The acceptance property of the shared page pool: a session sharing a
+/// page-aligned prompt prefix with a live donor decodes
+/// **bit-identically** to a fully private session — across every
+/// `decode_threads` — while its stats show the prefix as shared.
+#[test]
+fn shared_prefix_decode_bit_identical_to_private() {
+    // 40 tokens: one full 32-token page (shared) + 8 buffered; 26 steps
+    // push past token 64, so a buffer flush (private page creation +
+    // view rewrite) happens mid-trace in both sessions.
+    let prompt: Vec<u8> = (0..40).map(|i| b'a' + (i % 19) as u8).collect();
+    let steps = 26;
+    let (want_bits, want_gen, private_stats) =
+        run_cpu_shared_trace(&prompt, steps, 1, false);
+    assert_eq!(
+        private_stats.shared_page_bytes, 0,
+        "private session shares nothing"
+    );
+    for &threads in &THREADS {
+        let (bits, gen, stats) =
+            run_cpu_shared_trace(&prompt, steps, threads, true);
+        assert_eq!(
+            bits, want_bits,
+            "shared-vs-private logits diverged (threads={threads})"
+        );
+        assert_eq!(gen, want_gen, "generation diverged (threads={threads})");
+        assert!(
+            stats.shared_page_bytes > 0,
+            "forked session must report shared pages (threads={threads})"
+        );
+        // Everything except the sharing split matches the private run.
+        assert_eq!(stats.tokens, private_stats.tokens);
+        assert_eq!(stats.bytes, private_stats.bytes);
+        // And the private thread sweep agrees with itself.
+        let (pbits, pgen, pstats) =
+            run_cpu_shared_trace(&prompt, steps, threads, false);
+        assert_eq!(pbits, want_bits, "private sweep (threads={threads})");
+        assert_eq!(pgen, want_gen);
+        assert_eq!(pstats, private_stats, "private stats exact");
     }
 }
 

@@ -6,7 +6,9 @@
 //! Run: `cargo run --release --example longcontext`
 
 use anyhow::Result;
-use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
+use turboattention::coordinator::{
+    Engine, EngineConfig, GenRequest, PathMode, SamplingParams,
+};
 use turboattention::costmodel::{max_batch, GpuSpec, Method, ModelShape};
 use turboattention::model::{ModelBundle, Sampler};
 use turboattention::quant::Bits;
@@ -18,7 +20,6 @@ fn main() -> Result<()> {
     let max_ctx = rt.manifest.model.max_ctx;
     let cfg = EngineConfig {
         mode: PathMode::Turbo,
-        sampler: Sampler::TopK { k: 6, temp: 0.9 },
         kv_bits: Bits::Int4,
         n_2bit_heads: 2, // mixed precision: 2 of 4 heads at 2-bit
         ..Default::default()
@@ -26,7 +27,12 @@ fn main() -> Result<()> {
     let mut engine = Engine::new(ModelBundle::new(rt), cfg);
     let prompt = b"the cache streams old blocks per layer. ".to_vec();
     let gen = max_ctx - prompt.len() - 2; // fill the context
-    engine.submit(GenRequest::new(1, prompt, gen));
+    let params = SamplingParams {
+        sampler: Sampler::TopK { k: 6, temp: 0.9 },
+        max_new_tokens: gen,
+        ..Default::default()
+    };
+    engine.submit(GenRequest::with_params(1, prompt, params));
     let done = engine.run_to_completion()?;
     let c = &done[0];
     println!(

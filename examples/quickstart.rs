@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
-use turboattention::model::{ByteTokenizer, ModelBundle, Sampler};
+use turboattention::model::{ByteTokenizer, ModelBundle};
 use turboattention::runtime::Runtime;
 
 fn main() -> Result<()> {
@@ -16,11 +16,7 @@ fn main() -> Result<()> {
 
     for (name, mode) in [("turbo", PathMode::Turbo), ("flash", PathMode::Flash)] {
         let rt = Runtime::load("artifacts")?;
-        let cfg = EngineConfig {
-            mode,
-            sampler: Sampler::Greedy,
-            ..Default::default()
-        };
+        let cfg = EngineConfig { mode, ..Default::default() };
         let mut engine = Engine::new(ModelBundle::new(rt), cfg);
         engine.submit(GenRequest::new(1, tok.encode(prompt), 48));
         let done = engine.run_to_completion()?;

@@ -13,7 +13,9 @@
 use std::time::Instant;
 
 use anyhow::Result;
-use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
+use turboattention::coordinator::{
+    Engine, EngineConfig, GenRequest, PathMode, SamplingParams, TokenEvent,
+};
 use turboattention::metrics::Histogram;
 use turboattention::model::{ModelBundle, Sampler};
 use turboattention::runtime::Runtime;
@@ -37,12 +39,17 @@ fn main() -> Result<()> {
 
     for (name, mode) in [("turbo", PathMode::Turbo), ("flash-exact", PathMode::Flash)] {
         let rt = Runtime::load("artifacts")?;
-        let cfg = EngineConfig {
-            mode,
-            sampler: Sampler::TopK { k: 4, temp: 0.7 },
-            ..Default::default()
-        };
+        let cfg = EngineConfig { mode, ..Default::default() };
         let mut engine = Engine::new(ModelBundle::new(rt), cfg);
+        // Per-request sampling: seed each request by its trace index so
+        // the replay is reproducible request-by-request, whatever the
+        // batch composition at replay time.
+        let req_params = |idx: usize, max_new: usize| SamplingParams {
+            sampler: Sampler::TopK { k: 4, temp: 0.7 },
+            seed: idx as u64,
+            stop_byte: None,
+            max_new_tokens: max_new,
+        };
 
         // Replay the trace against the engine's iteration loop: submit
         // requests whose arrival time has passed, then step.
@@ -56,10 +63,10 @@ fn main() -> Result<()> {
             let now = t0.elapsed().as_secs_f64();
             while next < trace.len() && trace[next].at <= now {
                 let e = &trace[next];
-                engine.submit(GenRequest::new(
+                engine.submit(GenRequest::with_params(
                     next as u64,
                     e.prompt.clone(),
-                    e.max_new_tokens,
+                    req_params(next, e.max_new_tokens),
                 ));
                 next += 1;
             }
@@ -67,25 +74,28 @@ fn main() -> Result<()> {
                 // Nothing admitted yet: fast-forward to the next arrival.
                 if next < trace.len() {
                     let e = &trace[next];
-                    engine.submit(GenRequest::new(
+                    engine.submit(GenRequest::with_params(
                         next as u64,
                         e.prompt.clone(),
-                        e.max_new_tokens,
+                        req_params(next, e.max_new_tokens),
                     ));
                     next += 1;
                 }
                 continue;
             }
-            for c in engine.step()? {
-                ttft.record(c.ttft);
-                total.record(c.total_latency);
-                tokens += c.generated.len() as u64;
-                completed += 1;
+            for ev in engine.step()? {
+                if let TokenEvent::Finished(c) = ev.event {
+                    ttft.record(c.ttft);
+                    total.record(c.total_latency);
+                    tokens += c.generated.len() as u64;
+                    completed += 1;
+                }
             }
         }
         let wall = t0.elapsed().as_secs_f64();
         println!("== {name} ==");
         println!("  ttft : {}", ttft.summary());
+        println!("  itl  : {}", engine.itl_hist.summary());
         println!("  e2e  : {}", total.summary());
         println!(
             "  throughput: {:.1} tokens/s over {:.1}s wall ({} tokens, {} requests)",

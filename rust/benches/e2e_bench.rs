@@ -5,14 +5,14 @@
 use turboattention::bench::Bencher;
 use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
 use turboattention::costmodel::{e2e_step_cost, GpuSpec, Method, ModelShape};
-use turboattention::model::{ModelBundle, Sampler};
+use turboattention::model::ModelBundle;
 use turboattention::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     println!("== bench: engine decode step (real PJRT path) ==\n");
     for (name, mode) in [("turbo", PathMode::Turbo), ("flash", PathMode::Flash)] {
         let rt = Runtime::load("artifacts")?;
-        let cfg = EngineConfig { mode, sampler: Sampler::Greedy, ..Default::default() };
+        let cfg = EngineConfig { mode, ..Default::default() };
         let mut engine = Engine::new(ModelBundle::new(rt), cfg);
         // Keep a long-lived request running; resubmit when the context
         // fills so every timed iteration is a real decode step.

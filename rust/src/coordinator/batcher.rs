@@ -120,7 +120,7 @@ impl Batcher {
                 break;
             }
             let Some(head) = self.waiting.front() else { break };
-            let need = head.context + head.req.max_new_tokens;
+            let need = head.context + head.req.params.max_new_tokens;
             if budget_used + need > self.cfg.token_budget && !self.running.is_empty()
             {
                 // Wait for capacity (never deadlock an empty engine) —
@@ -151,6 +151,19 @@ impl Batcher {
     /// Remove a finished request from the running set.
     pub fn finish(&mut self, id: RequestId) {
         self.running.retain(|t| t.req.id != id);
+    }
+
+    /// Remove a request wherever it lives — still waiting for admission
+    /// or mid-decode in the running set. Returns whether it was tracked
+    /// (the cancellation path uses this to distinguish "freed a slot"
+    /// from "unknown id, nothing to do"). Frees the running slot and
+    /// its token-budget share immediately: the next `schedule` can
+    /// admit into the vacated capacity.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        let before = self.waiting.len() + self.running.len();
+        self.waiting.retain(|t| t.req.id != id);
+        self.finish(id);
+        self.waiting.len() + self.running.len() < before
     }
 
     pub fn request(&self, id: RequestId) -> Option<&GenRequest> {
@@ -252,6 +265,32 @@ mod tests {
         assert_eq!(b.metrics.capacity_waits, 1);
         assert_eq!(b.metrics.last_wait_depth, 3);
         assert_eq!(b.metrics.max_wait_depth, 3);
+    }
+
+    #[test]
+    fn cancel_frees_slot_and_waiting_entry() {
+        let mut b = batcher(1, 1000);
+        b.submit(req(1, 10, 5));
+        b.submit(req(2, 10, 5));
+        b.schedule(); // #1 running, #2 waiting
+        assert!(b.cancel(2), "waiting request is tracked");
+        assert_eq!(b.waiting_len(), 0);
+        assert!(b.cancel(1), "running request is tracked");
+        assert_eq!(b.running_len(), 0);
+        assert!(b.idle());
+        assert!(!b.cancel(1), "already gone");
+        assert!(!b.cancel(99), "unknown id");
+    }
+
+    #[test]
+    fn cancel_releases_capacity_for_admission() {
+        let mut b = batcher(8, 100);
+        b.submit(req(1, 50, 20)); // holds 70 of the 100 budget
+        b.submit(req(2, 40, 20)); // needs 60 -> deferred
+        b.schedule();
+        assert!(b.schedule().prefill.is_empty(), "budget must defer #2");
+        b.cancel(1);
+        assert_eq!(b.schedule().prefill, vec![2], "cancel freed the budget");
     }
 
     #[test]

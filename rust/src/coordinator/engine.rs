@@ -1,10 +1,20 @@
 //! The serving engine: continuous batcher + PJRT model + pluggable
-//! attention backend + sampling, with a threaded command loop for the
-//! server.
+//! attention backend, with a threaded command loop for the server.
 //!
 //! All path-specific logic (turbo vs flash caches, decode reads, K/V
 //! folds) lives behind [`DynBackend`] — `step` drives prefill/decode/fold
 //! through the trait and never matches on the path.
+//!
+//! Request lifecycle (streaming): `step` emits [`StepEvent`]s — a
+//! `First` token when prefill completes, one `Token` per decode step,
+//! and a terminal `Finished(Completion)` — which [`Engine::run_loop`]
+//! forwards to each request's event channel. Sampling is per-request
+//! ([`SamplingParams`] on [`GenRequest`], private RNG seeded from
+//! `params.seed`), so a request's output is a pure function of
+//! `(prompt, params)`: batch composition, other traffic, and
+//! `decode_threads` cannot change it. [`Engine::cancel`] aborts an
+//! in-flight request immediately — the batcher slot and the session's
+//! PagePool refs are released before the call returns.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
@@ -15,23 +25,26 @@ use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::prefix::PrefixIndex;
-use super::request::{Completion, FinishReason, GenRequest, RequestId};
+use super::request::{
+    Completion, FinishReason, GenRequest, RequestId, StepEvent, TokenEvent,
+};
 use crate::attention::backend::{backend_for, BackendState, DynBackend};
 use crate::info;
+use crate::kvcache::SharedPagePool;
 use crate::metrics::{EngineMetrics, Histogram};
-use crate::model::{ModelBundle, Sampler};
+use crate::model::ModelBundle;
 use crate::pool::{default_threads, WorkerPool};
 use crate::quant::Bits;
 use crate::testutil::Rng;
 
 pub use crate::attention::backend::PathMode;
 
-/// Engine configuration.
+/// Engine configuration. Sampling is *not* configured here — it rides
+/// on every request as [`crate::coordinator::SamplingParams`].
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub mode: PathMode,
     pub batcher: BatcherConfig,
-    pub sampler: Sampler,
     /// q2 storage width for uniform precision (Turbo mode).
     pub kv_bits: Bits,
     /// Number of 2-bit heads per layer (0 = uniform `kv_bits`).
@@ -58,6 +71,8 @@ pub struct EngineConfig {
     /// turbo-family backends have a page pool; the flash baseline
     /// ignores it.
     pub share_prefixes: bool,
+    /// Seeds the deterministic `CpuModel` weights (TurboCpu path).
+    /// Sampling seeds live on each request's `SamplingParams`.
     pub seed: u64,
 }
 
@@ -66,7 +81,6 @@ impl Default for EngineConfig {
         EngineConfig {
             mode: PathMode::Turbo,
             batcher: BatcherConfig::default(),
-            sampler: Sampler::Greedy,
             kv_bits: Bits::Int4,
             n_2bit_heads: 0,
             decode_threads: default_threads(),
@@ -88,15 +102,48 @@ struct Session {
     pending_token: u8,
     /// Its absolute position.
     pos: usize,
+    /// Private sampling RNG, seeded from `req.params.seed` — the reason
+    /// output is invariant to batch composition.
+    rng: Rng,
     prefill_done_at: Instant,
+    /// When the previous token was emitted (feeds the ITL histogram).
+    last_token_at: Instant,
 }
 
-/// Commands accepted by the engine thread.
+/// Commands accepted by the engine thread (see [`Engine::run_loop`]).
 pub enum Command {
-    Submit(GenRequest, Sender<Completion>),
-    /// Drain all work then reply on the channel.
+    /// Submit a request. The engine assigns the id (overwriting
+    /// `req.id`), acks it on `ack`, and streams the request's
+    /// [`TokenEvent`]s — ending with `Finished` — on `events`.
+    Submit {
+        req: GenRequest,
+        events: Sender<TokenEvent>,
+        ack: Sender<RequestId>,
+    },
+    /// Abort an in-flight request: its stream receives
+    /// `Finished(Completion { finish_reason: Cancelled, .. })` and its
+    /// batcher slot + KV pages are released immediately. Unknown ids
+    /// are ignored (the request may have finished while the command was
+    /// in flight).
+    Cancel(RequestId),
+    /// Reply on the channel once the engine has drained to idle. The
+    /// reply is sent from the main loop when idleness is next observed,
+    /// not by draining inline — commands (Cancel in particular) keep
+    /// being serviced between steps while a flush is outstanding.
     Flush(Sender<()>),
+    /// Reply with a metrics + histogram snapshot.
+    Stats(Sender<StatsSnapshot>),
     Shutdown,
+}
+
+/// Point-in-time engine telemetry (the server's `STATS` reply).
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub metrics: EngineMetrics,
+    pub ttft: Histogram,
+    pub latency: Histogram,
+    /// Inter-token latency (decode-step cadence) across all requests.
+    pub itl: Histogram,
 }
 
 /// The engine. Owns the PJRT runtime; single-threaded step loop.
@@ -113,10 +160,14 @@ pub struct Engine {
     /// `cfg.share_prefixes`); the page handles it holds are weak — the
     /// backend's pool refcounts own the memory.
     prefix_index: Option<PrefixIndex>,
-    rng: Rng,
+    /// Next id handed out to `Command::Submit` requests.
+    next_id: RequestId,
     pub metrics: EngineMetrics,
     pub ttft_hist: Histogram,
     pub latency_hist: Histogram,
+    /// Inter-token latency: seconds between consecutive emitted tokens
+    /// of a request (first sample spans prefill-done to first decode).
+    pub itl_hist: Histogram,
 }
 
 /// Registered prompts kept by the prefix index before stalest eviction.
@@ -147,10 +198,11 @@ impl Engine {
             pool,
             sessions: HashMap::new(),
             prefix_index,
-            rng: Rng::new(cfg.seed),
+            next_id: 1,
             metrics: EngineMetrics::default(),
             ttft_hist: Histogram::new(),
             latency_hist: Histogram::new(),
+            itl_hist: Histogram::new(),
             bundle,
             cfg,
         }
@@ -165,7 +217,25 @@ impl Engine {
         &self.pool
     }
 
+    /// The backend's shared page pool, if the path has one (turbo
+    /// family). Tests use it to assert refcount/epoch invariants across
+    /// cancellation; metrics read it every step.
+    pub fn page_pool(&self) -> Option<&SharedPagePool> {
+        self.backend.page_pool()
+    }
+
+    /// Allocate the next engine-owned request id (what `run_loop`
+    /// stamps on `Command::Submit` requests).
+    pub fn allocate_id(&mut self) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
     pub fn submit(&mut self, req: GenRequest) {
+        // Direct submitters pick their own ids; keep the allocator
+        // ahead of them so handle-submitted ids never collide.
+        self.next_id = self.next_id.max(req.id.saturating_add(1));
         self.batcher.submit(req);
     }
 
@@ -173,11 +243,54 @@ impl Engine {
         self.batcher.idle()
     }
 
-    /// Run one scheduler iteration: admit + prefill, then one decode round.
-    /// Returns completions finished this step.
-    pub fn step(&mut self) -> Result<Vec<Completion>> {
+    /// Abort a request wherever it is in its lifecycle. Returns the
+    /// `Cancelled` completion if the id was live (waiting or decoding),
+    /// `None` for unknown/finished ids. Effects are immediate — before
+    /// this returns, the batcher slot and token-budget share are freed
+    /// and the session (with its PagePool refs and slabs) is dropped,
+    /// so the pool epoch/refcount rules see an ordinary release.
+    pub fn cancel(&mut self, id: RequestId) -> Option<Completion> {
+        let session = self.sessions.remove(&id);
+        // Waiting requests have no session yet; read what the
+        // completion needs off the borrowed request before evicting it
+        // (no reason to clone a potentially long prompt to destroy it).
+        let queued = if session.is_none() {
+            self.batcher.request(id).map(|r| (r.prompt.len(), r.submitted_at))
+        } else {
+            None
+        };
+        let tracked = self.batcher.cancel(id);
+        if session.is_none() && !tracked {
+            return None;
+        }
+        self.metrics.requests_cancelled += 1;
+        let c = match session {
+            Some(s) => Self::complete(&s, FinishReason::Cancelled),
+            None => {
+                let (prompt_len, submitted_at) =
+                    queued.expect("tracked but sessionless => waiting");
+                Completion {
+                    id,
+                    prompt_len,
+                    generated: Vec::new(),
+                    total_latency: submitted_at.elapsed().as_secs_f64(),
+                    ttft: 0.0,
+                    tpot: 0.0,
+                    finish_reason: FinishReason::Cancelled,
+                }
+            }
+        };
+        self.update_cache_metrics();
+        Some(c)
+    }
+
+    /// Run one scheduler iteration: admit + prefill, then one decode
+    /// round. Returns the lifecycle events this step produced — `First`
+    /// per admitted request, `Token` per decode step, `Finished` per
+    /// completed request.
+    pub fn step(&mut self) -> Result<Vec<StepEvent>> {
         let decision = self.batcher.schedule();
-        let mut done = Vec::new();
+        let mut events = Vec::new();
 
         // Prefill admitted requests, with admission-time prefix
         // detection: match the prompt against the index of live
@@ -209,16 +322,20 @@ impl Engine {
             if let (Some(ix), Some(reg)) = (&mut self.prefix_index, reg) {
                 ix.insert(req.prompt.clone(), reg);
             }
-            let first = self
-                .cfg
+            let mut rng = Rng::new(req.params.seed);
+            let first = req
+                .params
                 .sampler
-                .sample(self.bundle.logits_at(&logits, n - 1), &mut self.rng);
+                .sample(self.bundle.logits_at(&logits, n - 1), &mut rng);
+            let now = Instant::now();
             let session = Session {
                 state,
                 generated: vec![first],
                 pending_token: first,
                 pos: n,
-                prefill_done_at: Instant::now(),
+                rng,
+                prefill_done_at: now,
+                last_token_at: now,
                 req,
             };
             self.metrics.prefill_tokens += n as u64;
@@ -227,6 +344,10 @@ impl Engine {
             let ttft = session.req.submitted_at.elapsed().as_secs_f64();
             self.ttft_hist.record(ttft);
             self.sessions.insert(id, session);
+            events.push(StepEvent {
+                id,
+                event: TokenEvent::First { token: first, ttft },
+            });
         }
 
         // Decode round: one step per running request. Wall time vs the
@@ -242,7 +363,10 @@ impl Engine {
                 self.metrics.requests_completed += 1;
                 self.batcher.finish(id);
                 self.sessions.remove(&id);
-                done.push(c);
+                events.push(StepEvent {
+                    id,
+                    event: TokenEvent::Finished(c),
+                });
                 continue;
             }
             let token = session.pending_token;
@@ -260,10 +384,22 @@ impl Engine {
                 &out.v_new,
                 pos,
             );
-            let next = self.cfg.sampler.sample(&out.logits, &mut self.rng);
+            let next =
+                session.req.params.sampler.sample(&out.logits, &mut session.rng);
             session.generated.push(next);
             session.pending_token = next;
             session.pos += 1;
+            let now = Instant::now();
+            self.itl_hist
+                .record(now.duration_since(session.last_token_at).as_secs_f64());
+            session.last_token_at = now;
+            events.push(StepEvent {
+                id,
+                event: TokenEvent::Token {
+                    token: next,
+                    index: session.generated.len() - 1,
+                },
+            });
             self.metrics.tokens_generated += 1;
             self.batcher.on_token(id);
         }
@@ -274,7 +410,7 @@ impl Engine {
         }
         self.metrics.batches_run += 1;
         self.update_cache_metrics();
-        Ok(done)
+        Ok(events)
     }
 
     /// Aggregate cache memory across *all* live sessions (a multi-request
@@ -339,18 +475,42 @@ impl Engine {
         }
     }
 
-    /// Drive the engine until all submitted requests complete.
+    /// Point-in-time telemetry snapshot (`Command::Stats`).
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            metrics: self.metrics.clone(),
+            ttft: self.ttft_hist.clone(),
+            latency: self.latency_hist.clone(),
+            itl: self.itl_hist.clone(),
+        }
+    }
+
+    /// Drive the engine until all submitted requests complete; token
+    /// events are discarded, completions collected (the old blocking
+    /// contract — `EngineHandle`/`ResponseHandle` stream instead).
     pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
         let mut all = Vec::new();
         while !self.idle() {
-            all.extend(self.step()?);
+            for ev in self.step()? {
+                if let TokenEvent::Finished(c) = ev.event {
+                    all.push(c);
+                }
+            }
         }
         Ok(all)
     }
 
-    /// Threaded serving loop: consume commands until Shutdown.
+    /// Threaded serving loop: consume commands until Shutdown,
+    /// streaming each request's events to its submit-time channel. A
+    /// request whose event receiver hung up (client disconnected) is
+    /// cancelled so it stops holding its batcher slot and KV pages.
     pub fn run_loop(mut self, rx: Receiver<Command>) -> Result<()> {
-        let mut reply_to: HashMap<RequestId, Sender<Completion>> = HashMap::new();
+        let mut streams: HashMap<RequestId, Sender<TokenEvent>> =
+            HashMap::new();
+        // Flush acks waiting for the engine to go idle (see
+        // `Command::Flush` — replied below, never drained inline, so a
+        // flush can't starve Cancel/Submit while a long request runs).
+        let mut pending_flushes: Vec<Sender<()>> = Vec::new();
         loop {
             // Drain pending commands (non-blocking while busy; blocking
             // when idle so we don't spin).
@@ -358,53 +518,132 @@ impl Engine {
                 let cmd = if self.idle() {
                     match rx.recv() {
                         Ok(c) => c,
-                        Err(_) => return Ok(()),
+                        Err(_) => {
+                            Self::drain_streams(&mut streams, "senders gone");
+                            return Ok(());
+                        }
                     }
                 } else {
                     match rx.try_recv() {
                         Ok(c) => c,
                         Err(std::sync::mpsc::TryRecvError::Empty) => break,
                         Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                            return Ok(())
+                            Self::drain_streams(&mut streams, "senders gone");
+                            return Ok(());
                         }
                     }
                 };
                 match cmd {
-                    Command::Submit(req, tx) => {
-                        reply_to.insert(req.id, tx);
+                    Command::Submit { mut req, events, ack } => {
+                        req.id = self.allocate_id();
+                        // The submitter blocks on this ack; a dropped
+                        // ack receiver just means it stopped caring.
+                        let _ = ack.send(req.id);
+                        streams.insert(req.id, events);
                         self.submit(req);
                     }
-                    Command::Flush(tx) => {
-                        while !self.idle() {
-                            for c in self.step()? {
-                                if let Some(tx) = reply_to.remove(&c.id) {
-                                    let _ = tx.send(c);
-                                }
-                            }
+                    Command::Cancel(id) => {
+                        if let Some(c) = self.cancel(id) {
+                            let ev = StepEvent {
+                                id,
+                                event: TokenEvent::Finished(c),
+                            };
+                            self.route_events(&mut streams, vec![ev]);
                         }
-                        let _ = tx.send(());
+                    }
+                    Command::Flush(tx) => {
+                        pending_flushes.push(tx);
+                    }
+                    Command::Stats(tx) => {
+                        let _ = tx.send(self.stats_snapshot());
                     }
                     Command::Shutdown => {
-                        info!("engine", "shutdown: {} completed", self.metrics.requests_completed);
+                        info!(
+                            "engine",
+                            "shutdown: {} completed, {} cancelled",
+                            self.metrics.requests_completed,
+                            self.metrics.requests_cancelled
+                        );
+                        Self::drain_streams(&mut streams, "shutdown");
                         return Ok(());
                     }
                 }
-            }
-            for c in self.step()? {
-                if let Some(tx) = reply_to.remove(&c.id) {
-                    let _ = tx.send(c);
+                // A command can itself reach idleness (Flush when
+                // already drained, Cancel of the last request) — ack
+                // outstanding flushes before possibly blocking on recv.
+                if self.idle() {
+                    for tx in pending_flushes.drain(..) {
+                        let _ = tx.send(());
+                    }
                 }
             }
+            let evs = self.step()?;
+            self.route_events(&mut streams, evs);
+            if self.idle() {
+                for tx in pending_flushes.drain(..) {
+                    let _ = tx.send(());
+                }
+            }
+        }
+    }
+
+    /// Forward step events to their per-request channels. Terminal
+    /// events retire the channel entry (whether or not a sender was
+    /// ever registered — direct `Engine::submit` requests have none,
+    /// and previously their reply entries leaked). A send failure means
+    /// the client hung up: cancel the request so it releases its slot
+    /// and pages instead of decoding to `max_new_tokens` for nobody.
+    fn route_events(
+        &mut self,
+        streams: &mut HashMap<RequestId, Sender<TokenEvent>>,
+        events: Vec<StepEvent>,
+    ) {
+        let mut disconnected = Vec::new();
+        for ev in events {
+            let done = matches!(ev.event, TokenEvent::Finished(_));
+            if let Some(tx) = streams.get(&ev.id) {
+                if tx.send(ev.event).is_err() && !done {
+                    disconnected.push(ev.id);
+                }
+            }
+            if done {
+                streams.remove(&ev.id);
+            }
+        }
+        for id in disconnected {
+            streams.remove(&id);
+            if self.cancel(id).is_some() {
+                crate::debug!(
+                    "engine",
+                    "request {id}: client disconnected, cancelled"
+                );
+            }
+        }
+    }
+
+    /// Explicitly drop any event channels still registered when the
+    /// loop exits — the old `reply_to` map silently leaked these.
+    fn drain_streams(
+        streams: &mut HashMap<RequestId, Sender<TokenEvent>>,
+        why: &str,
+    ) {
+        if !streams.is_empty() {
+            info!(
+                "engine",
+                "{why}: dropping {} undelivered event stream(s)",
+                streams.len()
+            );
+            streams.clear();
         }
     }
 }
 
 /// Completion check: token budget, stop byte, or context exhaustion.
 fn finished(s: &Session, max_ctx: usize) -> Option<FinishReason> {
-    if s.generated.len() >= s.req.max_new_tokens {
+    if s.generated.len() >= s.req.params.max_new_tokens {
         return Some(FinishReason::MaxTokens);
     }
-    if let Some(stop) = s.req.stop_byte {
+    if let Some(stop) = s.req.params.stop_byte {
         if s.generated.last() == Some(&stop) {
             return Some(FinishReason::StopByte);
         }

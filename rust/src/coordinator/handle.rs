@@ -1,0 +1,158 @@
+//! Client-side request-lifecycle API: [`EngineHandle`] submits work to
+//! a running [`Engine::run_loop`](super::Engine::run_loop) thread and
+//! hands back a [`ResponseHandle`] that *streams* the request's
+//! [`TokenEvent`]s — first token, every decode token, then the terminal
+//! [`Completion`].
+//!
+//! ```text
+//!   let (tx, rx) = std::sync::mpsc::channel();
+//!   std::thread::spawn(move || engine.run_loop(rx));   // engine thread
+//!   let handle = EngineHandle::new(tx);                // any thread
+//!   let mut resp = handle.submit(req)?;                // ack carries the id
+//!   while let Some(ev) = resp.recv() { ... }           // or resp.wait()
+//! ```
+//!
+//! `EngineHandle` is `Clone` — one per client thread, no locking (the
+//! underlying `Sender<Command>` is itself cloneable; the server used to
+//! wrap one in `Arc<Mutex<..>>` for no reason). Cancellation
+//! ([`ResponseHandle::cancel`] or [`EngineHandle::cancel`]) aborts the
+//! request engine-side: its batcher slot and PagePool refs are released
+//! immediately and the stream ends with a `Cancelled` completion.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{Command, StatsSnapshot};
+use super::request::{Completion, GenRequest, RequestId, TokenEvent};
+
+/// Cloneable client handle onto a running engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Command>,
+}
+
+impl EngineHandle {
+    /// Wrap the command channel feeding an `Engine::run_loop` thread.
+    pub fn new(tx: Sender<Command>) -> EngineHandle {
+        EngineHandle { tx }
+    }
+
+    /// Submit a request and block (briefly) for the engine's admission
+    /// ack, which carries the engine-allocated request id. `req.id` is
+    /// ignored — the engine owns id allocation on this path.
+    pub fn submit(&self, req: GenRequest) -> Result<ResponseHandle> {
+        let (events_tx, events_rx) = channel();
+        let (ack_tx, ack_rx) = channel();
+        self.tx
+            .send(Command::Submit { req, events: events_tx, ack: ack_tx })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        let id = ack_rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped the request before ack"))?;
+        Ok(ResponseHandle {
+            id,
+            events: events_rx,
+            tx: self.tx.clone(),
+            finished: false,
+        })
+    }
+
+    /// Abort a request by id (unknown/finished ids are ignored).
+    pub fn cancel(&self, id: RequestId) -> Result<()> {
+        self.tx
+            .send(Command::Cancel(id))
+            .map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    /// Block until the engine has drained all submitted work.
+    pub fn flush(&self) -> Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Flush(tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    /// Fetch a metrics + histogram snapshot.
+    pub fn stats(&self) -> Result<StatsSnapshot> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Stats(tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    /// Ask the engine thread to exit its loop. Best-effort: a dead
+    /// engine is already shut down.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Command::Shutdown);
+    }
+}
+
+/// The streaming side of one submitted request.
+///
+/// Dropping the handle without draining it is a *disconnect*: the
+/// engine notices the dead channel on its next event and cancels the
+/// request, releasing its batcher slot and KV pages.
+pub struct ResponseHandle {
+    id: RequestId,
+    events: Receiver<TokenEvent>,
+    tx: Sender<Command>,
+    finished: bool,
+}
+
+impl ResponseHandle {
+    /// The engine-allocated request id (from the submit ack).
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Next event, blocking. `None` after the terminal `Finished` event
+    /// (or if the engine died mid-request).
+    pub fn recv(&mut self) -> Option<TokenEvent> {
+        if self.finished {
+            return None;
+        }
+        match self.events.recv() {
+            Ok(ev) => {
+                if matches!(ev, TokenEvent::Finished(_)) {
+                    self.finished = true;
+                }
+                Some(ev)
+            }
+            Err(_) => {
+                self.finished = true;
+                None
+            }
+        }
+    }
+
+    /// Request cancellation. The stream still ends with a `Finished`
+    /// completion (reason `Cancelled`) — keep draining to observe it.
+    pub fn cancel(&self) -> Result<()> {
+        self.tx
+            .send(Command::Cancel(self.id))
+            .map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    /// Block until the request finishes, discarding token events — the
+    /// old one-shot `Submit(req, Sender<Completion>)` behavior. `None`
+    /// if the engine died before completing the request.
+    pub fn wait(mut self) -> Option<Completion> {
+        while let Some(ev) = self.recv() {
+            if let TokenEvent::Finished(c) = ev {
+                return Some(c);
+            }
+        }
+        None
+    }
+}
+
+impl Iterator for ResponseHandle {
+    type Item = TokenEvent;
+
+    fn next(&mut self) -> Option<TokenEvent> {
+        self.recv()
+    }
+}

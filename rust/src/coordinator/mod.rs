@@ -5,12 +5,13 @@
 //! Topology (vLLM-router-like, scaled to this testbed):
 //!
 //! ```text
-//!   clients -> server (TCP threads) -> submit queue -> Engine thread
-//!                                                        | step():
-//!                                                        |  admit prefills
-//!                                                        |  decode round
-//!                                                        v
-//!                                  completions -> per-request channels
+//!   clients -> server (TCP threads) -> EngineHandle::submit -> Engine thread
+//!                                        ^      |                | step():
+//!                                        |      | Cancel(id)     |  admit prefills
+//!                                        |      v                |  decode round
+//!                                        |   command queue       v
+//!                  ResponseHandle <- per-request TokenEvent streams
+//!                  (First, Token*, Finished(Completion))
 //! ```
 //!
 //! The PJRT CPU client executes one computation at a time, so "batching"
@@ -18,13 +19,23 @@
 //! prefill admission and per-request decode steps under a token budget,
 //! which is exactly the coordination layer the paper's throughput numbers
 //! assume (the kernel-level batch dimension lives in the cost model).
+//!
+//! Request lifecycle: sampling rides on the request
+//! ([`SamplingParams`]), ids are allocated by the engine at admission,
+//! tokens stream back as [`TokenEvent`]s, and [`EngineHandle`] /
+//! [`ResponseHandle`] give clients submit / stream / cancel / wait.
 
 pub mod batcher;
 pub mod engine;
+pub mod handle;
 pub mod prefix;
 pub mod request;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherMetrics, SchedDecision};
-pub use engine::{Engine, EngineConfig, PathMode};
+pub use engine::{Command, Engine, EngineConfig, PathMode, StatsSnapshot};
+pub use handle::{EngineHandle, ResponseHandle};
 pub use prefix::{PrefixIndex, SharedPrefix};
-pub use request::{Completion, GenRequest, RequestId, RequestState};
+pub use request::{
+    Completion, FinishReason, GenRequest, RequestId, RequestState,
+    SamplingParams, StepEvent, TokenEvent,
+};

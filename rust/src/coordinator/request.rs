@@ -1,29 +1,79 @@
-//! Request and completion types flowing through the coordinator.
+//! Request, sampling, and lifecycle-event types flowing through the
+//! coordinator.
+//!
+//! Sampling is a *request* property, not an engine property: every
+//! [`GenRequest`] carries its own [`SamplingParams`] (policy + seed +
+//! stop condition + token budget), and the engine derives a per-session
+//! RNG from the seed, so a request's output is a pure function of
+//! `(prompt, params)` — independent of what else happens to be batched
+//! with it and of `decode_threads`.
+//!
+//! The engine reports progress as a stream of [`TokenEvent`]s per
+//! request (first token, each decode token, then a terminal
+//! [`Completion`]), which is what the `EngineHandle` /
+//! `ResponseHandle` client API and the server's `TOK`/`DONE` wire
+//! protocol forward.
 
 use std::time::Instant;
 
+use crate::model::Sampler;
+
 pub type RequestId = u64;
+
+/// Per-request sampling policy: everything that determines which token
+/// is emitted next, and when generation stops. Two requests with equal
+/// `(prompt, SamplingParams)` produce identical token streams.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    pub sampler: Sampler,
+    /// Seeds the request's private RNG (ignored by `Sampler::Greedy`).
+    pub seed: u64,
+    /// Stop generation after emitting this byte (e.g. `b'.'`), if set.
+    pub stop_byte: Option<u8>,
+    pub max_new_tokens: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            sampler: Sampler::Greedy,
+            seed: 0,
+            stop_byte: None,
+            max_new_tokens: 48,
+        }
+    }
+}
+
+impl SamplingParams {
+    /// Greedy decoding with a token budget — the common test shape.
+    pub fn greedy(max_new_tokens: usize) -> SamplingParams {
+        SamplingParams { max_new_tokens, ..SamplingParams::default() }
+    }
+}
 
 /// A generation request as submitted by a client.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
+    /// Assigned by the engine at admission when submitted through
+    /// `EngineHandle`; direct `Engine::submit` callers pick their own.
     pub id: RequestId,
     pub prompt: Vec<u8>,
-    pub max_new_tokens: usize,
-    /// Stop generation at this byte (e.g. b'.') if set.
-    pub stop_byte: Option<u8>,
+    pub params: SamplingParams,
     pub submitted_at: Instant,
 }
 
 impl GenRequest {
+    /// Greedy request with default sampling — the historical signature.
     pub fn new(id: RequestId, prompt: Vec<u8>, max_new_tokens: usize) -> GenRequest {
-        GenRequest {
-            id,
-            prompt,
-            max_new_tokens,
-            stop_byte: None,
-            submitted_at: Instant::now(),
-        }
+        GenRequest::with_params(id, prompt, SamplingParams::greedy(max_new_tokens))
+    }
+
+    pub fn with_params(
+        id: RequestId,
+        prompt: Vec<u8>,
+        params: SamplingParams,
+    ) -> GenRequest {
+        GenRequest { id, prompt, params, submitted_at: Instant::now() }
     }
 }
 
@@ -36,6 +86,27 @@ pub enum RequestState {
     Running,
     /// Finished (all tokens emitted or stop condition hit).
     Done,
+}
+
+/// One streamed lifecycle event for a request.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// Prefill finished and the first token was sampled; `ttft` is the
+    /// observed queue + prefill time in seconds.
+    First { token: u8, ttft: f64 },
+    /// One decode-sampled token; `index` is its position in the
+    /// generated sequence (the first decode token has index 1).
+    Token { token: u8, index: usize },
+    /// Terminal event — the channel carries nothing after this.
+    Finished(Completion),
+}
+
+/// A [`TokenEvent`] tagged with the request it belongs to, as returned
+/// by `Engine::step`.
+#[derive(Debug, Clone)]
+pub struct StepEvent {
+    pub id: RequestId,
+    pub event: TokenEvent,
 }
 
 /// Completed request with serving telemetry.
@@ -58,6 +129,21 @@ pub enum FinishReason {
     MaxTokens,
     StopByte,
     ContextFull,
+    /// Client-initiated abort: the session's batcher slot and KV pages
+    /// were released before the token budget was reached.
+    Cancelled,
+}
+
+impl FinishReason {
+    /// Wire-protocol spelling (the server's `DONE` line).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::StopByte => "stop_byte",
+            FinishReason::ContextFull => "context_full",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
 }
 
 #[cfg(test)]
@@ -69,7 +155,27 @@ mod tests {
         let r = GenRequest::new(7, b"hello".to_vec(), 32);
         assert_eq!(r.id, 7);
         assert_eq!(r.prompt, b"hello");
-        assert_eq!(r.max_new_tokens, 32);
-        assert!(r.stop_byte.is_none());
+        assert_eq!(r.params.max_new_tokens, 32);
+        assert!(r.params.stop_byte.is_none());
+        assert_eq!(r.params.sampler, Sampler::Greedy);
+    }
+
+    #[test]
+    fn params_equality_is_total_over_fields() {
+        let a = SamplingParams {
+            sampler: Sampler::TopK { k: 4, temp: 0.7 },
+            seed: 9,
+            stop_byte: Some(b'.'),
+            max_new_tokens: 16,
+        };
+        assert_eq!(a, a);
+        assert_ne!(a, SamplingParams { seed: 10, ..a });
+        assert_ne!(a, SamplingParams { sampler: Sampler::Greedy, ..a });
+    }
+
+    #[test]
+    fn finish_reason_wire_names() {
+        assert_eq!(FinishReason::MaxTokens.as_str(), "max_tokens");
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
     }
 }

@@ -8,14 +8,32 @@
 //!
 //! Examples:
 //!   turboattn gen --prompt "the router " --max-new 48 --mode turbo
-//!   turboattn gen --path turbo-cpu --greedy     # no artifacts needed
-//!   turboattn serve --port 7100 --mode turbo
+//!   turboattn gen --path turbo-cpu --greedy          # no artifacts needed
+//!   turboattn gen --path turbo-cpu --stream          # print tokens live
+//!   turboattn gen --path turbo-cpu --batch 4 --seed-per-request
+//!   turboattn serve --port 7100 --path turbo-cpu
 //!   turboattn experiment fig6
 //!
 //! `--path` (alias `--mode`) selects the serving backend: `turbo`
 //! (quantized execution in the AOT executables), `turbo-cpu` (the pure-
 //! Rust integer-kernel substrate — runs with no artifacts and no PJRT
 //! toolchain), or `flash` (exact FP32 baseline).
+//!
+//! Sampling is **per request** (`SamplingParams`): `--greedy` or
+//! `--top-k N --temp T`, `--sample-seed S` (defaults to `--seed`),
+//! `--stop <char>`. For `gen --batch N`, `--seed-per-request` gives
+//! request i the seed S+i (otherwise all share S — identical requests
+//! then produce identical outputs, regardless of batching). For
+//! `serve`, the same flags set the *defaults* a `GEN` line can override
+//! per request (see the wire protocol in `server/mod.rs`: `GEN
+//! <max_new> [seed=N] [topk=K] [temp=T] [stop=BYTE] [greedy] <prompt>`
+//! -> `ACK <id>`, streamed `TOK <id> <idx> <byte>` lines, then `DONE
+//! <id> <reason> ...`; `CANCEL <id>` aborts; `STATS` snapshots
+//! metrics).
+//!
+//! `gen --stream` prints tokens as the engine emits them (the CLI
+//! analogue of the server's `TOK` stream) instead of waiting for
+//! completion.
 //!
 //! Prompt-prefix KV sharing (`--share-prefixes` / `--no-share-prefixes`,
 //! default on for `turbo-cpu`): batched requests with a common prompt
@@ -28,7 +46,10 @@ use std::sync::mpsc::channel;
 use anyhow::{Context, Result};
 
 use turboattention::coordinator::engine::Command;
-use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
+use turboattention::coordinator::{
+    Engine, EngineConfig, EngineHandle, GenRequest, PathMode, SamplingParams,
+    TokenEvent,
+};
 use turboattention::model::{ByteTokenizer, ModelBundle, Sampler};
 use turboattention::quant::Bits;
 use turboattention::runtime::{HostTensor, Runtime};
@@ -77,14 +98,6 @@ fn engine_config(args: &Args) -> EngineConfig {
     };
     let kv_bits = Bits::from_bits(args.opt_parse("kv-bits", 4u32))
         .expect("--kv-bits must be 2|3|4|8");
-    let sampler = if args.flag("greedy") {
-        Sampler::Greedy
-    } else {
-        Sampler::TopK {
-            k: args.opt_parse("top-k", 8usize),
-            temp: args.opt_parse("temp", 0.8f32),
-        }
-    };
     // Prompt-prefix KV sharing: default ON for the artifact-free
     // turbo-cpu path (where every session shares one page pool), off
     // elsewhere unless forced; `--no-share-prefixes` always wins.
@@ -97,7 +110,6 @@ fn engine_config(args: &Args) -> EngineConfig {
     let mut cfg = EngineConfig {
         mode,
         kv_bits,
-        sampler,
         n_2bit_heads: args.opt_parse("n-2bit-heads", 0usize),
         decode_threads: args.opt_parse(
             "decode-threads",
@@ -110,6 +122,27 @@ fn engine_config(args: &Args) -> EngineConfig {
     cfg.batcher.max_running = args.opt_parse("max-running", 8usize);
     cfg.batcher.token_budget = args.opt_parse("token-budget", 4096usize);
     cfg
+}
+
+/// Per-request sampling from the CLI flags. `--sample-seed` decouples
+/// the sampling seed from `--seed` (which also seeds the CpuModel
+/// weights); it defaults to the same value, preserving the old
+/// one-seed behavior.
+fn sampling_params(args: &Args) -> SamplingParams {
+    let sampler = if args.flag("greedy") {
+        Sampler::Greedy
+    } else {
+        Sampler::TopK {
+            k: args.opt_parse("top-k", turboattention::model::DEFAULT_TOP_K),
+            temp: args.opt_parse("temp", turboattention::model::DEFAULT_TEMP),
+        }
+    };
+    SamplingParams {
+        sampler,
+        seed: args.opt_parse("sample-seed", args.opt_parse("seed", 0u64)),
+        stop_byte: args.opt("stop").and_then(|s| s.bytes().next()),
+        max_new_tokens: args.opt_parse("max-new", 48usize),
+    }
 }
 
 /// Runtime for a config: the CPU-substrate path needs no artifacts (its
@@ -130,15 +163,56 @@ fn load_engine(args: &Args) -> Result<Engine> {
 fn gen(args: &Args) -> Result<()> {
     let mut engine = load_engine(args)?;
     let prompt = args.opt_or("prompt", "the router routes the tokens ");
-    let max_new = args.opt_parse("max-new", 48usize);
+    let params = sampling_params(args);
     // `--batch N` submits the prompt N times — with prefix sharing on,
     // requests 2..N fork from the first request's pages.
     let batch = args.opt_parse("batch", 1usize).max(1);
+    let seed_per_request = args.flag("seed-per-request");
     let tok = ByteTokenizer;
-    for id in 0..batch as u64 {
-        engine.submit(GenRequest::new(id + 1, tok.encode(prompt), max_new));
+    for i in 0..batch as u64 {
+        let mut p = params;
+        if seed_per_request {
+            p.seed = params.seed.wrapping_add(i);
+        }
+        engine.submit(GenRequest::with_params(i + 1, tok.encode(prompt), p));
     }
-    let mut completions = engine.run_to_completion()?;
+    let mut completions = if args.flag("stream") {
+        // Print tokens as the engine emits them; batch > 1 interleaves,
+        // so each token line carries its request id.
+        use std::io::Write as _;
+        let mut done = Vec::new();
+        while !engine.idle() {
+            for ev in engine.step()? {
+                match ev.event {
+                    TokenEvent::First { token, ttft } if batch == 1 => {
+                        print!(
+                            "[ttft {:.1}ms] {}",
+                            ttft * 1e3,
+                            tok.decode(&[token])
+                        );
+                        std::io::stdout().flush().ok();
+                    }
+                    TokenEvent::Token { token, .. } if batch == 1 => {
+                        print!("{}", tok.decode(&[token]));
+                        std::io::stdout().flush().ok();
+                    }
+                    TokenEvent::First { token, .. }
+                    | TokenEvent::Token { token, .. } => {
+                        println!("tok {} {}", ev.id, tok.decode(&[token]));
+                    }
+                    TokenEvent::Finished(c) => {
+                        if batch == 1 {
+                            println!();
+                        }
+                        done.push(c);
+                    }
+                }
+            }
+        }
+        done
+    } else {
+        engine.run_to_completion()?
+    };
     completions.sort_by_key(|c| c.id);
     for c in completions {
         println!("prompt : {prompt}");
@@ -150,6 +224,10 @@ fn gen(args: &Args) -> Result<()> {
             c.tpot * 1e3,
             engine.metrics.cache_compression.max(1.0)
         );
+    }
+    println!("itl    : {}", engine.itl_hist.summary());
+    if engine.metrics.requests_cancelled > 0 {
+        println!("cancelled: {}", engine.metrics.requests_cancelled);
     }
     if engine.cfg.share_prefixes {
         println!(
@@ -167,6 +245,8 @@ fn serve(args: &Args) -> Result<()> {
     let listener = TcpListener::bind(("127.0.0.1", port))?;
     info!("main", "turboattn serving on 127.0.0.1:{port}");
     let (tx, rx) = channel::<Command>();
+    // Defaults for requests that don't override sampling on the GEN line.
+    let defaults = sampling_params(args);
     // The PJRT client is not Send (Rc internals): construct the engine
     // *inside* its thread — the leader owns the device for its lifetime.
     let cfg = engine_config(args);
@@ -176,7 +256,7 @@ fn serve(args: &Args) -> Result<()> {
         let engine = Engine::new(ModelBundle::new(rt), cfg);
         engine.run_loop(rx)
     });
-    server::serve(listener, tx)?;
+    server::serve(listener, EngineHandle::new(tx), defaults)?;
     engine_thread.join().expect("engine thread")?;
     Ok(())
 }

@@ -160,6 +160,9 @@ impl ThroughputWindow {
 #[derive(Debug, Default, Clone)]
 pub struct EngineMetrics {
     pub requests_completed: u64,
+    /// Requests aborted before finishing (client cancel or disconnect);
+    /// disjoint from `requests_completed`.
+    pub requests_cancelled: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub batches_run: u64,

@@ -34,8 +34,20 @@ impl ByteTokenizer {
     }
 }
 
+/// Default `TopK` k — the one source for the CLI `--top-k` default and
+/// the server's `GEN`-line override fallback.
+pub const DEFAULT_TOP_K: usize = 8;
+/// Default `TopK` temperature (CLI `--temp` default and server fallback).
+pub const DEFAULT_TEMP: f32 = 0.8;
+
 /// Sampling policy for next-token selection.
-#[derive(Debug, Clone, Copy)]
+///
+/// Owned by the *request* (`coordinator::SamplingParams`), not the
+/// engine: every session samples with its own policy and its own
+/// seeded RNG, so batch composition can never change a request's
+/// output. The engine-global sampler + shared RNG this type used to
+/// plug into (`EngineConfig.sampler`) is gone.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Sampler {
     Greedy,
     /// Top-k sampling with temperature.

@@ -1,49 +1,75 @@
-//! Threaded TCP serving front end.
+//! Threaded TCP serving front end, streaming tokens as they decode.
 //!
-//! Line-delimited protocol (one request per line):
+//! Line-delimited protocol (one command per line). Request ids are
+//! allocated by the *engine* at admission and returned in the `ACK`:
 //!
 //! ```text
-//!   GEN <max_new_tokens> <prompt...>\n   ->  OK <id> <ttft_ms> <total_ms> <text>\n
-//!   STATS\n                             ->  STATS <completed> <tokens> ...\n
-//!   QUIT\n                              ->  closes the connection
+//!   GEN <max_new> [key=value ...] <prompt...>\n
+//!       -> ACK <id>\n                          (admission ack)
+//!          TOK <id> <index> <byte>\n           (one per token, streamed;
+//!                                               index 0 = first token,
+//!                                               byte in decimal 0-255)
+//!          DONE <id> <reason> <ttft_ms> <total_ms> <text>\n
+//!                                              (reason: max_tokens |
+//!                                               stop_byte | context_full |
+//!                                               cancelled)
+//!   CANCEL <id>\n     -> the request's stream ends with DONE .. cancelled
+//!                        (only ids ACKed on this connection; others get
+//!                         ERR unknown request id)
+//!   STATS\n           -> STATS completed=.. cancelled=.. itl_p50_ms=.. ..\n
+//!   QUIT\n            -> BYE\n, closes the socket — any of this
+//!                        connection's still-running requests are
+//!                        cancelled when their forwarders hit the
+//!                        closed socket
 //! ```
 //!
-//! Each client connection gets a thread; generation commands flow over an
-//! mpsc channel to the single engine thread (the PJRT client is not
-//! thread-safe), matching the leader/worker topology in DESIGN.md.
+//! Per-request sampling overrides ride on the `GEN` line between
+//! `<max_new>` and the prompt: `seed=<u64>`, `topk=<k>`, `temp=<t>`,
+//! `stop=<byte>`, and the bare word `greedy`. Anything else — including
+//! an unknown `key=value` word — starts the prompt, so only a prompt
+//! *beginning* with one of those five override tokens needs care (a
+//! known key with a bad value is rejected with `ERR`). Unspecified
+//! fields fall back to the server's default [`SamplingParams`] (the
+//! `serve` CLI flags).
+//!
+//! Each client connection gets a reader thread and each in-flight
+//! request a forwarder thread draining its [`ResponseHandle`]; writes
+//! share one locked socket so `TOK`/`DONE`/`ACK` lines never interleave
+//! mid-line. Commands reach the single engine thread through a cloned
+//! [`EngineHandle`] (the `Sender` inside is `Clone` — no mutex around
+//! the command channel). A client that disconnects mid-generation takes
+//! its forwarder down on the next write, which drops the
+//! `ResponseHandle` and cancels the request engine-side, releasing its
+//! batcher slot and KV pages.
 
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::engine::Command;
-use crate::coordinator::GenRequest;
+use crate::coordinator::{
+    EngineHandle, GenRequest, RequestId, ResponseHandle, SamplingParams,
+    TokenEvent,
+};
 use crate::info;
+use crate::model::Sampler;
 
-static NEXT_ID: AtomicU64 = AtomicU64::new(1);
-
-pub fn next_request_id() -> u64 {
-    NEXT_ID.fetch_add(1, Ordering::Relaxed)
-}
-
-/// Serve on `addr` until the listener errors; `engine_tx` feeds the
-/// engine thread. Returns the bound address (port 0 supported for tests).
+/// Serve on `listener` until it errors; `handle` feeds the engine
+/// thread and `defaults` fills whatever a `GEN` line doesn't override.
 pub fn serve(
     listener: TcpListener,
-    engine_tx: Sender<Command>,
+    handle: EngineHandle,
+    defaults: SamplingParams,
 ) -> Result<()> {
     let addr = listener.local_addr()?;
     info!("server", "listening on {addr}");
-    let engine_tx = Arc::new(Mutex::new(engine_tx));
     for stream in listener.incoming() {
         let stream = stream.context("accept")?;
-        let tx = engine_tx.clone();
+        let handle = handle.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_client(stream, tx) {
+            if let Err(e) = handle_client(stream, handle, defaults) {
                 crate::debug!("server", "client error: {e:#}");
             }
         });
@@ -53,11 +79,19 @@ pub fn serve(
 
 fn handle_client(
     stream: TcpStream,
-    engine_tx: Arc<Mutex<Sender<Command>>>,
+    handle: EngineHandle,
+    defaults: SamplingParams,
 ) -> Result<()> {
     let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
+    // Ids ACKed on *this* connection — the only ones its CANCELs may
+    // touch (ids are sequential, so without this check any client
+    // could guess and kill another client's requests). Shared with the
+    // forwarder threads, which prune their id once the request's
+    // stream ends, so a long-lived connection doesn't accumulate ids.
+    let mine: Arc<Mutex<HashSet<RequestId>>> =
+        Arc::new(Mutex::new(HashSet::new()));
     for line in reader.lines() {
         let line = line?;
         let line = line.trim();
@@ -65,40 +99,52 @@ fn handle_client(
             continue;
         }
         match parse_line(line) {
-            ParsedLine::Gen { max_new, prompt } => {
-                let id = next_request_id();
-                let (tx, rx) = channel();
-                let req = GenRequest::new(id, prompt, max_new);
-                engine_tx
-                    .lock()
-                    .unwrap()
-                    .send(Command::Submit(req, tx))
-                    .context("engine gone")?;
-                // Ask the engine to flush so the reply arrives promptly.
-                let (ftx, _frx) = channel();
-                let _ = engine_tx.lock().unwrap().send(Command::Flush(ftx));
-                match rx.recv() {
-                    Ok(c) => {
-                        let text =
-                            crate::model::ByteTokenizer.decode(&c.generated);
-                        writeln!(
-                            writer,
-                            "OK {} {:.1} {:.1} {}",
-                            c.id,
-                            c.ttft * 1e3,
-                            c.total_latency * 1e3,
-                            text.replace('\n', " ")
-                        )?;
+            ParsedLine::Gen { max_new, overrides, prompt } => {
+                let params = params_for(defaults, max_new, &overrides);
+                // The engine assigns the id; 0 here is a placeholder.
+                let req = GenRequest::with_params(0, prompt, params);
+                match handle.submit(req) {
+                    Ok(resp) => {
+                        lock(&mine).insert(resp.id());
+                        write_line(&writer, &format!("ACK {}", resp.id()))?;
+                        let w = Arc::clone(&writer);
+                        let m = Arc::clone(&mine);
+                        std::thread::spawn(move || {
+                            stream_response(resp, w, m)
+                        });
                     }
-                    Err(_) => writeln!(writer, "ERR engine dropped request")?,
+                    Err(_) => {
+                        write_line(&writer, "ERR engine gone")?;
+                    }
                 }
             }
+            ParsedLine::Cancel(id) => {
+                // The DONE (reason `cancelled`) arrives on the original
+                // request's stream. An id this connection never ACKed —
+                // or already saw finish (forwarders prune on DONE) — is
+                // rejected without touching the engine.
+                if !lock(&mine).contains(&id) {
+                    write_line(&writer, "ERR unknown request id")?;
+                } else if handle.cancel(id).is_err() {
+                    write_line(&writer, "ERR engine gone")?;
+                }
+            }
+            ParsedLine::Stats => match handle.stats() {
+                Ok(s) => write_line(&writer, &format_stats(&s))?,
+                Err(_) => write_line(&writer, "ERR engine gone")?,
+            },
             ParsedLine::Quit => {
-                writeln!(writer, "BYE")?;
+                write_line(&writer, "BYE")?;
+                // Close the socket for the forwarder clones too: their
+                // next write fails, which drops each `ResponseHandle`
+                // and cancels whatever this connection still had
+                // decoding — QUIT really ends the connection instead
+                // of letting forwarders stream into it for seconds.
+                let _ = lock(&writer).shutdown(Shutdown::Both);
                 break;
             }
             ParsedLine::Bad(msg) => {
-                writeln!(writer, "ERR {msg}")?;
+                write_line(&writer, &format!("ERR {msg}"))?;
             }
         }
     }
@@ -106,27 +152,204 @@ fn handle_client(
     Ok(())
 }
 
+/// One whole line under the shared socket lock (keeps concurrent
+/// request streams from interleaving mid-line).
+fn write_line(writer: &Arc<Mutex<TcpStream>>, line: &str) -> Result<()> {
+    let mut w = lock(writer);
+    writeln!(w, "{line}")?;
+    Ok(())
+}
+
+/// Poison-tolerant mutex lock (same policy as the engine's pool reads:
+/// a panicked holder doesn't invalidate this plain data).
+fn lock<T>(m: &Arc<Mutex<T>>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Forwarder: drain one request's event stream onto the shared socket.
+/// A write failure means the client hung up — dropping `resp` lets the
+/// engine cancel the request instead of decoding for nobody. On exit
+/// the id is pruned from the connection's cancellable set.
+fn stream_response(
+    resp: ResponseHandle,
+    writer: Arc<Mutex<TcpStream>>,
+    mine: Arc<Mutex<HashSet<RequestId>>>,
+) {
+    let id = resp.id();
+    for ev in resp {
+        let line = match ev {
+            TokenEvent::First { token, .. } => format!("TOK {id} 0 {token}"),
+            TokenEvent::Token { token, index } => {
+                format!("TOK {id} {index} {token}")
+            }
+            TokenEvent::Finished(c) => {
+                let text = crate::model::ByteTokenizer.decode(&c.generated);
+                format!(
+                    "DONE {id} {} {:.1} {:.1} {}",
+                    c.finish_reason.as_str(),
+                    c.ttft * 1e3,
+                    c.total_latency * 1e3,
+                    text.replace('\n', " ")
+                )
+            }
+        };
+        if write_line(&writer, &line).is_err() {
+            break;
+        }
+    }
+    lock(&mine).remove(&id);
+}
+
+fn format_stats(s: &crate::coordinator::StatsSnapshot) -> String {
+    format!(
+        "STATS completed={} cancelled={} tokens={} prefill_tokens={} \
+         ttft_p50_ms={:.2} latency_p50_ms={:.2} itl_p50_ms={:.3} \
+         itl_p95_ms={:.3} itl_mean_ms={:.3} dedup={:.3}",
+        s.metrics.requests_completed,
+        s.metrics.requests_cancelled,
+        s.metrics.tokens_generated,
+        s.metrics.prefill_tokens,
+        s.ttft.p50() * 1e3,
+        s.latency.p50() * 1e3,
+        s.itl.p50() * 1e3,
+        s.itl.p95() * 1e3,
+        s.itl.mean() * 1e3,
+        s.metrics.page_dedup_ratio,
+    )
+}
+
+/// Sampling fields a `GEN` line may override.
+#[derive(Debug, Default, PartialEq)]
+struct GenOverrides {
+    seed: Option<u64>,
+    top_k: Option<usize>,
+    temp: Option<f32>,
+    stop: Option<u8>,
+    greedy: bool,
+}
+
+/// Merge `GEN`-line overrides onto the server defaults.
+fn params_for(
+    defaults: SamplingParams,
+    max_new: usize,
+    ov: &GenOverrides,
+) -> SamplingParams {
+    let mut p = defaults;
+    p.max_new_tokens = max_new;
+    if let Some(s) = ov.seed {
+        p.seed = s;
+    }
+    if let Some(b) = ov.stop {
+        p.stop_byte = Some(b);
+    }
+    if ov.greedy {
+        p.sampler = Sampler::Greedy;
+    } else if ov.top_k.is_some() || ov.temp.is_some() {
+        let (dk, dt) = match defaults.sampler {
+            Sampler::TopK { k, temp } => (k, temp),
+            Sampler::Greedy => {
+                (crate::model::DEFAULT_TOP_K, crate::model::DEFAULT_TEMP)
+            }
+        };
+        p.sampler = Sampler::TopK {
+            k: ov.top_k.unwrap_or(dk),
+            temp: ov.temp.unwrap_or(dt),
+        };
+    }
+    p
+}
+
 enum ParsedLine {
-    Gen { max_new: usize, prompt: Vec<u8> },
+    Gen { max_new: usize, overrides: GenOverrides, prompt: Vec<u8> },
+    Cancel(RequestId),
+    Stats,
     Quit,
     Bad(&'static str),
+}
+
+/// First space-separated word and the remainder (empty if none).
+fn split_word(s: &str) -> Option<(&str, &str)> {
+    if s.is_empty() {
+        return None;
+    }
+    match s.split_once(' ') {
+        Some((w, rest)) => Some((w, rest)),
+        None => Some((s, "")),
+    }
 }
 
 fn parse_line(line: &str) -> ParsedLine {
     if line == "QUIT" {
         return ParsedLine::Quit;
     }
+    if line == "STATS" {
+        return ParsedLine::Stats;
+    }
+    if let Some(rest) = line.strip_prefix("CANCEL ") {
+        return match rest.trim().parse::<RequestId>() {
+            Ok(id) => ParsedLine::Cancel(id),
+            Err(_) => ParsedLine::Bad("usage: CANCEL <id>"),
+        };
+    }
     if let Some(rest) = line.strip_prefix("GEN ") {
-        let mut parts = rest.splitn(2, ' ');
-        let Some(n) = parts.next().and_then(|p| p.parse::<usize>().ok()) else {
-            return ParsedLine::Bad("usage: GEN <max_new_tokens> <prompt>");
-        };
-        let Some(prompt) = parts.next().filter(|p| !p.is_empty()) else {
-            return ParsedLine::Bad("empty prompt");
-        };
-        return ParsedLine::Gen { max_new: n.clamp(1, 256), prompt: prompt.as_bytes().to_vec() };
+        return parse_gen(rest);
     }
     ParsedLine::Bad("unknown command")
+}
+
+/// Parse one `key=value` override into `dst`; false on a bad value.
+fn set_override<T: std::str::FromStr>(dst: &mut Option<T>, v: &str) -> bool {
+    match v.parse() {
+        Ok(x) => {
+            *dst = Some(x);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+fn parse_gen(rest: &str) -> ParsedLine {
+    const USAGE: &str = "usage: GEN <max_new_tokens> [seed=N] [topk=K] \
+                         [temp=T] [stop=BYTE] [greedy] <prompt>";
+    let Some((first, mut rem)) = split_word(rest) else {
+        return ParsedLine::Bad(USAGE);
+    };
+    let Ok(max_new) = first.parse::<usize>() else {
+        return ParsedLine::Bad(USAGE);
+    };
+    let mut ov = GenOverrides::default();
+    while let Some((word, after)) = split_word(rem) {
+        if word == "greedy" {
+            ov.greedy = true;
+            rem = after;
+            continue;
+        }
+        let Some((k, v)) = word.split_once('=') else { break };
+        // An unknown key is not an override at all — it starts the
+        // prompt (the doc promise: "anything else starts the prompt").
+        // A *known* key with an unparsable value is a client error.
+        let parsed = match k {
+            "seed" => set_override(&mut ov.seed, v),
+            "topk" => set_override(&mut ov.top_k, v),
+            "temp" => set_override(&mut ov.temp, v),
+            "stop" => set_override(&mut ov.stop, v),
+            _ => break,
+        };
+        if !parsed {
+            return ParsedLine::Bad(
+                "bad GEN override value (seed=|topk=|temp=|stop=)",
+            );
+        }
+        rem = after;
+    }
+    if rem.is_empty() {
+        return ParsedLine::Bad("empty prompt");
+    }
+    ParsedLine::Gen {
+        max_new: max_new.clamp(1, 256),
+        overrides: ov,
+        prompt: rem.as_bytes().to_vec(),
+    }
 }
 
 #[cfg(test)]
@@ -134,14 +357,53 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_gen() {
+    fn parse_gen_plain() {
         match parse_line("GEN 32 the router routes") {
-            ParsedLine::Gen { max_new, prompt } => {
+            ParsedLine::Gen { max_new, overrides, prompt } => {
                 assert_eq!(max_new, 32);
+                assert_eq!(overrides, GenOverrides::default());
                 assert_eq!(prompt, b"the router routes");
             }
             _ => panic!("expected Gen"),
         }
+    }
+
+    #[test]
+    fn parse_gen_with_overrides() {
+        match parse_line("GEN 16 seed=9 topk=4 temp=0.5 stop=46 the prompt") {
+            ParsedLine::Gen { max_new, overrides, prompt } => {
+                assert_eq!(max_new, 16);
+                assert_eq!(overrides.seed, Some(9));
+                assert_eq!(overrides.top_k, Some(4));
+                assert_eq!(overrides.temp, Some(0.5));
+                assert_eq!(overrides.stop, Some(46));
+                assert!(!overrides.greedy);
+                assert_eq!(prompt, b"the prompt");
+            }
+            _ => panic!("expected Gen"),
+        }
+        match parse_line("GEN 8 greedy hi") {
+            ParsedLine::Gen { overrides, prompt, .. } => {
+                assert!(overrides.greedy);
+                assert_eq!(prompt, b"hi");
+            }
+            _ => panic!("expected Gen"),
+        }
+        // An unknown key=value word is prompt text, not a bad override.
+        match parse_line("GEN 8 x=1 plus y=2") {
+            ParsedLine::Gen { overrides, prompt, .. } => {
+                assert_eq!(overrides, GenOverrides::default());
+                assert_eq!(prompt, b"x=1 plus y=2");
+            }
+            _ => panic!("expected Gen"),
+        }
+    }
+
+    #[test]
+    fn parse_cancel_and_stats() {
+        assert!(matches!(parse_line("CANCEL 7"), ParsedLine::Cancel(7)));
+        assert!(matches!(parse_line("CANCEL x"), ParsedLine::Bad(_)));
+        assert!(matches!(parse_line("STATS"), ParsedLine::Stats));
     }
 
     #[test]
@@ -150,12 +412,31 @@ mod tests {
         assert!(matches!(parse_line("NOPE"), ParsedLine::Bad(_)));
         assert!(matches!(parse_line("GEN x y"), ParsedLine::Bad(_)));
         assert!(matches!(parse_line("GEN 5"), ParsedLine::Bad(_)));
+        assert!(matches!(parse_line("GEN 5 seed=zzz hi"), ParsedLine::Bad(_)));
     }
 
     #[test]
-    fn ids_are_unique() {
-        let a = next_request_id();
-        let b = next_request_id();
-        assert_ne!(a, b);
+    fn overrides_merge_onto_defaults() {
+        let defaults = SamplingParams {
+            sampler: Sampler::TopK { k: 8, temp: 0.8 },
+            seed: 1,
+            stop_byte: None,
+            max_new_tokens: 48,
+        };
+        let ov = GenOverrides { seed: Some(5), temp: Some(0.5), ..Default::default() };
+        let p = params_for(defaults, 16, &ov);
+        assert_eq!(p.max_new_tokens, 16);
+        assert_eq!(p.seed, 5);
+        // temp override keeps the default k.
+        assert_eq!(p.sampler, Sampler::TopK { k: 8, temp: 0.5 });
+
+        let greedy = GenOverrides { greedy: true, ..Default::default() };
+        assert_eq!(
+            params_for(defaults, 4, &greedy).sampler,
+            Sampler::Greedy
+        );
+
+        let none = GenOverrides::default();
+        assert_eq!(params_for(defaults, 4, &none).sampler, defaults.sampler);
     }
 }

@@ -3,14 +3,13 @@
 //! are absent; the `TurboCpu` path needs none and always runs.
 
 use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
-use turboattention::model::{ModelBundle, Sampler};
+use turboattention::model::ModelBundle;
 use turboattention::quant::Bits;
 use turboattention::runtime::Runtime;
 
 fn cpu_engine(decode_threads: usize) -> Engine {
     let cfg = EngineConfig {
         mode: PathMode::TurboCpu,
-        sampler: Sampler::Greedy,
         decode_threads,
         ..Default::default()
     };
@@ -83,7 +82,6 @@ fn turbo_cpu_engine_interleaves_requests() {
 fn cpu_engine_sharing(decode_threads: usize, share: bool) -> Engine {
     let cfg = EngineConfig {
         mode: PathMode::TurboCpu,
-        sampler: Sampler::Greedy,
         decode_threads,
         share_prefixes: share,
         ..Default::default()
@@ -157,7 +155,7 @@ fn engine(mode: PathMode) -> Option<Engine> {
         return None;
     }
     let rt = Runtime::load("artifacts").expect("runtime");
-    let cfg = EngineConfig { mode, sampler: Sampler::Greedy, ..Default::default() };
+    let cfg = EngineConfig { mode, ..Default::default() };
     Some(Engine::new(ModelBundle::new(rt), cfg))
 }
 
@@ -284,7 +282,7 @@ fn multiple_requests_interleave_and_complete() {
 fn stop_byte_terminates_early() {
     let Some(mut e) = engine(PathMode::Turbo) else { return };
     let mut req = GenRequest::new(1, b"the scheduler evicts ".to_vec(), 64);
-    req.stop_byte = Some(b'.');
+    req.params.stop_byte = Some(b'.');
     e.submit(req);
     let done = e.run_to_completion().expect("run");
     let gen = &done[0].generated;
@@ -301,7 +299,6 @@ fn mixed_precision_engine_still_generates() {
     let rt = Runtime::load("artifacts").expect("runtime");
     let cfg = EngineConfig {
         mode: PathMode::Turbo,
-        sampler: Sampler::Greedy,
         kv_bits: Bits::Int4,
         n_2bit_heads: 2,
         ..Default::default()
@@ -334,7 +331,6 @@ fn decode_threads_do_not_change_generation() {
         let rt = Runtime::load("artifacts").expect("runtime");
         let cfg = EngineConfig {
             mode: PathMode::Turbo,
-            sampler: Sampler::Greedy,
             decode_threads: threads,
             ..Default::default()
         };

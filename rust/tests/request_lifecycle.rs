@@ -1,0 +1,401 @@
+//! Request-lifecycle integration over the streaming API: `Engine::step`
+//! event ordering, `EngineHandle`/`ResponseHandle` streaming and
+//! cancellation, cancellation vs the PR-4 page-pool invariants, and
+//! per-request sampling determinism (batch-composition invariance).
+//! Everything runs on the artifact-free `TurboCpu` path.
+
+use std::sync::mpsc::channel;
+
+use turboattention::coordinator::{
+    Engine, EngineConfig, EngineHandle, FinishReason, GenRequest, PathMode,
+    SamplingParams, TokenEvent,
+};
+use turboattention::model::{ModelBundle, Sampler};
+use turboattention::runtime::Runtime;
+
+fn cpu_engine(decode_threads: usize, share: bool) -> Engine {
+    let cfg = EngineConfig {
+        mode: PathMode::TurboCpu,
+        decode_threads,
+        share_prefixes: share,
+        ..Default::default()
+    };
+    Engine::new(ModelBundle::new(Runtime::cpu_substrate()), cfg)
+}
+
+/// Spawn an engine thread and return its client handle (the engine is
+/// built inside the thread, mirroring the PJRT !Send constraint).
+fn spawn_engine(
+    decode_threads: usize,
+) -> (EngineHandle, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let (tx, rx) = channel();
+    let jh = std::thread::spawn(move || {
+        cpu_engine(decode_threads, false).run_loop(rx)
+    });
+    (EngineHandle::new(tx), jh)
+}
+
+/// The acceptance criterion at the `step` level: the *first* scheduler
+/// step after submission emits `First` while the request is still live
+/// (no `Finished` anywhere near it), and the terminal step emits
+/// `Finished` — tokens stream out across many steps instead of
+/// arriving as one completion.
+#[test]
+fn step_emits_first_token_before_completion() {
+    let max_new = 16usize;
+    let mut e = cpu_engine(1, false);
+    e.submit(GenRequest::with_params(
+        1,
+        b"the stream ".to_vec(),
+        SamplingParams::greedy(max_new),
+    ));
+    // The admission step emits First (and the admitted request's first
+    // decode Token — admission joins the same step's decode round), but
+    // never a Finished.
+    let first_step = e.step().expect("step");
+    assert!(
+        matches!(first_step[0].event, TokenEvent::First { token: _, ttft } if ttft > 0.0),
+        "got {:?}",
+        first_step[0].event
+    );
+    assert!(
+        !first_step
+            .iter()
+            .any(|ev| matches!(ev.event, TokenEvent::Finished(_))),
+        "First must arrive before the request completes"
+    );
+    assert!(!e.idle(), "request must still be decoding after First");
+
+    let mut events = first_step;
+    while !e.idle() {
+        events.extend(e.step().expect("step"));
+    }
+    let mut tokens = 1usize; // the First token
+    let mut finished = None;
+    for ev in events.into_iter().skip(1) {
+        match ev.event {
+            TokenEvent::Token { index, .. } => {
+                assert_eq!(index, tokens, "indices are dense");
+                tokens += 1;
+            }
+            TokenEvent::Finished(c) => finished = Some(c),
+            TokenEvent::First { .. } => panic!("duplicate First"),
+        }
+    }
+    let c = finished.expect("terminal Finished event");
+    assert_eq!(tokens, max_new, "one event per token");
+    assert_eq!(c.generated.len(), max_new);
+    assert_eq!(c.finish_reason, FinishReason::MaxTokens);
+}
+
+/// The same contract through the client API: a `ResponseHandle` yields
+/// `First`, then every decode token, then `Finished` — and `wait()`
+/// reproduces the old blocking behavior.
+#[test]
+fn response_handle_streams_then_finishes() {
+    let (h, jh) = spawn_engine(2);
+    let mut resp = h
+        .submit(GenRequest::with_params(
+            0,
+            b"stream me ".to_vec(),
+            SamplingParams::greedy(16),
+        ))
+        .expect("submit");
+    assert!(resp.id() >= 1, "engine-allocated id in the ack");
+
+    let mut got_first = false;
+    let mut token_events = 0usize;
+    let mut completion = None;
+    while let Some(ev) = resp.recv() {
+        match ev {
+            TokenEvent::First { .. } => {
+                assert!(!got_first, "First exactly once");
+                assert_eq!(token_events, 0, "First precedes all Tokens");
+                got_first = true;
+            }
+            TokenEvent::Token { .. } => {
+                assert!(got_first, "Token only after First");
+                token_events += 1;
+            }
+            TokenEvent::Finished(c) => completion = Some(c),
+        }
+    }
+    let c = completion.expect("stream ends with Finished");
+    assert!(got_first);
+    assert_eq!(token_events, 15, "max_new - 1 decode tokens");
+    assert_eq!(c.generated.len(), 16);
+
+    // wait() on a second identical request gives the same bytes — the
+    // blocking path is the streaming path, drained.
+    let c2 = h
+        .submit(GenRequest::with_params(
+            0,
+            b"stream me ".to_vec(),
+            SamplingParams::greedy(16),
+        ))
+        .expect("submit")
+        .wait()
+        .expect("completion");
+    assert_eq!(c2.generated, c.generated, "same (prompt, params) => same bytes");
+
+    h.shutdown();
+    jh.join().expect("join").expect("engine ok");
+}
+
+/// Client-initiated cancel through the handle: the stream terminates
+/// with a `Cancelled` completion well short of the token budget, and
+/// engine stats report the cancellation.
+#[test]
+fn cancel_finishes_stream_with_cancelled_reason() {
+    let (h, jh) = spawn_engine(2);
+    let mut resp = h
+        .submit(GenRequest::with_params(
+            0,
+            b"cancel this ".to_vec(),
+            SamplingParams::greedy(200),
+        ))
+        .expect("submit");
+    // Wait for the first token so the session provably exists, then
+    // cancel.
+    assert!(matches!(resp.recv(), Some(TokenEvent::First { .. })));
+    resp.cancel().expect("cancel");
+    let mut completion = None;
+    while let Some(ev) = resp.recv() {
+        if let TokenEvent::Finished(c) = ev {
+            completion = Some(c);
+        }
+    }
+    let c = completion.expect("cancelled stream still ends with Finished");
+    assert_eq!(c.finish_reason, FinishReason::Cancelled);
+    assert!(c.generated.len() < 200, "cancel must beat the token budget");
+    let stats = h.stats().expect("stats");
+    assert_eq!(stats.metrics.requests_cancelled, 1);
+    assert_eq!(stats.metrics.requests_completed, 0);
+    h.shutdown();
+    jh.join().expect("join").expect("engine ok");
+}
+
+/// Cancellation vs the PR-4 pool invariants: two sessions share a
+/// two-page prompt prefix; before the cancel the pool dedups exactly
+/// (B-1)/B; cancelling the *donor* mid-decode (after both sessions
+/// have flushed private decode pages) must release its refs and pages
+/// immediately — epoch bump, fewer live pages — while the survivor's
+/// `Q1View` re-verifies cleanly and decodes to the same bytes as an
+/// uncancelled run. Draining everything empties the pool: refcounts
+/// balance.
+#[test]
+fn cancel_mid_decode_releases_pages_and_survivor_stays_valid() {
+    let b_sessions = 2u64;
+    // 64 tokens = exactly two shared 32-token pages; 48 generated
+    // tokens cross one page flush (block = 32) so each session also
+    // owns private pages by the time we cancel.
+    let prompt: Vec<u8> = (0..64).map(|i| b'a' + (i % 13) as u8).collect();
+    let params = SamplingParams::greedy(48);
+
+    let mut e = cpu_engine(2, true);
+    for id in 1..=b_sessions {
+        e.submit(GenRequest::with_params(id, prompt.clone(), params));
+    }
+    // Admit both (1 prefill/step) plus a few decode rounds — well under
+    // 32 generated tokens, so the pool holds only the shared prefix.
+    for _ in 0..6 {
+        e.step().expect("step");
+    }
+    assert_eq!(e.metrics.prefix_hits, b_sessions - 1, "fork happened");
+    {
+        let pool = e.page_pool().expect("turbo-family pool");
+        let st = pool.read().expect("pool").stats();
+        assert!(st.shared_bytes > 0, "prefix pages shared");
+        assert_eq!(st.private_bytes, 0, "no private pages before flush");
+        let want = (b_sessions - 1) as f64 / b_sessions as f64;
+        assert!(
+            (st.dedup_ratio() - want).abs() < 1e-9,
+            "dedup {} != (B-1)/B = {want}",
+            st.dedup_ratio()
+        );
+    }
+
+    // Decode past the first buffer flush: ~36 generated tokens each.
+    for _ in 0..30 {
+        e.step().expect("step");
+    }
+    let (epoch_before, live_before) = {
+        let pool = e.page_pool().expect("pool").read().expect("pool");
+        let st = pool.stats();
+        assert!(st.private_bytes > 0, "decode pages flushed before cancel");
+        (pool.epoch(), pool.live_pages())
+    };
+
+    // Cancel the donor (id 1) — the harder direction: the survivor
+    // adopted *its* pages.
+    let c = e.cancel(1).expect("live request");
+    assert_eq!(c.finish_reason, FinishReason::Cancelled);
+    assert!(!c.generated.is_empty() && c.generated.len() < 48);
+    assert_eq!(e.metrics.requests_cancelled, 1);
+    {
+        let pool = e.page_pool().expect("pool").read().expect("pool");
+        assert!(
+            pool.epoch() > epoch_before,
+            "freeing the donor's private pages must bump the epoch"
+        );
+        assert!(
+            pool.live_pages() < live_before,
+            "donor's private pages released within the cancel"
+        );
+        assert_eq!(
+            pool.stats().shared_bytes,
+            0,
+            "prefix refs dropped to 1 owner => all remaining pages private"
+        );
+    }
+
+    // Survivor decodes to completion across the epoch bump (its view
+    // re-verifies instead of panicking) and matches a solo run.
+    let done = e.run_to_completion().expect("survivor run");
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, 2);
+    assert_eq!(done[0].generated.len(), 48);
+    {
+        let pool = e.page_pool().expect("pool").read().expect("pool");
+        assert_eq!(pool.live_pages(), 0, "refcounts balance after drain");
+    }
+
+    let mut solo = cpu_engine(2, true);
+    solo.submit(GenRequest::with_params(9, prompt.clone(), params));
+    let solo_done = solo.run_to_completion().expect("solo run");
+    assert_eq!(
+        done[0].generated, solo_done[0].generated,
+        "cancel must not perturb the survivor's output"
+    );
+}
+
+/// Cancelling a request still waiting for admission frees its queue
+/// entry and reports an empty `Cancelled` completion.
+#[test]
+fn cancel_waiting_request_before_prefill() {
+    let mut cfg = EngineConfig {
+        mode: PathMode::TurboCpu,
+        decode_threads: 1,
+        ..Default::default()
+    };
+    cfg.batcher.max_running = 1;
+    let mut e = Engine::new(ModelBundle::new(Runtime::cpu_substrate()), cfg);
+    e.submit(GenRequest::with_params(1, b"running ".to_vec(), SamplingParams::greedy(8)));
+    e.submit(GenRequest::with_params(2, b"waiting ".to_vec(), SamplingParams::greedy(8)));
+    e.step().expect("step"); // admits #1 only (slot cap)
+    let c = e.cancel(2).expect("waiting request is cancellable");
+    assert_eq!(c.finish_reason, FinishReason::Cancelled);
+    assert!(c.generated.is_empty(), "never prefilled");
+    assert!(e.cancel(2).is_none(), "idempotent");
+    let done = e.run_to_completion().expect("run");
+    assert_eq!(done.len(), 1, "only #1 completes");
+    assert_eq!(done[0].id, 1);
+}
+
+/// The batch-composition-invariance acceptance criterion: two requests
+/// with identical `(prompt, SamplingParams)` — a stochastic top-k
+/// policy, so the per-session RNG is actually exercised — produce
+/// bit-identical token streams whether run alone, batched together, or
+/// batched with unrelated traffic, across `decode_threads {1, 4}`.
+#[test]
+fn identical_requests_are_batch_composition_invariant() {
+    let prompt = b"determinism probe ".to_vec();
+    let params = SamplingParams {
+        sampler: Sampler::TopK { k: 8, temp: 0.8 },
+        seed: 42,
+        stop_byte: None,
+        max_new_tokens: 24,
+    };
+    let unrelated = SamplingParams {
+        sampler: Sampler::TopK { k: 4, temp: 0.6 },
+        seed: 9,
+        stop_byte: None,
+        max_new_tokens: 31,
+    };
+
+    // Run the engine with 1 or 2 copies of the probe request, plus
+    // optional unrelated traffic; return the probe outputs sorted by id.
+    let run = |threads: usize, copies: usize, traffic: bool| -> Vec<Vec<u8>> {
+        let mut e = cpu_engine(threads, false);
+        for id in 1..=copies as u64 {
+            e.submit(GenRequest::with_params(id, prompt.clone(), params));
+        }
+        if traffic {
+            e.submit(GenRequest::with_params(
+                7,
+                b"unrelated traffic stream ".to_vec(),
+                unrelated,
+            ));
+        }
+        let mut done = e.run_to_completion().expect("run");
+        done.sort_by_key(|c| c.id);
+        done.into_iter()
+            .filter(|c| c.id <= copies as u64)
+            .map(|c| c.generated)
+            .collect()
+    };
+
+    let reference = run(1, 1, false).remove(0);
+    assert_eq!(reference.len(), 24);
+    for threads in [1usize, 4] {
+        let alone = run(threads, 1, false);
+        assert_eq!(alone[0], reference, "alone, threads={threads}");
+        let paired = run(threads, 2, false);
+        assert_eq!(paired[0], reference, "paired #1, threads={threads}");
+        assert_eq!(paired[1], reference, "paired #2, threads={threads}");
+        let mixed = run(threads, 2, true);
+        assert_eq!(mixed[0], reference, "mixed #1, threads={threads}");
+        assert_eq!(mixed[1], reference, "mixed #2, threads={threads}");
+    }
+
+    // And the unrelated request is itself a pure function of its own
+    // (prompt, params) — presence of the probes changes nothing.
+    let solo_unrelated = {
+        let mut e = cpu_engine(1, false);
+        e.submit(GenRequest::with_params(
+            7,
+            b"unrelated traffic stream ".to_vec(),
+            unrelated,
+        ));
+        e.run_to_completion().expect("run").remove(0).generated
+    };
+    let mixed_unrelated = {
+        let mut e = cpu_engine(4, false);
+        e.submit(GenRequest::with_params(1, prompt.clone(), params));
+        e.submit(GenRequest::with_params(
+            7,
+            b"unrelated traffic stream ".to_vec(),
+            unrelated,
+        ));
+        let mut done = e.run_to_completion().expect("run");
+        done.sort_by_key(|c| c.id);
+        done.pop().expect("id 7 sorts last").generated
+    };
+    assert_eq!(solo_unrelated, mixed_unrelated);
+}
+
+/// Disconnect-as-cancel: dropping a `ResponseHandle` without draining
+/// it releases the request engine-side (the engine cancels it on the
+/// next failed event send) — a disconnected client cannot pin its
+/// batcher slot until `max_new_tokens`.
+#[test]
+fn dropped_response_handle_cancels_request() {
+    let (h, jh) = spawn_engine(1);
+    let resp = h
+        .submit(GenRequest::with_params(
+            0,
+            b"disconnected client ".to_vec(),
+            SamplingParams::greedy(200),
+        ))
+        .expect("submit");
+    drop(resp); // client goes away without cancelling
+    // Flush drives the engine until idle: if the disconnect were not
+    // detected, this would decode all 200 tokens; either way it must
+    // terminate, and the request must be recorded cancelled.
+    h.flush().expect("flush");
+    let stats = h.stats().expect("stats");
+    assert_eq!(stats.metrics.requests_cancelled, 1);
+    assert_eq!(stats.metrics.requests_completed, 0);
+    h.shutdown();
+    jh.join().expect("join").expect("engine ok");
+}

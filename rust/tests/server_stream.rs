@@ -1,0 +1,171 @@
+//! TCP wire-protocol integration: the server streams `TOK` lines before
+//! `DONE`, honors `CANCEL`, answers `STATS`, and allocates request ids
+//! engine-side (the `ACK`). Runs the artifact-free TurboCpu engine in a
+//! background thread — no PJRT, no artifacts.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::channel;
+
+use turboattention::coordinator::{
+    Engine, EngineConfig, EngineHandle, PathMode, SamplingParams,
+};
+use turboattention::model::ModelBundle;
+use turboattention::runtime::Runtime;
+use turboattention::server;
+
+/// Start engine thread + server thread on an ephemeral port; return the
+/// bound address. The threads are detached — they die with the test
+/// process (the listener loop has no shutdown path by design).
+fn start_server() -> std::net::SocketAddr {
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        let cfg = EngineConfig {
+            mode: PathMode::TurboCpu,
+            decode_threads: 2,
+            ..Default::default()
+        };
+        let engine = Engine::new(ModelBundle::new(Runtime::cpu_substrate()), cfg);
+        let _ = engine.run_loop(rx);
+    });
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    std::thread::spawn(move || {
+        let _ = server::serve(
+            listener,
+            EngineHandle::new(tx),
+            SamplingParams::default(),
+        );
+    });
+    addr
+}
+
+fn connect() -> TcpStream {
+    TcpStream::connect(start_server()).expect("connect")
+}
+
+#[test]
+fn gen_streams_tok_lines_before_done() {
+    let sock = connect();
+    let mut writer = sock.try_clone().expect("clone");
+    let mut reader = BufReader::new(sock).lines();
+    let mut read_line =
+        || reader.next().expect("line").expect("io");
+
+    writeln!(writer, "GEN 24 the stream smoke test").expect("write");
+    let ack = read_line();
+    let id: u64 = ack
+        .strip_prefix("ACK ")
+        .unwrap_or_else(|| panic!("expected ACK, got {ack:?}"))
+        .parse()
+        .expect("ack id");
+    assert!(id >= 1, "engine-allocated id");
+
+    let mut toks = 0usize;
+    let done = loop {
+        let line = read_line();
+        if let Some(rest) = line.strip_prefix("TOK ") {
+            let mut f = rest.split(' ');
+            assert_eq!(f.next().unwrap().parse::<u64>().unwrap(), id);
+            let index: usize = f.next().unwrap().parse().unwrap();
+            assert_eq!(index, toks, "dense token indices");
+            let byte: u16 = f.next().unwrap().parse().unwrap();
+            assert!(byte < 256, "token is one byte");
+            toks += 1;
+        } else if line.starts_with("DONE ") {
+            break line;
+        } else {
+            panic!("unexpected line {line:?}");
+        }
+    };
+    assert_eq!(toks, 24, "every token streamed before DONE");
+    let mut f = done.split(' ');
+    assert_eq!(f.next(), Some("DONE"));
+    assert_eq!(f.next().unwrap().parse::<u64>().unwrap(), id);
+    assert_eq!(f.next(), Some("max_tokens"));
+
+    writeln!(writer, "QUIT").expect("write");
+    assert_eq!(read_line(), "BYE");
+    // QUIT closes the socket server-side — the stream ends (EOF), it
+    // does not linger open.
+    assert!(reader.next().is_none(), "expected EOF after BYE");
+}
+
+#[test]
+fn cancel_yields_cancelled_done_and_stats_counts_it() {
+    let addr = start_server();
+    let sock = TcpStream::connect(addr).expect("connect");
+    let mut writer = sock.try_clone().expect("clone");
+    let mut reader = BufReader::new(sock).lines();
+    let mut read_line =
+        || reader.next().expect("line").expect("io");
+
+    // A long request we abort after the ack: 200 tokens is far more
+    // decode work than the cancel round-trip.
+    writeln!(writer, "GEN 200 cancel this long request").expect("write");
+    let ack = read_line();
+    let id: u64 = ack
+        .strip_prefix("ACK ")
+        .unwrap_or_else(|| panic!("expected ACK, got {ack:?}"))
+        .parse()
+        .expect("ack id");
+    writeln!(writer, "CANCEL {id}").expect("write");
+    let (mut toks, done) = {
+        let mut toks = 0usize;
+        loop {
+            let line = read_line();
+            if line.starts_with("TOK ") {
+                toks += 1;
+            } else if line.starts_with("DONE ") {
+                break (toks, line);
+            } else {
+                panic!("unexpected line {line:?}");
+            }
+        }
+    };
+    let mut f = done.split(' ');
+    assert_eq!(f.next(), Some("DONE"));
+    assert_eq!(f.next().unwrap().parse::<u64>().unwrap(), id);
+    assert_eq!(f.next(), Some("cancelled"), "finish reason on the wire");
+    assert!(toks < 200, "cancel must cut the stream short");
+
+    writeln!(writer, "STATS").expect("write");
+    let stats = read_line();
+    assert!(stats.starts_with("STATS "), "got {stats:?}");
+    assert!(
+        stats.contains("cancelled=1"),
+        "requests_cancelled surfaced: {stats:?}"
+    );
+
+    // Per-request overrides parse end to end (greedy + explicit seed).
+    writeln!(writer, "GEN 4 greedy seed=7 short follow-up").expect("write");
+    let ack2 = read_line();
+    assert!(ack2.starts_with("ACK "), "got {ack2:?}");
+    toks = 0;
+    loop {
+        let line = read_line();
+        if line.starts_with("TOK ") {
+            toks += 1;
+        } else if line.starts_with("DONE ") {
+            assert!(line.split(' ').nth(2) == Some("max_tokens"));
+            break;
+        } else {
+            panic!("unexpected line {line:?}");
+        }
+    }
+    assert_eq!(toks, 4);
+
+    // A second connection may not cancel this connection's requests:
+    // ids it never ACKed are rejected, not forwarded to the engine.
+    let other = TcpStream::connect(addr).expect("connect 2");
+    let mut other_writer = other.try_clone().expect("clone");
+    let mut other_reader = BufReader::new(other).lines();
+    writeln!(other_writer, "CANCEL {id}").expect("write");
+    let reply = other_reader.next().expect("line").expect("io");
+    assert_eq!(reply, "ERR unknown request id");
+    writeln!(other_writer, "QUIT").expect("write");
+    assert_eq!(other_reader.next().expect("line").expect("io"), "BYE");
+
+    writeln!(writer, "QUIT").expect("write");
+    assert_eq!(read_line(), "BYE");
+}

@@ -1,0 +1,85 @@
+#!/usr/bin/env bash
+# No-artifact streaming smoke: start `turboattn serve --path turbo-cpu`,
+# drive the wire protocol over bash's /dev/tcp, and assert
+#   1. at least one TOK line arrives before DONE (token streaming),
+#   2. CANCEL <id> ends the request with a `cancelled` DONE,
+#   3. STATS reports the cancellation,
+# then shut the server down cleanly.
+#
+# Usage: scripts/stream_smoke.sh [path-to-turboattn] [port]
+# (run from the rust/ crate root, e.g. in CI: bash ../scripts/stream_smoke.sh)
+set -euo pipefail
+
+BIN=${1:-target/release/turboattn}
+PORT=${2:-7163}
+
+"$BIN" serve --path turbo-cpu --port "$PORT" --quiet &
+SRV=$!
+trap 'kill "$SRV" 2>/dev/null || true; wait "$SRV" 2>/dev/null || true' EXIT
+
+fail() { echo "stream_smoke: FAIL: $*" >&2; exit 1; }
+
+# Wait for the listener; the whole loop's stderr is silenced because a
+# refused /dev/tcp connect reports through the shell, not a command.
+connected=0
+for _ in $(seq 1 100); do
+  if exec 3<>"/dev/tcp/127.0.0.1/$PORT"; then
+    connected=1
+    break
+  fi
+  sleep 0.2
+done 2>/dev/null
+[ "$connected" = 1 ] || fail "server did not come up on port $PORT"
+
+# --- 1. streaming: TOK lines precede DONE -------------------------------
+printf 'GEN 24 the stream smoke test\n' >&3
+read -r ack <&3
+case "$ack" in ACK\ *) ;; *) fail "expected ACK, got: $ack";; esac
+toks=0 done_line=""
+while read -r line <&3; do
+  case "$line" in
+    TOK\ *) toks=$((toks + 1)) ;;
+    DONE\ *) done_line="$line"; break ;;
+    *) fail "unexpected line: $line" ;;
+  esac
+done
+[ "$toks" -ge 1 ] || fail "no TOK line before DONE"
+[ "$(echo "$done_line" | awk '{print $3}')" = max_tokens ] \
+  || fail "unexpected finish reason: $done_line"
+echo "stream_smoke: streaming OK ($toks TOK lines before DONE)"
+
+# --- 2. cancellation: DONE reports cancelled ----------------------------
+printf 'GEN 200 cancel this long request\n' >&3
+read -r ack <&3
+case "$ack" in ACK\ *) ;; *) fail "expected ACK, got: $ack";; esac
+id=${ack#ACK }
+printf 'CANCEL %s\n' "$id" >&3
+done_line=""
+while read -r line <&3; do
+  case "$line" in
+    DONE\ *) done_line="$line"; break ;;
+    TOK\ *) ;;
+    *) fail "unexpected line: $line" ;;
+  esac
+done
+[ "$(echo "$done_line" | awk '{print $3}')" = cancelled ] \
+  || fail "CANCEL did not yield a cancelled DONE: $done_line"
+echo "stream_smoke: cancellation OK ($done_line)"
+
+# --- 3. STATS surfaces the cancel ---------------------------------------
+printf 'STATS\n' >&3
+read -r stats <&3
+case "$stats" in
+  STATS\ *cancelled=1*) ;;
+  *) fail "STATS missing cancelled=1: $stats" ;;
+esac
+echo "stream_smoke: stats OK"
+
+printf 'QUIT\n' >&3
+read -r bye <&3
+[ "$bye" = BYE ] || fail "expected BYE, got: $bye"
+
+kill "$SRV"
+wait "$SRV" 2>/dev/null || true
+trap - EXIT
+echo "stream_smoke: PASS"

@@ -94,6 +94,10 @@ fn main() -> Result<()> {
         }
         let wall = t0.elapsed().as_secs_f64();
         println!("== {name} ==");
+        // Which integer-kernel ISA produced these numbers (scalar |
+        // avx2 | neon) — throughput comparisons are meaningless
+        // without it.
+        println!("  kernel backend: {}", engine.metrics.kernel_backend);
         println!("  ttft : {}", ttft.summary());
         println!("  itl  : {}", engine.itl_hist.summary());
         println!("  e2e  : {}", total.summary());

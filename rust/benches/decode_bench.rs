@@ -40,9 +40,19 @@
 //!    page pool: per-token decode latency plus the pool's measured
 //!    dedup ratio (exactly (B-1)/B with only the prefix resident).
 //!
+//! 5. **Integer microkernels, dispatched vs scalar arm** — `qk
+//!    micro` / `ipv micro` / `sas micro` time `qk_dot_block`,
+//!    `ipv_acc` and `Sas::exp_block` directly (one ctx-row block, no
+//!    attention bookkeeping) against the pinned scalar arm, so the
+//!    recorded speedup isolates the SIMD dispatch itself
+//!    (AVX2/NEON vs the autovectorized scalar loops).
+//!
 //! `--json` additionally writes every case plus the computed speedups and
 //! the shared-prefix scenario to `BENCH_decode.json` (the perf-trajectory
-//! artifact).
+//! artifact). The payload records `kernel_backend` — the ISA the
+//! dispatched cases actually ran — and `--kernel-backend` /
+//! `TURBO_KERNEL` pin it (`scalar` makes every dispatched-vs-scalar
+//! speedup ~1.0 by construction).
 
 use std::sync::Arc;
 
@@ -51,7 +61,9 @@ use turboattention::attention::{
     turbo_decode_streams, turbo_decode_streams_scalar, DecodeScratch,
 };
 use turboattention::bench::Bencher;
+use turboattention::kernels;
 use turboattention::kvcache::{KvCache, KvCacheConfig, PagePool, PrecisionMap};
+use turboattention::sas::Sas;
 use turboattention::model::TurboSlabs;
 use turboattention::pool::WorkerPool;
 use turboattention::quant::{quant_sym_int8, Bits};
@@ -147,10 +159,15 @@ fn flash_attend(q: &[f32], kf: &[f32], vf: &[f32], nk: usize, out: &mut [f32]) {
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let emit_json = args.flag("json");
+    if let Some(kb) = args.opt("kernel-backend") {
+        kernels::force_kernel_backend(kb).expect("--kernel-backend");
+    }
+    let backend = kernels::kernel_backend().name();
     println!(
         "== bench: decode step vs context, threads, and kernelization \
          (Q1View slabs + worker pool) ==\n"
     );
+    println!("kernel backend: {backend}\n");
     // Cap iterations so a case's token folds stay within SLACK.
     let mut b = Bencher::with_limits(
         std::time::Duration::from_millis(50),
@@ -289,6 +306,70 @@ fn main() {
         });
         println!();
     }
+
+    // Integer microkernels, dispatched vs pinned scalar arm: one
+    // ctx-row key/value block through the raw kernels, no attention
+    // bookkeeping, so the speedup is the SIMD dispatch and nothing
+    // else. The kernels are branch-free (score values never change the
+    // instruction stream), so reusing the buffers across iterations
+    // measures the same work every pass.
+    println!("integer microkernels ({backend} vs scalar arm):");
+    for &ctx in &contexts {
+        let mut rng = Rng::new(11);
+        let codes = |rng: &mut Rng, n: usize| -> Vec<i8> {
+            (0..n).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect()
+        };
+        let q8 = codes(&mut rng, DH);
+        let k8 = codes(&mut rng, ctx * DH);
+        let p8 = codes(&mut rng, ctx);
+        let v8 = codes(&mut rng, ctx * DH);
+        let mut scores = vec![0i32; ctx];
+        let mut acc = vec![0i32; DH];
+        b.bench(&format!("qk micro dispatch ctx={ctx}"), || {
+            kernels::qk_dot_block(&q8, &k8, DH, &mut scores);
+            scores[0]
+        });
+        b.bench(&format!("qk micro scalar ctx={ctx}"), || {
+            kernels::scalar::qk_dot_block(&q8, &k8, DH, &mut scores);
+            scores[0]
+        });
+        b.bench(&format!("ipv micro dispatch ctx={ctx}"), || {
+            kernels::ipv_acc(&p8, &v8, DH, &mut acc);
+            acc[0]
+        });
+        b.bench(&format!("ipv micro scalar ctx={ctx}"), || {
+            kernels::scalar::ipv_acc(&p8, &v8, DH, &mut acc);
+            acc[0]
+        });
+        let sas = Sas::default();
+        let mut row = rng.normal_vec(ctx, 2.0);
+        b.bench(&format!("sas micro dispatch ctx={ctx}"), || {
+            sas.exp_block(&mut row, 0.5)
+        });
+        b.bench(&format!("sas micro scalar ctx={ctx}"), || {
+            sas.exp_block_scalar(&mut row, 0.5)
+        });
+    }
+    let mut micro_speedups = Vec::new();
+    for kind in ["qk", "ipv", "sas"] {
+        let mut line = format!("  {kind:<4}");
+        for &ctx in &contexts {
+            let scalar = format!("{kind} micro scalar ctx={ctx}");
+            let disp = format!("{kind} micro dispatch ctx={ctx}");
+            match b.speedup(&scalar, &disp) {
+                Some(s) => {
+                    line.push_str(&format!("  ctx={ctx}: {s:.2}x"));
+                    micro_speedups.push(format!(
+                        "{{\"kernel\":\"{kind}\",\"ctx\":{ctx},\
+                         \"speedup\":{s:.4}}}"
+                    ));
+                }
+                None => line.push_str(&format!("  ctx={ctx}: n/a")),
+            }
+        }
+        println!("{line}");
+    }
+    println!();
 
     // Shared-prefix batched decode: B sessions forked from one donor's
     // 512-token page-aligned prefix (all on one refcounted page pool).
@@ -454,12 +535,15 @@ fn main() {
 
     if emit_json {
         let payload = format!(
-            "{{\n  \"bench\": \"decode\",\n  \"geometry\": {{\"layers\": {L}, \
+            "{{\n  \"bench\": \"decode\",\n  \"kernel_backend\": \
+             \"{backend}\",\n  \"geometry\": {{\"layers\": {L}, \
              \"heads\": {H}, \"d_head\": {DH}, \"block\": {BLOCK}}},\n  \
-             \"cases\": {},\n  \"kernel_vs_scalar\": [{}],\n  \
+             \"cases\": {},\n  \"microkernel_vs_scalar\": [{}],\n  \
+             \"kernel_vs_scalar\": [{}],\n  \
              \"thread_speedup_vs_t1\": [{}],\n  \
              \"shared_prefix\": [{}]\n}}\n",
             b.results_json(),
+            micro_speedups.join(","),
             kernel_speedups.join(","),
             thread_speedups.join(","),
             shared_json.join(",")

@@ -3,10 +3,17 @@
 //! substrate — scalar `Sas::exp` vs the branch-free batched
 //! `Sas::exp_block` the decode kernels use — plus accuracy of the fit.
 //!
+//! `exp_block` now dispatches to the selected kernel backend (scalar /
+//! AVX2 / NEON); the `exp/SIMD-vs-scalar-arm` cases pit the dispatched
+//! arm against the pinned scalar arm on identical inputs, isolating the
+//! explicit vectorization. `--kernel-backend` / `TURBO_KERNEL` pin the
+//! arm; the JSON records which one ran.
+//!
 //! `--json` writes every case and the computed speedups to
 //! `BENCH_sas.json`.
 
 use turboattention::bench::Bencher;
+use turboattention::kernels;
 use turboattention::sas::{softmax_row_exact, Sas};
 use turboattention::testutil::Rng;
 use turboattention::util::cli::Args;
@@ -25,7 +32,12 @@ fn softmax_row_block(sas: &Sas, row: &mut [f32]) {
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let emit_json = args.flag("json");
+    if let Some(kb) = args.opt("kernel-backend") {
+        kernels::force_kernel_backend(kb).expect("--kernel-backend");
+    }
+    let backend = kernels::kernel_backend().name();
     println!("== bench: SAS softmax (Figure 5 / §4) ==\n");
+    println!("kernel backend: {backend}\n");
     let mut rng = Rng::new(0);
     let rows = 256;
     let cols = 1024;
@@ -95,6 +107,23 @@ fn main() {
         println!("exp_block elementwise speedup over scalar exp: {s:.2}x");
     }
 
+    // Dispatched arm vs pinned scalar arm on identical inputs — the
+    // explicit-SIMD win inside exp_block itself (~1.0x by construction
+    // when the process backend is scalar).
+    b.bench("exp/dispatched-arm 64k elems", || {
+        buf.copy_from_slice(&xs);
+        sas.exp_block(&mut buf, 0.0)
+    });
+    b.bench("exp/scalar-arm 64k elems", || {
+        buf.copy_from_slice(&xs);
+        sas.exp_block_scalar(&mut buf, 0.0)
+    });
+    let arm_vs_scalar_arm =
+        b.speedup("exp/scalar-arm 64k elems", "exp/dispatched-arm 64k elems");
+    if let Some(s) = arm_vs_scalar_arm {
+        println!("exp_block {backend} arm speedup over scalar arm: {s:.2}x");
+    }
+
     let poly_err = {
         let mut w = 0.0f32;
         for i in 0..=1000 {
@@ -115,18 +144,21 @@ fn main() {
             None => "null".to_string(),
         };
         let payload = format!(
-            "{{\n  \"bench\": \"sas\",\n  \"cases\": {},\n  \"speedups\": \
+            "{{\n  \"bench\": \"sas\",\n  \"kernel_backend\": \
+             \"{backend}\",\n  \"cases\": {},\n  \"speedups\": \
              {{\"sas_block_vs_exact_softmax\": {}, \
              \"block_vs_scalar_softmax\": {}, \
              \"sas_block_vs_libm_exp\": {}, \
-             \"block_vs_scalar_exp\": {}}},\n  \
+             \"block_vs_scalar_exp\": {}, \
+             \"dispatched_arm_vs_scalar_arm\": {}}},\n  \
              \"accuracy\": {{\"poly_max_err\": {poly_err:e}, \
              \"sas_max_err\": {sas_err:e}}}\n}}\n",
             b.results_json(),
             opt(sas_vs_exact),
             opt(block_vs_scalar_softmax),
             opt(sas_vs_libm),
-            opt(block_vs_scalar_exp)
+            opt(block_vs_scalar_exp),
+            opt(arm_vs_scalar_arm)
         );
         std::fs::write("BENCH_sas.json", &payload)
             .expect("write BENCH_sas.json");

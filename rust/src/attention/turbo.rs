@@ -291,10 +291,11 @@ pub fn turbo_decode_into(
 /// verbatim as the reference implementation the kernelized
 /// [`turbo_decode_into`] is property-tested and benchmarked against
 /// (`decode_bench --json` records the speedup); not for hot-path use.
+/// Built on the scalar kernel arm directly (never dispatched), so it
+/// stays a fixed baseline whatever ISA the process selected.
 ///
-/// [`idot`]: crate::tensor::idot
+/// [`idot`]: crate::kernels::scalar::idot
 #[allow(clippy::too_many_arguments)]
-#[allow(deprecated)] // deliberately built on the deprecated scalar idot
 pub fn turbo_decode_into_scalar(
     q: &[f32],
     k8: &[i8],
@@ -307,7 +308,7 @@ pub fn turbo_decode_into_scalar(
     scratch: &mut DecodeScratch,
     out: &mut [f32],
 ) -> (f32, f32) {
-    use crate::tensor::idot;
+    use crate::kernels::scalar::idot;
     let d = q.len();
     assert_eq!(out.len(), d);
     assert!(k8.len() >= nk * d && v8.len() >= nk * d);

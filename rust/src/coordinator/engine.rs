@@ -199,7 +199,13 @@ impl Engine {
             sessions: HashMap::new(),
             prefix_index,
             next_id: 1,
-            metrics: EngineMetrics::default(),
+            metrics: EngineMetrics {
+                // Pin + report the kernel ISA this engine will run; the
+                // backend choice is process-wide and sticky, so one
+                // engine cannot mix arms across decode steps.
+                kernel_backend: crate::kernels::kernel_backend().name(),
+                ..EngineMetrics::default()
+            },
             ttft_hist: Histogram::new(),
             latency_hist: Histogram::new(),
             itl_hist: Histogram::new(),

@@ -1,0 +1,190 @@
+//! Runtime kernel-backend selection.
+//!
+//! The backend is picked **once** per process (a [`OnceLock`]), in this
+//! priority order:
+//!
+//! 1. [`force_kernel_backend`] — the `--kernel-backend` CLI flag, which
+//!    `main` applies before any kernel runs, so it wins over the env.
+//! 2. The `TURBO_KERNEL` env var (`scalar` | `avx2` | `neon` | `auto`).
+//! 3. Auto-detection: AVX2 via `is_x86_feature_detected!` on x86_64,
+//!    NEON unconditionally on aarch64 (baseline ISA there), scalar
+//!    everywhere else.
+//!
+//! Requesting an ISA the host cannot run is an error, and an invalid
+//! `TURBO_KERNEL` value panics on first kernel use — CLI-boundary
+//! fail-fast, same policy as the arg parser. There is deliberately no
+//! way to change the backend after first use: a mid-run switch would
+//! let two decode steps of one request run different code paths, which
+//! the determinism contract (thread-count-invariant, bit-exact decode)
+//! is not allowed to depend on. It never *breaks* it — every backend is
+//! bit-identical — but a single sticky choice keeps "which ISA produced
+//! this number" a per-process fact that [`crate::metrics`] can report.
+
+use std::sync::OnceLock;
+
+/// The kernel ISA actually dispatched to. All variants exist on every
+/// target so that match arms and string parsing stay portable; whether
+/// a variant is *runnable* on this host is [`KernelBackend::supported`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Portable Rust loops — fallback arm and property-test oracle.
+    Scalar,
+    /// x86-64 AVX2: `pmaddwd` i8→i32 dot chains, 8-lane f32 SAS.
+    Avx2,
+    /// aarch64 NEON: `smull`/`sadalp` dot chains, 4-lane f32 SAS.
+    Neon,
+}
+
+impl KernelBackend {
+    /// Stable lowercase name — the `TURBO_KERNEL` / `--kernel-backend`
+    /// vocabulary, and what `STATS` / bench JSON report.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Neon => "neon",
+        }
+    }
+
+    /// Can this host actually execute the backend?
+    pub fn supported(self) -> bool {
+        match self {
+            KernelBackend::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            KernelBackend::Neon => true, // NEON is baseline on aarch64
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+}
+
+/// Best backend the host supports (priority 3 above).
+fn detect_best() -> KernelBackend {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return KernelBackend::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    return KernelBackend::Neon;
+    #[allow(unreachable_code)]
+    KernelBackend::Scalar
+}
+
+/// Pure selection logic (testable without touching process state):
+/// `None` / `""` / `"auto"` auto-detect; a named backend must be
+/// supported by this host or the request is an error.
+pub fn select(requested: Option<&str>) -> Result<KernelBackend, String> {
+    let want = match requested.map(str::trim) {
+        None | Some("") | Some("auto") => return Ok(detect_best()),
+        Some("scalar") => KernelBackend::Scalar,
+        Some("avx2") => KernelBackend::Avx2,
+        Some("neon") => KernelBackend::Neon,
+        Some(other) => {
+            return Err(format!(
+                "unknown kernel backend {other:?} (expected scalar|avx2|neon|auto)"
+            ))
+        }
+    };
+    if !want.supported() {
+        return Err(format!(
+            "kernel backend {:?} is not supported on this host",
+            want.name()
+        ));
+    }
+    Ok(want)
+}
+
+static BACKEND: OnceLock<KernelBackend> = OnceLock::new();
+
+/// The process-wide backend, resolving `TURBO_KERNEL` on first use.
+/// Panics (fail-fast) if the env names an unknown or unsupported
+/// backend — better a loud startup error than silently benchmarking the
+/// wrong ISA.
+#[inline]
+pub fn kernel_backend() -> KernelBackend {
+    *BACKEND.get_or_init(|| {
+        let env = std::env::var("TURBO_KERNEL").ok();
+        select(env.as_deref())
+            .unwrap_or_else(|e| panic!("TURBO_KERNEL: {e}"))
+    })
+}
+
+/// Force the backend (the `--kernel-backend` CLI path). Must run before
+/// any kernel executes; errs if the name is invalid, the host cannot
+/// run it, or a different backend was already pinned.
+pub fn force_kernel_backend(name: &str) -> Result<KernelBackend, String> {
+    let want = select(Some(name))?;
+    let got = *BACKEND.get_or_init(|| want);
+    if got != want {
+        return Err(format!(
+            "kernel backend already pinned to {:?}; cannot switch to {:?}",
+            got.name(),
+            want.name()
+        ));
+    }
+    Ok(got)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(KernelBackend::Scalar.name(), "scalar");
+        assert_eq!(KernelBackend::Avx2.name(), "avx2");
+        assert_eq!(KernelBackend::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn select_scalar_always_works() {
+        assert_eq!(select(Some("scalar")), Ok(KernelBackend::Scalar));
+        assert_eq!(select(Some("  scalar ")), Ok(KernelBackend::Scalar));
+    }
+
+    #[test]
+    fn select_auto_detects_a_supported_backend() {
+        for req in [None, Some(""), Some("auto")] {
+            let got = select(req).expect("auto must always resolve");
+            assert!(got.supported(), "{:?} not runnable here", got.name());
+        }
+    }
+
+    #[test]
+    fn select_rejects_unknown_names() {
+        let err = select(Some("sse9")).unwrap_err();
+        assert!(err.contains("unknown kernel backend"), "{err}");
+    }
+
+    #[test]
+    fn select_rejects_unsupported_isa() {
+        // At most one of avx2/neon is runnable on any host; the other
+        // must be refused rather than dispatched to an illegal path.
+        for name in ["avx2", "neon"] {
+            let want = select(Some(name));
+            match want {
+                Ok(b) => assert!(b.supported()),
+                Err(e) => assert!(e.contains("not supported"), "{e}"),
+            }
+        }
+        assert!(
+            select(Some("avx2")).is_err() || select(Some("neon")).is_err(),
+            "avx2 and neon cannot both be native"
+        );
+    }
+
+    #[test]
+    fn process_backend_is_sticky_and_supported() {
+        let b = kernel_backend();
+        assert!(b.supported());
+        assert_eq!(kernel_backend(), b, "must not change between calls");
+        // Re-forcing the same backend is fine; a different one errs.
+        assert_eq!(force_kernel_backend(b.name()), Ok(b));
+        let other = if b == KernelBackend::Scalar { "avx2" } else { "scalar" };
+        if select(Some(other)).is_ok() {
+            assert!(force_kernel_backend(other).is_err());
+        }
+    }
+}

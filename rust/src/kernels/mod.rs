@@ -1,174 +1,129 @@
 //! Integer-domain attention micro-kernels — the CPU stand-ins for the
-//! paper's INT8 tensor-core tiles, written so rustc's autovectorizer can
-//! keep the hot loops in SIMD integer arithmetic.
+//! paper's INT8 tensor-core tiles, now with explicit SIMD arms behind a
+//! runtime dispatch layer.
 //!
-//! Three kernels cover both Turbo block loops (Algorithm 1 prefill tiles
-//! and Algorithm 2 decode blocks):
+//! Three kernels cover both Turbo block loops (Algorithm 1 prefill
+//! tiles and Algorithm 2 decode blocks):
 //!
-//! * [`idot_mr`] / [`qk_dot_block`] — multi-row QK^T: [`MR`] key rows per
-//!   pass against one quantized query, with one independent `i32`
-//!   accumulator per row and fixed-width chunked slices, so there are no
-//!   per-index bounds checks and the query chunk is loaded once per pass
-//!   instead of once per row.
-//! * [`ipv_acc`] — P·V accumulation kept **entirely in `i32`**. The
-//!   caller applies the fused `p_scale * v_scale` product once per block
-//!   per output element, instead of converting and scaling every
-//!   `i32` product individually (§3's "one dequantization per tile").
-//! * The batched SAS evaluator lives with its tables:
-//!   [`Sas::exp_block`](crate::sas::Sas::exp_block).
+//! * [`idot_mr`] / [`qk_dot_block`] — multi-row QK^T: [`MR`] key rows
+//!   per pass against one quantized query, one independent `i32`
+//!   accumulator per row.
+//! * [`ipv_acc`] — P·V accumulation kept **entirely in `i32`**; the
+//!   caller applies the fused `p_scale * v_scale` once per block per
+//!   output element (§3's "one dequantization per tile").
+//! * [`sas_exp_block`] — the batched SAS shift-exp-and-sum
+//!   ([`crate::sas::Sas::exp_block`] is the caller-facing wrapper that
+//!   owns the LUT).
 //!
-//! # No-overflow contract
+//! # Dispatch architecture
 //!
-//! INT8 codes are bounded by 128 in magnitude (the quantizers emit
-//! [-127, 127]; the kernels stay exact even for a hostile `-128`), so a
-//! product is at most `128 * 128 = 16384` and an `i32` accumulator holds
-//! at least [`ACC_MAX_ROWS`] (= `i32::MAX / 16384` = 131071) terms with
-//! **zero** possibility of wraparound. Both accumulation kernels assert
-//! this bound. Attention blocks are `bc` tokens (64 in the paper, ≤ 1024
-//! anywhere in this repo), so the bound is ~128x away from real
-//! workloads; the assert exists to make the contract loud, not to be
-//! hit. Within the bound, integer accumulation is *exact* and therefore
-//! order-independent — reordering rows or chunks cannot change a bit of
-//! the result, which strengthens the decode determinism contract.
+//! Each kernel has up to three arms: [`scalar`] (portable Rust, always
+//! compiled), [`x86`] (AVX2, compiled on x86-64) and [`neon`] (aarch64).
+//! The public functions in this module validate shapes, then route to
+//! the arm picked **once per process** by [`dispatch`]: the
+//! `--kernel-backend` CLI flag wins, then the `TURBO_KERNEL` env var
+//! (`scalar` | `avx2` | `neon` | `auto`), then auto-detection
+//! (`is_x86_feature_detected!("avx2")` on x86-64; NEON is baseline on
+//! aarch64). `TURBO_KERNEL=scalar` forces the oracle arm — the first
+//! thing to try when bisecting a suspected kernel bug. The selected arm
+//! is reported in `STATS`, `gen` output and the bench JSON so numbers
+//! stay attributable to the ISA that produced them.
+//!
+//! # Why SIMD cannot change results
+//!
+//! INT8 codes are bounded by 128 in magnitude, so a product is at most
+//! `128 * 128 = 16384` and an `i32` accumulator holds at least
+//! [`ACC_MAX_ROWS`] (= `i32::MAX / 16384` = 131071) terms with **zero**
+//! possibility of wraparound — both accumulation kernels assert the
+//! bound. Within it, integer accumulation is *exact* and therefore
+//! order-independent: regrouping terms into SIMD lanes cannot change a
+//! bit of the result, which is why swapping arms preserves the decode
+//! determinism contract (`parallel_parity` bit-equality) and why "SIMD
+//! == scalar, bitwise" is a property test rather than a tolerance. The
+//! f32 SAS evaluator has no such algebraic shield, so its SIMD arms
+//! instead replicate the scalar arm's exact op sequence (no FMA, no
+//! reassociation, same NaN-edge semantics) and sum in slice order —
+//! see [`x86`]/[`neon`] module docs for the per-intrinsic argument.
 //!
 //! # Who owns scales
 //!
 //! Kernels never see scales. Quantization scales (`q_scale * k_scale *
 //! 1/sqrt(d)` for scores, `p_scale * v_scale` for P·V) are owned by the
-//! caller ([`crate::attention::turbo`]), which applies them exactly once
-//! per block on the `i32` results. Keeping scales out of the inner loops
-//! is what keeps them integer-only.
+//! caller ([`crate::attention::turbo`]), which applies them exactly
+//! once per block on the `i32` results. Keeping scales out of the
+//! inner loops is what keeps them integer-only.
+
+pub mod dispatch;
+pub mod neon;
+pub mod scalar;
+pub mod x86;
+
+pub use dispatch::{force_kernel_backend, kernel_backend, KernelBackend};
 
 /// Key rows computed per [`idot_mr`] pass.
 pub const MR: usize = 4;
-
-/// Lanes per inner-loop chunk — wide enough for one AVX2 register of
-/// i16 products after widening, small enough that the ragged tail stays
-/// cheap at the repo's head dims (16–64).
-const LANES: usize = 16;
 
 /// Largest number of i8·i8 products one `i32` accumulator is proven to
 /// hold exactly: `i32::MAX / (128 * 128)`.
 pub const ACC_MAX_ROWS: usize = (i32::MAX / (128 * 128)) as usize;
 
-/// Single-row chunked integer dot product (the `MR`-kernel's tail case).
-///
-/// Same result as the scalar reference [`crate::tensor::idot`] — integer
-/// accumulation is exact, so chunking cannot change the sum.
-#[inline]
-fn idot_1(a: &[i8], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0i32;
-    let mut ca = a.chunks_exact(LANES);
-    let mut cb = b.chunks_exact(LANES);
-    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
-        let mut s = 0i32;
-        for j in 0..LANES {
-            s += xa[j] as i32 * xb[j] as i32;
-        }
-        acc += s;
-    }
-    for (&xa, &xb) in ca.remainder().iter().zip(cb.remainder()) {
-        acc += xa as i32 * xb as i32;
-    }
-    acc
-}
-
 /// Multi-row QK^T micro-kernel: dot `q` against [`MR`] key rows stored
 /// contiguously in `k4` (`k4.len() == MR * q.len()`), returning one
-/// independent `i32` accumulator per row.
+/// independent `i32` accumulator per row. Dispatches to the selected
+/// backend arm; all arms are bit-identical (exact `i32` accumulation).
 ///
-/// One pass over `q` serves all four rows — the query chunk is loaded
-/// once per [`LANES`]-wide step instead of once per row, and the four
-/// accumulators give the autovectorizer independent dependency chains.
-/// All slices are consumed through `chunks_exact`, so the inner loop has
-/// no bounds checks.
-///
-/// `q.len()` (the head dim) counts one product per accumulator term and
-/// is far below [`ACC_MAX_ROWS`] everywhere in this repo; the result is
-/// exact for every i8 value including `-128`.
+/// `q.len()` (the head dim) counts one product per accumulator term
+/// and is far below [`ACC_MAX_ROWS`] everywhere in this repo; the
+/// result is exact for every i8 value including `-128`.
 #[inline]
 pub fn idot_mr(q: &[i8], k4: &[i8]) -> [i32; MR] {
-    let d = q.len();
-    assert_eq!(k4.len(), MR * d, "k4 must hold exactly MR rows");
-    debug_assert!(d <= ACC_MAX_ROWS);
-    let (k0, rest) = k4.split_at(d);
-    let (k1, rest) = rest.split_at(d);
-    let (k2, k3) = rest.split_at(d);
-    let mut acc = [0i32; MR];
-    let mut cq = q.chunks_exact(LANES);
-    let mut c0 = k0.chunks_exact(LANES);
-    let mut c1 = k1.chunks_exact(LANES);
-    let mut c2 = k2.chunks_exact(LANES);
-    let mut c3 = k3.chunks_exact(LANES);
-    loop {
-        let (Some(xq), Some(x0), Some(x1), Some(x2), Some(x3)) =
-            (cq.next(), c0.next(), c1.next(), c2.next(), c3.next())
-        else {
-            break;
-        };
-        let mut s = [0i32; MR];
-        for j in 0..LANES {
-            let qv = xq[j] as i32;
-            s[0] += qv * x0[j] as i32;
-            s[1] += qv * x1[j] as i32;
-            s[2] += qv * x2[j] as i32;
-            s[3] += qv * x3[j] as i32;
-        }
-        for (a, sv) in acc.iter_mut().zip(s) {
-            *a += sv;
-        }
+    assert_eq!(k4.len(), MR * q.len(), "k4 must hold exactly MR rows");
+    debug_assert!(q.len() <= ACC_MAX_ROWS);
+    match kernel_backend() {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe { x86::idot_mr(q, k4) },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe { neon::idot_mr(q, k4) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::idot_mr(q, k4),
     }
-    let rq = cq.remainder();
-    let tails = [
-        c0.remainder(),
-        c1.remainder(),
-        c2.remainder(),
-        c3.remainder(),
-    ];
-    for (a, tail) in acc.iter_mut().zip(tails) {
-        for (&qv, &kv) in rq.iter().zip(tail) {
-            *a += qv as i32 * kv as i32;
-        }
-    }
-    acc
 }
 
 /// QK^T over one whole key block: `k` holds `k.len() / d` contiguous
 /// rows of width `d`; writes `out[r] = q · k_row[r]` for every row.
-/// Rows are processed [`MR`] at a time via [`idot_mr`] with a chunked
-/// single-row tail, so ragged block lengths (the last cache block) cost
-/// only the remainder rows.
+/// Rows are processed [`MR`] at a time with a single-row tail, so
+/// ragged block lengths (the last cache block) cost only the remainder
+/// rows. Dispatches to the selected backend arm.
 #[inline]
 pub fn qk_dot_block(q: &[i8], k: &[i8], d: usize, out: &mut [i32]) {
     assert!(d > 0, "head dim must be positive");
     debug_assert_eq!(k.len() % d, 0);
     let rows = k.len() / d;
     assert!(out.len() >= rows, "out must hold one score per key row");
-    let mut r = 0usize;
-    while r + MR <= rows {
-        let scores = idot_mr(q, &k[r * d..(r + MR) * d]);
-        out[r..r + MR].copy_from_slice(&scores);
-        r += MR;
-    }
-    for rr in r..rows {
-        out[rr] = idot_1(q, &k[rr * d..(rr + 1) * d]);
+    match kernel_backend() {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe { x86::qk_dot_block(q, k, d, out) },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe { neon::qk_dot_block(q, k, d, out) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::qk_dot_block(q, k, d, out),
     }
 }
 
 /// P·V accumulation for one block, exact in `i32`:
-/// `acc[j] = Σ_c p8[c] * v8[c * d + j]` over all `p8.len()` rows of `v8`.
-///
-/// `acc` is overwritten (per-block accumulator — the caller folds it
-/// into the running f32 output with a **single** `p_scale * v_scale`
-/// multiply per element). Zero probability codes skip their row — SAS
-/// sparsity makes whole rows zero below the `n_r` threshold, and a
-/// skipped row adds exactly 0, so the short-circuit cannot change the
-/// (exact) sum.
+/// `acc[j] = Σ_c p8[c] * v8[c * d + j]` over all `p8.len()` rows of
+/// `v8`. `acc[..d]` is overwritten (per-block accumulator — the caller
+/// folds it into the running f32 output with a **single**
+/// `p_scale * v_scale` multiply per element). Zero probability codes
+/// skip their row in every arm — SAS sparsity makes whole rows zero
+/// below the `n_r` threshold, and a skipped row adds exactly 0, so the
+/// short-circuit cannot change the (exact) sum.
 ///
 /// Panics if the row count exceeds [`ACC_MAX_ROWS`] — beyond that the
 /// `i32` no-overflow proof (`rows * 128 * 128 <= i32::MAX`) stops
-/// holding. Every caller in this crate passes `bc <= 1024` rows.
+/// holding. Every caller in this crate passes `bc <= 1024` rows. The
+/// check lives here, before dispatch, so the contract is identical for
+/// every backend arm.
 #[inline]
 pub fn ipv_acc(p8: &[i8], v8: &[i8], d: usize, acc: &mut [i32]) {
     assert!(d > 0, "head dim must be positive");
@@ -179,26 +134,40 @@ pub fn ipv_acc(p8: &[i8], v8: &[i8], d: usize, acc: &mut [i32]) {
     );
     assert!(v8.len() >= rows * d, "v8 must hold one row per p code");
     assert!(acc.len() >= d, "acc must hold d lanes");
-    let acc = &mut acc[..d];
-    acc.fill(0);
-    for (c, &pc) in p8.iter().enumerate() {
-        if pc == 0 {
-            continue;
-        }
-        let w = pc as i32;
-        let v_row = &v8[c * d..(c + 1) * d];
-        for (a, &vv) in acc.iter_mut().zip(v_row) {
-            *a += w * vv as i32;
-        }
+    match kernel_backend() {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe { x86::ipv_acc(p8, v8, d, acc) },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe { neon::ipv_acc(p8, v8, d, acc) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::ipv_acc(p8, v8, d, acc),
+    }
+}
+
+/// Batched SAS shift-exp-and-sum: `row[i] <- SAS_exp(row[i] - m)`,
+/// returning the sum of the results. `lut` holds `depth + 2` entries
+/// (`e^-i` for `0..=depth`, then `0.0`); `n_r` is the sparsity
+/// threshold. All arms are bit-identical to the scalar evaluator —
+/// the SIMD arms replicate its f32 op sequence exactly (see module
+/// docs). Callers go through [`crate::sas::Sas::exp_block`], which
+/// owns the tables.
+#[inline]
+pub fn sas_exp_block(lut: &[f32], depth: usize, n_r: f32, row: &mut [f32], m: f32) -> f32 {
+    assert_eq!(lut.len(), depth + 2, "lut must hold depth + 2 entries");
+    match kernel_backend() {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe { x86::sas_exp_block(lut, depth, n_r, row, m) },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe { neon::sas_exp_block(lut, depth, n_r, row, m) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::sas_exp_block(lut, depth, n_r, row, m),
     }
 }
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // tensor::idot stays the scalar oracle here
-
     use super::*;
-    use crate::tensor::idot;
+    use crate::kernels::scalar::idot;
     use crate::testutil::prop;
 
     fn gen_codes(g: &mut prop::Gen, n: usize) -> Vec<i8> {
@@ -215,11 +184,16 @@ mod tests {
             .collect()
     }
 
+    // These property tests run against whichever arm the process
+    // dispatched to (CI's kernel matrix covers scalar and the detected
+    // SIMD arm), always comparing to the elementary scalar oracle. The
+    // arm-specific bitwise tests live in x86.rs / neon.rs.
+
     #[test]
     fn idot_mr_matches_scalar_reference() {
         prop::run("idot_mr == idot x4", 60, |g| {
             // Ragged widths around the chunk size, incl. d < LANES.
-            let d = g.usize_in(1, 3 * LANES + 3);
+            let d = g.usize_in(1, 3 * scalar::LANES + 3);
             let q = gen_codes(g, d);
             let k4 = gen_codes(g, MR * d);
             let got = idot_mr(&q, &k4);
@@ -303,11 +277,38 @@ mod tests {
     #[test]
     #[should_panic(expected = "overflow")]
     fn ipv_acc_rejects_rows_beyond_the_proof() {
+        // The bound is checked in the dispatching wrapper, before any
+        // arm runs, so the contract is backend-independent.
         let rows = ACC_MAX_ROWS + 1;
         let p8 = vec![1i8; rows];
         let v8 = vec![1i8; rows];
         let mut acc = vec![0i32; 1];
         ipv_acc(&p8, &v8, 1, &mut acc);
+    }
+
+    #[test]
+    fn dispatched_kernels_bit_identical_to_scalar_arm() {
+        // Whatever arm this process runs, results must match the scalar
+        // arm bit-for-bit — the cross-arm half of the determinism
+        // contract (the arm-internal half is in x86/neon tests).
+        prop::run("dispatch == scalar arm", 60, |g| {
+            let d = g.usize_in(1, 67);
+            let rows = g.usize_in(0, 12);
+            let q = gen_codes(g, d);
+            let k = gen_codes(g, rows * d);
+            let mut a = vec![0i32; rows];
+            let mut b = vec![0i32; rows];
+            qk_dot_block(&q, &k, d, &mut a);
+            scalar::qk_dot_block(&q, &k, d, &mut b);
+            assert_eq!(a, b, "qk d={d} rows={rows}");
+            let p8 = gen_codes(g, rows);
+            let v8 = gen_codes(g, rows * d);
+            let mut aa = vec![-1i32; d];
+            let mut bb = vec![-1i32; d];
+            ipv_acc(&p8, &v8, d, &mut aa);
+            scalar::ipv_acc(&p8, &v8, d, &mut bb);
+            assert_eq!(aa, bb, "ipv d={d} rows={rows}");
+        });
     }
 
     #[test]

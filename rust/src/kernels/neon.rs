@@ -1,0 +1,346 @@
+//! NEON kernel arm (aarch64).
+//!
+//! Integer kernels use the textbook exact i8 dot chain: `smull` widens
+//! i8×i8 products to i16 (≤ 16384 in magnitude, never saturates) and
+//! `sadalp` pairwise-accumulates them into i32 lanes — exact for every
+//! input including `-128`, so under the
+//! [`ACC_MAX_ROWS`](super::ACC_MAX_ROWS) contract the lane regrouping
+//! cannot change a bit of any result.
+//!
+//! The SAS evaluator mirrors [`super::scalar::sas_exp_block`]'s f32 op
+//! sequence per element: separate mul/add (no `vfmaq`/`vmlaq` — rustc
+//! does not contract the scalar path to FMA), `vcgeq` for the `>=` mask
+//! (false on NaN), **`vminnmq`** for the cap clamp (FMINNM returns the
+//! non-NaN operand, matching `f32::min`; plain FMIN would propagate
+//! NaN), saturating-truncating `fcvtzs` (same saturation as Rust's
+//! `as i32`), and an unsigned-min index clamp reproducing the
+//! `(ti as usize).min(depth + 1)` wraparound for negative `ti`. The
+//! LUT gather is 4 scalar loads through a spilled index vector — NEON
+//! has no gather. The written row is folded in slice order afterwards,
+//! which is the scalar evaluator's exact summation order.
+//!
+//! NEON is baseline on aarch64, so these fns are safe to call on any
+//! aarch64 host; dispatch still routes through [`super::dispatch`] so
+//! `TURBO_KERNEL=scalar` can force the oracle arm.
+
+#![cfg(target_arch = "aarch64")]
+
+use core::arch::aarch64::*;
+
+use super::MR;
+use crate::sas::SAS_POLY;
+
+/// Fold 16 i8 lanes of products from `a`/`b` into four i32 accumulator
+/// lanes (exact: smull → i16, sadalp pairwise into i32).
+///
+/// # Safety
+/// `a` and `b` must be readable for 16 bytes.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn dot16(acc: int32x4_t, a: *const i8, b: *const i8) -> int32x4_t {
+    let va = vld1q_s8(a);
+    let vb = vld1q_s8(b);
+    let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
+    let hi = vmull_s8(vget_high_s8(va), vget_high_s8(vb));
+    vpadalq_s16(vpadalq_s16(acc, lo), hi)
+}
+
+/// Single-row integer dot product, NEON arm.
+///
+/// # Safety
+/// `a.len() == b.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn idot_1(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let d = a.len();
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i + 16 <= d {
+        acc = dot16(acc, a.as_ptr().add(i), b.as_ptr().add(i));
+        i += 16;
+    }
+    let mut s = vaddvq_s32(acc);
+    while i < d {
+        s += *a.get_unchecked(i) as i32 * *b.get_unchecked(i) as i32;
+        i += 1;
+    }
+    s
+}
+
+/// Multi-row QK^T micro-kernel, NEON arm: the query vector is loaded
+/// once per 16-lane step and reused across all [`MR`] key rows.
+///
+/// # Safety
+/// `k4.len() == MR * q.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn idot_mr(q: &[i8], k4: &[i8]) -> [i32; MR] {
+    let d = q.len();
+    debug_assert_eq!(k4.len(), MR * d);
+    let mut acc = [vdupq_n_s32(0); MR];
+    let qp = q.as_ptr();
+    let kp = k4.as_ptr();
+    let mut i = 0usize;
+    while i + 16 <= d {
+        let vq = vld1q_s8(qp.add(i));
+        let (ql, qh) = (vget_low_s8(vq), vget_high_s8(vq));
+        for (r, a) in acc.iter_mut().enumerate() {
+            let vk = vld1q_s8(kp.add(r * d + i));
+            let lo = vmull_s8(ql, vget_low_s8(vk));
+            let hi = vmull_s8(qh, vget_high_s8(vk));
+            *a = vpadalq_s16(vpadalq_s16(*a, lo), hi);
+        }
+        i += 16;
+    }
+    let mut out = [0i32; MR];
+    for (r, o) in out.iter_mut().enumerate() {
+        let mut s = vaddvq_s32(acc[r]);
+        for j in i..d {
+            s += *q.get_unchecked(j) as i32 * *k4.get_unchecked(r * d + j) as i32;
+        }
+        *o = s;
+    }
+    out
+}
+
+/// QK^T over one whole key block, NEON arm.
+///
+/// # Safety
+/// Shapes validated by the public wrapper (`k.len() % d == 0`,
+/// `out.len() >= k.len() / d`, `d > 0`).
+#[target_feature(enable = "neon")]
+pub unsafe fn qk_dot_block(q: &[i8], k: &[i8], d: usize, out: &mut [i32]) {
+    let rows = k.len() / d;
+    debug_assert!(out.len() >= rows);
+    let mut r = 0usize;
+    while r + MR <= rows {
+        let scores = idot_mr(q, &k[r * d..(r + MR) * d]);
+        out[r..r + MR].copy_from_slice(&scores);
+        r += MR;
+    }
+    for rr in r..rows {
+        out[rr] = idot_1(q, &k[rr * d..(rr + 1) * d]);
+    }
+}
+
+/// P·V accumulation, NEON arm: broadcast the probability code, `smull`
+/// eight value lanes to exact i16 products, widen to i32 and add into
+/// the accumulator. Keeps the `pc == 0` row skip (SAS sparsity).
+///
+/// # Safety
+/// Shapes validated by the public wrapper (`rows <= ACC_MAX_ROWS`,
+/// `v8.len() >= rows * d`, `acc.len() >= d`).
+#[target_feature(enable = "neon")]
+pub unsafe fn ipv_acc(p8: &[i8], v8: &[i8], d: usize, acc: &mut [i32]) {
+    let acc = &mut acc[..d];
+    acc.fill(0);
+    let ap = acc.as_mut_ptr();
+    for (c, &pc) in p8.iter().enumerate() {
+        if pc == 0 {
+            continue;
+        }
+        let w8 = vdup_n_s8(pc);
+        let w = pc as i32;
+        let vp = v8.as_ptr().add(c * d);
+        let mut j = 0usize;
+        while j + 8 <= d {
+            let prod = vmull_s8(w8, vld1_s8(vp.add(j)));
+            let lo = vmovl_s16(vget_low_s16(prod));
+            let hi = vmovl_s16(vget_high_s16(prod));
+            vst1q_s32(ap.add(j), vaddq_s32(vld1q_s32(ap.add(j)), lo));
+            vst1q_s32(ap.add(j + 4), vaddq_s32(vld1q_s32(ap.add(j + 4)), hi));
+            j += 8;
+        }
+        while j < d {
+            *acc.get_unchecked_mut(j) += w * *vp.add(j) as i32;
+            j += 1;
+        }
+    }
+}
+
+/// Batched SAS shift-exp-and-sum, NEON arm — four f32 lanes through the
+/// scalar arm's exact op sequence (module docs carry the bit-exactness
+/// argument), scalar tail for `n % 4`, then one in-order fold over the
+/// written row.
+///
+/// # Safety
+/// `lut.len() == depth + 2`.
+#[target_feature(enable = "neon")]
+pub unsafe fn sas_exp_block(
+    lut: &[f32],
+    depth: usize,
+    n_r: f32,
+    row: &mut [f32],
+    m: f32,
+) -> f32 {
+    debug_assert_eq!(lut.len(), depth + 2);
+    let [c3, c2, c1, c0] = SAS_POLY;
+    let cap = (depth + 1) as f32;
+    let n = row.len();
+    let rp = row.as_mut_ptr();
+    let vm = vdupq_n_f32(m);
+    let vnr = vdupq_n_f32(n_r);
+    let vcap = vdupq_n_f32(cap);
+    let vone = vreinterpretq_u32_f32(vdupq_n_f32(1.0));
+    let vidx_cap = vdupq_n_u32((depth + 1) as u32);
+    let (vc3, vc2, vc1, vc0) = (
+        vdupq_n_f32(c3),
+        vdupq_n_f32(c2),
+        vdupq_n_f32(c1),
+        vdupq_n_f32(c0),
+    );
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let xx = vsubq_f32(vld1q_f32(rp.add(i)), vm);
+        // (xx >= n_r) as f32: vcgeq is false on NaN like the scalar >=.
+        let live = vreinterpretq_f32_u32(vandq_u32(vcgeq_f32(xx, vnr), vone));
+        // (-xx).min(cap): FMINNM returns the non-NaN operand, matching
+        // f32::min with a never-NaN cap (plain FMIN would give NaN).
+        let t = vminnmq_f32(vnegq_f32(xx), vcap);
+        // `t as i32`: fcvtzs truncates toward zero and saturates on
+        // overflow — identical to Rust's saturating cast.
+        let ti = vcvtq_s32_f32(t);
+        let td = vsubq_f32(t, vcvtq_f32_s32(ti));
+        // (ti as usize).min(depth + 1): negative ti reinterprets as a
+        // huge unsigned value, so an unsigned min clamps it to the zero
+        // LUT slot exactly like the scalar usize cast.
+        let idx = vminq_u32(vreinterpretq_u32_s32(ti), vidx_cap);
+        // NEON has no gather: spill the indices and load 4 LUT entries.
+        let mut ix = [0u32; 4];
+        vst1q_u32(ix.as_mut_ptr(), idx);
+        let gathered = [
+            lut[ix[0] as usize],
+            lut[ix[1] as usize],
+            lut[ix[2] as usize],
+            lut[ix[3] as usize],
+        ];
+        let lv = vld1q_f32(gathered.as_ptr());
+        // Horner with separate mul/add — no FMA, matching the scalar arm.
+        let mut p = vaddq_f32(vmulq_f32(vc3, td), vc2);
+        p = vaddq_f32(vmulq_f32(p, td), vc1);
+        p = vaddq_f32(vmulq_f32(p, td), vc0);
+        let v = vmulq_f32(vmulq_f32(live, lv), p);
+        vst1q_f32(rp.add(i), v);
+        i += 4;
+    }
+    // Scalar tail: the literal scalar-arm body.
+    for x in row[i..].iter_mut() {
+        let xx = *x - m;
+        let live = (xx >= n_r) as u32 as f32;
+        let t = (-xx).min(cap);
+        let ti = t as i32;
+        let td = t - ti as f32;
+        let idx = (ti as usize).min(depth + 1);
+        let poly = ((c3 * td + c2) * td + c1) * td + c0;
+        *x = (live * lut[idx]) * poly;
+    }
+    // In-order fold == the scalar evaluator's interleaved running sum.
+    let mut sum = 0.0f32;
+    for &v in row.iter() {
+        sum += v;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    //! Bitwise scalar-oracle parity for the NEON arm (NEON is baseline
+    //! on aarch64, so no runtime guard is needed).
+
+    use super::*;
+    use crate::kernels::scalar;
+    use crate::sas::Sas;
+    use crate::testutil::prop;
+
+    fn gen_codes(g: &mut prop::Gen, n: usize) -> Vec<i8> {
+        (0..n)
+            .map(|_| match g.usize_in(0, 8) {
+                0 => 127,
+                1 => -127,
+                2 => -128,
+                _ => (g.usize_in(0, 255) as i32 - 127) as i8,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn idot_mr_bit_identical_to_scalar() {
+        prop::run("neon idot_mr == scalar", 80, |g| {
+            let d = g.usize_in(1, 67);
+            let q = gen_codes(g, d);
+            let k4 = gen_codes(g, MR * d);
+            let got = unsafe { idot_mr(&q, &k4) };
+            assert_eq!(got, scalar::idot_mr(&q, &k4), "d={d}");
+        });
+    }
+
+    #[test]
+    fn idot_mr_exact_at_i8_extremes() {
+        for d in [1, 15, 16, 17, 64] {
+            let q = vec![-128i8; d];
+            for fill in [-128i8, 127] {
+                let k4 = vec![fill; MR * d];
+                let got = unsafe { idot_mr(&q, &k4) };
+                assert_eq!(got, scalar::idot_mr(&q, &k4), "d={d} fill={fill}");
+            }
+        }
+    }
+
+    #[test]
+    fn qk_dot_block_bit_identical_to_scalar() {
+        prop::run("neon qk_dot_block == scalar", 60, |g| {
+            let d = g.usize_in(1, 50);
+            let rows = g.usize_in(0, 12);
+            let q = gen_codes(g, d);
+            let k = gen_codes(g, rows * d);
+            let mut a = vec![7i32; rows + 2];
+            let mut b = a.clone();
+            unsafe { qk_dot_block(&q, &k, d, &mut a) };
+            scalar::qk_dot_block(&q, &k, d, &mut b);
+            assert_eq!(a, b, "d={d} rows={rows}");
+        });
+    }
+
+    #[test]
+    fn ipv_acc_bit_identical_to_scalar() {
+        prop::run("neon ipv_acc == scalar", 80, |g| {
+            let d = g.usize_in(1, 67);
+            let rows = g.usize_in(0, 12);
+            let mut p8 = gen_codes(g, rows);
+            if !p8.is_empty() {
+                p8[g.usize_in(0, rows)] = 0; // exercise the zero-row skip
+            }
+            let v8 = gen_codes(g, rows * d);
+            let mut a = vec![-1i32; d];
+            let mut b = vec![i32::MAX; d];
+            unsafe { ipv_acc(&p8, &v8, d, &mut a) };
+            scalar::ipv_acc(&p8, &v8, d, &mut b);
+            assert_eq!(a, b, "d={d} rows={rows}");
+        });
+    }
+
+    #[test]
+    fn sas_exp_block_bit_identical_to_scalar() {
+        prop::run("neon sas_exp_block == scalar", 80, |g| {
+            let sas = if g.bool() { Sas::default() } else { Sas::new(-3.5) };
+            let (lut, depth, n_r) = sas.tables();
+            let n = g.usize_in(0, 20);
+            let m = g.f32_in(-2.0, 8.0);
+            let row: Vec<f32> = (0..n)
+                .map(|_| match g.usize_in(0, 5) {
+                    0 => m + n_r,
+                    1 => m + n_r - 1e-3,
+                    2 => m - 20.0,
+                    _ => m + g.f32_in(n_r, 0.0),
+                })
+                .collect();
+            let mut a = row.clone();
+            let mut b = row;
+            let sa = unsafe { sas_exp_block(lut, depth, n_r, &mut a, m) };
+            let sb = scalar::sas_exp_block(lut, depth, n_r, &mut b, m);
+            assert_eq!(sa.to_bits(), sb.to_bits(), "sum (n={n})");
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "elem {i} (n={n})");
+            }
+        });
+    }
+}

@@ -1,0 +1,188 @@
+//! Scalar reference kernels — the portable fallback arm of the dispatch
+//! layer and the **oracle** every SIMD backend is property-tested
+//! against (bit-for-bit, see the backend test modules).
+//!
+//! These are the original autovectorizer-friendly loops: fixed-width
+//! chunked slices, independent accumulators, no per-index bounds checks.
+//! They are correct on every target, and within the
+//! [`ACC_MAX_ROWS`](super::ACC_MAX_ROWS) no-overflow contract the `i32`
+//! accumulation is *exact*, so any backend that computes the same
+//! products — in any order, with any lane grouping — must produce the
+//! same bits. That is what makes "bit-identical to scalar" a testable
+//! property rather than a tolerance.
+//!
+//! Input validation (shape asserts, the overflow panic) lives in the
+//! public wrappers in [`super`]; the backends, this one included, may
+//! assume validated shapes and only `debug_assert!` them.
+
+use super::{ACC_MAX_ROWS, MR};
+use crate::sas::SAS_POLY;
+
+/// Lanes per inner-loop chunk — wide enough for one AVX2 register of
+/// i16 products after widening, small enough that the ragged tail stays
+/// cheap at the repo's head dims (16–64).
+pub(crate) const LANES: usize = 16;
+
+/// Elementary integer dot product — the simplest possible loop, kept as
+/// the root oracle for everything else (the chunked kernels, the SIMD
+/// backends, and the deprecated [`crate::tensor::idot`] shim all bottom
+/// out here in tests).
+#[inline]
+pub fn idot(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for (&xa, &xb) in a.iter().zip(b) {
+        acc += xa as i32 * xb as i32;
+    }
+    acc
+}
+
+/// Single-row chunked integer dot product (the `MR`-kernel's tail case).
+///
+/// Same result as [`idot`] — integer accumulation is exact, so chunking
+/// cannot change the sum.
+#[inline]
+pub(crate) fn idot_1(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        let mut s = 0i32;
+        for j in 0..LANES {
+            s += xa[j] as i32 * xb[j] as i32;
+        }
+        acc += s;
+    }
+    for (&xa, &xb) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += xa as i32 * xb as i32;
+    }
+    acc
+}
+
+/// Multi-row QK^T micro-kernel, scalar arm: dot `q` against [`MR`] key
+/// rows stored contiguously in `k4`, one independent `i32` accumulator
+/// per row. One pass over `q` serves all four rows and the four
+/// accumulators give the autovectorizer independent dependency chains.
+#[inline]
+pub fn idot_mr(q: &[i8], k4: &[i8]) -> [i32; MR] {
+    let d = q.len();
+    debug_assert_eq!(k4.len(), MR * d);
+    debug_assert!(d <= ACC_MAX_ROWS);
+    let (k0, rest) = k4.split_at(d);
+    let (k1, rest) = rest.split_at(d);
+    let (k2, k3) = rest.split_at(d);
+    let mut acc = [0i32; MR];
+    let mut cq = q.chunks_exact(LANES);
+    let mut c0 = k0.chunks_exact(LANES);
+    let mut c1 = k1.chunks_exact(LANES);
+    let mut c2 = k2.chunks_exact(LANES);
+    let mut c3 = k3.chunks_exact(LANES);
+    loop {
+        let (Some(xq), Some(x0), Some(x1), Some(x2), Some(x3)) =
+            (cq.next(), c0.next(), c1.next(), c2.next(), c3.next())
+        else {
+            break;
+        };
+        let mut s = [0i32; MR];
+        for j in 0..LANES {
+            let qv = xq[j] as i32;
+            s[0] += qv * x0[j] as i32;
+            s[1] += qv * x1[j] as i32;
+            s[2] += qv * x2[j] as i32;
+            s[3] += qv * x3[j] as i32;
+        }
+        for (a, sv) in acc.iter_mut().zip(s) {
+            *a += sv;
+        }
+    }
+    let rq = cq.remainder();
+    let tails = [
+        c0.remainder(),
+        c1.remainder(),
+        c2.remainder(),
+        c3.remainder(),
+    ];
+    for (a, tail) in acc.iter_mut().zip(tails) {
+        for (&qv, &kv) in rq.iter().zip(tail) {
+            *a += qv as i32 * kv as i32;
+        }
+    }
+    acc
+}
+
+/// QK^T over one whole key block, scalar arm: rows [`MR`] at a time via
+/// [`idot_mr`] with a chunked single-row tail.
+#[inline]
+pub fn qk_dot_block(q: &[i8], k: &[i8], d: usize, out: &mut [i32]) {
+    debug_assert!(d > 0);
+    let rows = k.len() / d;
+    debug_assert!(out.len() >= rows);
+    let mut r = 0usize;
+    while r + MR <= rows {
+        let scores = idot_mr(q, &k[r * d..(r + MR) * d]);
+        out[r..r + MR].copy_from_slice(&scores);
+        r += MR;
+    }
+    for rr in r..rows {
+        out[rr] = idot_1(q, &k[rr * d..(rr + 1) * d]);
+    }
+}
+
+/// P·V accumulation for one block, scalar arm, exact in `i32`:
+/// `acc[j] = Σ_c p8[c] * v8[c * d + j]`. `acc[..d]` is overwritten.
+/// Zero probability codes skip their row — SAS sparsity makes whole
+/// rows zero, and a skipped row adds exactly 0 to an exact sum.
+#[inline]
+pub fn ipv_acc(p8: &[i8], v8: &[i8], d: usize, acc: &mut [i32]) {
+    let rows = p8.len();
+    debug_assert!(d > 0);
+    debug_assert!(rows <= ACC_MAX_ROWS);
+    debug_assert!(v8.len() >= rows * d);
+    let acc = &mut acc[..d];
+    acc.fill(0);
+    for (c, &pc) in p8.iter().enumerate() {
+        if pc == 0 {
+            continue;
+        }
+        let w = pc as i32;
+        let v_row = &v8[c * d..(c + 1) * d];
+        for (a, &vv) in acc.iter_mut().zip(v_row) {
+            *a += w * vv as i32;
+        }
+    }
+}
+
+/// Batched SAS shift-exp-and-sum, scalar arm (see
+/// [`crate::sas::Sas::exp_block`] for the caller-facing contract).
+///
+/// `lut` holds `depth + 2` entries (`e^-i` for `0..=depth`, then `0.0`);
+/// `n_r` is the sparsity threshold. Branch-free: threshold → 0/1 mask,
+/// LUT index clamped, straight-line clamp + gather + Horner cubic. The
+/// SIMD arms replicate this exact f32 op sequence per element and sum
+/// the written row in slice order, which is why they stay bit-identical
+/// (f32 ops here are neither reassociated nor fused).
+#[inline]
+pub fn sas_exp_block(lut: &[f32], depth: usize, n_r: f32, row: &mut [f32], m: f32) -> f32 {
+    debug_assert_eq!(lut.len(), depth + 2);
+    let [c3, c2, c1, c0] = SAS_POLY;
+    let cap = (depth + 1) as f32;
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        let xx = *x - m;
+        // 1.0 when x is above the sparsity threshold, else 0.0.
+        let live = (xx >= n_r) as u32 as f32;
+        // Clamp keeps the LUT index in range for dead lanes; live lanes
+        // satisfy -xx <= -n_r < depth + 1, so the min is a no-op there
+        // and t/ti/td match the per-element scalar path exactly.
+        let t = (-xx).min(cap);
+        let ti = t as i32; // t >= 0: trunc == floor
+        let td = t - ti as f32;
+        let idx = (ti as usize).min(depth + 1);
+        let poly = ((c3 * td + c2) * td + c1) * td + c0;
+        let v = (live * lut[idx]) * poly;
+        *x = v;
+        sum += v;
+    }
+    sum
+}

@@ -1,0 +1,383 @@
+//! AVX2 kernel arm (x86-64).
+//!
+//! Integer kernels widen i8 lanes to i16 (`vpmovsxbw`) and multiply-add
+//! pairs with `vpmaddwd` — exact for every i8 input including `-128`
+//! (two i16 products of magnitude ≤ 16384 sum to ≤ 32768, well inside
+//! i32), unlike the `vpmaddubsw` shortcut which saturates. Because i32
+//! accumulation under the [`ACC_MAX_ROWS`](super::ACC_MAX_ROWS)
+//! contract is exact, the lane regrouping here cannot change a bit of
+//! any result — the scalar-oracle property tests below assert exactly
+//! that.
+//!
+//! The SAS evaluator performs the *same f32 operation sequence* as
+//! [`super::scalar::sas_exp_block`] per element — separate mul/add (no
+//! FMA contraction, matching rustc's default), sign-bit negation,
+//! `vcmpps(GE_OQ)` for the `>=` mask, `vminps` whose NaN semantics
+//! coincide with `f32::min` when the second operand (the cap) is never
+//! NaN, truncating `vcvttps2dq`, and an unsigned-min index clamp that
+//! reproduces the `(ti as usize).min(depth + 1)` wraparound for
+//! negative `ti` — then folds the written row in slice order, which is
+//! the scalar evaluator's exact summation order. Bit-identical, so the
+//! sas bitwise test holds under dispatch.
+//!
+//! Every `unsafe fn` here requires AVX2 (`#[target_feature]`): the
+//! dispatch layer only routes here after `is_x86_feature_detected!`.
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+use super::MR;
+use crate::sas::SAS_POLY;
+
+/// Widen 16 i8 lanes from `a`/`b` to i16 and fold their products into
+/// eight i32 accumulator lanes (exact: `vpmaddwd` adds i16-product
+/// pairs, bounded by 2 * 16384).
+///
+/// # Safety
+/// Requires AVX2; `a` and `b` must be readable for 16 bytes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn dot16(acc: __m256i, a: *const i8, b: *const i8) -> __m256i {
+    let wa = _mm256_cvtepi8_epi16(_mm_loadu_si128(a as *const __m128i));
+    let wb = _mm256_cvtepi8_epi16(_mm_loadu_si128(b as *const __m128i));
+    _mm256_add_epi32(acc, _mm256_madd_epi16(wa, wb))
+}
+
+/// Sum the eight i32 lanes of `v` (exact integer adds).
+///
+/// # Safety
+/// Requires AVX2.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let s = _mm_add_epi32(
+        _mm256_castsi256_si128(v),
+        _mm256_extracti128_si256::<1>(v),
+    );
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4E>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s));
+    _mm_cvtsi128_si32(s)
+}
+
+/// Single-row integer dot product, AVX2 arm.
+///
+/// # Safety
+/// Requires AVX2; `a.len() == b.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn idot_1(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let d = a.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= d {
+        acc = dot16(acc, a.as_ptr().add(i), b.as_ptr().add(i));
+        i += 16;
+    }
+    let mut s = hsum_epi32(acc);
+    while i < d {
+        s += *a.get_unchecked(i) as i32 * *b.get_unchecked(i) as i32;
+        i += 1;
+    }
+    s
+}
+
+/// Multi-row QK^T micro-kernel, AVX2 arm: the widened query chunk is
+/// loaded once per 16-lane step and reused across all [`MR`] key rows.
+///
+/// # Safety
+/// Requires AVX2; `k4.len() == MR * q.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn idot_mr(q: &[i8], k4: &[i8]) -> [i32; MR] {
+    let d = q.len();
+    debug_assert_eq!(k4.len(), MR * d);
+    let mut acc = [_mm256_setzero_si256(); MR];
+    let qp = q.as_ptr();
+    let kp = k4.as_ptr();
+    let mut i = 0usize;
+    while i + 16 <= d {
+        let wq = _mm256_cvtepi8_epi16(_mm_loadu_si128(qp.add(i) as *const __m128i));
+        for (r, a) in acc.iter_mut().enumerate() {
+            let wk = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                kp.add(r * d + i) as *const __m128i,
+            ));
+            *a = _mm256_add_epi32(*a, _mm256_madd_epi16(wq, wk));
+        }
+        i += 16;
+    }
+    let mut out = [0i32; MR];
+    for (r, o) in out.iter_mut().enumerate() {
+        let mut s = hsum_epi32(acc[r]);
+        for j in i..d {
+            s += *q.get_unchecked(j) as i32 * *k4.get_unchecked(r * d + j) as i32;
+        }
+        *o = s;
+    }
+    out
+}
+
+/// QK^T over one whole key block, AVX2 arm.
+///
+/// # Safety
+/// Requires AVX2; shapes validated by the public wrapper
+/// (`k.len() % d == 0`, `out.len() >= k.len() / d`, `d > 0`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn qk_dot_block(q: &[i8], k: &[i8], d: usize, out: &mut [i32]) {
+    let rows = k.len() / d;
+    debug_assert!(out.len() >= rows);
+    let mut r = 0usize;
+    while r + MR <= rows {
+        let scores = idot_mr(q, &k[r * d..(r + MR) * d]);
+        out[r..r + MR].copy_from_slice(&scores);
+        r += MR;
+    }
+    for rr in r..rows {
+        out[rr] = idot_1(q, &k[rr * d..(rr + 1) * d]);
+    }
+}
+
+/// P·V accumulation, AVX2 arm: broadcast the probability code, multiply
+/// 16 value lanes in i16 (exact — |p·v| ≤ 16384 fits i16), widen to i32
+/// and add into the accumulator. Keeps the scalar arm's `pc == 0` row
+/// skip (SAS sparsity), which cannot change an exact sum.
+///
+/// # Safety
+/// Requires AVX2; shapes validated by the public wrapper
+/// (`rows <= ACC_MAX_ROWS`, `v8.len() >= rows * d`, `acc.len() >= d`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn ipv_acc(p8: &[i8], v8: &[i8], d: usize, acc: &mut [i32]) {
+    let acc = &mut acc[..d];
+    acc.fill(0);
+    let ap = acc.as_mut_ptr();
+    for (c, &pc) in p8.iter().enumerate() {
+        if pc == 0 {
+            continue;
+        }
+        let w16 = _mm256_set1_epi16(pc as i16);
+        let w = pc as i32;
+        let vp = v8.as_ptr().add(c * d);
+        let mut j = 0usize;
+        while j + 16 <= d {
+            let v16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(vp.add(j) as *const __m128i));
+            let prod = _mm256_mullo_epi16(w16, v16);
+            let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(prod));
+            let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(prod));
+            let a0 = _mm256_loadu_si256(ap.add(j) as *const __m256i);
+            let a1 = _mm256_loadu_si256(ap.add(j + 8) as *const __m256i);
+            _mm256_storeu_si256(ap.add(j) as *mut __m256i, _mm256_add_epi32(a0, lo));
+            _mm256_storeu_si256(ap.add(j + 8) as *mut __m256i, _mm256_add_epi32(a1, hi));
+            j += 16;
+        }
+        while j < d {
+            *acc.get_unchecked_mut(j) += w * *vp.add(j) as i32;
+            j += 1;
+        }
+    }
+}
+
+/// Batched SAS shift-exp-and-sum, AVX2 arm — eight f32 lanes through
+/// the scalar arm's exact op sequence (see module docs for the
+/// bit-exactness argument), scalar tail for `d % 8`, then one in-order
+/// fold over the written row (the scalar evaluator's summation order).
+///
+/// # Safety
+/// Requires AVX2; `lut.len() == depth + 2`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sas_exp_block(
+    lut: &[f32],
+    depth: usize,
+    n_r: f32,
+    row: &mut [f32],
+    m: f32,
+) -> f32 {
+    debug_assert_eq!(lut.len(), depth + 2);
+    let [c3, c2, c1, c0] = SAS_POLY;
+    let cap = (depth + 1) as f32;
+    let n = row.len();
+    let rp = row.as_mut_ptr();
+    let vm = _mm256_set1_ps(m);
+    let vnr = _mm256_set1_ps(n_r);
+    let vcap = _mm256_set1_ps(cap);
+    let vone = _mm256_set1_ps(1.0);
+    let vsign = _mm256_set1_ps(-0.0);
+    let vidx_cap = _mm256_set1_epi32((depth + 1) as i32);
+    let (vc3, vc2, vc1, vc0) = (
+        _mm256_set1_ps(c3),
+        _mm256_set1_ps(c2),
+        _mm256_set1_ps(c1),
+        _mm256_set1_ps(c0),
+    );
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xx = _mm256_sub_ps(_mm256_loadu_ps(rp.add(i)), vm);
+        // (xx >= n_r) as f32: ordered-quiet GE is false on NaN, exactly
+        // like the scalar `>=`.
+        let live = _mm256_and_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(xx, vnr), vone);
+        // (-xx).min(cap): minps returns the second operand on NaN,
+        // matching f32::min with a never-NaN cap.
+        let t = _mm256_min_ps(_mm256_xor_ps(xx, vsign), vcap);
+        // `t as i32`: cvttps2dq truncates toward zero; t <= cap rules
+        // out positive overflow, and negative overflow saturates to
+        // i32::MIN on both paths.
+        let ti = _mm256_cvttps_epi32(t);
+        let td = _mm256_sub_ps(t, _mm256_cvtepi32_ps(ti));
+        // (ti as usize).min(depth + 1): negative ti reinterprets as a
+        // huge unsigned value, so an *unsigned* min clamps it to the
+        // zero LUT slot exactly like the scalar usize cast.
+        let idx = _mm256_min_epu32(ti, vidx_cap);
+        let lv = _mm256_i32gather_ps::<4>(lut.as_ptr(), idx);
+        // Horner with separate mul/add — rustc does not contract to FMA
+        // on the scalar path, so neither do we.
+        let mut p = _mm256_add_ps(_mm256_mul_ps(vc3, td), vc2);
+        p = _mm256_add_ps(_mm256_mul_ps(p, td), vc1);
+        p = _mm256_add_ps(_mm256_mul_ps(p, td), vc0);
+        let v = _mm256_mul_ps(_mm256_mul_ps(live, lv), p);
+        _mm256_storeu_ps(rp.add(i), v);
+        i += 8;
+    }
+    // Scalar tail: the literal scalar-arm body.
+    for x in row[i..].iter_mut() {
+        let xx = *x - m;
+        let live = (xx >= n_r) as u32 as f32;
+        let t = (-xx).min(cap);
+        let ti = t as i32;
+        let td = t - ti as f32;
+        let idx = (ti as usize).min(depth + 1);
+        let poly = ((c3 * td + c2) * td + c1) * td + c0;
+        *x = (live * lut[idx]) * poly;
+    }
+    // In-order fold == the scalar evaluator's interleaved running sum.
+    let mut sum = 0.0f32;
+    for &v in row.iter() {
+        sum += v;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    //! Bitwise scalar-oracle parity for the AVX2 arm, run only when the
+    //! host actually has AVX2 (always true on the repo's CI runners).
+
+    use super::*;
+    use crate::kernels::scalar;
+    use crate::sas::Sas;
+    use crate::testutil::prop;
+
+    fn avx2() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    fn gen_codes(g: &mut prop::Gen, n: usize) -> Vec<i8> {
+        (0..n)
+            .map(|_| match g.usize_in(0, 8) {
+                0 => 127,
+                1 => -127,
+                2 => -128,
+                _ => (g.usize_in(0, 255) as i32 - 127) as i8,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn idot_mr_bit_identical_to_scalar() {
+        if !avx2() {
+            return;
+        }
+        prop::run("avx2 idot_mr == scalar", 80, |g| {
+            // Ragged widths around the 16-lane step, incl. d < 16.
+            let d = g.usize_in(1, 67);
+            let q = gen_codes(g, d);
+            let k4 = gen_codes(g, MR * d);
+            let got = unsafe { idot_mr(&q, &k4) };
+            assert_eq!(got, scalar::idot_mr(&q, &k4), "d={d}");
+        });
+    }
+
+    #[test]
+    fn idot_mr_exact_at_i8_extremes() {
+        if !avx2() {
+            return;
+        }
+        // -128 * -128 is the worst case of the no-overflow proof and the
+        // reason maddubs-style tricks are banned.
+        for d in [1, 15, 16, 17, 64] {
+            let q = vec![-128i8; d];
+            for fill in [-128i8, 127] {
+                let k4 = vec![fill; MR * d];
+                let got = unsafe { idot_mr(&q, &k4) };
+                assert_eq!(got, scalar::idot_mr(&q, &k4), "d={d} fill={fill}");
+            }
+        }
+    }
+
+    #[test]
+    fn qk_dot_block_bit_identical_to_scalar() {
+        if !avx2() {
+            return;
+        }
+        prop::run("avx2 qk_dot_block == scalar", 60, |g| {
+            let d = g.usize_in(1, 50);
+            let rows = g.usize_in(0, 12);
+            let q = gen_codes(g, d);
+            let k = gen_codes(g, rows * d);
+            let mut a = vec![7i32; rows + 2];
+            let mut b = a.clone();
+            unsafe { qk_dot_block(&q, &k, d, &mut a) };
+            scalar::qk_dot_block(&q, &k, d, &mut b);
+            assert_eq!(a, b, "d={d} rows={rows}");
+        });
+    }
+
+    #[test]
+    fn ipv_acc_bit_identical_to_scalar() {
+        if !avx2() {
+            return;
+        }
+        prop::run("avx2 ipv_acc == scalar", 80, |g| {
+            let d = g.usize_in(1, 67);
+            let rows = g.usize_in(0, 12);
+            let mut p8 = gen_codes(g, rows);
+            if !p8.is_empty() {
+                p8[g.usize_in(0, rows)] = 0; // exercise the zero-row skip
+            }
+            let v8 = gen_codes(g, rows * d);
+            let mut a = vec![-1i32; d];
+            let mut b = vec![i32::MAX; d]; // both arms must overwrite stale state
+            unsafe { ipv_acc(&p8, &v8, d, &mut a) };
+            scalar::ipv_acc(&p8, &v8, d, &mut b);
+            assert_eq!(a, b, "d={d} rows={rows}");
+        });
+    }
+
+    #[test]
+    fn sas_exp_block_bit_identical_to_scalar() {
+        if !avx2() {
+            return;
+        }
+        prop::run("avx2 sas_exp_block == scalar", 80, |g| {
+            let sas = if g.bool() { Sas::default() } else { Sas::new(-3.5) };
+            let (lut, depth, n_r) = sas.tables();
+            // 0..=19: covers empty rows, pure-tail rows (< 8) and
+            // ragged vector+tail mixes.
+            let n = g.usize_in(0, 20);
+            let m = g.f32_in(-2.0, 8.0);
+            let row: Vec<f32> = (0..n)
+                .map(|_| match g.usize_in(0, 5) {
+                    0 => m + n_r,            // exactly at the threshold
+                    1 => m + n_r - 1e-3,     // just below: must be zero
+                    2 => m - 20.0,           // deep in the sparse region
+                    _ => m + g.f32_in(n_r, 0.0),
+                })
+                .collect();
+            let mut a = row.clone();
+            let mut b = row;
+            let sa = unsafe { sas_exp_block(lut, depth, n_r, &mut a, m) };
+            let sb = scalar::sas_exp_block(lut, depth, n_r, &mut b, m);
+            assert_eq!(sa.to_bits(), sb.to_bits(), "sum (n={n})");
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "elem {i} (n={n})");
+            }
+        });
+    }
+}

@@ -39,6 +39,12 @@
 //! default on for `turbo-cpu`): batched requests with a common prompt
 //! prefix share the same refcounted q2 pages instead of each storing a
 //! copy; `gen --batch N` submits the prompt N times to exercise it.
+//!
+//! `--kernel-backend scalar|avx2|neon|auto` pins the integer-kernel ISA
+//! (default: auto-detect; the `TURBO_KERNEL` env var is the same knob
+//! for processes without this flag). Every backend is bit-identical —
+//! this selects speed, never results — and the arm actually dispatched
+//! is reported in `gen` output and the server's `STATS` line.
 
 use std::net::TcpListener;
 use std::sync::mpsc::channel;
@@ -65,6 +71,15 @@ fn main() -> Result<()> {
     } else {
         2
     });
+    // Pin the kernel backend before anything can dispatch: the choice
+    // is process-wide and sticky, so it must precede engine
+    // construction (which stamps it into the metrics snapshot).
+    if let Some(kb) = args.opt("kernel-backend") {
+        let got = turboattention::kernels::force_kernel_backend(kb)
+            .map_err(anyhow::Error::msg)
+            .context("--kernel-backend")?;
+        info!("main", "kernel backend pinned: {}", got.name());
+    }
     match args.subcommand.as_deref() {
         Some("serve") => serve(&args),
         Some("gen") => gen(&args),
@@ -226,6 +241,7 @@ fn gen(args: &Args) -> Result<()> {
         );
     }
     println!("itl    : {}", engine.itl_hist.summary());
+    println!("kernel : {}", engine.metrics.kernel_backend);
     if engine.metrics.requests_cancelled > 0 {
         println!("cancelled: {}", engine.metrics.requests_cancelled);
     }

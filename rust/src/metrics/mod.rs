@@ -207,6 +207,12 @@ pub struct EngineMetrics {
     /// summed over every decode worker — with an `N`-thread pool this
     /// can exceed wall time by up to `N`x.
     pub decode_busy_s: f64,
+    /// Kernel ISA the process dispatched to ("scalar" | "avx2" |
+    /// "neon"), so serving numbers and bug reports are attributable to
+    /// the code path that produced them. Every backend is bit-identical
+    /// — this affects speed, never results. Empty on a default-built
+    /// snapshot that never touched an engine.
+    pub kernel_backend: &'static str,
 }
 
 impl EngineMetrics {

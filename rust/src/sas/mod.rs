@@ -70,29 +70,29 @@ impl Sas {
     /// slice order), but **branch-free**: the sparsity threshold becomes
     /// a 0/1 mask multiplied into the result, and the LUT index is
     /// clamped instead of tested, so the loop body is straight-line
-    /// clamp + LUT gather + Horner cubic that the autovectorizer can
-    /// keep in SIMD lanes (no per-element early exit to flush the
-    /// pipeline on sparse rows).
+    /// clamp + LUT gather + Horner cubic. The evaluator itself lives in
+    /// [`crate::kernels`] and dispatches to the selected backend arm
+    /// (scalar / AVX2 / NEON); every arm replicates the same f32 op
+    /// sequence, so which ISA runs cannot change a bit of the output —
+    /// [`Sas::exp_block_scalar`] pins the oracle arm for tests.
     #[inline]
     pub fn exp_block(&self, row: &mut [f32], m: f32) -> f32 {
-        let cap = (self.depth + 1) as f32;
-        let mut sum = 0.0f32;
-        for x in row.iter_mut() {
-            let xx = *x - m;
-            // 1.0 when x is above the sparsity threshold, else 0.0.
-            let live = (xx >= self.n_r) as u32 as f32;
-            // Clamp keeps the LUT index in range for dead lanes; live
-            // lanes satisfy -xx <= -n_r < depth + 1, so the min is a
-            // no-op there and t/ti/td match the scalar path exactly.
-            let t = (-xx).min(cap);
-            let ti = t as i32; // t >= 0: trunc == floor
-            let td = t - ti as f32;
-            let idx = (ti as usize).min(self.depth + 1);
-            let v = (live * self.lut[idx]) * Self::poly(td);
-            *x = v;
-            sum += v;
-        }
-        sum
+        crate::kernels::sas_exp_block(&self.lut, self.depth, self.n_r, row, m)
+    }
+
+    /// [`Sas::exp_block`] pinned to the scalar oracle arm, bypassing
+    /// kernel dispatch — the reference the SIMD arms are property-tested
+    /// against, and the first thing to compare when a kernel result
+    /// looks wrong.
+    #[inline]
+    pub fn exp_block_scalar(&self, row: &mut [f32], m: f32) -> f32 {
+        crate::kernels::scalar::sas_exp_block(&self.lut, self.depth, self.n_r, row, m)
+    }
+
+    /// Raw evaluator tables `(lut, depth, n_r)` for the kernel backend
+    /// tests, which call the arm functions directly.
+    pub(crate) fn tables(&self) -> (&[f32], usize, f32) {
+        (&self.lut, self.depth, self.n_r)
     }
 
     /// In-place SAS softmax over one row of scores.
@@ -221,6 +221,28 @@ mod tests {
             assert_eq!(sum.to_bits(), want_sum.to_bits(), "sum");
             for (i, (got, want)) in row.iter().zip(&want).enumerate() {
                 assert_eq!(got.to_bits(), want.to_bits(), "elem {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn exp_block_dispatch_bit_identical_to_scalar_arm() {
+        // Whichever backend arm this process dispatched to must agree
+        // with the pinned scalar oracle arm to the bit, sum included.
+        prop::run("exp_block dispatch == scalar arm", 80, |g| {
+            let sas = if g.bool() { Sas::default() } else { Sas::new(-4.5) };
+            let n = g.usize_in(0, 40);
+            let m = g.f32_in(-2.0, 8.0);
+            let row: Vec<f32> = (0..n)
+                .map(|_| m + g.f32_in(2.0 * sas.n_r, 1.0))
+                .collect();
+            let mut a = row.clone();
+            let mut b = row;
+            let sa = sas.exp_block(&mut a, m);
+            let sb = sas.exp_block_scalar(&mut b, m);
+            assert_eq!(sa.to_bits(), sb.to_bits(), "sum (n={n})");
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "elem {i}");
             }
         });
     }

@@ -204,7 +204,7 @@ fn format_stats(s: &crate::coordinator::StatsSnapshot) -> String {
     format!(
         "STATS completed={} cancelled={} tokens={} prefill_tokens={} \
          ttft_p50_ms={:.2} latency_p50_ms={:.2} itl_p50_ms={:.3} \
-         itl_p95_ms={:.3} itl_mean_ms={:.3} dedup={:.3}",
+         itl_p95_ms={:.3} itl_mean_ms={:.3} dedup={:.3} kernel={}",
         s.metrics.requests_completed,
         s.metrics.requests_cancelled,
         s.metrics.tokens_generated,
@@ -215,6 +215,7 @@ fn format_stats(s: &crate::coordinator::StatsSnapshot) -> String {
         s.itl.p95() * 1e3,
         s.itl.mean() * 1e3,
         s.metrics.page_dedup_ratio,
+        s.metrics.kernel_backend,
     )
 }
 

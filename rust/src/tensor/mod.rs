@@ -142,23 +142,19 @@ pub use crate::kernels::{idot_mr, ipv_acc, qk_dot_block, ACC_MAX_ROWS, MR};
 
 /// Integer dot product — the single-accumulator scalar *reference*.
 ///
-/// Kept for oracles and property tests; hot paths use the multi-row
-/// chunked kernels in [`crate::kernels`] (`idot_mr` / `qk_dot_block`),
-/// which compute the same exact integer result with one accumulator per
-/// key row and no per-index bounds checks.
+/// Now a thin delegate to [`crate::kernels::scalar::idot`], where the
+/// oracle lives with the rest of the scalar kernel arm; hot paths use
+/// the dispatched multi-row kernels (`idot_mr` / `qk_dot_block`), which
+/// compute the same exact integer result. New code (including oracles
+/// in tests) should name `kernels::scalar::idot` directly.
 #[deprecated(
     since = "0.1.0",
-    note = "scalar reference only — hot paths use \
+    note = "use kernels::scalar::idot for oracles; hot paths use \
             kernels::qk_dot_block / kernels::idot_mr"
 )]
 #[inline]
 pub fn idot(a: &[i8], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0i32;
-    for i in 0..a.len() {
-        s += a[i] as i32 * b[i] as i32;
-    }
-    s
+    crate::kernels::scalar::idot(a, b)
 }
 
 #[cfg(test)]

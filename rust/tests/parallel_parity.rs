@@ -20,6 +20,14 @@
 //! panics surface as `Err` without poisoning later steps, zero-head and
 //! heads-smaller-than-pool geometries, and thread-leak-free reuse across
 //! 1k decode steps.
+//!
+//! The whole suite holds under **every kernel backend**: the integer
+//! kernels are exact in `i32` (order-independent) and the SIMD SAS arms
+//! bit-replicate the scalar arm, so thread-count invariance cannot
+//! depend on the dispatched ISA. CI runs this suite once with
+//! `TURBO_KERNEL=scalar` and once on the detected SIMD arm;
+//! `backend_is_pinned_and_reported` below records which arm a given run
+//! actually validated.
 
 use std::sync::Arc;
 
@@ -38,6 +46,18 @@ use turboattention::testutil::prop::Gen;
 use turboattention::testutil::{prop, Rng};
 
 const THREADS: [usize; 4] = [1, 2, 4, 7];
+
+/// Stamp the kernel arm this suite run exercised into the test output,
+/// and pin it: the backend is process-sticky, so every parity case in
+/// this binary ran the same arm (no scalar-vs-SIMD mixing could mask a
+/// divergence between them).
+#[test]
+fn backend_is_pinned_and_reported() {
+    let b = turboattention::kernels::kernel_backend();
+    assert!(b.supported());
+    assert_eq!(turboattention::kernels::kernel_backend(), b);
+    println!("parallel_parity validated kernel backend: {}", b.name());
+}
 
 /// One randomized decode trace, fully determined by its fields — the
 /// same `Case` replayed at any thread count consumes randomness

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Regenerate the checked-in perf baselines BENCH_decode.json and
+# BENCH_sas.json from the two bench binaries' --json mode.
+#
+# Run it from the rust/ crate root on a quiet machine (no other load),
+# e.g. in CI: bash ../scripts/bench_record.sh
+#
+# The JSONs record which kernel backend produced the numbers
+# ("kernel_backend") plus the dispatched-vs-scalar-arm microkernel
+# speedups, so a baseline recorded on an AVX2 host is distinguishable
+# from one recorded on NEON or on the scalar fallback. Pass a backend
+# name to pin the arm explicitly:
+#
+#   bash ../scripts/bench_record.sh            # auto-detected arm
+#   bash ../scripts/bench_record.sh scalar     # scalar baseline
+set -euo pipefail
+
+BACKEND=${1:-auto}
+
+[ -f Cargo.toml ] || {
+  echo "bench_record: run from the rust/ crate root" >&2
+  exit 1
+}
+
+cargo bench --bench decode_bench -- --json --kernel-backend "$BACKEND"
+cargo bench --bench sas_bench -- --json --kernel-backend "$BACKEND"
+
+for f in BENCH_decode.json BENCH_sas.json; do
+  [ -s "$f" ] || { echo "bench_record: $f was not written" >&2; exit 1; }
+done
+echo "bench_record: wrote BENCH_decode.json and BENCH_sas.json"

@@ -47,6 +47,12 @@
 //!    recorded speedup isolates the SIMD dispatch itself
 //!    (AVX2/NEON vs the autovectorized scalar loops).
 //!
+//! 6. **Capped vs uncapped serving** — the same 3-request batch
+//!    through the full TurboCpu engine with `pool_byte_cap` below two
+//!    flushed sessions vs unbounded. Output is bit-identical by
+//!    construction (the purity invariant); the measured ratio prices
+//!    what the bounded memory costs in preemption + replay recompute.
+//!
 //! `--json` additionally writes every case plus the computed speedups and
 //! the shared-prefix scenario to `BENCH_decode.json` (the perf-trajectory
 //! artifact). The payload records `kernel_backend` — the ISA the
@@ -61,10 +67,12 @@ use turboattention::attention::{
     turbo_decode_streams, turbo_decode_streams_scalar, DecodeScratch,
 };
 use turboattention::bench::Bencher;
+use turboattention::coordinator::{Engine, EngineConfig, GenRequest, PathMode};
 use turboattention::kernels;
 use turboattention::kvcache::{KvCache, KvCacheConfig, PagePool, PrecisionMap};
+use turboattention::model::{ModelBundle, TurboSlabs};
+use turboattention::runtime::Runtime;
 use turboattention::sas::Sas;
-use turboattention::model::TurboSlabs;
 use turboattention::pool::WorkerPool;
 use turboattention::quant::{quant_sym_int8, Bits};
 use turboattention::testutil::Rng;
@@ -533,6 +541,54 @@ fn main() {
         println!("{line}");
     }
 
+    // Capped vs uncapped serving: full engine runs on the CPU
+    // substrate (its geometry, not this file's L/H/DH constants). One
+    // flushed session there is 16 pages x 292B = 4672B, so a 6000B cap
+    // admits any single session but forces preemption + replay as soon
+    // as a second one flushes — the measured ratio is the wall-clock
+    // price of bounded KV memory on an overcommitted batch.
+    const POOL_CAP: usize = 6000;
+    let serve_batch = |cap: Option<usize>| -> Engine {
+        let cfg = EngineConfig {
+            mode: PathMode::TurboCpu,
+            decode_threads: 2,
+            pool_byte_cap: cap,
+            ..Default::default()
+        };
+        let mut e = Engine::new(ModelBundle::new(Runtime::cpu_substrate()), cfg);
+        for (id, prompt) in
+            [b"pool aaa".as_slice(), b"pool bbb", b"pool ccc"]
+                .iter()
+                .enumerate()
+        {
+            e.submit(GenRequest::new(id as u64, prompt.to_vec(), 64));
+        }
+        e.run_to_completion().expect("serve batch");
+        e
+    };
+    println!("\ncapped vs uncapped serving (3 requests, TurboCpu engine):");
+    let probe = serve_batch(Some(POOL_CAP));
+    let (preempts, replayed, evicts) = (
+        probe.metrics.preemptions,
+        probe.metrics.preempt_replayed_tokens,
+        probe.metrics.pool_memo_evictions,
+    );
+    b.bench("serve-batch uncapped", || {
+        serve_batch(None).metrics.tokens_generated
+    });
+    b.bench("serve-batch capped", || {
+        serve_batch(Some(POOL_CAP)).metrics.tokens_generated
+    });
+    let cap_overhead = b.speedup("serve-batch capped", "serve-batch uncapped");
+    match cap_overhead {
+        Some(o) => println!(
+            "  cap {POOL_CAP}B: {o:.2}x wall overhead | {preempts} \
+             preemptions, {replayed} replayed tokens, {evicts} memo \
+             evictions per run"
+        ),
+        None => println!("  cap {POOL_CAP}B: n/a"),
+    }
+
     if emit_json {
         let payload = format!(
             "{{\n  \"bench\": \"decode\",\n  \"kernel_backend\": \
@@ -541,12 +597,19 @@ fn main() {
              \"cases\": {},\n  \"microkernel_vs_scalar\": [{}],\n  \
              \"kernel_vs_scalar\": [{}],\n  \
              \"thread_speedup_vs_t1\": [{}],\n  \
-             \"shared_prefix\": [{}]\n}}\n",
+             \"shared_prefix\": [{}],\n  \"pool_cap\": {{\
+             \"cap_bytes\": {POOL_CAP}, \"preemptions\": {preempts}, \
+             \"replayed_tokens\": {replayed}, \
+             \"memo_evictions\": {evicts}, \
+             \"capped_over_uncapped\": {}}}\n}}\n",
             b.results_json(),
             micro_speedups.join(","),
             kernel_speedups.join(","),
             thread_speedups.join(","),
-            shared_json.join(",")
+            shared_json.join(","),
+            cap_overhead
+                .map(|o| format!("{o:.4}"))
+                .unwrap_or_else(|| "null".into())
         );
         std::fs::write("BENCH_decode.json", &payload)
             .expect("write BENCH_decode.json");

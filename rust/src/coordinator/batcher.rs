@@ -35,6 +35,13 @@ struct Tracked {
     req: GenRequest,
     /// Current context tokens (prompt + generated so far).
     context: usize,
+    /// Token-budget reservation: `prompt + max_new_tokens`. Constant
+    /// over the request's life (context grows by exactly one as the
+    /// remaining allowance shrinks by one), so summing it never
+    /// re-grants headroom already promised to a running request — the
+    /// fix for the double-allocation bug where `schedule` recomputed
+    /// usage from *current* context mid-decode.
+    reserved: usize,
 }
 
 /// One scheduling decision.
@@ -80,7 +87,8 @@ impl Batcher {
 
     pub fn submit(&mut self, req: GenRequest) {
         let context = req.prompt.len();
-        self.waiting.push_back(Tracked { req, context });
+        let reserved = context + req.params.max_new_tokens;
+        self.waiting.push_back(Tracked { req, context, reserved });
     }
 
     pub fn waiting_len(&self) -> usize {
@@ -96,6 +104,33 @@ impl Batcher {
         self.running.iter().map(|t| t.context).sum()
     }
 
+    /// Total token-budget reservation held by running requests
+    /// (`prompt + max_new_tokens` each) — what admission charges
+    /// against, not the smaller current context.
+    pub fn reserved_tokens(&self) -> usize {
+        self.running.iter().map(|t| t.reserved).sum()
+    }
+
+    /// The most recently admitted running request — the preemption
+    /// victim (LIFO: preempting the youngest wastes the least completed
+    /// work and cannot starve the head of the line).
+    pub fn youngest_running(&self) -> Option<RequestId> {
+        self.running.last().map(|t| t.req.id)
+    }
+
+    /// Move a running request back to the *front* of the waiting queue
+    /// (it keeps its FIFO seniority over later arrivals). The engine
+    /// owns the session-state side: it must release the request's pages
+    /// and re-prefill on resume. Returns whether the id was running.
+    pub fn preempt(&mut self, id: RequestId) -> bool {
+        let Some(i) = self.running.iter().position(|t| t.req.id == id) else {
+            return false;
+        };
+        let t = self.running.remove(i);
+        self.waiting.push_front(t);
+        true
+    }
+
     /// Record one capacity-wait observation (see [`BatcherMetrics`]).
     fn note_capacity_wait(&mut self) {
         let depth = self.waiting.len();
@@ -107,10 +142,29 @@ impl Batcher {
     /// Compute the next scheduling decision. Admission: FIFO waiting
     /// requests move to running while slots and token budget allow; a
     /// deferred admission is recorded in [`BatcherMetrics`] so
-    /// starvation is observable.
+    /// starvation is observable. The budget charge is each running
+    /// request's full *reservation* (`prompt + max_new_tokens`), never
+    /// its current context — headroom promised to a running request is
+    /// promised once.
     pub fn schedule(&mut self) -> SchedDecision {
+        self.schedule_gated(true)
+    }
+
+    /// [`Self::schedule`] with an external admission gate: when `admit`
+    /// is false (the engine is under memory pressure), no waiting
+    /// request is admitted this iteration — running requests still get
+    /// their decode step, and the deferred admission is recorded as a
+    /// capacity wait.
+    pub fn schedule_gated(&mut self, admit: bool) -> SchedDecision {
         let mut d = SchedDecision::default();
-        let mut budget_used = self.running_tokens();
+        if !admit {
+            if !self.waiting.is_empty() {
+                self.note_capacity_wait(); // memory-pressure wait
+            }
+            d.decode = self.running.iter().map(|t| t.req.id).collect();
+            return d;
+        }
+        let mut budget_used = self.reserved_tokens();
         let mut admitted = 0;
         while admitted < self.cfg.prefill_per_step {
             if self.running.len() >= self.cfg.max_running {
@@ -120,7 +174,7 @@ impl Batcher {
                 break;
             }
             let Some(head) = self.waiting.front() else { break };
-            let need = head.context + head.req.params.max_new_tokens;
+            let need = head.reserved;
             if budget_used + need > self.cfg.token_budget && !self.running.is_empty()
             {
                 // Wait for capacity (never deadlock an empty engine) —
@@ -294,6 +348,59 @@ mod tests {
     }
 
     #[test]
+    fn budget_reserves_decode_headroom_of_running_requests() {
+        // Regression: admission used to recompute usage from *current*
+        // context, handing out generation headroom already promised to
+        // a running request and overshooting the budget mid-decode.
+        let mut b = batcher(8, 100);
+        b.submit(req(1, 50, 30)); // reserves 80
+        b.schedule();
+        // 10 decode steps: context grows 50 -> 60, but the reservation
+        // stays 80 (context + remaining allowance is constant).
+        for _ in 0..10 {
+            b.on_token(1);
+        }
+        assert_eq!(b.reserved_tokens(), 80);
+        b.submit(req(2, 10, 15)); // needs 25; 80 + 25 > 100
+        let d = b.schedule();
+        assert!(d.prefill.is_empty(), "headroom promised to #1 stays his");
+        b.finish(1);
+        assert_eq!(b.schedule().prefill, vec![2]);
+    }
+
+    #[test]
+    fn preempt_returns_running_to_waiting_front() {
+        let mut b = batcher(4, 1000);
+        b.submit(req(1, 10, 5));
+        b.submit(req(2, 10, 5));
+        b.schedule();
+        b.schedule(); // both running
+        b.submit(req(3, 10, 5));
+        assert_eq!(b.youngest_running(), Some(2));
+        assert!(b.preempt(2));
+        assert_eq!(b.running_len(), 1);
+        assert_eq!(b.waiting_len(), 2);
+        // The preempted request resumes before later arrivals.
+        let d = b.schedule();
+        assert_eq!(d.prefill, vec![2]);
+        assert!(!b.preempt(99), "unknown id");
+        assert!(!b.preempt(3), "waiting request cannot be preempted");
+    }
+
+    #[test]
+    fn gated_schedule_defers_admission_under_pressure() {
+        let mut b = batcher(4, 1000);
+        b.submit(req(1, 10, 5));
+        b.schedule(); // #1 running
+        b.submit(req(2, 10, 5));
+        let d = b.schedule_gated(false);
+        assert!(d.prefill.is_empty(), "gate closed");
+        assert_eq!(d.decode, vec![1], "decode continues under pressure");
+        assert_eq!(b.metrics.capacity_waits, 1, "gated wait is observable");
+        assert_eq!(b.schedule_gated(true).prefill, vec![2]);
+    }
+
+    #[test]
     fn oversized_request_admitted_when_engine_empty() {
         // A request larger than the budget must not deadlock forever.
         let mut b = batcher(8, 100);
@@ -323,6 +430,16 @@ mod tests {
                 assert!(iterations < 10_000, "livelock");
                 let d = b.schedule();
                 assert!(b.running_len() <= max_running);
+                // Reservation invariant: beyond the single oversized-
+                // request escape hatch, admitted reservations never
+                // exceed the budget (the double-allocation regression).
+                if b.running_len() >= 2 {
+                    assert!(
+                        b.reserved_tokens() <= budget,
+                        "reserved {} > budget {budget}",
+                        b.reserved_tokens()
+                    );
+                }
                 // Every decode round makes progress: finish each running
                 // request with probability ~1/4.
                 for id in d.decode {

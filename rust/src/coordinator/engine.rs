@@ -74,6 +74,16 @@ pub struct EngineConfig {
     /// Seeds the deterministic `CpuModel` weights (TurboCpu path).
     /// Sampling seeds live on each request's `SamplingParams`.
     pub seed: u64,
+    /// Byte cap over the shared page pool's footprint (pages + q1
+    /// memos; `None` = unbounded). Under pressure the engine first
+    /// drops LRU q1 memos (derivable state — recomputed on demand),
+    /// then preempts the youngest running session: its pages are
+    /// released through the strict pool rules and the request rejoins
+    /// the front of the waiting queue, to be re-prefilled and replayed
+    /// on resume. Output stays bit-identical to an uncapped run (the
+    /// PR-5 purity invariant); only latency and recompute work change.
+    /// Turbo-family paths only; the flash baseline has no pool.
+    pub pool_byte_cap: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -86,6 +96,7 @@ impl Default for EngineConfig {
             decode_threads: default_threads(),
             share_prefixes: false,
             seed: 0,
+            pool_byte_cap: None,
         }
     }
 }
@@ -107,6 +118,20 @@ struct Session {
     rng: Rng,
     prefill_done_at: Instant,
     /// When the previous token was emitted (feeds the ITL histogram).
+    last_token_at: Instant,
+}
+
+/// Resume snapshot of a preempted session: everything needed to rebuild
+/// the request bit-identically *except* the KV cache, which is
+/// recomputed on resume (re-prefill the prompt, then replay the
+/// already-emitted tokens through ordinary decode steps). The session's
+/// `BackendState` is dropped at preemption — that is the whole point:
+/// its page refs release through the strict pool rules.
+struct PreemptedState {
+    generated: Vec<u8>,
+    pending_token: u8,
+    rng: Rng,
+    prefill_done_at: Instant,
     last_token_at: Instant,
 }
 
@@ -156,6 +181,10 @@ pub struct Engine {
     /// engine keeps its own handle for the wall/busy decode metrics.
     pool: Arc<WorkerPool>,
     sessions: HashMap<RequestId, Session>,
+    /// Sessions preempted under memory pressure, keyed by request id;
+    /// the request itself waits at the front of the batcher queue and
+    /// resumes through the ordinary prefill path.
+    preempted: HashMap<RequestId, PreemptedState>,
     /// Admission-time prompt-prefix index (Some iff
     /// `cfg.share_prefixes`); the page handles it holds are weak — the
     /// backend's pool refcounts own the memory.
@@ -185,7 +214,7 @@ impl Engine {
         let prefix_index = cfg
             .share_prefixes
             .then(|| PrefixIndex::new(PREFIX_INDEX_CAP));
-        Engine {
+        let engine = Engine {
             batcher: Batcher::new(cfg.batcher.clone()),
             backend: backend_for(
                 cfg.mode,
@@ -197,6 +226,7 @@ impl Engine {
             ),
             pool,
             sessions: HashMap::new(),
+            preempted: HashMap::new(),
             prefix_index,
             next_id: 1,
             metrics: EngineMetrics {
@@ -204,6 +234,7 @@ impl Engine {
                 // backend choice is process-wide and sticky, so one
                 // engine cannot mix arms across decode steps.
                 kernel_backend: crate::kernels::kernel_backend().name(),
+                pool_byte_cap: cfg.pool_byte_cap.unwrap_or(0),
                 ..EngineMetrics::default()
             },
             ttft_hist: Histogram::new(),
@@ -211,7 +242,15 @@ impl Engine {
             itl_hist: Histogram::new(),
             bundle,
             cfg,
+        };
+        if let (Some(cap), Some(pool)) =
+            (engine.cfg.pool_byte_cap, engine.backend.page_pool())
+        {
+            pool.write()
+                .unwrap_or_else(|e| e.into_inner())
+                .set_byte_cap(Some(cap));
         }
+        engine
     }
 
     pub fn bundle(&mut self) -> &mut ModelBundle {
@@ -257,6 +296,9 @@ impl Engine {
     /// so the pool epoch/refcount rules see an ordinary release.
     pub fn cancel(&mut self, id: RequestId) -> Option<Completion> {
         let session = self.sessions.remove(&id);
+        // A preempted request has no session (its state was dropped at
+        // preemption) but already streamed tokens — report them.
+        let preempted = self.preempted.remove(&id);
         // Waiting requests have no session yet; read what the
         // completion needs off the borrowed request before evicting it
         // (no reason to clone a potentially long prompt to destroy it).
@@ -278,7 +320,7 @@ impl Engine {
                 Completion {
                     id,
                     prompt_len,
-                    generated: Vec::new(),
+                    generated: preempted.map(|p| p.generated).unwrap_or_default(),
                     total_latency: submitted_at.elapsed().as_secs_f64(),
                     ttft: 0.0,
                     tpot: 0.0,
@@ -295,7 +337,8 @@ impl Engine {
     /// per admitted request, `Token` per decode step, `Finished` per
     /// completed request.
     pub fn step(&mut self) -> Result<Vec<StepEvent>> {
-        let decision = self.batcher.schedule();
+        let admit = self.relieve_memory_pressure();
+        let decision = self.batcher.schedule_gated(admit);
         let mut events = Vec::new();
 
         // Prefill admitted requests, with admission-time prefix
@@ -326,7 +369,50 @@ impl Engine {
                 shared.as_ref(),
             )?;
             if let (Some(ix), Some(reg)) = (&mut self.prefix_index, reg) {
-                ix.insert(req.prompt.clone(), reg);
+                if let Some(pool) = self.backend.page_pool() {
+                    let pool = pool.read().unwrap_or_else(|e| e.into_inner());
+                    ix.insert(req.prompt.clone(), reg, &pool);
+                }
+            }
+            // Resume of a preempted request: the prefill above rebuilt
+            // the prompt's KV state bit-identically (forking from the
+            // prefix index is itself bit-identical); now replay the
+            // tokens already emitted before preemption through ordinary
+            // decode steps — decode determinism makes the rebuilt cache
+            // exactly the one the session would have had uninterrupted.
+            // No events are emitted and nothing is re-sampled: the
+            // client saw these tokens already.
+            if let Some(ps) = self.preempted.remove(&id) {
+                let mut state = state;
+                let n_replay = ps.generated.len().saturating_sub(1);
+                for (i, &tok) in ps.generated[..n_replay].iter().enumerate() {
+                    let out = self.backend.decode_step(
+                        &mut self.bundle,
+                        &mut state,
+                        tok,
+                        n + i,
+                    )?;
+                    self.backend.fold_new_token(
+                        &self.bundle,
+                        &mut state,
+                        &out.k_new,
+                        &out.v_new,
+                        n + i,
+                    );
+                    self.metrics.preempt_replayed_tokens += 1;
+                }
+                let session = Session {
+                    state,
+                    generated: ps.generated,
+                    pending_token: ps.pending_token,
+                    pos: n + n_replay,
+                    rng: ps.rng,
+                    prefill_done_at: ps.prefill_done_at,
+                    last_token_at: ps.last_token_at,
+                    req,
+                };
+                self.sessions.insert(id, session);
+                continue;
             }
             let mut rng = Rng::new(req.params.seed);
             let first = req
@@ -419,6 +505,76 @@ impl Engine {
         Ok(events)
     }
 
+    /// Two-tier relief against `cfg.pool_byte_cap`, run before every
+    /// scheduling decision. Tier 1 drops least-recently-used q1 memos
+    /// (derivable state: no epoch bump, recomputed on the next read).
+    /// Tier 2 — capped storage itself still over budget — preempts the
+    /// youngest running session at a time: its `BackendState` drops,
+    /// releasing every page ref through the strict pool rules (frees
+    /// bump the epoch; shared pages survive while other owners remain),
+    /// and the request rejoins the waiting queue for recompute-on-
+    /// resume. The last running session is never preempted (the
+    /// batcher's never-deadlock rule: an oversized workload finishes
+    /// solo rather than thrash). Returns the admission verdict for this
+    /// iteration: admit only when pages + memos fit under the cap, or
+    /// the engine is empty.
+    fn relieve_memory_pressure(&mut self) -> bool {
+        let Some(cap) = self.cfg.pool_byte_cap else { return true };
+        let Some(pool) = self.backend.page_pool() else { return true };
+        let pool = Arc::clone(pool);
+        pool.write().unwrap_or_else(|e| e.into_inner()).enforce_cap();
+        loop {
+            let physical = pool
+                .read()
+                .unwrap_or_else(|e| e.into_inner())
+                .physical_bytes();
+            if physical <= cap || self.batcher.running_len() <= 1 {
+                break;
+            }
+            let Some(victim) = self.batcher.youngest_running() else { break };
+            self.preempt_session(victim);
+            // Freed pages may strand memos over the cap line; re-check.
+            pool.write().unwrap_or_else(|e| e.into_inner()).enforce_cap();
+        }
+        let (physical, memo) = {
+            let p = pool.read().unwrap_or_else(|e| e.into_inner());
+            (p.physical_bytes(), p.memo_bytes())
+        };
+        physical + memo <= cap || self.batcher.running_len() == 0
+    }
+
+    /// Preempt one running session: snapshot its resume state, drop its
+    /// backend state (every page ref releases strictly, bumping the
+    /// epoch on final frees), and push the request back to the *front*
+    /// of the waiting queue. Resume happens through the ordinary
+    /// prefill path in [`Self::step`], which replays the generated
+    /// tokens bit-identically. Preemption never mutates pages in place.
+    fn preempt_session(&mut self, id: RequestId) {
+        let Some(s) = self.sessions.remove(&id) else { return };
+        let Session {
+            state,
+            generated,
+            pending_token,
+            rng,
+            prefill_done_at,
+            last_token_at,
+            ..
+        } = s;
+        drop(state);
+        self.preempted.insert(
+            id,
+            PreemptedState {
+                generated,
+                pending_token,
+                rng,
+                prefill_done_at,
+                last_token_at,
+            },
+        );
+        self.batcher.preempt(id);
+        self.metrics.preemptions += 1;
+    }
+
     /// Aggregate cache memory across *all* live sessions (a multi-request
     /// engine's true footprint — previously this sampled an arbitrary
     /// single session). When no session holds a compressed cache the last
@@ -459,6 +615,12 @@ impl Engine {
                 self.metrics.page_dedup_ratio = stats.dedup_ratio();
                 self.metrics.page_q1_memo_bytes = stats.q1_memo_bytes;
             }
+            // Pressure telemetry: the counters are monotone (no
+            // keep-last dance needed) and the physical gauge is honest
+            // current state — zero after drain is the truth.
+            self.metrics.pool_physical_bytes = stats.physical_bytes;
+            self.metrics.pool_memo_evictions = stats.memo_evictions;
+            self.metrics.pool_memo_recomputes = stats.memo_recomputes;
         }
         self.metrics.batcher_capacity_waits =
             self.batcher.metrics.capacity_waits;

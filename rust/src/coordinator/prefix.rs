@@ -209,7 +209,11 @@ impl PrefixIndex {
 
     /// Register a freshly prefilled prompt's page-aligned prefix. A
     /// re-registered prompt replaces its entry (newer handles win).
-    pub fn insert(&mut self, prompt: Vec<u8>, prefix: SharedPrefix) {
+    /// When the capacity bound trips, fully dead entries (pages freed —
+    /// otherwise only pruned lazily by lookups that meet them) are
+    /// dropped *first*, so ghosts never push a live, shareable entry
+    /// out of the index.
+    pub fn insert(&mut self, prompt: Vec<u8>, prefix: SharedPrefix, pool: &PagePool) {
         if prefix.n_pages == 0 {
             return;
         }
@@ -217,6 +221,9 @@ impl PrefixIndex {
         let stamp = self.clock;
         self.entries.insert(prompt, Entry { prefix, stamp });
         if self.entries.len() > self.cap {
+            self.entries.retain(|_, e| e.prefix.live_pages(pool) > 0);
+        }
+        while self.entries.len() > self.cap {
             if let Some(key) = self
                 .entries
                 .iter()
@@ -224,6 +231,8 @@ impl PrefixIndex {
                 .map(|(k, _)| k.clone())
             {
                 self.entries.remove(&key);
+            } else {
+                break;
             }
         }
     }
@@ -269,7 +278,7 @@ mod tests {
         let mut pool = PagePool::new();
         let mut ix = PrefixIndex::new(8);
         let p = prefix(&mut rng, &mut pool, 2);
-        ix.insert(b"abcdefgh".to_vec(), p.clone());
+        ix.insert(b"abcdefgh".to_vec(), p.clone(), &pool);
         let got = ix.lookup(b"abcdefgh", BLOCK, &pool).expect("hit");
         assert_eq!(got.tokens, 8);
         assert_eq!(got.n_pages, 2);
@@ -283,7 +292,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let mut pool = PagePool::new();
         let mut ix = PrefixIndex::new(8);
-        ix.insert(b"abcdefgh".to_vec(), prefix(&mut rng, &mut pool, 2));
+        ix.insert(b"abcdefgh".to_vec(), prefix(&mut rng, &mut pool, 2), &pool);
         // 6 common bytes -> 1 whole page of 4.
         let got = ix.lookup(b"abcdefZZZZ", BLOCK, &pool).expect("hit");
         assert_eq!(got.n_pages, 1);
@@ -298,9 +307,9 @@ mod tests {
         let mut rng = Rng::new(3);
         let mut pool = PagePool::new();
         let mut ix = PrefixIndex::new(8);
-        ix.insert(b"aaaabbbb".to_vec(), prefix(&mut rng, &mut pool, 2));
-        ix.insert(b"aaaacccc".to_vec(), prefix(&mut rng, &mut pool, 2));
-        ix.insert(b"zzzz".to_vec(), prefix(&mut rng, &mut pool, 1));
+        ix.insert(b"aaaabbbb".to_vec(), prefix(&mut rng, &mut pool, 2), &pool);
+        ix.insert(b"aaaacccc".to_vec(), prefix(&mut rng, &mut pool, 2), &pool);
+        ix.insert(b"zzzz".to_vec(), prefix(&mut rng, &mut pool, 1), &pool);
         let got = ix.lookup(b"aaaabbbbXXXX", BLOCK, &pool).expect("hit");
         assert_eq!(got.n_pages, 2, "full 8-byte overlap beats the 4-byte one");
     }
@@ -312,7 +321,7 @@ mod tests {
         let mut ix = PrefixIndex::new(8);
         let p = prefix(&mut rng, &mut pool, 1);
         let handles = p.k.clone();
-        ix.insert(b"aaaa".to_vec(), p);
+        ix.insert(b"aaaa".to_vec(), p, &pool);
         // The owning session goes away; entries are weak, so the pages die.
         for h in handles {
             pool.release(h);
@@ -333,7 +342,7 @@ mod tests {
         let p = prefix(&mut rng, &mut pool, 2);
         let (head_k, tail_k) = (p.k[0], p.k[1]);
         let tail_v = p.v[1];
-        ix.insert(b"abcdefgh".to_vec(), p);
+        ix.insert(b"abcdefgh".to_vec(), p, &pool);
         // Donor dies; a fork retained only page 1, so page 2 frees.
         pool.release(tail_k);
         pool.release(tail_v);
@@ -349,12 +358,40 @@ mod tests {
         let mut rng = Rng::new(5);
         let mut pool = PagePool::new();
         let mut ix = PrefixIndex::new(2);
-        ix.insert(b"aaaa".to_vec(), prefix(&mut rng, &mut pool, 1));
-        ix.insert(b"bbbb".to_vec(), prefix(&mut rng, &mut pool, 1));
-        ix.insert(b"cccc".to_vec(), prefix(&mut rng, &mut pool, 1));
+        ix.insert(b"aaaa".to_vec(), prefix(&mut rng, &mut pool, 1), &pool);
+        ix.insert(b"bbbb".to_vec(), prefix(&mut rng, &mut pool, 1), &pool);
+        ix.insert(b"cccc".to_vec(), prefix(&mut rng, &mut pool, 1), &pool);
         assert_eq!(ix.len(), 2);
         assert!(ix.lookup(b"aaaa", BLOCK, &pool).is_none(), "stalest evicted");
         assert!(ix.lookup(b"cccc", BLOCK, &pool).is_some());
+    }
+
+    /// Capacity hygiene (ISSUE 7 satellite): dead entries — only pruned
+    /// lazily when a lookup happens to meet them — must not count
+    /// against `cap` and push a *live* entry out at insert time.
+    #[test]
+    fn capacity_prunes_dead_before_evicting_live() {
+        let mut rng = Rng::new(8);
+        let mut pool = PagePool::new();
+        let mut ix = PrefixIndex::new(2);
+        // Stalest entry is live and shareable...
+        let a = prefix(&mut rng, &mut pool, 1);
+        ix.insert(b"aaaa".to_vec(), a, &pool);
+        // ...the newer one's pages die (owner completed, no forks).
+        let b = prefix(&mut rng, &mut pool, 1);
+        let dead: Vec<PageHandle> =
+            b.k.iter().chain(b.v.iter()).copied().collect();
+        ix.insert(b"bbbb".to_vec(), b, &pool);
+        for h in dead {
+            pool.release(h);
+        }
+        // The third insert trips the cap: the dead ghost must go, not
+        // the stalest-but-live "aaaa".
+        ix.insert(b"cccc".to_vec(), prefix(&mut rng, &mut pool, 1), &pool);
+        assert_eq!(ix.len(), 2);
+        assert!(ix.lookup(b"aaaa", BLOCK, &pool).is_some(), "live kept");
+        assert!(ix.lookup(b"cccc", BLOCK, &pool).is_some());
+        assert!(ix.lookup(b"bbbb", BLOCK, &pool).is_none(), "ghost gone");
     }
 
     #[test]

@@ -26,9 +26,11 @@
 //!   rather than inside the stream: sessions whose prompts share a
 //!   page-aligned prefix adopt the same physical pages
 //!   ([`store::StreamCache::adopt_pages`]), the pool memoizes each
-//!   page's q1 dequantization once globally, and exact shared/private
-//!   byte accounting ([`pagepool::PoolStats`]) feeds the engine's dedup
-//!   metrics.
+//!   page's q1 dequantization lazily on first read (one memo globally,
+//!   evictable under the pool's optional byte cap and recomputed on
+//!   demand — it is derivable state), and exact shared/private byte
+//!   accounting ([`pagepool::PoolStats`]) feeds the engine's dedup and
+//!   memory-pressure metrics.
 
 pub mod buffer;
 pub mod page;

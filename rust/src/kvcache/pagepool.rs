@@ -27,21 +27,33 @@
 //!   pooled world. A live stream's handles can never actually dangle
 //!   (it holds a ref), so the check is free in steady state and loud
 //!   the moment a future eviction path violates the contract.
-//! * The pool memoizes each page's q1 dequantization at `insert`
-//!   ([`PagePool::q1`]): the dequantize-once property that PR 1 gave
-//!   each stream now amortizes across *sessions* — a page shared by N
-//!   sessions is dequantized once globally, and every session's view
-//!   sync is a memcpy.
+//! * The pool memoizes each page's q1 dequantization **lazily**, on the
+//!   first [`PagePool::q1`] read (the first view sync that reaches the
+//!   page): a page shared by N sessions is still dequantized once
+//!   globally, and every session's view sync is a memcpy — but a page
+//!   nobody reads costs no memo bytes.
+//! * The memo is **derivable state** and therefore evictable: under a
+//!   [byte cap](PagePool::set_byte_cap), [`PagePool::enforce_cap`]
+//!   drops least-recently-used memos (XQuant's rematerialize-over-store
+//!   argument applied to our own recomputable state). Evicting a memo
+//!   does **not** bump the epoch — views *copy* memo contents, never
+//!   alias them, so an existing view stays valid; the memo is simply
+//!   recomputed from the immutable page on the next `q1` read (counted
+//!   in [`PoolStats::memo_recomputes`]). Pages themselves are never
+//!   evicted here: shrinking physical storage means releasing refs,
+//!   which only the owners (engine preemption) may do, via the strict
+//!   rules above.
 //!
 //! The pool itself is shared via [`SharedPagePool`]
 //! (`Arc<RwLock<PagePool>>`, like the decode `WorkerPool`): the decode
 //! hot path only ever takes the read lock (view sync from worker
-//! threads is lock-concurrent), and mutations (insert on flush,
-//! retain/release at session fork/teardown) are brief engine-thread
-//! write locks.
+//! threads is lock-concurrent — the lazy memo fill uses a per-slot
+//! `OnceLock` so concurrent readers stay safe), and mutations (insert
+//! on flush, retain/release at session fork/teardown, memo eviction)
+//! are brief engine-thread write locks.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
 
 use super::QuantPage;
 
@@ -71,14 +83,22 @@ pub struct PageHandle {
     gen: u32,
 }
 
-/// One pool slot: the page (if live), its q1 memo, and the refcount.
+/// One pool slot: the page (if live), its lazy q1 memo, and the
+/// refcount.
 #[derive(Debug, Default)]
 struct Slot {
     page: Option<QuantPage>,
-    /// Memoized q2 -> q1 dequantization (`tokens * channels` codes),
-    /// computed once at insert — derivable metadata, like the per-page
-    /// dequant tables.
-    q1: Vec<i8>,
+    /// Memoized q2 -> q1 dequantization (`tokens * channels` codes).
+    /// Filled on the first [`PagePool::q1`] read (under the pool's
+    /// *read* lock — `OnceLock` makes concurrent first reads safe) and
+    /// dropped by [`PagePool::enforce_cap`] under memory pressure.
+    /// Derivable state: eviction never touches correctness, only cost.
+    q1: OnceLock<Vec<i8>>,
+    /// Lamport stamp of the last `q1` read — LRU victim selection key.
+    last_used: AtomicU64,
+    /// Set when the memo was evicted, so the next fill counts as a
+    /// recompute rather than a first compute.
+    q1_dropped: AtomicBool,
     refs: u32,
     gen: u32,
 }
@@ -100,9 +120,17 @@ pub struct PoolStats {
     pub shared_bytes: usize,
     /// Physical bytes of pages with exactly one owner.
     pub private_bytes: usize,
-    /// Bytes of the memoized q1 dequantizations (working memory, not
-    /// storage — the pooled analogue of `CacheStats::view_bytes`).
+    /// Bytes of the currently materialized q1 memos (working memory,
+    /// not storage — the pooled analogue of `CacheStats::view_bytes`).
+    /// Zero for pages nobody has read and for evicted memos.
     pub q1_memo_bytes: usize,
+    /// Configured byte cap over `physical_bytes + q1_memo_bytes`
+    /// (`None` = unbounded).
+    pub byte_cap: Option<usize>,
+    /// Memos dropped under pressure since pool creation (monotone).
+    pub memo_evictions: u64,
+    /// Memos rebuilt after an eviction since pool creation (monotone).
+    pub memo_recomputes: u64,
 }
 
 impl PoolStats {
@@ -128,6 +156,14 @@ pub struct PagePool {
     /// Atomic (and handed out via [`Self::epoch_probe`]) so the decode
     /// hot path can poll it without the pool lock.
     epoch: Arc<AtomicU64>,
+    /// Byte budget over pages + memos (`None` = unbounded).
+    byte_cap: Option<usize>,
+    /// Lamport clock stamping `Slot::last_used` on every `q1` read.
+    clock: AtomicU64,
+    /// Monotone pressure counters (atomics so the lock-concurrent `q1`
+    /// read path can bump recomputes through `&self`).
+    memo_evictions: AtomicU64,
+    memo_recomputes: AtomicU64,
 }
 
 impl PagePool {
@@ -140,10 +176,20 @@ impl PagePool {
         Arc::new(RwLock::new(PagePool::new()))
     }
 
-    /// Move a page into the pool with one owner; dequantizes the q1
-    /// memo once, here, so every later read is a copy.
+    /// Set (or clear) the byte cap enforced by [`Self::enforce_cap`]
+    /// over `physical_bytes + q1_memo_bytes`.
+    pub fn set_byte_cap(&mut self, cap: Option<usize>) {
+        self.byte_cap = cap;
+    }
+
+    /// The configured byte cap, if any.
+    pub fn byte_cap(&self) -> Option<usize> {
+        self.byte_cap
+    }
+
+    /// Move a page into the pool with one owner. The q1 memo is *not*
+    /// computed here — it materializes on the first [`Self::q1`] read.
     pub fn insert(&mut self, page: QuantPage) -> PageHandle {
-        let q1 = page.dequant_q1();
         let index = match self.free.pop() {
             Some(i) => i,
             None => {
@@ -154,9 +200,13 @@ impl PagePool {
         let slot = &mut self.slots[index as usize];
         debug_assert!(slot.page.is_none(), "free list handed out a live slot");
         slot.page = Some(page);
-        slot.q1 = q1;
+        slot.q1 = OnceLock::new();
+        slot.last_used = AtomicU64::new(0);
+        slot.q1_dropped = AtomicBool::new(false);
         slot.refs = 1;
-        PageHandle { index, gen: slot.gen }
+        let h = PageHandle { index, gen: slot.gen };
+        self.enforce_cap();
+        h
     }
 
     fn slot(&self, h: PageHandle) -> &Slot {
@@ -174,9 +224,20 @@ impl PagePool {
         self.slot(h).page.as_ref().expect("checked live")
     }
 
-    /// The page's memoized q1 codes (`tokens * channels`).
+    /// The page's memoized q1 codes (`tokens * channels`), dequantized
+    /// on first read (or re-dequantized after a cap eviction). Takes
+    /// `&self`: worker-thread view syncs fill memos concurrently under
+    /// the pool's read lock, serialized per slot by the `OnceLock`.
     pub fn q1(&self, h: PageHandle) -> &[i8] {
-        &self.slot(h).q1
+        let slot = self.slot(h);
+        let now = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        slot.last_used.store(now, Ordering::Relaxed);
+        slot.q1.get_or_init(|| {
+            if slot.q1_dropped.swap(false, Ordering::Relaxed) {
+                self.memo_recomputes.fetch_add(1, Ordering::Relaxed);
+            }
+            slot.page.as_ref().expect("checked live").dequant_q1()
+        })
     }
 
     /// Current owner count of a live page.
@@ -214,7 +275,9 @@ impl PagePool {
         slot.refs -= 1;
         if slot.refs == 0 {
             slot.page = None;
-            slot.q1 = Vec::new();
+            slot.q1 = OnceLock::new();
+            slot.last_used = AtomicU64::new(0);
+            slot.q1_dropped = AtomicBool::new(false);
             slot.gen = slot.gen.wrapping_add(1);
             self.free.push(h.index);
             self.epoch.fetch_add(1, Ordering::Relaxed);
@@ -248,16 +311,65 @@ impl PagePool {
         self.slots.iter().filter(|s| s.page.is_some()).count()
     }
 
+    /// Storage bytes of every live page (the irreducible tier — only
+    /// owner releases can shrink it).
+    pub fn physical_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .filter_map(|s| s.page.as_ref())
+            .map(|p| p.bytes())
+            .sum()
+    }
+
+    /// Bytes of currently materialized q1 memos (the evictable tier).
+    pub fn memo_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| s.q1.get().map_or(0, |v| v.len()))
+            .sum()
+    }
+
+    /// Tier-1 pressure relief: while `physical + memo` exceeds the cap,
+    /// drop the least-recently-used materialized memo. Returns the
+    /// number of memos evicted. Never frees pages (that is the owners'
+    /// job, via `release`) and never bumps the epoch — views copy memo
+    /// contents, so an eviction cannot invalidate anything; the memo is
+    /// transparently recomputed on the next [`Self::q1`] read.
+    pub fn enforce_cap(&mut self) -> usize {
+        let Some(cap) = self.byte_cap else { return 0 };
+        let physical = self.physical_bytes();
+        let mut memo = self.memo_bytes();
+        let mut evicted = 0usize;
+        while physical + memo > cap {
+            let victim = self
+                .slots
+                .iter_mut()
+                .filter(|s| s.page.is_some() && s.q1.get().is_some())
+                .min_by_key(|s| s.last_used.load(Ordering::Relaxed));
+            let Some(slot) = victim else { break };
+            memo -= slot.q1.take().map_or(0, |v| v.len());
+            slot.q1_dropped.store(true, Ordering::Relaxed);
+            evicted += 1;
+        }
+        self.memo_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        evicted
+    }
+
     /// Exact shared/private accounting over every live page.
     pub fn stats(&self) -> PoolStats {
-        let mut st = PoolStats::default();
+        let mut st = PoolStats {
+            byte_cap: self.byte_cap,
+            memo_evictions: self.memo_evictions.load(Ordering::Relaxed),
+            memo_recomputes: self.memo_recomputes.load(Ordering::Relaxed),
+            ..PoolStats::default()
+        };
         for slot in &self.slots {
             let Some(page) = &slot.page else { continue };
             let bytes = page.bytes();
             st.live_pages += 1;
             st.physical_bytes += bytes;
             st.logical_bytes += bytes * slot.refs as usize;
-            st.q1_memo_bytes += slot.q1.len();
+            st.q1_memo_bytes += slot.q1.get().map_or(0, |v| v.len());
             if slot.refs > 1 {
                 st.shared_pages += 1;
                 st.shared_bytes += bytes;
@@ -282,14 +394,16 @@ mod tests {
     }
 
     #[test]
-    fn insert_get_roundtrip_and_q1_memo() {
+    fn insert_get_roundtrip_and_lazy_q1_memo() {
         let mut rng = Rng::new(1);
         let mut pool = PagePool::new();
         let p = page(&mut rng, 4, 8);
         let want = p.dequant_q1();
         let h = pool.insert(p);
         assert_eq!(pool.refs(h), 1);
+        assert_eq!(pool.stats().q1_memo_bytes, 0, "memo is lazy");
         assert_eq!(pool.q1(h), &want[..], "memo == fresh dequantization");
+        assert_eq!(pool.stats().q1_memo_bytes, 4 * 8, "materialized on read");
         assert_eq!(pool.get(h).tokens, 4);
         assert_eq!(pool.live_pages(), 1);
     }
@@ -353,6 +467,9 @@ mod tests {
         let b = pool.insert(page(&mut rng, 4, 8));
         pool.retain(b); // shared by 2
         pool.retain(b); // shared by 3
+        assert_eq!(pool.stats().q1_memo_bytes, 0, "no memo before any read");
+        let _ = pool.q1(a);
+        let _ = pool.q1(b);
         let st = pool.stats();
         assert_eq!(st.live_pages, 2);
         assert_eq!(st.shared_pages, 1);
@@ -362,7 +479,7 @@ mod tests {
         assert_eq!(st.logical_bytes, ab + 3 * bb);
         assert_eq!(st.private_bytes, ab);
         assert_eq!(st.shared_bytes, bb);
-        assert!(st.q1_memo_bytes >= 2 * 4 * 8);
+        assert_eq!(st.q1_memo_bytes, 2 * 4 * 8);
         let want = 1.0 - (ab + bb) as f64 / (ab + 3 * bb) as f64;
         assert!((st.dedup_ratio() - want).abs() < 1e-12);
     }
@@ -373,6 +490,70 @@ mod tests {
         let st = pool.stats();
         assert_eq!(st, PoolStats::default());
         assert_eq!(st.dedup_ratio(), 0.0);
+    }
+
+    #[test]
+    fn memo_eviction_recomputes_identically_without_epoch_bump() {
+        let mut rng = Rng::new(7);
+        let mut pool = PagePool::new();
+        let p = page(&mut rng, 4, 8);
+        let want = p.dequant_q1();
+        let h = pool.insert(p);
+        assert_eq!(pool.q1(h), &want[..]);
+        let e0 = pool.epoch();
+        // Cap below physical + memo: the memo must go, the page stays.
+        pool.set_byte_cap(Some(pool.physical_bytes()));
+        assert_eq!(pool.enforce_cap(), 1);
+        let st = pool.stats();
+        assert_eq!(st.q1_memo_bytes, 0, "memo evicted");
+        assert_eq!(st.memo_evictions, 1);
+        assert_eq!(pool.epoch(), e0, "memo eviction must not bump the epoch");
+        assert!(pool.is_live(h), "pages are never freed by the cap");
+        assert_eq!(pool.refs(h), 1);
+        // The next read transparently rematerializes the same bytes.
+        assert_eq!(pool.q1(h), &want[..], "recompute == original");
+        assert_eq!(pool.stats().memo_recomputes, 1);
+        assert_eq!(pool.enforce_cap(), 1, "and it is evictable again");
+    }
+
+    #[test]
+    fn cap_evicts_least_recently_used_memo_first() {
+        let mut rng = Rng::new(8);
+        let mut pool = PagePool::new();
+        let mut hs = Vec::new();
+        for _ in 0..3 {
+            hs.push(pool.insert(page(&mut rng, 4, 8)));
+        }
+        for &h in &hs {
+            let _ = pool.q1(h);
+        }
+        // Re-touch 0 and 2: page 1 becomes the LRU memo.
+        let _ = pool.q1(hs[0]);
+        let _ = pool.q1(hs[2]);
+        pool.set_byte_cap(Some(pool.physical_bytes() + 2 * 4 * 8));
+        assert_eq!(pool.enforce_cap(), 1, "exactly one memo over budget");
+        // Recently used memos survived: re-reading them recomputes
+        // nothing, while the LRU victim rebuilds.
+        let _ = pool.q1(hs[0]);
+        let _ = pool.q1(hs[2]);
+        assert_eq!(pool.stats().memo_recomputes, 0, "MRU memos survived");
+        let _ = pool.q1(hs[1]);
+        assert_eq!(pool.stats().memo_recomputes, 1, "LRU memo was the victim");
+    }
+
+    #[test]
+    fn cap_cannot_evict_below_physical_bytes() {
+        let mut rng = Rng::new(9);
+        let mut pool = PagePool::new();
+        let h = pool.insert(page(&mut rng, 4, 8));
+        let _ = pool.q1(h);
+        // Cap below even the bare page bytes: eviction drops the memo
+        // and then stops — pages are owner-managed, never cap-freed.
+        pool.set_byte_cap(Some(1));
+        assert_eq!(pool.enforce_cap(), 1);
+        assert_eq!(pool.enforce_cap(), 0, "no memos left to evict");
+        assert!(pool.is_live(h));
+        assert!(pool.physical_bytes() > 1, "page storage is irreducible");
     }
 
     /// Refcount conservation under random retain/release interleavings:
@@ -419,6 +600,93 @@ mod tests {
             }
             // Drain: releasing every remaining owner empties the pool.
             for (h, refs) in ledger {
+                for _ in 0..refs {
+                    pool.release(h);
+                }
+            }
+            assert_eq!(pool.live_pages(), 0);
+        });
+    }
+
+    /// The eviction-safety property (ISSUE 7 satellite): random
+    /// interleavings of insert/retain/release *with cap-driven memo
+    /// eviction and q1 reads* preserve every refcount invariant — pages
+    /// with refs > 0 are never freed, the epoch counts exactly the
+    /// frees (memo evictions bump nothing), stale handles stay dead,
+    /// and every q1 read returns the page's exact dequantization no
+    /// matter how often its memo was dropped in between.
+    #[test]
+    fn cap_eviction_safety_property() {
+        prop::run("pool cap eviction safety", 30, |g| {
+            let mut rng = Rng::new(g.seed());
+            let mut pool = PagePool::new();
+            // Tiny cap: with 2x4 pages (28 bytes each, 8-byte memos)
+            // almost every insert/read runs over budget.
+            pool.set_byte_cap(Some(g.usize_in(30, 120)));
+            // (handle, remaining owners, expected q1) ledger.
+            let mut ledger: Vec<(PageHandle, u32, Vec<i8>)> = Vec::new();
+            let mut dead: Vec<PageHandle> = Vec::new();
+            let mut frees = 0u64;
+            for _ in 0..g.usize_in(1, 80) {
+                match g.usize_in(0, 5) {
+                    0 => {
+                        let p = page(&mut rng, 2, 4);
+                        let want = p.dequant_q1();
+                        let h = pool.insert(p);
+                        ledger.push((h, 1, want));
+                    }
+                    1 if !ledger.is_empty() => {
+                        let i = g.usize_in(0, ledger.len());
+                        pool.retain(ledger[i].0);
+                        ledger[i].1 += 1;
+                    }
+                    2 if !ledger.is_empty() => {
+                        let i = g.usize_in(0, ledger.len());
+                        pool.release(ledger[i].0);
+                        ledger[i].1 -= 1;
+                        if ledger[i].1 == 0 {
+                            let (h, _, _) = ledger.swap_remove(i);
+                            frees += 1;
+                            dead.push(h);
+                        }
+                    }
+                    3 if !ledger.is_empty() => {
+                        // Read q1 — possibly a recompute after eviction.
+                        let i = g.usize_in(0, ledger.len());
+                        let (h, _, ref want) = ledger[i];
+                        assert_eq!(pool.q1(h), &want[..], "q1 stable");
+                    }
+                    4 => {
+                        pool.enforce_cap();
+                    }
+                    _ => {}
+                }
+                // Invariants after every op.
+                let st = pool.stats();
+                assert_eq!(st.live_pages, ledger.len());
+                assert_eq!(pool.epoch(), frees, "epoch == page frees only");
+                if let Some(cap) = st.byte_cap {
+                    // The evictable tier is fully reclaimable: at most
+                    // one enforce_cap brings memos within whatever the
+                    // cap leaves above irreducible page storage.
+                    pool.enforce_cap();
+                    let st = pool.stats();
+                    assert!(
+                        st.physical_bytes + st.q1_memo_bytes
+                            <= cap.max(st.physical_bytes),
+                        "memos within cap headroom after enforcement"
+                    );
+                }
+                for &(h, refs, _) in &ledger {
+                    assert!(pool.is_live(h), "refs > 0 page never freed");
+                    assert_eq!(pool.refs(h), refs);
+                }
+                for &h in &dead {
+                    assert!(!pool.is_live(h), "stale handles stay dead");
+                }
+            }
+            // Drain and confirm the counters moved only as evictions.
+            for (h, refs, _) in ledger {
                 for _ in 0..refs {
                     pool.release(h);
                 }

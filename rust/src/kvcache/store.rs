@@ -270,9 +270,13 @@ impl StreamCache {
     ///
     /// Work done is proportional to what changed since the last call:
     /// pages created since then are copied from the pool's
-    /// dequantize-once q1 memo (the dequantization itself happened at
-    /// page insert, once globally — shared pages pay it once across all
-    /// sessions), and only buffer tokens not yet mirrored are copied.
+    /// dequantize-once q1 memo (materialized lazily by the first
+    /// session's sync to read the page — shared pages pay it once
+    /// across all sessions; under a pool byte cap the memo may have
+    /// been evicted and is transparently recomputed by `PagePool::q1`,
+    /// which is safe precisely because the view *copies* memo contents
+    /// and never aliases them), and only buffer tokens not yet
+    /// mirrored are copied.
     /// Steady-state decode (one `push_token` between syncs) costs
     /// O(d_head) per call, versus O(tokens * d_head) for a fresh
     /// [`Self::read_q1_into`].

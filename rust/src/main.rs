@@ -40,6 +40,13 @@
 //! prefix share the same refcounted q2 pages instead of each storing a
 //! copy; `gen --batch N` submits the prompt N times to exercise it.
 //!
+//! `--pool-bytes N` caps the shared KV page pool at N bytes (pages +
+//! q1 memos). Under pressure the engine first evicts LRU q1 memos
+//! (recomputed on demand), then preempts the youngest running request
+//! (pages released, recompute-on-resume) — outputs stay bit-identical
+//! to an uncapped run; pressure counters appear in `gen` output and
+//! `STATS`.
+//!
 //! `--kernel-backend scalar|avx2|neon|auto` pins the integer-kernel ISA
 //! (default: auto-detect; the `TURBO_KERNEL` env var is the same knob
 //! for processes without this flag). Every backend is bit-identical —
@@ -136,6 +143,11 @@ fn engine_config(args: &Args) -> EngineConfig {
     };
     cfg.batcher.max_running = args.opt_parse("max-running", 8usize);
     cfg.batcher.token_budget = args.opt_parse("token-budget", 4096usize);
+    cfg.pool_byte_cap = args.opt("pool-bytes").map(|s| {
+        s.parse().unwrap_or_else(|_| {
+            panic!("--pool-bytes: cannot parse {s:?} as bytes")
+        })
+    });
     cfg
 }
 
@@ -251,6 +263,16 @@ fn gen(args: &Args) -> Result<()> {
             engine.metrics.prefix_hits,
             engine.metrics.prefix_shared_tokens,
             engine.metrics.page_dedup_ratio
+        );
+    }
+    if let Some(cap) = engine.cfg.pool_byte_cap {
+        println!(
+            "pool   : cap {cap}B | preempt {} | replayed {} | \
+             memo evict {} | memo recompute {}",
+            engine.metrics.preemptions,
+            engine.metrics.preempt_replayed_tokens,
+            engine.metrics.pool_memo_evictions,
+            engine.metrics.pool_memo_recomputes
         );
     }
     Ok(())

@@ -186,12 +186,29 @@ pub struct EngineMetrics {
     /// of referenced page storage deduplicated away. For B sessions
     /// sharing one prompt prefix this is ≈ (B-1)/B of the prefix pages.
     pub page_dedup_ratio: f64,
-    /// Working memory of the pool's per-page q1 memos (dequantized once
-    /// at insert, shared by every owner's view sync) — the pool-level
-    /// analogue of `cache_view_bytes`, and the price of cross-session
+    /// Working memory of the pool's per-page q1 memos (dequantized
+    /// lazily on the first view sync that reads the page, shared by
+    /// every owner afterwards) — the pool-level analogue of
+    /// `cache_view_bytes`, and the price of cross-session
     /// dequantize-once. Excluded from `cache_bytes` like all derivable
-    /// metadata.
+    /// metadata, and evictable under `pool_byte_cap`.
     pub page_q1_memo_bytes: usize,
+    /// Configured pool byte cap over pages + memos (0 = uncapped).
+    pub pool_byte_cap: usize,
+    /// Current physical page storage in the shared pool (the
+    /// irreducible tier the cap's preemption path manages).
+    pub pool_physical_bytes: usize,
+    /// q1 memos dropped under memory pressure (monotone).
+    pub pool_memo_evictions: u64,
+    /// q1 memos rebuilt after an eviction (monotone) — the recompute
+    /// price paid for staying under the cap.
+    pub pool_memo_recomputes: u64,
+    /// Running sessions preempted under memory pressure (pages
+    /// released, request re-queued for recompute-on-resume; monotone).
+    pub preemptions: u64,
+    /// Decode steps replayed while resuming preempted requests — the
+    /// recompute price of tier-2 pressure relief (monotone).
+    pub preempt_replayed_tokens: u64,
     /// Admissions that forked from a shared prefix.
     pub prefix_hits: u64,
     /// Prompt tokens served from shared pages instead of re-quantized.

@@ -204,7 +204,9 @@ fn format_stats(s: &crate::coordinator::StatsSnapshot) -> String {
     format!(
         "STATS completed={} cancelled={} tokens={} prefill_tokens={} \
          ttft_p50_ms={:.2} latency_p50_ms={:.2} itl_p50_ms={:.3} \
-         itl_p95_ms={:.3} itl_mean_ms={:.3} dedup={:.3} kernel={}",
+         itl_p95_ms={:.3} itl_mean_ms={:.3} dedup={:.3} kernel={} \
+         pool_cap={} pool_bytes={} preempt={} replayed={} memo_evict={} \
+         memo_recompute={}",
         s.metrics.requests_completed,
         s.metrics.requests_cancelled,
         s.metrics.tokens_generated,
@@ -216,6 +218,12 @@ fn format_stats(s: &crate::coordinator::StatsSnapshot) -> String {
         s.itl.mean() * 1e3,
         s.metrics.page_dedup_ratio,
         s.metrics.kernel_backend,
+        s.metrics.pool_byte_cap,
+        s.metrics.pool_physical_bytes,
+        s.metrics.preemptions,
+        s.metrics.preempt_replayed_tokens,
+        s.metrics.pool_memo_evictions,
+        s.metrics.pool_memo_recomputes,
     )
 }
 

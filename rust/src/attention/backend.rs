@@ -48,8 +48,8 @@ use crate::kvcache::{
     SharedPagePool,
 };
 use crate::model::{
-    CpuModel, DecodeOut, FlashSlabs, ModelBundle, ModelScratch, SlabShardMut,
-    TurboSlabs,
+    CpuModel, DecodeOut, FlashSlabs, ModelBundle, ModelScratch, PrefillCursor,
+    SlabShardMut, TurboSlabs,
 };
 use crate::pool::{balanced_chunk_sizes, WorkerPool};
 use crate::quant::Bits;
@@ -69,6 +69,25 @@ pub enum PathMode {
     TurboCpu,
     /// Exact FlashAttention baseline with an FP32 cache.
     Flash,
+}
+
+/// Result of one [`AttentionBackend::prefill_chunk`] grant.
+pub enum PrefillChunkOut<S> {
+    /// The grant was consumed but the prompt is not finished; the
+    /// cursor passed in holds the resume state.
+    Pending {
+        /// Prompt tokens processed so far, across all grants.
+        processed: usize,
+    },
+    /// Prefill completed: the logits row of the final prompt position
+    /// (the first generated token samples from it), the fresh session,
+    /// and the prefix-registration handles — exactly what
+    /// [`AttentionBackend::prefill`] would have produced.
+    Done {
+        last_logits: Vec<f32>,
+        session: S,
+        reg: Option<SharedPrefix>,
+    },
 }
 
 /// One serving path: prompt prefill, per-token decode, and K/V fold, with
@@ -126,6 +145,44 @@ pub trait AttentionBackend {
     /// uses for prefix lookups and the engine for dedup metrics.
     fn page_pool(&self) -> Option<&SharedPagePool> {
         None
+    }
+
+    /// Whether [`AttentionBackend::prefill_chunk`] can actually stop at
+    /// a chunk boundary and resume later. Backends that keep the
+    /// default `false` always run the whole prompt in one grant, and
+    /// the scheduler clamps its chunk size to whole-prompt grants for
+    /// them.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Run at most `max_tokens` further prompt tokens of a resumable
+    /// prefill. `cursor` is the type-erased mid-prefill state: `None`
+    /// opens a new prefill (the only time `shared` is consulted),
+    /// `Some` resumes one. On completion the cursor is consumed and
+    /// [`PrefillChunkOut::Done`] carries the final prompt position's
+    /// logits row plus the fresh session, bit-for-bit what a one-shot
+    /// [`prefill`] builds — chunking must be invisible in the output.
+    ///
+    /// The default is the non-resumable path: one call, whole prompt,
+    /// delegated to [`prefill`].
+    ///
+    /// [`prefill`]: AttentionBackend::prefill
+    fn prefill_chunk(
+        &self,
+        bundle: &mut ModelBundle,
+        prompt: &[u8],
+        shared: Option<&SharedPrefix>,
+        cursor: &mut Option<BackendState>,
+        _max_tokens: usize,
+    ) -> Result<PrefillChunkOut<Self::Session>> {
+        debug_assert!(
+            cursor.is_none(),
+            "backend without chunked prefill handed a resume cursor"
+        );
+        let (logits, session, reg) = self.prefill(bundle, prompt, shared)?;
+        let last_logits = bundle.logits_at(&logits, prompt.len() - 1).to_vec();
+        Ok(PrefillChunkOut::Done { last_logits, session, reg })
     }
 }
 
@@ -576,6 +633,64 @@ impl TurboCpuBackend {
     pub fn model(&self) -> &Arc<CpuModel> {
         &self.model
     }
+
+    /// Open the session cache a prefill will ingest into, adopting a
+    /// shared prefix's pooled pages when one is given. Returns the
+    /// cache and the adopted (skip) token count.
+    fn open_cache(&self, shared: Option<&SharedPrefix>) -> (KvCache, usize) {
+        let m = &self.model.info;
+        let mut cache = turbo_cache_for(
+            m.n_layers,
+            m.n_heads,
+            m.d_head,
+            m.block,
+            self.kv_bits,
+            self.n_2bit_heads,
+            Arc::clone(&self.pages),
+        );
+        let skip = match shared {
+            Some(sp) => {
+                adopt_shared_prefix(&mut cache, sp);
+                sp.tokens
+            }
+            None => 0,
+        };
+        (cache, skip)
+    }
+
+    /// Seal a fully-prefilled cache into a serving session — shared by
+    /// the one-shot and chunked prefill paths so both build the exact
+    /// same state.
+    fn seal_session(&self, cache: KvCache) -> TurboCpuSession {
+        let m = &self.model.info;
+        let slabs = TurboSlabs::new(
+            m.n_layers,
+            m.n_heads,
+            m.max_ctx,
+            m.d_head,
+            m.block,
+        );
+        let inner = TurboSession::from_parts_pooled(
+            cache,
+            slabs,
+            Arc::clone(&self.pool),
+        );
+        TurboCpuSession {
+            inner,
+            scratches: vec![DecodeScratch::new(); self.pool.threads()],
+            model_scratch: ModelScratch::new(),
+        }
+    }
+}
+
+/// Mid-prefill state for the TurboCpu path: the session cache being
+/// ingested into plus the model's float-prefix cursor. Dropping it
+/// mid-flight (cancel, preemption) releases every pooled page ref
+/// through the cache's strict `release` drop path — abandoning a
+/// half-done prefill leaks nothing.
+pub struct CpuPrefillCursor {
+    cache: KvCache,
+    model: PrefillCursor,
 }
 
 /// TurboCpu per-request state: the same paged cache + slabs + sync
@@ -601,46 +716,61 @@ impl AttentionBackend for TurboCpuBackend {
         prompt: &[u8],
         shared: Option<&SharedPrefix>,
     ) -> Result<(Vec<f32>, TurboCpuSession, Option<SharedPrefix>)> {
-        let m = &self.model.info;
-        let mut cache = turbo_cache_for(
-            m.n_layers,
-            m.n_heads,
-            m.d_head,
-            m.block,
-            self.kv_bits,
-            self.n_2bit_heads,
-            Arc::clone(&self.pages),
-        );
-        let skip = match shared {
-            Some(sp) => {
-                debug_assert!(sp.tokens <= prompt.len());
-                adopt_shared_prefix(&mut cache, sp);
-                sp.tokens
-            }
-            None => 0,
-        };
+        if let Some(sp) = shared {
+            debug_assert!(sp.tokens <= prompt.len());
+        }
+        let (mut cache, skip) = self.open_cache(shared);
         let logits =
             self.model.prefill_from(prompt, skip, &self.pool, &mut cache)?;
         let reg = collect_prefix(&cache, prompt.len());
-        let slabs = TurboSlabs::new(
-            m.n_layers,
-            m.n_heads,
-            m.max_ctx,
-            m.d_head,
-            m.block,
-        );
-        let inner = TurboSession::from_parts_pooled(
-            cache,
-            slabs,
-            Arc::clone(&self.pool),
-        );
-        let scratches = vec![DecodeScratch::new(); self.pool.threads()];
-        let session = TurboCpuSession {
-            inner,
-            scratches,
-            model_scratch: ModelScratch::new(),
-        };
-        Ok((logits, session, reg))
+        Ok((logits, self.seal_session(cache), reg))
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(
+        &self,
+        _bundle: &mut ModelBundle,
+        prompt: &[u8],
+        shared: Option<&SharedPrefix>,
+        cursor: &mut Option<BackendState>,
+        max_tokens: usize,
+    ) -> Result<PrefillChunkOut<TurboCpuSession>> {
+        if cursor.is_none() {
+            let (cache, skip) = self.open_cache(shared);
+            let model = self.model.begin_prefill(prompt, skip, &cache)?;
+            *cursor =
+                Some(BackendState::new(CpuPrefillCursor { cache, model }));
+        }
+        let st = cursor
+            .as_mut()
+            .expect("cursor installed above")
+            .downcast_mut::<CpuPrefillCursor>();
+        let done = self.model.prefill_chunk(
+            prompt,
+            &mut st.model,
+            max_tokens,
+            &self.pool,
+            &mut st.cache,
+        )?;
+        match done {
+            None => {
+                Ok(PrefillChunkOut::Pending { processed: st.model.done() })
+            }
+            Some(logits) => {
+                let st = cursor
+                    .take()
+                    .expect("cursor present")
+                    .downcast::<CpuPrefillCursor>();
+                let reg = collect_prefix(&st.cache, prompt.len());
+                let session = self.seal_session(st.cache);
+                let v = self.model.info.vocab;
+                let last_logits = logits[logits.len() - v..].to_vec();
+                Ok(PrefillChunkOut::Done { last_logits, session, reg })
+            }
+        }
     }
 
     fn decode_step(
@@ -783,6 +913,16 @@ impl BackendState {
             .downcast_mut::<S>()
             .expect("session state does not match backend")
     }
+
+    /// Take back the concrete state by value — how a backend consumes
+    /// its own prefill cursor on the final chunk. Panics on mismatch,
+    /// same contract as [`BackendState::downcast_ref`].
+    pub fn downcast<S: Any>(self) -> S {
+        *self
+            .0
+            .downcast::<S>()
+            .unwrap_or_else(|_| panic!("session state does not match backend"))
+    }
 }
 
 /// Object-safe facade over [`AttentionBackend`], so the engine can pick
@@ -813,6 +953,18 @@ pub trait DynBackend {
     fn cache_stats(&self, state: &BackendState) -> Option<CacheStats>;
     /// See [`AttentionBackend::page_pool`].
     fn page_pool(&self) -> Option<&SharedPagePool>;
+    /// See [`AttentionBackend::supports_chunked_prefill`].
+    fn supports_chunked_prefill(&self) -> bool;
+    /// See [`AttentionBackend::prefill_chunk`]; the completed session is
+    /// type-erased like [`DynBackend::prefill`]'s.
+    fn prefill_chunk(
+        &self,
+        bundle: &mut ModelBundle,
+        prompt: &[u8],
+        shared: Option<&SharedPrefix>,
+        cursor: &mut Option<BackendState>,
+        max_tokens: usize,
+    ) -> Result<PrefillChunkOut<BackendState>>;
 }
 
 struct Erased<B>(B);
@@ -864,6 +1016,34 @@ where
 
     fn page_pool(&self) -> Option<&SharedPagePool> {
         self.0.page_pool()
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        self.0.supports_chunked_prefill()
+    }
+
+    fn prefill_chunk(
+        &self,
+        bundle: &mut ModelBundle,
+        prompt: &[u8],
+        shared: Option<&SharedPrefix>,
+        cursor: &mut Option<BackendState>,
+        max_tokens: usize,
+    ) -> Result<PrefillChunkOut<BackendState>> {
+        let out =
+            self.0.prefill_chunk(bundle, prompt, shared, cursor, max_tokens)?;
+        Ok(match out {
+            PrefillChunkOut::Pending { processed } => {
+                PrefillChunkOut::Pending { processed }
+            }
+            PrefillChunkOut::Done { last_logits, session, reg } => {
+                PrefillChunkOut::Done {
+                    last_logits,
+                    session: BackendState::new(session),
+                    reg,
+                }
+            }
+        })
     }
 }
 

@@ -72,8 +72,21 @@ pub fn turbo_attention(q: &Mat, k: &Mat, v: &Mat, cfg: &TurboConfig) -> Mat {
         let mut l = vec![0.0f32; rb];
         let mut acc = Mat::zeros(rb, d);
 
+        // Causal early exit: the last row of this tile sees keys up to
+        // absolute index `i0 + rb - 1 + nk - nq`, so every later column
+        // tile is fully masked. Skipping them is not only a ~2x prefill
+        // tile-count win — it is a correctness anchor for chunked
+        // prefill: SAS `exp(0)` is `poly(0)` = 0.9996, not exactly 1.0,
+        // so a fully-masked tile would still rescale `acc`/`l` by
+        // `ex(0)` (cancelled by the final `acc/l` division only in
+        // exact arithmetic, visible in f32 low bits). Bounding the
+        // column walk by the row tile's own visibility makes the tile
+        // sequence for rows [i0, i1) a function of their absolute
+        // positions alone, which is what makes `CpuModel::prefill_chunk`
+        // bitwise identical to a monolithic prefill.
+        let j_end = if cfg.causal { (i0 + rb + nk - nq).min(nk) } else { nk };
         let mut j0 = 0;
-        while j0 < nk {
+        while j0 < j_end {
             let j1 = (j0 + cfg.bc).min(nk);
             let cb = j1 - j0;
             let mut k_blk = k.rows_slice(j0, j1);
@@ -647,6 +660,45 @@ mod tests {
             let a = turbo_attention(&q, &k, &v, &c1);
             let b = turbo_attention(&q, &k, &v, &c2);
             assert!(a.rel_err(&b) < 0.06);
+        });
+    }
+
+    #[test]
+    fn causal_tail_query_rows_match_monolithic_bitwise() {
+        // The chunked-prefill contract: a causal call with q = rows
+        // [s, e) and k/v = rows [0, e) (tail-query semantics, nq < nk)
+        // must reproduce the monolithic call's rows [s, e) to the bit,
+        // for any block-aligned chunk start s. This is exact — not
+        // tolerance — because the early exit makes both calls process
+        // identical tile sequences with identical quantization groups.
+        prop::run("chunked rows == monolithic", 20, |g| {
+            let b = 8usize; // br == bc tile, chunk alignment
+            let n = b * g.usize_in(2, 5) - g.usize_in(0, b - 1);
+            let d = g.usize_in(4, 16);
+            let q = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let k = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let v = Mat::from_vec(n, d, g.normal_vec(n * d, 1.0));
+            let cfg =
+                TurboConfig { br: b, bc: b, causal: true, ..Default::default() };
+            let mono = turbo_attention(&q, &k, &v, &cfg);
+            let mut s = 0;
+            while s < n {
+                let e = (s + b * g.usize_in(1, 2)).min(n);
+                let out = turbo_attention(
+                    &q.rows_slice(s, e),
+                    &k.rows_slice(0, e),
+                    &v.rows_slice(0, e),
+                    &cfg,
+                );
+                for r in 0..(e - s) {
+                    let got: Vec<u32> =
+                        out.row(r).iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> =
+                        mono.row(s + r).iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "row {} of chunk [{s},{e})", s + r);
+                }
+                s = e;
+            }
         });
     }
 

@@ -1,11 +1,18 @@
-//! Iteration-level continuous batcher (Orca-style).
+//! Iteration-level continuous batcher (Orca/TGI-style).
 //!
-//! Each scheduler iteration produces a [`SchedDecision`]: which waiting
-//! request to prefill (admission control under a token budget and a
-//! running-slot cap) and which running requests get a decode step.
-//! FIFO within each class; prefills are admitted before the decode round
-//! so a new request's first token is not starved by a long decode queue
-//! (the paper's latency numbers assume prefill priority at low load).
+//! Each scheduler iteration produces a [`SchedDecision`]: a list of
+//! prefill *grants* — token-rationed, possibly partial chunks of a long
+//! prompt — plus the decode round. Admission charges each request's
+//! full KV reservation (`prompt + max_new_tokens`) against
+//! `max_batch_total_tokens`; prefill work is rationed per iteration by
+//! `max_batch_prefill_tokens`; and long prompts stream in as
+//! block-aligned chunks interleaved with batch-mates' decode steps, so
+//! a single long prompt can no longer monopolize an iteration while
+//! late arrivals wait for a *slot* instead of *capacity*. FIFO within
+//! each class; in-flight prefills outrank new admissions for the
+//! per-iteration prefill budget (finish what you started), and the
+//! head-of-line prefill always progresses at least one aligned chunk so
+//! the batch cannot stall.
 
 use std::collections::VecDeque;
 
@@ -14,18 +21,46 @@ use super::request::{GenRequest, RequestId};
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
-    /// Max requests in the decode round (running slots).
+    /// Max requests in the running set (slot cap — a coarse backstop;
+    /// the token budgets below are the real admission control).
     pub max_running: usize,
-    /// Max total context tokens across running requests (KV memory cap —
-    /// the CPU analogue of the HBM budget in `costmodel::max_batch`).
-    pub token_budget: usize,
-    /// Max prefills admitted per iteration.
-    pub prefill_per_step: usize,
+    /// Max total token-budget reservation (`prompt + max_new_tokens`)
+    /// across running requests — the KV-capacity admission gate, the
+    /// CPU analogue of the HBM budget in `costmodel::max_batch`.
+    pub max_batch_total_tokens: usize,
+    /// Max prompt tokens granted to prefill per scheduler iteration,
+    /// shared by in-flight chunked prefills and new admissions — this
+    /// is what keeps batch-mates' inter-token latency flat while a long
+    /// prompt streams in.
+    pub max_batch_prefill_tokens: usize,
+    /// Chunk size for splitting long prefills across iterations.
+    /// 0 = whole prompt per grant (the engine clamps to 0 when the
+    /// backend cannot pause and resume a prefill).
+    pub prefill_chunk: usize,
+    /// Admission-wave threshold: when > 0 and the batch is non-empty,
+    /// defer admission until `waiting >= ratio * running`, so new
+    /// requests join in batches instead of trickling in one per
+    /// iteration (TGI's `waiting_served_ratio`). 0 admits eagerly.
+    /// Waiting requests are never starved forever: the wave opens at
+    /// the latest when the running batch drains.
+    pub waiting_served_ratio: f32,
+    /// Alignment for budget-clipped partial grants — the engine sets
+    /// this to the model block size so every chunk boundary stays
+    /// block-aligned (a hard requirement for bitwise-invisible
+    /// chunking on the quantized cache).
+    pub chunk_align: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_running: 8, token_budget: 4096, prefill_per_step: 1 }
+        BatcherConfig {
+            max_running: 32,
+            max_batch_total_tokens: 4096,
+            max_batch_prefill_tokens: 512,
+            prefill_chunk: 0,
+            waiting_served_ratio: 0.0,
+            chunk_align: 1,
+        }
     }
 }
 
@@ -42,14 +77,36 @@ struct Tracked {
     /// fix for the double-allocation bug where `schedule` recomputed
     /// usage from *current* context mid-decode.
     reserved: usize,
+    /// Prompt tokens whose prefill has completed. A request joins the
+    /// decode round only once `prefilled == prompt.len()`; preemption
+    /// resets this to 0 (resume re-prefills from scratch).
+    prefilled: usize,
+}
+
+/// One prefill grant: run up to `tokens` further prompt tokens of `id`
+/// this iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillGrant {
+    pub id: RequestId,
+    /// Token allowance for this iteration (never more than the
+    /// request's remaining prompt).
+    pub tokens: usize,
+    /// True when this grant moved the request out of the waiting queue
+    /// (its first grant since submission or resume) — what the engine's
+    /// waiting-time histogram records on.
+    pub admitted: bool,
 }
 
 /// One scheduling decision.
 #[derive(Debug, Default, PartialEq, Eq)]
 pub struct SchedDecision {
-    /// Requests to prefill this iteration (moved to running on success).
-    pub prefill: Vec<RequestId>,
-    /// Requests receiving one decode step this iteration.
+    /// Prefill grants this iteration, in execution order: in-flight
+    /// continuations first (running order), then new admissions (FIFO).
+    pub prefill: Vec<PrefillGrant>,
+    /// Requests receiving one decode step this iteration — every fully
+    /// prefilled running request. A request whose final chunk lands
+    /// this iteration is appended by the engine once the grant
+    /// completes, so admission-to-first-token stays a single step.
     pub decode: Vec<RequestId>,
 }
 
@@ -58,13 +115,27 @@ pub struct SchedDecision {
 /// invisible — these counters make the capacity-wait branch a metric.
 #[derive(Debug, Default, Clone)]
 pub struct BatcherMetrics {
-    /// Scheduler iterations that deferred admission because the token
-    /// budget or running-slot cap was exhausted (with work waiting).
+    /// Scheduler iterations that deferred admission because a token
+    /// budget or the running-slot cap was exhausted (with work
+    /// waiting). Intentional `waiting_served_ratio` waves don't count.
     pub capacity_waits: u64,
     /// Waiting-queue depth at the most recent capacity wait.
     pub last_wait_depth: usize,
     /// Deepest waiting queue seen at any capacity wait.
     pub max_wait_depth: usize,
+}
+
+/// Clip a prefill grant to the iteration's remaining budget. `want` is
+/// `remaining` (whole-prompt mode) or `min(remaining, chunk)`; a grant
+/// that exceeds `cap` is rounded down to an `align`-multiple so the
+/// chunk boundary stays block-aligned (possibly 0 = no grant).
+fn clip_grant(remaining: usize, chunk: usize, cap: usize, align: usize) -> usize {
+    let want = if chunk == 0 { remaining } else { remaining.min(chunk) };
+    if want <= cap {
+        want
+    } else {
+        (cap / align) * align
+    }
 }
 
 /// The continuous batcher: waiting queue + running set.
@@ -88,7 +159,7 @@ impl Batcher {
     pub fn submit(&mut self, req: GenRequest) {
         let context = req.prompt.len();
         let reserved = context + req.params.max_new_tokens;
-        self.waiting.push_back(Tracked { req, context, reserved });
+        self.waiting.push_back(Tracked { req, context, reserved, prefilled: 0 });
     }
 
     pub fn waiting_len(&self) -> usize {
@@ -111,24 +182,63 @@ impl Batcher {
         self.running.iter().map(|t| t.reserved).sum()
     }
 
-    /// The most recently admitted running request — the preemption
-    /// victim (LIFO: preempting the youngest wastes the least completed
-    /// work and cannot starve the head of the line).
-    pub fn youngest_running(&self) -> Option<RequestId> {
-        self.running.last().map(|t| t.req.id)
+    /// Prompt tokens prefilled so far for a running request (tests and
+    /// observability; the engine learns progress from the backend).
+    pub fn prefilled(&self, id: RequestId) -> Option<usize> {
+        self.running.iter().find(|t| t.req.id == id).map(|t| t.prefilled)
+    }
+
+    /// Pick the preemption victim: the running request that costs the
+    /// fewest replay tokens to resume. Generated tokens must be
+    /// replayed one-by-one through the decode path on resume, while the
+    /// prompt re-prefills in parallel chunks — so the victim is the
+    /// request with the fewest *generated* tokens, and ties fall back
+    /// to the youngest (pure LIFO on a fresh batch, where every
+    /// candidate is equally cheap). Replaces the old youngest-first
+    /// rule, which after a resume could evict a request with a long
+    /// generated tail while a nearly-fresh one sat cheaper.
+    pub fn preemption_victim(&self) -> Option<RequestId> {
+        self.running
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, t)| {
+                let replay = t.context.saturating_sub(t.req.prompt.len());
+                (replay, std::cmp::Reverse(*i))
+            })
+            .map(|(_, t)| t.req.id)
     }
 
     /// Move a running request back to the *front* of the waiting queue
     /// (it keeps its FIFO seniority over later arrivals). The engine
     /// owns the session-state side: it must release the request's pages
-    /// and re-prefill on resume. Returns whether the id was running.
+    /// and re-prefill on resume — so the prefill progress resets here.
+    /// Returns whether the id was running.
     pub fn preempt(&mut self, id: RequestId) -> bool {
         let Some(i) = self.running.iter().position(|t| t.req.id == id) else {
             return false;
         };
-        let t = self.running.remove(i);
+        let mut t = self.running.remove(i);
+        t.prefilled = 0;
         self.waiting.push_front(t);
         true
+    }
+
+    /// Record chunked-prefill progress: `processed` prompt tokens are
+    /// done (cumulative, as reported by the backend).
+    pub fn prefill_progress(&mut self, id: RequestId, processed: usize) {
+        if let Some(t) = self.running.iter_mut().find(|t| t.req.id == id) {
+            debug_assert!(processed <= t.req.prompt.len());
+            t.prefilled = processed;
+        }
+    }
+
+    /// Mark a request's prefill complete: it joins every decode round
+    /// from the next iteration (the engine appends it to the current
+    /// round itself).
+    pub fn prefill_done(&mut self, id: RequestId) {
+        if let Some(t) = self.running.iter_mut().find(|t| t.req.id == id) {
+            t.prefilled = t.req.prompt.len();
+        }
     }
 
     /// Record one capacity-wait observation (see [`BatcherMetrics`]).
@@ -139,10 +249,21 @@ impl Batcher {
         self.metrics.max_wait_depth = self.metrics.max_wait_depth.max(depth);
     }
 
-    /// Compute the next scheduling decision. Admission: FIFO waiting
-    /// requests move to running while slots and token budget allow; a
-    /// deferred admission is recorded in [`BatcherMetrics`] so
-    /// starvation is observable. The budget charge is each running
+    /// Whether the `waiting_served_ratio` admission wave is open.
+    /// Evaluated once per iteration so a wave, once open, admits every
+    /// request capacity allows instead of shrinking as it admits.
+    fn wave_open(&self) -> bool {
+        let ratio = self.cfg.waiting_served_ratio;
+        ratio <= 0.0
+            || self.running.is_empty()
+            || self.waiting.len() as f32 >= ratio * self.running.len() as f32
+    }
+
+    /// Compute the next scheduling decision. In-flight chunked prefills
+    /// continue first (head-of-line never stalls), then FIFO waiting
+    /// requests are admitted while slots and both token budgets allow;
+    /// a deferred admission is recorded in [`BatcherMetrics`] so
+    /// starvation is observable. The KV charge is each running
     /// request's full *reservation* (`prompt + max_new_tokens`), never
     /// its current context — headroom promised to a running request is
     /// promised once.
@@ -153,46 +274,109 @@ impl Batcher {
     /// [`Self::schedule`] with an external admission gate: when `admit`
     /// is false (the engine is under memory pressure), no waiting
     /// request is admitted this iteration — running requests still get
-    /// their decode step, and the deferred admission is recorded as a
-    /// capacity wait.
+    /// their prefill grants and decode step, and the deferred admission
+    /// is recorded as a capacity wait.
     pub fn schedule_gated(&mut self, admit: bool) -> SchedDecision {
         let mut d = SchedDecision::default();
-        if !admit {
-            if !self.waiting.is_empty() {
+        let chunk = self.cfg.prefill_chunk;
+        let align = self.cfg.chunk_align.max(1);
+        let mut budget = self.cfg.max_batch_prefill_tokens;
+
+        // 1. Continue in-flight chunked prefills in running order. The
+        //    first one is the head of the line: it always progresses at
+        //    least one aligned chunk even when the per-iteration
+        //    prefill budget is smaller — a stalled head would wedge the
+        //    whole batch.
+        for t in &self.running {
+            let remaining = t.req.prompt.len().saturating_sub(t.prefilled);
+            if remaining == 0 {
+                continue;
+            }
+            let cap = if d.prefill.is_empty() { budget.max(align) } else { budget };
+            let tokens = clip_grant(remaining, chunk, cap, align);
+            if tokens == 0 {
+                continue;
+            }
+            budget = budget.saturating_sub(tokens);
+            d.prefill.push(PrefillGrant {
+                id: t.req.id,
+                tokens,
+                admitted: false,
+            });
+        }
+
+        // 2. Admit waiting requests into whatever capacity remains.
+        if !self.waiting.is_empty() {
+            if !admit {
                 self.note_capacity_wait(); // memory-pressure wait
+            } else if self.wave_open() {
+                self.admit_waiting(&mut d, chunk, align, &mut budget);
             }
-            d.decode = self.running.iter().map(|t| t.req.id).collect();
-            return d;
+            // else: intentional waiting_served_ratio wave — not a
+            // capacity wait.
         }
-        let mut budget_used = self.reserved_tokens();
-        let mut admitted = 0;
-        while admitted < self.cfg.prefill_per_step {
-            if self.running.len() >= self.cfg.max_running {
-                if !self.waiting.is_empty() {
-                    self.note_capacity_wait(); // slot-cap wait
-                }
-                break;
-            }
-            let Some(head) = self.waiting.front() else { break };
-            let need = head.reserved;
-            if budget_used + need > self.cfg.token_budget && !self.running.is_empty()
-            {
-                // Wait for capacity (never deadlock an empty engine) —
-                // and make the wait observable instead of silent.
-                self.note_capacity_wait();
-                break;
-            }
-            // Checked pop: the head we just inspected must still be
-            // there, but a silent `.unwrap()` on that assumption was the
-            // one panic path in the scheduler — fail soft instead.
-            let Some(t) = self.waiting.pop_front() else { break };
-            budget_used += need;
-            d.prefill.push(t.req.id);
-            self.running.push(t);
-            admitted += 1;
-        }
-        d.decode = self.running.iter().map(|t| t.req.id).collect();
+
+        // 3. Decode round: every fully prefilled running request.
+        d.decode = self
+            .running
+            .iter()
+            .filter(|t| t.prefilled >= t.req.prompt.len())
+            .map(|t| t.req.id)
+            .collect();
         d
+    }
+
+    /// Admission loop of [`Self::schedule_gated`] — FIFO while the slot
+    /// cap, the KV reservation budget, and the per-iteration prefill
+    /// budget all allow. An empty engine always admits its head request
+    /// whatever the budgets say: an oversized request must degrade to
+    /// solo execution, never deadlock.
+    fn admit_waiting(
+        &mut self,
+        d: &mut SchedDecision,
+        chunk: usize,
+        align: usize,
+        budget: &mut usize,
+    ) {
+        while !self.waiting.is_empty() {
+            if self.running.len() >= self.cfg.max_running {
+                self.note_capacity_wait(); // slot-cap wait
+                break;
+            }
+            let (head_reserved, head_prompt) = {
+                let h = self.waiting.front().expect("checked non-empty");
+                (h.reserved, h.req.prompt.len())
+            };
+            if self.reserved_tokens() + head_reserved
+                > self.cfg.max_batch_total_tokens
+                && !self.running.is_empty()
+            {
+                self.note_capacity_wait(); // KV-budget wait
+                break;
+            }
+            let engine_empty = self.running.is_empty() && d.prefill.is_empty();
+            let tokens = if chunk == 0 {
+                // Whole-prompt grants (non-resumable prefill): admit
+                // only if the entire prompt fits this iteration's
+                // prefill budget.
+                if head_prompt <= *budget || engine_empty {
+                    head_prompt
+                } else {
+                    0
+                }
+            } else {
+                let cap = if engine_empty { (*budget).max(align) } else { *budget };
+                clip_grant(head_prompt, chunk, cap, align)
+            };
+            if tokens == 0 {
+                self.note_capacity_wait(); // prefill-budget wait
+                break;
+            }
+            let Some(t) = self.waiting.pop_front() else { break };
+            *budget = budget.saturating_sub(tokens);
+            d.prefill.push(PrefillGrant { id: t.req.id, tokens, admitted: true });
+            self.running.push(t);
+        }
     }
 
     /// Record one generated token for a running request.
@@ -244,24 +428,38 @@ mod tests {
         GenRequest::new(id, vec![b'a'; prompt_len], max_new)
     }
 
-    fn batcher(max_running: usize, budget: usize) -> Batcher {
-        Batcher::new(BatcherConfig {
+    fn cfg(max_running: usize, total: usize) -> BatcherConfig {
+        BatcherConfig {
             max_running,
-            token_budget: budget,
-            prefill_per_step: 1,
-        })
+            max_batch_total_tokens: total,
+            max_batch_prefill_tokens: 100_000,
+            prefill_chunk: 0,
+            waiting_served_ratio: 0.0,
+            chunk_align: 1,
+        }
+    }
+
+    fn batcher(max_running: usize, total: usize) -> Batcher {
+        Batcher::new(cfg(max_running, total))
+    }
+
+    fn ids(d: &SchedDecision) -> Vec<RequestId> {
+        d.prefill.iter().map(|g| g.id).collect()
     }
 
     #[test]
-    fn fifo_admission() {
+    fn fifo_admission_merges_continuously() {
         let mut b = batcher(4, 1000);
         b.submit(req(1, 10, 5));
         b.submit(req(2, 10, 5));
         let d1 = b.schedule();
-        assert_eq!(d1.prefill, vec![1]);
-        assert_eq!(d1.decode, vec![1]);
+        assert_eq!(ids(&d1), vec![1, 2], "capacity admits both in one wave");
+        assert!(d1.prefill.iter().all(|g| g.admitted && g.tokens == 10));
+        assert!(d1.decode.is_empty(), "nothing fully prefilled yet");
+        b.prefill_done(1);
+        b.prefill_done(2);
         let d2 = b.schedule();
-        assert_eq!(d2.prefill, vec![2]);
+        assert!(d2.prefill.is_empty());
         assert_eq!(d2.decode, vec![1, 2]);
     }
 
@@ -270,25 +468,27 @@ mod tests {
         let mut b = batcher(1, 1000);
         b.submit(req(1, 10, 5));
         b.submit(req(2, 10, 5));
-        b.schedule();
+        let d = b.schedule();
+        assert_eq!(ids(&d), vec![1]);
+        b.prefill_done(1);
         let d = b.schedule();
         assert!(d.prefill.is_empty());
         assert_eq!(b.waiting_len(), 1);
         b.finish(1);
-        let d = b.schedule();
-        assert_eq!(d.prefill, vec![2]);
+        assert_eq!(ids(&b.schedule()), vec![2]);
     }
 
     #[test]
     fn respects_token_budget() {
         let mut b = batcher(8, 100);
-        b.submit(req(1, 50, 20)); // needs 70
-        b.submit(req(2, 40, 20)); // needs 60 -> exceeds with #1 running
-        b.schedule();
+        b.submit(req(1, 50, 20)); // reserves 70
+        b.submit(req(2, 40, 20)); // reserves 60 -> exceeds with #1 running
         let d = b.schedule();
-        assert!(d.prefill.is_empty(), "budget must defer #2");
+        assert_eq!(ids(&d), vec![1], "budget must defer #2");
+        b.prefill_done(1);
+        assert!(b.schedule().prefill.is_empty(), "still deferred");
         b.finish(1);
-        assert_eq!(b.schedule().prefill, vec![2]);
+        assert_eq!(ids(&b.schedule()), vec![2]);
     }
 
     #[test]
@@ -297,11 +497,10 @@ mod tests {
         let mut b = batcher(8, 100);
         b.submit(req(1, 50, 20));
         b.submit(req(2, 40, 20));
-        b.schedule();
-        assert_eq!(b.metrics.capacity_waits, 0, "no wait while admitting");
-        b.schedule();
+        b.schedule(); // admits #1, defers #2 in the same iteration
         assert_eq!(b.metrics.capacity_waits, 1);
         assert_eq!(b.metrics.last_wait_depth, 1);
+        b.prefill_done(1);
         b.schedule();
         assert_eq!(b.metrics.capacity_waits, 2, "every deferred iteration counts");
         assert_eq!(b.metrics.max_wait_depth, 1);
@@ -314,8 +513,7 @@ mod tests {
         for id in 0..4 {
             b.submit(req(id, 10, 5));
         }
-        b.schedule(); // admits #0
-        b.schedule(); // slots full, 3 waiting
+        b.schedule(); // admits #0; slot cap defers the other 3
         assert_eq!(b.metrics.capacity_waits, 1);
         assert_eq!(b.metrics.last_wait_depth, 3);
         assert_eq!(b.metrics.max_wait_depth, 3);
@@ -344,7 +542,7 @@ mod tests {
         b.schedule();
         assert!(b.schedule().prefill.is_empty(), "budget must defer #2");
         b.cancel(1);
-        assert_eq!(b.schedule().prefill, vec![2], "cancel freed the budget");
+        assert_eq!(ids(&b.schedule()), vec![2], "cancel freed the budget");
     }
 
     #[test]
@@ -355,6 +553,7 @@ mod tests {
         let mut b = batcher(8, 100);
         b.submit(req(1, 50, 30)); // reserves 80
         b.schedule();
+        b.prefill_done(1);
         // 10 decode steps: context grows 50 -> 60, but the reservation
         // stays 80 (context + remaining allowance is constant).
         for _ in 0..10 {
@@ -365,39 +564,130 @@ mod tests {
         let d = b.schedule();
         assert!(d.prefill.is_empty(), "headroom promised to #1 stays his");
         b.finish(1);
-        assert_eq!(b.schedule().prefill, vec![2]);
+        assert_eq!(ids(&b.schedule()), vec![2]);
     }
 
     #[test]
-    fn preempt_returns_running_to_waiting_front() {
+    fn preempt_returns_running_to_waiting_front_and_resets_prefill() {
         let mut b = batcher(4, 1000);
         b.submit(req(1, 10, 5));
         b.submit(req(2, 10, 5));
-        b.schedule();
-        b.schedule(); // both running
+        let d = b.schedule();
+        for g in &d.prefill {
+            b.prefill_done(g.id);
+        }
         b.submit(req(3, 10, 5));
-        assert_eq!(b.youngest_running(), Some(2));
+        assert!(!b.preempt(99), "unknown id");
+        assert!(!b.preempt(3), "waiting request cannot be preempted");
         assert!(b.preempt(2));
         assert_eq!(b.running_len(), 1);
         assert_eq!(b.waiting_len(), 2);
-        // The preempted request resumes before later arrivals.
+        // The preempted request resumes before later arrivals, and
+        // resumes by re-prefilling its whole prompt.
         let d = b.schedule();
-        assert_eq!(d.prefill, vec![2]);
-        assert!(!b.preempt(99), "unknown id");
-        assert!(!b.preempt(3), "waiting request cannot be preempted");
+        assert_eq!(ids(&d), vec![2, 3]);
+        assert_eq!(d.prefill[0].tokens, 10, "resume re-prefills from scratch");
+        assert!(!d.decode.contains(&2), "not decodable until re-prefilled");
     }
 
     #[test]
-    fn gated_schedule_defers_admission_under_pressure() {
+    fn preemption_victim_prefers_cheapest_replay() {
         let mut b = batcher(4, 1000);
+        b.submit(req(1, 10, 8));
+        b.submit(req(2, 10, 8));
+        let d = b.schedule();
+        for g in &d.prefill {
+            b.prefill_done(g.id);
+        }
+        // #1 is older but has generated less: 1 token vs #2's 5. LIFO
+        // would evict #2 and throw away five replayable tokens; the
+        // cost rule picks #1.
+        b.on_token(1);
+        for _ in 0..5 {
+            b.on_token(2);
+        }
+        assert_eq!(b.preemption_victim(), Some(1));
+        // Ties fall back to LIFO: equalize the replay cost and the
+        // youngest goes, as before.
+        for _ in 0..4 {
+            b.on_token(1);
+        }
+        assert_eq!(b.preemption_victim(), Some(2));
+    }
+
+    #[test]
+    fn long_prefill_streams_in_chunks_while_batchmates_decode() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_running: 4,
+            max_batch_total_tokens: 10_000,
+            max_batch_prefill_tokens: 8,
+            prefill_chunk: 4,
+            waiting_served_ratio: 0.0,
+            chunk_align: 4,
+        });
+        b.submit(req(1, 4, 4));
+        let d = b.schedule();
+        assert_eq!(ids(&d), vec![1]);
+        b.prefill_done(1);
+        b.submit(req(2, 10, 4)); // long prompt: chunks of 4
+        let d = b.schedule();
+        assert_eq!(ids(&d), vec![2]);
+        assert_eq!(d.prefill[0].tokens, 4);
+        assert_eq!(d.decode, vec![1], "mate decodes while the prompt streams");
+        b.prefill_progress(2, 4);
+        let d = b.schedule();
+        assert_eq!(ids(&d), vec![2]);
+        assert!(!d.prefill[0].admitted, "continuation, not admission");
+        assert_eq!(d.prefill[0].tokens, 4);
+        assert_eq!(d.decode, vec![1]);
+        b.prefill_progress(2, 8);
+        let d = b.schedule();
+        assert_eq!(d.prefill[0].tokens, 2, "final partial chunk");
+        assert_eq!(d.decode, vec![1]);
+        b.prefill_done(2);
+        let d = b.schedule();
+        assert!(d.prefill.is_empty());
+        assert_eq!(d.decode, vec![1, 2]);
+    }
+
+    #[test]
+    fn prefill_budget_rations_grants_per_iteration() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_running: 4,
+            max_batch_total_tokens: 10_000,
+            max_batch_prefill_tokens: 8,
+            prefill_chunk: 8,
+            waiting_served_ratio: 0.0,
+            chunk_align: 4,
+        });
+        b.submit(req(1, 8, 4));
+        b.submit(req(2, 8, 4));
+        let d = b.schedule();
+        assert_eq!(ids(&d), vec![1], "8-token budget fits one 8-token grant");
+        assert_eq!(b.metrics.capacity_waits, 1, "deferred grant is observable");
+        b.prefill_done(1);
+        let d = b.schedule();
+        assert_eq!(ids(&d), vec![2]);
+    }
+
+    #[test]
+    fn waiting_served_ratio_batches_admission_waves() {
+        let mut b = Batcher::new(BatcherConfig {
+            waiting_served_ratio: 2.0,
+            ..cfg(8, 10_000)
+        });
         b.submit(req(1, 10, 5));
-        b.schedule(); // #1 running
+        let d = b.schedule();
+        assert_eq!(ids(&d), vec![1], "empty batch admits immediately");
+        b.prefill_done(1);
         b.submit(req(2, 10, 5));
-        let d = b.schedule_gated(false);
-        assert!(d.prefill.is_empty(), "gate closed");
-        assert_eq!(d.decode, vec![1], "decode continues under pressure");
-        assert_eq!(b.metrics.capacity_waits, 1, "gated wait is observable");
-        assert_eq!(b.schedule_gated(true).prefill, vec![2]);
+        let d = b.schedule();
+        assert!(d.prefill.is_empty(), "1 waiting < ratio 2.0 x 1 running");
+        assert_eq!(d.decode, vec![1], "the wave delay is policy, decode runs");
+        assert_eq!(b.metrics.capacity_waits, 0, "a wave is not a capacity wait");
+        b.submit(req(3, 10, 5));
+        let d = b.schedule();
+        assert_eq!(ids(&d), vec![2, 3], "wave threshold reached, both join");
     }
 
     #[test]
@@ -406,7 +696,8 @@ mod tests {
         let mut b = batcher(8, 100);
         b.submit(req(1, 500, 10));
         let d = b.schedule();
-        assert_eq!(d.prefill, vec![1]);
+        assert_eq!(ids(&d), vec![1]);
+        assert_eq!(d.prefill[0].tokens, 500, "whole-prompt grant");
     }
 
     #[test]
@@ -414,15 +705,21 @@ mod tests {
         prop::run("batcher invariants", 40, |g| {
             let budget = g.usize_in(64, 512);
             let max_running = g.usize_in(1, 8);
+            let chunk =
+                if g.rng.bool(0.5) { 0 } else { g.usize_in(1, 6) * 4 };
             let mut b = Batcher::new(BatcherConfig {
                 max_running,
-                token_budget: budget,
-                prefill_per_step: g.usize_in(1, 3),
+                max_batch_total_tokens: budget,
+                max_batch_prefill_tokens: g.usize_in(4, 64),
+                prefill_chunk: chunk,
+                waiting_served_ratio: 0.0,
+                chunk_align: 4,
             });
             let n = g.usize_in(1, 30);
             for id in 0..n as u64 {
                 b.submit(req(id, g.usize_in(1, 64), g.usize_in(1, 32)));
             }
+            let mut progress = std::collections::HashMap::new();
             let mut completed = std::collections::HashSet::new();
             let mut iterations = 0;
             while !b.idle() {
@@ -440,13 +737,32 @@ mod tests {
                         b.reserved_tokens()
                     );
                 }
-                // Every decode round makes progress: finish each running
-                // request with probability ~1/4.
+                // Drive each grant the way the engine does: accumulate
+                // progress, complete when the prompt is covered.
+                for grant in &d.prefill {
+                    assert!(grant.tokens > 0, "empty grant");
+                    let len = b.request(grant.id).unwrap().prompt.len();
+                    let done = progress.entry(grant.id).or_insert(0usize);
+                    *done += grant.tokens;
+                    assert!(*done <= len, "grant overshoots the prompt");
+                }
+                for grant in &d.prefill {
+                    let len = b.request(grant.id).unwrap().prompt.len();
+                    let done = progress[&grant.id];
+                    if done == len {
+                        b.prefill_done(grant.id);
+                    } else {
+                        b.prefill_progress(grant.id, done);
+                    }
+                }
+                // Every decode round makes progress: finish each
+                // running request with probability ~1/4.
                 for id in d.decode {
                     b.on_token(id);
                     if g.rng.bool(0.25) {
                         b.finish(id);
                         completed.insert(id);
+                        progress.remove(&id);
                     }
                 }
             }

@@ -28,7 +28,9 @@ use super::prefix::PrefixIndex;
 use super::request::{
     Completion, FinishReason, GenRequest, RequestId, StepEvent, TokenEvent,
 };
-use crate::attention::backend::{backend_for, BackendState, DynBackend};
+use crate::attention::backend::{
+    backend_for, BackendState, DynBackend, PrefillChunkOut,
+};
 use crate::info;
 use crate::kvcache::SharedPagePool;
 use crate::metrics::{EngineMetrics, Histogram};
@@ -77,10 +79,11 @@ pub struct EngineConfig {
     /// Byte cap over the shared page pool's footprint (pages + q1
     /// memos; `None` = unbounded). Under pressure the engine first
     /// drops LRU q1 memos (derivable state — recomputed on demand),
-    /// then preempts the youngest running session: its pages are
-    /// released through the strict pool rules and the request rejoins
-    /// the front of the waiting queue, to be re-prefilled and replayed
-    /// on resume. Output stays bit-identical to an uncapped run (the
+    /// then preempts the running session with the cheapest replay
+    /// (fewest generated tokens; ties fall to the youngest): its pages
+    /// are released through the strict pool rules and the request
+    /// rejoins the front of the waiting queue, to be re-prefilled and
+    /// replayed on resume. Output stays bit-identical to an uncapped run (the
     /// PR-5 purity invariant); only latency and recompute work change.
     /// Turbo-family paths only; the flash baseline has no pool.
     pub pool_byte_cap: Option<usize>,
@@ -169,6 +172,8 @@ pub struct StatsSnapshot {
     pub latency: Histogram,
     /// Inter-token latency (decode-step cadence) across all requests.
     pub itl: Histogram,
+    /// Queue waiting time: submission to first prefill grant.
+    pub waiting: Histogram,
 }
 
 /// The engine. Owns the PJRT runtime; single-threaded step loop.
@@ -181,6 +186,11 @@ pub struct Engine {
     /// engine keeps its own handle for the wall/busy decode metrics.
     pool: Arc<WorkerPool>,
     sessions: HashMap<RequestId, Session>,
+    /// In-flight chunked prefills: the backend's resume cursor per
+    /// request, held between scheduler iterations while a long prompt
+    /// streams in. Dropping an entry (cancel, preemption) releases its
+    /// page refs through the strict pool rules.
+    prefills: HashMap<RequestId, BackendState>,
     /// Sessions preempted under memory pressure, keyed by request id;
     /// the request itself waits at the front of the batcher queue and
     /// resumes through the ordinary prefill path.
@@ -197,6 +207,9 @@ pub struct Engine {
     /// Inter-token latency: seconds between consecutive emitted tokens
     /// of a request (first sample spans prefill-done to first decode).
     pub itl_hist: Histogram,
+    /// Queue waiting time: submission (or preemption) to the request's
+    /// first prefill grant.
+    pub waiting_hist: Histogram,
 }
 
 /// Registered prompts kept by the prefix index before stalest eviction.
@@ -214,18 +227,32 @@ impl Engine {
         let prefix_index = cfg
             .share_prefixes
             .then(|| PrefixIndex::new(PREFIX_INDEX_CAP));
+        let backend = backend_for(
+            cfg.mode,
+            cfg.kv_bits,
+            cfg.n_2bit_heads,
+            cfg.seed,
+            &bundle.rt.manifest.model,
+            Arc::clone(&pool),
+        );
+        // Chunk boundaries must stay block-aligned (the quantized cache
+        // flushes whole blocks, and bitwise-invisible chunking depends
+        // on it), and a backend that cannot pause a prefill gets
+        // whole-prompt grants regardless of the requested chunk.
+        let mut bcfg = cfg.batcher.clone();
+        let block = bundle.block();
+        bcfg.chunk_align = block;
+        if !backend.supports_chunked_prefill() {
+            bcfg.prefill_chunk = 0;
+        } else if bcfg.prefill_chunk > 0 {
+            bcfg.prefill_chunk = bcfg.prefill_chunk.div_ceil(block) * block;
+        }
         let engine = Engine {
-            batcher: Batcher::new(cfg.batcher.clone()),
-            backend: backend_for(
-                cfg.mode,
-                cfg.kv_bits,
-                cfg.n_2bit_heads,
-                cfg.seed,
-                &bundle.rt.manifest.model,
-                Arc::clone(&pool),
-            ),
+            batcher: Batcher::new(bcfg),
+            backend,
             pool,
             sessions: HashMap::new(),
+            prefills: HashMap::new(),
             preempted: HashMap::new(),
             prefix_index,
             next_id: 1,
@@ -240,6 +267,7 @@ impl Engine {
             ttft_hist: Histogram::new(),
             latency_hist: Histogram::new(),
             itl_hist: Histogram::new(),
+            waiting_hist: Histogram::new(),
             bundle,
             cfg,
         };
@@ -296,12 +324,16 @@ impl Engine {
     /// so the pool epoch/refcount rules see an ordinary release.
     pub fn cancel(&mut self, id: RequestId) -> Option<Completion> {
         let session = self.sessions.remove(&id);
+        // A mid-prefill request only has a cursor; dropping it releases
+        // the partial prefill's page refs strictly.
+        self.prefills.remove(&id);
         // A preempted request has no session (its state was dropped at
         // preemption) but already streamed tokens — report them.
         let preempted = self.preempted.remove(&id);
-        // Waiting requests have no session yet; read what the
-        // completion needs off the borrowed request before evicting it
-        // (no reason to clone a potentially long prompt to destroy it).
+        // Waiting and mid-prefill requests have no session yet; read
+        // what the completion needs off the borrowed request before
+        // evicting it (no reason to clone a potentially long prompt to
+        // destroy it).
         let queued = if session.is_none() {
             self.batcher.request(id).map(|r| (r.prompt.len(), r.submitted_at))
         } else {
@@ -315,8 +347,8 @@ impl Engine {
         let c = match session {
             Some(s) => Self::complete(&s, FinishReason::Cancelled),
             None => {
-                let (prompt_len, submitted_at) =
-                    queued.expect("tracked but sessionless => waiting");
+                let (prompt_len, submitted_at) = queued
+                    .expect("tracked but sessionless => waiting/mid-prefill");
                 Completion {
                     id,
                     prompt_len,
@@ -332,42 +364,72 @@ impl Engine {
         Some(c)
     }
 
-    /// Run one scheduler iteration: admit + prefill, then one decode
-    /// round. Returns the lifecycle events this step produced — `First`
-    /// per admitted request, `Token` per decode step, `Finished` per
-    /// completed request.
+    /// Run one scheduler iteration: prefill grants (continuations of
+    /// in-flight chunked prefills, then new admissions), then one
+    /// decode round. Returns the lifecycle events this step produced —
+    /// `First` per completed prefill, `Token` per decode step,
+    /// `Finished` per completed request. A request whose final chunk
+    /// lands this step joins the same step's decode round, so chunking
+    /// never adds a step of first-token latency.
     pub fn step(&mut self) -> Result<Vec<StepEvent>> {
         let admit = self.relieve_memory_pressure();
         let decision = self.batcher.schedule_gated(admit);
+        let mut decode = decision.decode;
         let mut events = Vec::new();
 
-        // Prefill admitted requests, with admission-time prefix
-        // detection: match the prompt against the index of live
-        // registered prefixes and fork from the shared pages on a hit.
-        for id in decision.prefill {
+        // Serve prefill grants, with admission-time prefix detection:
+        // when a prefill *opens* (no cursor yet), match the prompt
+        // against the index of live registered prefixes and fork from
+        // the shared pages on a hit. Continuations carry their cursor.
+        for grant in decision.prefill {
+            let id = grant.id;
             let req = self
                 .batcher
                 .request(id)
                 .expect("scheduled request must exist")
                 .clone();
             let n = req.prompt.len();
-            let shared = match (&mut self.prefix_index, self.backend.page_pool())
-            {
-                (Some(ix), Some(pool)) => {
-                    let pool = pool.read().unwrap_or_else(|e| e.into_inner());
-                    ix.lookup(&req.prompt, self.bundle.block(), &pool)
+            if grant.admitted {
+                self.waiting_hist
+                    .record(req.submitted_at.elapsed().as_secs_f64());
+            }
+            let mut cursor = self.prefills.remove(&id);
+            let shared = if cursor.is_none() {
+                match (&mut self.prefix_index, self.backend.page_pool()) {
+                    (Some(ix), Some(pool)) => {
+                        let pool =
+                            pool.read().unwrap_or_else(|e| e.into_inner());
+                        ix.lookup(&req.prompt, self.bundle.block(), &pool)
+                    }
+                    _ => None,
                 }
-                _ => None,
+            } else {
+                None
             };
             if let Some(sp) = &shared {
                 self.metrics.prefix_hits += 1;
                 self.metrics.prefix_shared_tokens += sp.tokens as u64;
             }
-            let (logits, state, reg) = self.backend.prefill(
+            let out = self.backend.prefill_chunk(
                 &mut self.bundle,
                 &req.prompt,
                 shared.as_ref(),
+                &mut cursor,
+                grant.tokens,
             )?;
+            let (last_logits, state, reg) = match out {
+                PrefillChunkOut::Pending { processed } => {
+                    self.batcher.prefill_progress(id, processed);
+                    self.metrics.prefill_chunks += 1;
+                    let cur = cursor.expect("pending prefill keeps a cursor");
+                    self.prefills.insert(id, cur);
+                    continue; // more chunks to come; nothing to sample
+                }
+                PrefillChunkOut::Done { last_logits, session, reg } => {
+                    (last_logits, session, reg)
+                }
+            };
+            self.batcher.prefill_done(id);
             if let (Some(ix), Some(reg)) = (&mut self.prefix_index, reg) {
                 if let Some(pool) = self.backend.page_pool() {
                     let pool = pool.read().unwrap_or_else(|e| e.into_inner());
@@ -412,13 +474,11 @@ impl Engine {
                     req,
                 };
                 self.sessions.insert(id, session);
+                decode.push(id);
                 continue;
             }
             let mut rng = Rng::new(req.params.seed);
-            let first = req
-                .params
-                .sampler
-                .sample(self.bundle.logits_at(&logits, n - 1), &mut rng);
+            let first = req.params.sampler.sample(&last_logits, &mut rng);
             let now = Instant::now();
             let session = Session {
                 state,
@@ -440,14 +500,16 @@ impl Engine {
                 id,
                 event: TokenEvent::First { token: first, ttft },
             });
+            decode.push(id);
         }
 
-        // Decode round: one step per running request. Wall time vs the
-        // pool's busy time over the round is the parallel-efficiency
-        // signal (`EngineMetrics::decode_parallelism`).
-        let decode_round = (!decision.decode.is_empty())
+        // Decode round: one step per fully-prefilled running request.
+        // Wall time vs the pool's busy time over the round is the
+        // parallel-efficiency signal
+        // (`EngineMetrics::decode_parallelism`).
+        let decode_round = (!decode.is_empty())
             .then(|| (Instant::now(), self.pool.busy()));
-        for id in decision.decode {
+        for id in decode {
             let Some(session) = self.sessions.get_mut(&id) else { continue };
             if let Some(reason) = finished(session, self.bundle.max_ctx()) {
                 let c = Self::complete(session, reason);
@@ -509,7 +571,7 @@ impl Engine {
     /// scheduling decision. Tier 1 drops least-recently-used q1 memos
     /// (derivable state: no epoch bump, recomputed on the next read).
     /// Tier 2 — capped storage itself still over budget — preempts the
-    /// youngest running session at a time: its `BackendState` drops,
+    /// cheapest-replay running session at a time: its `BackendState` drops,
     /// releasing every page ref through the strict pool rules (frees
     /// bump the epoch; shared pages survive while other owners remain),
     /// and the request rejoins the waiting queue for recompute-on-
@@ -531,7 +593,7 @@ impl Engine {
             if physical <= cap || self.batcher.running_len() <= 1 {
                 break;
             }
-            let Some(victim) = self.batcher.youngest_running() else { break };
+            let Some(victim) = self.batcher.preemption_victim() else { break };
             self.preempt_session(victim);
             // Freed pages may strand memos over the cap line; re-check.
             pool.write().unwrap_or_else(|e| e.into_inner()).enforce_cap();
@@ -550,6 +612,15 @@ impl Engine {
     /// prefill path in [`Self::step`], which replays the generated
     /// tokens bit-identically. Preemption never mutates pages in place.
     fn preempt_session(&mut self, id: RequestId) {
+        // A mid-prefill victim has no session yet: drop its cursor (the
+        // partial prefill's page refs release strictly) and send it
+        // back to the queue — no emitted tokens to snapshot, resume is
+        // a plain re-prefill.
+        if self.prefills.remove(&id).is_some() {
+            self.batcher.preempt(id);
+            self.metrics.preemptions += 1;
+            return;
+        }
         let Some(s) = self.sessions.remove(&id) else { return };
         let Session {
             state,
@@ -626,6 +697,13 @@ impl Engine {
             self.batcher.metrics.capacity_waits;
         self.metrics.batcher_wait_depth =
             self.batcher.metrics.last_wait_depth as u64;
+        self.metrics.queue_depth = self.batcher.waiting_len() as u64;
+        let budget = self.batcher.cfg.max_batch_total_tokens;
+        self.metrics.batch_fill_ratio = if budget > 0 {
+            self.batcher.reserved_tokens() as f64 / budget as f64
+        } else {
+            0.0
+        };
     }
 
     fn complete(session: &Session, reason: FinishReason) -> Completion {
@@ -650,6 +728,7 @@ impl Engine {
             ttft: self.ttft_hist.clone(),
             latency: self.latency_hist.clone(),
             itl: self.itl_hist.clone(),
+            waiting: self.waiting_hist.clone(),
         }
     }
 

@@ -31,7 +31,9 @@ pub mod handle;
 pub mod prefix;
 pub mod request;
 
-pub use batcher::{Batcher, BatcherConfig, BatcherMetrics, SchedDecision};
+pub use batcher::{
+    Batcher, BatcherConfig, BatcherMetrics, PrefillGrant, SchedDecision,
+};
 pub use engine::{Command, Engine, EngineConfig, PathMode, StatsSnapshot};
 pub use handle::{EngineHandle, ResponseHandle};
 pub use prefix::{PrefixIndex, SharedPrefix};

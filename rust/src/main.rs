@@ -42,10 +42,21 @@
 //!
 //! `--pool-bytes N` caps the shared KV page pool at N bytes (pages +
 //! q1 memos). Under pressure the engine first evicts LRU q1 memos
-//! (recomputed on demand), then preempts the youngest running request
-//! (pages released, recompute-on-resume) — outputs stay bit-identical
-//! to an uncapped run; pressure counters appear in `gen` output and
-//! `STATS`.
+//! (recomputed on demand), then preempts the cheapest-replay running
+//! request — fewest generated tokens, youngest on ties — (pages
+//! released, recompute-on-resume) — outputs stay bit-identical to an
+//! uncapped run; pressure counters appear in `gen` output and `STATS`.
+//!
+//! Scheduling is token-budget continuous batching:
+//! `--max-batch-total-tokens N` caps the sum of admitted KV
+//! reservations (prompt + max_new per request; `--token-budget` is the
+//! legacy alias), `--max-batch-prefill-tokens N` rations prompt tokens
+//! prefilled per engine iteration, `--prefill-chunk N` splits long
+//! prefills into N-token chunks interleaved with batch-mates' decode
+//! steps (0 = monolithic; rounded up to the model block size), and
+//! `--waiting-served-ratio R` batches admissions into waves once
+//! waiting/running exceeds R (0 = admit greedily). All four knobs are
+//! bitwise invisible: they change *when* work runs, never its result.
 //!
 //! `--kernel-backend scalar|avx2|neon|auto` pins the integer-kernel ISA
 //! (default: auto-detect; the `TURBO_KERNEL` env var is the same knob
@@ -141,8 +152,17 @@ fn engine_config(args: &Args) -> EngineConfig {
         seed: args.opt_parse("seed", 0u64),
         ..Default::default()
     };
-    cfg.batcher.max_running = args.opt_parse("max-running", 8usize);
-    cfg.batcher.token_budget = args.opt_parse("token-budget", 4096usize);
+    cfg.batcher.max_running = args.opt_parse("max-running", 32usize);
+    // `--token-budget` stays as the legacy alias for the total cap.
+    cfg.batcher.max_batch_total_tokens = args.opt_parse(
+        "max-batch-total-tokens",
+        args.opt_parse("token-budget", 4096usize),
+    );
+    cfg.batcher.max_batch_prefill_tokens =
+        args.opt_parse("max-batch-prefill-tokens", 512usize);
+    cfg.batcher.prefill_chunk = args.opt_parse("prefill-chunk", 0usize);
+    cfg.batcher.waiting_served_ratio =
+        args.opt_parse("waiting-served-ratio", 0.0f32);
     cfg.pool_byte_cap = args.opt("pool-bytes").map(|s| {
         s.parse().unwrap_or_else(|_| {
             panic!("--pool-bytes: cannot parse {s:?} as bytes")
@@ -253,6 +273,14 @@ fn gen(args: &Args) -> Result<()> {
         );
     }
     println!("itl    : {}", engine.itl_hist.summary());
+    println!(
+        "sched  : waiting {} | fill {:.3} | prefill_chunks {} | \
+         capacity waits {}",
+        engine.waiting_hist.summary(),
+        engine.metrics.batch_fill_ratio,
+        engine.metrics.prefill_chunks,
+        engine.metrics.batcher_capacity_waits
+    );
     println!("kernel : {}", engine.metrics.kernel_backend);
     if engine.metrics.requests_cancelled > 0 {
         println!("cancelled: {}", engine.metrics.requests_cancelled);

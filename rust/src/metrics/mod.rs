@@ -218,6 +218,16 @@ pub struct EngineMetrics {
     pub batcher_capacity_waits: u64,
     /// Waiting-queue depth at the most recent capacity wait.
     pub batcher_wait_depth: u64,
+    /// Current waiting-queue depth (gauge, sampled every step).
+    pub queue_depth: u64,
+    /// Admitted KV reservations over `max_batch_total_tokens` (gauge):
+    /// how full the token-budget batch actually runs. Can exceed 1.0
+    /// only via the oversized-solo-request escape hatch.
+    pub batch_fill_ratio: f64,
+    /// Chunk boundaries crossed by interleaved prefills: a prefill
+    /// paused mid-prompt (to let batch-mates decode) and resumed on a
+    /// later iteration. 0 means every prompt prefilled in one grant.
+    pub prefill_chunks: u64,
     /// Wall-clock seconds spent in decode rounds (engine thread).
     pub decode_wall_s: f64,
     /// Seconds of per-(layer, head) work executed during those rounds,

@@ -117,6 +117,46 @@ fn scratch_buf<T: Clone + Default>(v: &mut Vec<T>, n: usize, grows: &mut u64) {
     v.resize(n, T::default());
 }
 
+/// Resumable-prefill state for [`CpuModel::prefill_chunk`]: how far the
+/// prompt has been processed, plus the per-layer float K/V of every
+/// processed row (full `d_model` width). Later chunks attend over that
+/// exact float prefix — re-deriving it from the quantized cache would
+/// change bits — so the cursor costs
+/// `2 * n_layers * done * d_model * 4` bytes while a prefill is in
+/// flight; completion frees it. Dropping a cursor mid-flight abandons
+/// the prefill with no cache-side cleanup beyond the session cache it
+/// was ingesting into.
+pub struct PrefillCursor {
+    /// Prompt rows fully processed (always block-aligned until the
+    /// final chunk lands).
+    done: usize,
+    /// Adopted shared-prefix rows (page-aligned): run through the float
+    /// forward but never re-ingested.
+    skip: usize,
+    /// Prompt length the cursor was opened over.
+    total: usize,
+    /// Per-layer K projections of rows `[0, done)`.
+    k: Vec<Mat>,
+    /// Per-layer V projections of rows `[0, done)`.
+    v: Vec<Mat>,
+}
+
+impl PrefillCursor {
+    /// Prompt rows processed so far.
+    pub fn done(&self) -> usize {
+        self.done
+    }
+
+    /// Prompt length this cursor was opened over.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.done == self.total
+    }
+}
+
 /// Deterministic tiny transformer serving the artifact-free CPU path.
 pub struct CpuModel {
     pub info: ModelInfo,
@@ -192,6 +232,27 @@ impl CpuModel {
         pool: &WorkerPool,
         cache: &mut KvCache,
     ) -> Result<Vec<f32>> {
+        let mut cursor = self.begin_prefill(prompt, skip_tokens, cache)?;
+        match self.prefill_chunk(prompt, &mut cursor, prompt.len(), pool, cache)?
+        {
+            Some(logits) => Ok(logits),
+            None => bail!("full-prompt prefill chunk did not complete"),
+        }
+    }
+
+    /// Validate a prompt and open a [`PrefillCursor`] over it. The
+    /// cursor starts with zero rows processed; feed it to
+    /// [`Self::prefill_chunk`] until completion. `skip_tokens` marks a
+    /// page-aligned adopted shared prefix whose q2 pages are already in
+    /// `cache` — those rows still run the float forward (chunk
+    /// attention needs the exact prefix K/V floats at every layer) but
+    /// are not re-quantized or re-ingested.
+    pub fn begin_prefill(
+        &self,
+        prompt: &[u8],
+        skip_tokens: usize,
+        cache: &KvCache,
+    ) -> Result<PrefillCursor> {
         let m = &self.info;
         if prompt.is_empty() {
             bail!("empty prompt");
@@ -212,7 +273,69 @@ impl CpuModel {
                 skip_tokens
             );
         }
+        let dm = m.d_model;
+        Ok(PrefillCursor {
+            done: 0,
+            skip: skip_tokens,
+            total: prompt.len(),
+            k: (0..m.n_layers).map(|_| Mat::zeros(0, dm)).collect(),
+            v: (0..m.n_layers).map(|_| Mat::zeros(0, dm)).collect(),
+        })
+    }
+
+    /// Process the next `max_tokens` prompt rows of a resumable prefill
+    /// and ingest their K/V into `cache`. Returns `Some(logits)` for
+    /// the *final chunk's rows* (`[chunk_len * vocab]`; the last row
+    /// predicts the first generated token) once the prompt is complete,
+    /// `None` while rows remain.
+    ///
+    /// Bitwise contract: the concatenated per-row outputs are
+    /// `f32::to_bits`-identical to a monolithic [`Self::prefill_from`]
+    /// for *any* chunk schedule. Three properties make that hold:
+    /// every non-final chunk boundary is a `block` multiple (grants are
+    /// rounded down here), so `turbo_attention`'s row tiles, per-tile
+    /// quantization groups, and `ingest_stream`'s q1 blocks all land on
+    /// the same absolute boundaries; the kernel's causal early exit
+    /// makes a row tile's column-tile walk a function of its absolute
+    /// position only; and everything outside attention (embedding, RMS,
+    /// projections, MLP) is row-local. The price of resumability is the
+    /// cursor's per-layer float K/V of processed rows — chunk `i`'s
+    /// attention reads the exact floats chunks `0..i` produced.
+    pub fn prefill_chunk(
+        &self,
+        prompt: &[u8],
+        cursor: &mut PrefillCursor,
+        max_tokens: usize,
+        pool: &WorkerPool,
+        cache: &mut KvCache,
+    ) -> Result<Option<Vec<f32>>> {
+        let m = &self.info;
+        if prompt.len() != cursor.total {
+            bail!(
+                "cursor opened over a {}-token prompt, got {}",
+                cursor.total,
+                prompt.len()
+            );
+        }
+        if cursor.is_complete() {
+            bail!("prefill cursor already complete");
+        }
         let (n, dm, dh, h_n) = (prompt.len(), m.d_model, m.d_head, m.n_heads);
+        let s = cursor.done;
+        // Non-final chunk boundaries must stay block-aligned (see the
+        // bitwise contract above); `s` is aligned by induction.
+        let mut e = (s + max_tokens).min(n);
+        if e < n {
+            e = e / m.block * m.block;
+        }
+        if e <= s {
+            bail!(
+                "chunk grant {max_tokens} below one {}-token block",
+                m.block
+            );
+        }
+        debug_assert_eq!(cache.tokens(), s.max(cursor.skip));
+        let cn = e - s;
         let tcfg = TurboConfig {
             br: m.block,
             bc: m.block,
@@ -221,24 +344,34 @@ impl CpuModel {
             kv_bits: None,
             exact_exp: false,
         };
-        let mut x = Mat::zeros(n, dm);
-        for (pos, (&tok, row)) in
-            prompt.iter().zip(x.data.chunks_mut(dm)).enumerate()
+        let mut x = Mat::zeros(cn, dm);
+        for (r, (&tok, row)) in prompt[s..e]
+            .iter()
+            .zip(x.data.chunks_mut(dm))
+            .enumerate()
         {
             row.copy_from_slice(self.embed.row(tok as usize));
-            add_pos_embed(row, pos);
+            add_pos_embed(row, s + r);
         }
+        let ingest_from = s.max(cursor.skip);
         for (l, lw) in self.layers.iter().enumerate() {
             let xn = rms_rows(&x);
             let qm = xn.matmul(&lw.wq);
             let km = xn.matmul(&lw.wk);
             let vm = xn.matmul(&lw.wv);
+            // Append this chunk's K/V rows to the cursor's float
+            // prefix, then slice heads over the *whole* processed
+            // range [0, e) — tail-query causal attention (nq = cn,
+            // nk = e) resolves each row's visibility from its absolute
+            // position.
+            cursor.k[l].append_rows(&km);
+            cursor.v[l].append_rows(&vm);
             let heads: Vec<(Mat, Mat, Mat)> = (0..h_n)
                 .map(|h| {
                     (
                         cols_slice(&qm, h * dh, dh),
-                        cols_slice(&km, h * dh, dh),
-                        cols_slice(&vm, h * dh, dh),
+                        cols_slice(&cursor.k[l], h * dh, dh),
+                        cols_slice(&cursor.v[l], h * dh, dh),
                     )
                 })
                 .collect();
@@ -252,30 +385,32 @@ impl CpuModel {
                     });
                 }
             })?;
-            let mut att = Mat::zeros(n, dm);
+            let mut att = Mat::zeros(cn, dm);
             for (h, out_h) in outs.iter().enumerate() {
-                for r in 0..n {
+                for r in 0..cn {
                     att.row_mut(r)[h * dh..(h + 1) * dh]
                         .copy_from_slice(out_h.row(r));
                 }
             }
-            // Write this layer's K/V into the paged cache, one q1 block
-            // (codes + symmetric scale) at a time — starting past the
-            // adopted shared prefix, whose pages are already there.
+            // Write this chunk's K/V into the paged cache, one q1
+            // block (codes + symmetric scale) at a time — starting
+            // past the adopted shared prefix, whose pages are already
+            // there. The head mats cover rows [0, e), so the stream
+            // ingests exactly [max(s, skip), e).
             for (h, hm) in heads.iter().enumerate() {
                 ingest_stream(
                     cache.k_stream_mut(l, h),
                     &hm.1,
                     m.block,
                     dh,
-                    skip_tokens,
+                    ingest_from,
                 );
                 ingest_stream(
                     cache.v_stream_mut(l, h),
                     &hm.2,
                     m.block,
                     dh,
-                    skip_tokens,
+                    ingest_from,
                 );
             }
             let o = att.matmul(&lw.wo);
@@ -288,7 +423,16 @@ impl CpuModel {
             let down = hid.matmul(&lw.w2);
             add_assign(&mut x.data, &down.data);
         }
-        Ok(rms_rows(&x).matmul(&self.w_out).data)
+        cursor.done = e;
+        if cursor.is_complete() {
+            // The float prefix has served its purpose; drop it eagerly
+            // so a retained cursor costs nothing.
+            cursor.k.clear();
+            cursor.v.clear();
+            Ok(Some(rms_rows(&x).matmul(&self.w_out).data))
+        } else {
+            Ok(None)
+        }
     }
 
     /// One decode step over the session's synced q1 slabs (`nk` valid
@@ -597,6 +741,60 @@ mod tests {
                 Some(w) => assert_eq!(w, &bits, "threads={threads}"),
             }
         }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_bitwise() {
+        let info = tiny_info();
+        let model = CpuModel::new(&info, 11);
+        let pool = WorkerPool::new(2);
+        // 19 tokens: four full 4-token blocks plus a ragged tail.
+        let prompt = b"the chunked prefill";
+        let mut mono_cache = cache_for(&info);
+        let mono = model.prefill(prompt, &pool, &mut mono_cache).unwrap();
+        let bits =
+            |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        // 11 exercises the round-down-to-block path (grants land at 8).
+        for chunk in [4usize, 8, 11] {
+            let mut cache = cache_for(&info);
+            let mut cursor = model.begin_prefill(prompt, 0, &cache).unwrap();
+            let mut last = None;
+            let mut calls = 0;
+            while last.is_none() {
+                last = model
+                    .prefill_chunk(prompt, &mut cursor, chunk, &pool, &mut cache)
+                    .unwrap();
+                calls += 1;
+                assert!(
+                    cursor.done() == prompt.len()
+                        || cursor.done() % info.block == 0,
+                    "non-final chunk boundary must be block-aligned"
+                );
+            }
+            assert!(calls > 1, "chunk={chunk} must take several calls");
+            assert!(cursor.is_complete());
+            assert_eq!(cache.tokens(), prompt.len());
+            // The final chunk's logits are the monolithic tail rows.
+            let logits = last.unwrap();
+            let tail = &mono[mono.len() - logits.len()..];
+            assert_eq!(bits(&logits), bits(tail), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_rejects_sub_block_grant() {
+        let info = tiny_info();
+        let model = CpuModel::new(&info, 11);
+        let pool = WorkerPool::new(1);
+        let mut cache = cache_for(&info);
+        let prompt = b"twelve..chars"; // 13 > block
+        let mut cursor = model.begin_prefill(prompt, 0, &cache).unwrap();
+        assert!(
+            model
+                .prefill_chunk(prompt, &mut cursor, 3, &pool, &mut cache)
+                .is_err(),
+            "a mid-prompt grant below one block cannot make progress"
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod cpu;
 pub use bundle::{
     DecodeOut, FlashSlabs, ModelBundle, PrefillOut, SlabShardMut, TurboSlabs,
 };
-pub use cpu::{CpuModel, ModelScratch};
+pub use cpu::{CpuModel, ModelScratch, PrefillCursor};
 
 use crate::testutil::Rng;
 

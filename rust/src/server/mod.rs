@@ -206,7 +206,8 @@ fn format_stats(s: &crate::coordinator::StatsSnapshot) -> String {
          ttft_p50_ms={:.2} latency_p50_ms={:.2} itl_p50_ms={:.3} \
          itl_p95_ms={:.3} itl_mean_ms={:.3} dedup={:.3} kernel={} \
          pool_cap={} pool_bytes={} preempt={} replayed={} memo_evict={} \
-         memo_recompute={}",
+         memo_recompute={} queue_depth={} fill={:.3} prefill_chunks={} \
+         waiting_p50_ms={:.3}",
         s.metrics.requests_completed,
         s.metrics.requests_cancelled,
         s.metrics.tokens_generated,
@@ -224,6 +225,10 @@ fn format_stats(s: &crate::coordinator::StatsSnapshot) -> String {
         s.metrics.preempt_replayed_tokens,
         s.metrics.pool_memo_evictions,
         s.metrics.pool_memo_recomputes,
+        s.metrics.queue_depth,
+        s.metrics.batch_fill_ratio,
+        s.metrics.prefill_chunks,
+        s.waiting.p50() * 1e3,
     )
 }
 

@@ -49,6 +49,14 @@ impl Mat {
         self.data[r * self.cols + c] = v;
     }
 
+    /// Append every row of `other` (same column count) — how a
+    /// resumable prefill grows its per-layer K/V prefix chunk by chunk.
+    pub fn append_rows(&mut self, other: &Mat) {
+        assert_eq!(self.cols, other.cols, "append_rows column mismatch");
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+    }
+
     /// Sub-matrix copy of rows [r0, r1).
     pub fn rows_slice(&self, r0: usize, r1: usize) -> Mat {
         Mat {

@@ -53,6 +53,13 @@
 //!    construction (the purity invariant); the measured ratio prices
 //!    what the bounded memory costs in preemption + replay recompute.
 //!
+//! 7. **Top-k page-sparse decode** — `sparse-topk k=K ctx=C` times the
+//!    sparse stream fan-out (`turbo_decode_streams_sparse`: envelope
+//!    scoring, top-k page selection, mean-value fold of skipped pages)
+//!    against the dense fan-out at ctx 1024 and 4096, and reports the
+//!    fraction of KV code bytes actually read (`bytes_read_ratio`,
+//!    from the step's own skip counters).
+//!
 //! `--json` additionally writes every case plus the computed speedups and
 //! the shared-prefix scenario to `BENCH_decode.json` (the perf-trajectory
 //! artifact). The payload records `kernel_backend` — the ISA the
@@ -64,7 +71,8 @@ use std::sync::Arc;
 
 use turboattention::attention::backend::TurboSession;
 use turboattention::attention::{
-    turbo_decode_streams, turbo_decode_streams_scalar, DecodeScratch,
+    turbo_decode_streams, turbo_decode_streams_scalar,
+    turbo_decode_streams_sparse, DecodeScratch,
 };
 use turboattention::bench::Bencher;
 use turboattention::coordinator::{
@@ -316,6 +324,102 @@ fn main() {
         });
         println!();
     }
+
+    // Top-k page-sparse decode: frozen pre-synced sessions (page
+    // summaries synced alongside the codes), attention only, so the
+    // sweep isolates what envelope scoring + skipping buys over the
+    // dense fan-out at the same context. `bytes_read_ratio` is the KV
+    // code bytes the sparse step actually touches relative to dense,
+    // computed from the step's own attended/skipped counters.
+    let mut sparse_json = Vec::new();
+    println!("top-k page-sparse decode (attention only, t4):");
+    for &ctx in &[1024usize, 4096] {
+        let mut rng = Rng::new(23);
+        let mut sess = new_session(ctx, &mut rng, 4);
+        let pool = Arc::clone(sess.pool());
+        let nk = sess.sync_slabs_sparse(true).expect("sync");
+        let n_pages = nk / BLOCK;
+        let mut scratches = vec![DecodeScratch::new(); 4];
+        let mut ml = vec![(0.0f32, 0.0f32); L * H];
+        let mut out = vec![0.0f32; L * H * DH];
+        let q = rng.normal_vec(L * H * DH, 1.0);
+        let dense_s = b
+            .bench(&format!("sparse-dense baseline ctx={ctx}"), || {
+                turbo_decode_streams(
+                    &pool,
+                    &q,
+                    &sess.slabs.k8,
+                    &sess.slabs.v8,
+                    &sess.slabs.sk,
+                    &sess.slabs.sv,
+                    DH,
+                    nk,
+                    BLOCK,
+                    -6.0,
+                    &mut scratches,
+                    &mut ml,
+                    &mut out,
+                )
+                .expect("decode");
+                out[0]
+            })
+            .mean_s();
+        // Dense reads every K and V code of every stream each step.
+        let dense_bytes = (L * H * 2 * nk * DH) as f64;
+        println!(
+            "  ctx={ctx}: {n_pages} pages/stream, dense {:.3}ms/token",
+            dense_s * 1e3
+        );
+        for &topk in &[4usize, 16, 64] {
+            if topk >= n_pages {
+                continue;
+            }
+            let mut skipped = 0u64;
+            let mean_s = b
+                .bench(&format!("sparse-topk k={topk} ctx={ctx}"), || {
+                    let (_, skip) = turbo_decode_streams_sparse(
+                        &pool,
+                        &q,
+                        &sess.slabs.k8,
+                        &sess.slabs.v8,
+                        &sess.slabs.sk,
+                        &sess.slabs.sv,
+                        &sess.slabs.kmin,
+                        &sess.slabs.kmax,
+                        &sess.slabs.vmean,
+                        DH,
+                        nk,
+                        BLOCK,
+                        -6.0,
+                        topk,
+                        &mut scratches,
+                        &mut ml,
+                        &mut out,
+                    )
+                    .expect("sparse decode");
+                    skipped = skip;
+                    out[0]
+                })
+                .mean_s();
+            let bytes_ratio =
+                1.0 - (skipped as f64 * 2.0 * (BLOCK * DH) as f64) / dense_bytes;
+            println!(
+                "    k={topk}: {:.3}ms/token ({:.2}x vs dense), \
+                 bytes read {:.3}x",
+                mean_s * 1e3,
+                dense_s / mean_s.max(1e-12),
+                bytes_ratio
+            );
+            sparse_json.push(format!(
+                "{{\"ctx\":{ctx},\"topk\":{topk},\"pages\":{n_pages},\
+                 \"per_token_s\":{mean_s:e},\
+                 \"dense_per_token_s\":{dense_s:e},\
+                 \"pages_skipped_per_step\":{skipped},\
+                 \"bytes_read_ratio\":{bytes_ratio:.4}}}"
+            ));
+        }
+    }
+    println!();
 
     // Integer microkernels, dispatched vs pinned scalar arm: one
     // ctx-row key/value block through the raw kernels, no attention
@@ -664,6 +768,7 @@ fn main() {
              \"cases\": {},\n  \"microkernel_vs_scalar\": [{}],\n  \
              \"kernel_vs_scalar\": [{}],\n  \
              \"thread_speedup_vs_t1\": [{}],\n  \
+             \"sparse_topk\": [{}],\n  \
              \"shared_prefix\": [{}],\n  \"pool_cap\": {{\
              \"cap_bytes\": {POOL_CAP}, \"preemptions\": {preempts}, \
              \"replayed_tokens\": {replayed}, \
@@ -681,6 +786,7 @@ fn main() {
             micro_speedups.join(","),
             kernel_speedups.join(","),
             thread_speedups.join(","),
+            sparse_json.join(","),
             shared_json.join(","),
             cap_overhead
                 .map(|o| format!("{o:.4}"))

@@ -119,12 +119,22 @@ pub trait AttentionBackend {
 
     /// One decode step: feed `token` at absolute position `pos`, attend
     /// over the session's cache.
+    ///
+    /// `sparse_topk_pages` is the per-request bandwidth knob: `0` is the
+    /// dense path; `k > 0` asks the backend to exactly attend only the
+    /// `k` highest-envelope-scored full pages per stream and fold each
+    /// skipped page's mass as one mean-value term (SparQ-style). The
+    /// contract every implementation must keep: `k = 0` and
+    /// `k >= pages` are **bit-identical** to dense, and selection is
+    /// deterministic (ties break toward the lower page index).
+    /// Backends without a sparse path ignore the knob and stay dense.
     fn decode_step(
         &self,
         bundle: &mut ModelBundle,
         session: &mut Self::Session,
         token: u8,
         pos: usize,
+        sparse_topk_pages: usize,
     ) -> Result<DecodeOut>;
 
     /// Fold the new token's K/V (`[L*H*dh]` each) into the session cache.
@@ -233,6 +243,11 @@ pub struct TurboSession {
     synced_pages: usize,
     /// Buffer tokens already copied after the page region.
     synced_buf: usize,
+    /// Pages whose sparse summaries (kmin/kmax/vmean) the slabs already
+    /// mirror. Tracked separately from `synced_pages` because summaries
+    /// are only materialized for sparse decode sessions — a session
+    /// that turns sparse after dense syncs backfills from here.
+    synced_summary_pages: usize,
 }
 
 impl TurboSession {
@@ -261,7 +276,14 @@ impl TurboSession {
         slabs: TurboSlabs,
         pool: Arc<WorkerPool>,
     ) -> TurboSession {
-        TurboSession { cache, slabs, pool, synced_pages: 0, synced_buf: 0 }
+        TurboSession {
+            cache,
+            slabs,
+            pool,
+            synced_pages: 0,
+            synced_buf: 0,
+            synced_summary_pages: 0,
+        }
     }
 
     /// The pool this session's decode work forks onto.
@@ -290,6 +312,16 @@ impl TurboSession {
     /// worker panic the cursors stay put, so the next successful sync
     /// rewrites everything the failed one may have half-written.
     pub fn sync_slabs(&mut self) -> Result<usize> {
+        self.sync_slabs_sparse(false)
+    }
+
+    /// [`Self::sync_slabs`] with the sparse-path switch: when
+    /// `with_summaries` is set, every flushed page's pool summary
+    /// (per-channel K min/max envelope + V column mean) is also copied
+    /// into the slabs' `kmin`/`kmax`/`vmean` arrays, tracked by its own
+    /// cursor so a session that mixes dense and sparse syncs backfills
+    /// correctly. Dense sessions never pay for summaries.
+    pub fn sync_slabs_sparse(&mut self, with_summaries: bool) -> Result<usize> {
         let l_n = self.cache.cfg.n_layers;
         let h_n = self.cache.cfg.n_heads;
         let dh = self.cache.cfg.d_head;
@@ -315,6 +347,13 @@ impl TurboSession {
             pages_now * block + self.synced_buf
         };
         let start = start.min(nk);
+        // Page range whose sparse summaries need mirroring this sync
+        // (empty on dense syncs and when already up to date).
+        let (sum_p0, sum_p1) = if with_summaries {
+            (self.synced_summary_pages.min(pages_now), pages_now)
+        } else {
+            (0, 0)
+        };
         let pool = Arc::clone(&self.pool);
         // Deal streams into <= threads contiguous groups (sizes differ
         // by at most one, `balanced_chunk_sizes`): steady-state sync
@@ -333,7 +372,8 @@ impl TurboSession {
                     for (streams, shard) in shards {
                         *forked += 1;
                         sync_stream_shard(
-                            streams, shard, start, nk, dh, block, nb,
+                            streams, shard, start, nk, dh, block, nb, sum_p0,
+                            sum_p1,
                         );
                     }
                 });
@@ -345,7 +385,8 @@ impl TurboSession {
                 scope.execute(move || {
                     for (streams, shard) in group {
                         sync_stream_shard(
-                            streams, shard, start, nk, dh, block, nb,
+                            streams, shard, start, nk, dh, block, nb, sum_p0,
+                            sum_p1,
                         );
                     }
                 });
@@ -360,13 +401,19 @@ impl TurboSession {
         );
         self.synced_pages = pages_now;
         self.synced_buf = buf_now;
+        if with_summaries {
+            self.synced_summary_pages = pages_now;
+        }
         Ok(nk)
     }
 }
 
 /// Per-worker body of [`TurboSession::sync_slabs`]: bring one stream
 /// pair's q1 views up to date and copy the `[start, nk)` token range
-/// (plus live scales) into the stream's slab shard.
+/// (plus live scales) into the stream's slab shard. Pages
+/// `[sum_p0, sum_p1)` additionally mirror their pool summaries into the
+/// shard's sparse arrays (the range is empty on dense syncs).
+#[allow(clippy::too_many_arguments)]
 fn sync_stream_shard(
     streams: HeadCacheMut<'_>,
     shard: SlabShardMut<'_>,
@@ -375,6 +422,8 @@ fn sync_stream_shard(
     dh: usize,
     block: usize,
     nb: usize,
+    sum_p0: usize,
+    sum_p1: usize,
 ) {
     let nbv = nk.div_ceil(block).min(nb);
     let (codes, scales, n) = streams.k.q1_view();
@@ -387,6 +436,19 @@ fn sync_stream_shard(
     shard.v8[start * dh..nk * dh]
         .copy_from_slice(&codes[start * dh..nk * dh]);
     shard.sv[..nbv].copy_from_slice(&scales[..nbv]);
+    if sum_p0 < sum_p1 {
+        // K and V streams store their pages in the same shared pool;
+        // one read lock covers both (the lazy summary memo fill is
+        // `&self`-safe under it, like the q1 memos).
+        let pool = streams.k.page_pool().read().expect("page pool");
+        for pi in sum_p0..sum_p1 {
+            let s = pool.summary(streams.k.pages[pi]);
+            shard.kmin[pi * dh..(pi + 1) * dh].copy_from_slice(&s.min);
+            shard.kmax[pi * dh..(pi + 1) * dh].copy_from_slice(&s.max);
+            let s = pool.summary(streams.v.pages[pi]);
+            shard.vmean[pi * dh..(pi + 1) * dh].copy_from_slice(&s.mean);
+        }
+    }
 }
 
 /// Build the paged q2 cache for one request from a precision policy and
@@ -555,7 +617,10 @@ impl AttentionBackend for TurboBackend {
         session: &mut TurboSession,
         token: u8,
         pos: usize,
+        _sparse_topk_pages: usize,
     ) -> Result<DecodeOut> {
+        // The AOT executable has no sparse kernel: this path stays dense
+        // regardless of the knob (documented on the trait method).
         let nk = session.sync_slabs()?;
         bundle.decode_turbo(&mut session.slabs, token, pos, nk)
     }
@@ -779,8 +844,10 @@ impl AttentionBackend for TurboCpuBackend {
         session: &mut TurboCpuSession,
         token: u8,
         pos: usize,
+        sparse_topk_pages: usize,
     ) -> Result<DecodeOut> {
-        let nk = session.inner.sync_slabs()?;
+        let nk =
+            session.inner.sync_slabs_sparse(sparse_topk_pages > 0)?;
         self.model.decode_step(
             &session.inner.slabs,
             nk,
@@ -789,6 +856,7 @@ impl AttentionBackend for TurboCpuBackend {
             &self.pool,
             &mut session.scratches,
             &mut session.model_scratch,
+            sparse_topk_pages,
         )
     }
 
@@ -853,7 +921,9 @@ impl AttentionBackend for FlashBackend {
         session: &mut FlashSession,
         token: u8,
         pos: usize,
+        _sparse_topk_pages: usize,
     ) -> Result<DecodeOut> {
+        // The exact float baseline has no pages to skip: always dense.
         // The cache holds exactly the `pos` tokens before this one.
         bundle.decode_flash(&mut session.slabs, token, pos, pos)
     }
@@ -935,12 +1005,15 @@ pub trait DynBackend {
         prompt: &[u8],
         shared: Option<&SharedPrefix>,
     ) -> Result<(Vec<f32>, BackendState, Option<SharedPrefix>)>;
+    /// See [`AttentionBackend::decode_step`] (including the
+    /// `sparse_topk_pages` contract).
     fn decode_step(
         &self,
         bundle: &mut ModelBundle,
         state: &mut BackendState,
         token: u8,
         pos: usize,
+        sparse_topk_pages: usize,
     ) -> Result<DecodeOut>;
     fn fold_new_token(
         &self,
@@ -994,8 +1067,15 @@ where
         state: &mut BackendState,
         token: u8,
         pos: usize,
+        sparse_topk_pages: usize,
     ) -> Result<DecodeOut> {
-        self.0.decode_step(bundle, state.downcast_mut(), token, pos)
+        self.0.decode_step(
+            bundle,
+            state.downcast_mut(),
+            token,
+            pos,
+            sparse_topk_pages,
+        )
     }
 
     fn fold_new_token(
@@ -1258,7 +1338,7 @@ mod tests {
         let mut token = 42u8;
         for _ in 0..6 {
             let out = backend
-                .decode_step(&mut bundle, &mut state, token, pos)
+                .decode_step(&mut bundle, &mut state, token, pos, 0)
                 .expect("decode");
             assert_eq!(out.logits.len(), info.vocab);
             backend
@@ -1328,7 +1408,7 @@ mod tests {
             let mut pos = prompt.len();
             for _ in 0..8 {
                 let out = backend
-                    .decode_step(bundle, state, token, pos)
+                    .decode_step(bundle, state, token, pos, 0)
                     .expect("decode");
                 backend.fold_new_token(
                     bundle, state, &out.k_new, &out.v_new, pos,

@@ -35,9 +35,10 @@ pub use crate::kernels::{idot_mr, ipv_acc, qk_dot_block};
 pub use exact::attention_exact;
 pub use flash::flash_attention;
 pub use turbo::{
-    turbo_attention, turbo_decode, turbo_decode_into,
-    turbo_decode_into_scalar, turbo_decode_streams,
-    turbo_decode_streams_scalar, DecodeScratch, TurboConfig,
+    select_topk_pages, turbo_attention, turbo_decode, turbo_decode_into,
+    turbo_decode_into_scalar, turbo_decode_into_sparse, turbo_decode_streams,
+    turbo_decode_streams_scalar, turbo_decode_streams_sparse, DecodeScratch,
+    TurboConfig,
 };
 
 /// Causal-mask helper: is key position `kpos` visible to query row `qrow`

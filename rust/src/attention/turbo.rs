@@ -6,7 +6,7 @@
 //! optional progressive (INT4/2) round trip of K/V tiles to measure the
 //! q2-cache effect end to end.
 
-use crate::kernels::{ipv_acc, qk_dot_block};
+use crate::kernels::{ipv_acc, page_score, qk_dot_block};
 use crate::pool::{balanced_chunk_sizes, ScopeError, WorkerPool};
 use crate::quant::{
     dequant_asym_int, quant_asym_int, quant_sym_int8, quant_sym_int8_into,
@@ -202,6 +202,9 @@ pub struct DecodeScratch {
     acc: Vec<f32>,
     /// INT8 codes of the query.
     q8: Vec<i8>,
+    /// Sparse-path page selection buffer: (envelope score, page index)
+    /// per full page, sorted/truncated in place per step.
+    sel: Vec<(f32, u32)>,
 }
 
 impl DecodeScratch {
@@ -400,6 +403,202 @@ pub fn turbo_decode(
     (out, m, l)
 }
 
+/// Deterministic top-k page selection over `(score, page index)` pairs:
+/// keep the `topk` highest-scoring entries, break score ties toward the
+/// **lower page index** (so selection is a pure function of the scores —
+/// thread-count and chunking invariant), then reorder the survivors by
+/// ascending page index so the caller's block walk folds selected pages
+/// in the same order the dense loop would.
+pub fn select_topk_pages(sel: &mut Vec<(f32, u32)>, topk: usize) {
+    sel.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    sel.truncate(topk);
+    sel.sort_unstable_by_key(|e| e.1);
+}
+
+/// The exact dense block fold of [`turbo_decode_into`], factored out so
+/// the sparse path attends its selected pages (and the ragged buffer
+/// tail) with the identical instruction sequence.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn dense_block_fold(
+    k8: &[i8],
+    v8: &[i8],
+    j0: usize,
+    j1: usize,
+    d: usize,
+    sf: f32,
+    sv_blk: f32,
+    sas: &Sas,
+    scratch: &mut DecodeScratch,
+    m: &mut f32,
+    l: &mut f32,
+) {
+    let cb = j1 - j0;
+    qk_dot_block(&scratch.q8, &k8[j0 * d..j1 * d], d, &mut scratch.s32[..cb]);
+    let mut m_new = *m;
+    for (sc, &si) in scratch.s[..cb].iter_mut().zip(&scratch.s32[..cb]) {
+        let v = si as f32 * sf;
+        *sc = v;
+        m_new = m_new.max(v);
+    }
+    let alpha =
+        if *m == f32::NEG_INFINITY { 0.0 } else { sas.exp(*m - m_new) };
+    let row_sum = sas.exp_block(&mut scratch.s[..cb], m_new);
+    *l = alpha * *l + row_sum;
+    let p_scale = quant_sym_int8_into(&scratch.s[..cb], &mut scratch.p8);
+    let pv_sf = p_scale * sv_blk;
+    ipv_acc(&scratch.p8, &v8[j0 * d..j1 * d], d, &mut scratch.pv);
+    for (a, &pvi) in scratch.acc.iter_mut().zip(&scratch.pv) {
+        *a = *a * alpha + pvi as f32 * pv_sf;
+    }
+    *m = m_new;
+}
+
+/// SparQ-style top-k page-sparse decode step over a q1-level cache.
+///
+/// Same cache layout as [`turbo_decode_into`], plus per-page summaries
+/// for the `nk / bc` **full** pages: `kmin`/`kmax` (`[n_pages * d]` INT8
+/// key envelope) and `vmean` (`[n_pages * d]` f32 V column means in q1
+/// code space). Each full page is scored with the exact-integer
+/// [`page_score`] envelope bound (an upper bound on every key row's dot
+/// with the query), the top `topk` pages are chosen by
+/// [`select_topk_pages`], and the block walk then runs in ascending page
+/// order: selected pages get the dense fold, each skipped page collapses
+/// to **one** mean-value online-softmax term — its envelope-midpoint
+/// score with multiplicity `bc`, weighting the page's V column mean. The
+/// ragged buffer tail past the last full page is always attended
+/// exactly.
+///
+/// Returns `(m, l, pages_attended, pages_skipped)`. `topk == 0` (knob
+/// off) and `topk >= n_pages` delegate to [`turbo_decode_into`] and are
+/// **bit-identical** to the dense path by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn turbo_decode_into_sparse(
+    q: &[f32],
+    k8: &[i8],
+    v8: &[i8],
+    sk: &[f32],
+    sv: &[f32],
+    kmin: &[i8],
+    kmax: &[i8],
+    vmean: &[f32],
+    nk: usize,
+    bc: usize,
+    n_r: f32,
+    topk: usize,
+    scratch: &mut DecodeScratch,
+    out: &mut [f32],
+) -> (f32, f32, usize, usize) {
+    let d = q.len();
+    let n_pages = nk / bc;
+    if topk == 0 || topk >= n_pages {
+        let (m, l) =
+            turbo_decode_into(q, k8, v8, sk, sv, nk, bc, n_r, scratch, out);
+        return (m, l, n_pages, 0);
+    }
+    assert_eq!(out.len(), d);
+    assert!(k8.len() >= nk * d && v8.len() >= nk * d);
+    assert!(kmin.len() >= n_pages * d && kmax.len() >= n_pages * d);
+    assert!(vmean.len() >= n_pages * d);
+    let scale = 1.0 / (d as f32).sqrt();
+    let sas = Sas::new(n_r);
+    let q_scale = quant_sym_int8_into(q, &mut scratch.q8);
+    scratch.acc.clear();
+    scratch.acc.resize(d, 0.0);
+    scratch.s.clear();
+    scratch.s.resize(bc, 0.0);
+    scratch.s32.clear();
+    scratch.s32.resize(bc, 0);
+    scratch.pv.clear();
+    scratch.pv.resize(d, 0);
+
+    // Score every full page against its key envelope. The integer bound
+    // is exact and identical across kernel arms; one f32 multiply maps
+    // it into score space, so selection is deterministic everywhere.
+    let mut sel = std::mem::take(&mut scratch.sel);
+    sel.clear();
+    for blk in 0..n_pages {
+        let ub = page_score(
+            &scratch.q8,
+            &kmin[blk * d..(blk + 1) * d],
+            &kmax[blk * d..(blk + 1) * d],
+        );
+        sel.push((ub as f32 * (q_scale * sk[blk] * scale), blk as u32));
+    }
+    select_topk_pages(&mut sel, topk);
+
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let mut next = 0usize;
+    for blk in 0..n_pages {
+        let j0 = blk * bc;
+        let sf = q_scale * sk[blk] * scale;
+        if next < sel.len() && sel[next].1 as usize == blk {
+            next += 1;
+            dense_block_fold(
+                k8,
+                v8,
+                j0,
+                j0 + bc,
+                d,
+                sf,
+                sv[blk],
+                &sas,
+                scratch,
+                &mut m,
+                &mut l,
+            );
+        } else {
+            // Skipped page: envelope-midpoint score stands in for all
+            // bc rows, weighting the page's V column mean once.
+            let mut mid = 0i32;
+            for (j, &qc) in scratch.q8.iter().enumerate() {
+                let lo = kmin[blk * d + j] as i32;
+                let hi = kmax[blk * d + j] as i32;
+                mid += qc as i32 * ((lo + hi) / 2);
+            }
+            let s_mid = mid as f32 * sf;
+            let m_new = m.max(s_mid);
+            let alpha =
+                if m == f32::NEG_INFINITY { 0.0 } else { sas.exp(m - m_new) };
+            let p = sas.exp(s_mid - m_new) * bc as f32;
+            l = alpha * l + p;
+            let w = p * sv[blk];
+            for (a, &vm) in
+                scratch.acc.iter_mut().zip(&vmean[blk * d..(blk + 1) * d])
+            {
+                *a = *a * alpha + w * vm;
+            }
+            m = m_new;
+        }
+    }
+    // The ragged buffer tail (tokens past the last full page) holds the
+    // most recent context and is always attended exactly.
+    let j0 = n_pages * bc;
+    if j0 < nk {
+        let sf = q_scale * sk[n_pages] * scale;
+        dense_block_fold(
+            k8,
+            v8,
+            j0,
+            nk,
+            d,
+            sf,
+            sv[n_pages],
+            &sas,
+            scratch,
+            &mut m,
+            &mut l,
+        );
+    }
+    scratch.sel = sel;
+    let inv = 1.0 / l.max(1e-20);
+    for (o, &a) in out.iter_mut().zip(&scratch.acc) {
+        *o = a * inv;
+    }
+    (m, l, topk, n_pages - topk)
+}
+
 /// One decode step's attention for **every** (layer, head) stream over
 /// shared q1 slabs, fanned out on a worker pool — the parallel form of
 /// the per-head [`turbo_decode_into`] loop (headwise quantization makes
@@ -583,6 +782,123 @@ fn turbo_decode_streams_with(
         }
     })?;
     Ok(())
+}
+
+/// Top-k page-sparse form of [`turbo_decode_streams`]: every stream runs
+/// [`turbo_decode_into_sparse`] with its own slice of the per-page
+/// summary slabs `kmin`/`kmax` (`[n_streams * (C/bc) * d]` INT8) and
+/// `vmean` (same shape, f32). Scheduling (dealing, chunk sizes, write
+/// disjointness) is identical to the dense driver, and each stream's
+/// page selection is a pure function of its own data, so the result is
+/// bit-identical for every thread count and chunking.
+///
+/// Per-stream attended/skipped page counts are written to disjoint
+/// chunks inside the scope and summed after it — no atomics on the hot
+/// path. Returns `(pages_attended, pages_skipped)` totals across all
+/// streams, or `Err` if a worker panicked.
+#[allow(clippy::too_many_arguments)]
+pub fn turbo_decode_streams_sparse(
+    pool: &WorkerPool,
+    q: &[f32],
+    k8: &[i8],
+    v8: &[i8],
+    sk: &[f32],
+    sv: &[f32],
+    kmin: &[i8],
+    kmax: &[i8],
+    vmean: &[f32],
+    d: usize,
+    nk: usize,
+    bc: usize,
+    n_r: f32,
+    topk: usize,
+    scratches: &mut [DecodeScratch],
+    ml: &mut [(f32, f32)],
+    out: &mut [f32],
+) -> Result<(u64, u64), ScopeError> {
+    let n_streams = ml.len();
+    if n_streams == 0 {
+        return Ok((0, 0));
+    }
+    assert!(!scratches.is_empty(), "need at least one DecodeScratch");
+    assert_eq!(q.len(), n_streams * d, "q is [n_streams * d]");
+    assert_eq!(out.len(), n_streams * d, "out is [n_streams * d]");
+    let c = k8.len() / (n_streams * d);
+    let nb = sk.len() / n_streams;
+    assert!(nk <= c, "nk {nk} exceeds per-stream capacity {c}");
+    assert!(v8.len() >= n_streams * c * d && sv.len() >= n_streams * nb);
+    let sums = (c / bc) * d;
+    assert!(
+        kmin.len() >= n_streams * sums
+            && kmax.len() >= n_streams * sums
+            && vmean.len() >= n_streams * sums,
+        "summary slabs are [n_streams * (C/bc) * d]"
+    );
+    let n_jobs_cap = scratches.len();
+    let mut counts = vec![(0usize, 0usize); n_streams];
+    {
+        let counts = &mut counts[..];
+        pool.scope(move |scope| {
+            let mut out_rest = out;
+            let mut ml_rest = ml;
+            let mut cnt_rest = counts;
+            let mut first = 0usize;
+            let mut scratch_it = scratches.iter_mut();
+            for len in balanced_chunk_sizes(n_streams, n_jobs_cap) {
+                let scratch =
+                    scratch_it.next().expect("one scratch per dealt group");
+                let (out_c, tail) =
+                    std::mem::take(&mut out_rest).split_at_mut(len * d);
+                out_rest = tail;
+                let (ml_c, tail) =
+                    std::mem::take(&mut ml_rest).split_at_mut(len);
+                ml_rest = tail;
+                let (cnt_c, tail) =
+                    std::mem::take(&mut cnt_rest).split_at_mut(len);
+                cnt_rest = tail;
+                let start = first;
+                first += len;
+                scope.execute(move || {
+                    for (j, ((o, ml_slot), cnt)) in out_c
+                        .chunks_mut(d)
+                        .zip(ml_c.iter_mut())
+                        .zip(cnt_c.iter_mut())
+                        .enumerate()
+                    {
+                        let i = start + j;
+                        let base = i * c * d;
+                        let sbase = i * nb;
+                        let mbase = i * sums;
+                        let (m, l, att, skip) = turbo_decode_into_sparse(
+                            &q[i * d..(i + 1) * d],
+                            &k8[base..base + c * d],
+                            &v8[base..base + c * d],
+                            &sk[sbase..sbase + nb],
+                            &sv[sbase..sbase + nb],
+                            &kmin[mbase..mbase + sums],
+                            &kmax[mbase..mbase + sums],
+                            &vmean[mbase..mbase + sums],
+                            nk,
+                            bc,
+                            n_r,
+                            topk,
+                            scratch,
+                            o,
+                        );
+                        *ml_slot = (m, l);
+                        *cnt = (att, skip);
+                    }
+                });
+            }
+        })?;
+    }
+    let mut attended = 0u64;
+    let mut skipped = 0u64;
+    for &(a, s) in &counts {
+        attended += a as u64;
+        skipped += s as u64;
+    }
+    Ok((attended, skipped))
 }
 
 /// Merge one extra (uncached) token into a decode result via SAS online
@@ -964,6 +1280,233 @@ mod tests {
             sas_merge_token(&out, -3.0, 2.0, 50.0, &[9.0, -9.0], -6.0);
         assert!((merged[0] - 9.0).abs() < 1e-3);
         assert!((merged[1] + 9.0).abs() < 1e-3);
+    }
+
+    /// Per-page key envelope + V column mean over `[rows * d]` q1 codes
+    /// (capacity pages: every full page of the slab, used or not) — the
+    /// same reduction the pool's `PageSummary` memo performs.
+    fn page_summaries(
+        k8: &[i8],
+        v8: &[i8],
+        rows: usize,
+        d: usize,
+        bc: usize,
+    ) -> (Vec<i8>, Vec<i8>, Vec<f32>) {
+        let n_pages = rows / bc;
+        let mut kmin = vec![i8::MAX; n_pages * d];
+        let mut kmax = vec![i8::MIN; n_pages * d];
+        let mut vmean = vec![0.0f32; n_pages * d];
+        for b in 0..n_pages {
+            for t in 0..bc {
+                for j in 0..d {
+                    let kc = k8[(b * bc + t) * d + j];
+                    kmin[b * d + j] = kmin[b * d + j].min(kc);
+                    kmax[b * d + j] = kmax[b * d + j].max(kc);
+                    vmean[b * d + j] += v8[(b * bc + t) * d + j] as f32;
+                }
+            }
+            for j in 0..d {
+                vmean[b * d + j] /= bc as f32;
+            }
+        }
+        (kmin, kmax, vmean)
+    }
+
+    #[test]
+    fn select_topk_breaks_ties_toward_lower_page_index() {
+        let mut sel = vec![(1.0f32, 3u32), (2.0, 1), (1.0, 0), (2.0, 4)];
+        select_topk_pages(&mut sel, 3);
+        // Scores 2.0 (pages 1, 4) survive; the 1.0 tie goes to page 0,
+        // not page 3; survivors come back in ascending page order.
+        assert_eq!(sel, vec![(1.0, 0), (2.0, 1), (2.0, 4)]);
+        let mut sel = vec![(5.0f32, 2u32), (5.0, 1), (5.0, 0)];
+        select_topk_pages(&mut sel, 2);
+        assert_eq!(sel, vec![(5.0, 0), (5.0, 1)]);
+    }
+
+    #[test]
+    fn sparse_knob_off_or_k_covering_matches_dense_bitwise() {
+        // topk == 0 (knob off) and topk >= n_pages must be the dense
+        // path to the bit — the engine's "sparse off" contract.
+        prop::run("sparse covering == dense", 25, |g| {
+            let d = g.usize_in(4, 16);
+            let bc = 8;
+            let nk = g.usize_in(1, 5 * bc);
+            let n_pages = nk / bc;
+            let nb = nk.div_ceil(bc);
+            let q = g.normal_vec(d, 1.0);
+            let mut k8 = vec![0i8; nk * d];
+            let mut v8 = vec![0i8; nk * d];
+            for x in k8.iter_mut().chain(v8.iter_mut()) {
+                *x = (g.usize_in(0, 255) as i32 - 127) as i8;
+            }
+            let sk: Vec<f32> = (0..nb).map(|_| g.f32_in(0.01, 1.0)).collect();
+            let sv: Vec<f32> = (0..nb).map(|_| g.f32_in(0.01, 1.0)).collect();
+            let (kmin, kmax, vmean) = page_summaries(&k8, &v8, nk, d, bc);
+            let mut scratch = DecodeScratch::new();
+            let mut want = vec![0.0f32; d];
+            let (wm, wl) = turbo_decode_into(
+                &q, &k8, &v8, &sk, &sv, nk, bc, -6.0, &mut scratch, &mut want,
+            );
+            for topk in [0usize, n_pages, n_pages + 3] {
+                let mut out = vec![0.0f32; d];
+                let (m, l, att, skip) = turbo_decode_into_sparse(
+                    &q, &k8, &v8, &sk, &sv, &kmin, &kmax, &vmean, nk, bc,
+                    -6.0, topk, &mut scratch, &mut out,
+                );
+                assert_eq!(m.to_bits(), wm.to_bits(), "m (topk={topk})");
+                assert_eq!(l.to_bits(), wl.to_bits(), "l (topk={topk})");
+                let got: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+                let dense: Vec<u32> =
+                    want.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, dense, "out (topk={topk})");
+                assert_eq!((att, skip), (n_pages, 0), "counters");
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_skips_pages_attends_tail_and_stays_close_to_dense() {
+        // Aggressive k on a multi-page cache with a ragged tail: the
+        // counters account every full page exactly once, the tail is
+        // always attended, and the mean-value fold keeps the output in
+        // the dense output's neighborhood.
+        let mut rng = Rng::new(0x70D4);
+        let (d, bc) = (8usize, 8usize);
+        let n_pages = 5;
+        let tail = 3;
+        let nk = n_pages * bc + tail;
+        let nb = nk.div_ceil(bc);
+        let q = rng.normal_vec(d, 1.0);
+        let mut k8 = vec![0i8; nk * d];
+        let mut v8 = vec![0i8; nk * d];
+        for x in k8.iter_mut().chain(v8.iter_mut()) {
+            *x = (rng.range(0, 255) as i32 - 127) as i8;
+        }
+        let sk: Vec<f32> = (0..nb).map(|_| rng.f32() * 0.5 + 0.01).collect();
+        let sv: Vec<f32> = (0..nb).map(|_| rng.f32() * 0.5 + 0.01).collect();
+        let (kmin, kmax, vmean) = page_summaries(&k8, &v8, nk, d, bc);
+        let mut scratch = DecodeScratch::new();
+        let mut dense = vec![0.0f32; d];
+        turbo_decode_into(
+            &q, &k8, &v8, &sk, &sv, nk, bc, -6.0, &mut scratch, &mut dense,
+        );
+        for topk in [1usize, 2, 4] {
+            let mut out = vec![0.0f32; d];
+            let (m, l, att, skip) = turbo_decode_into_sparse(
+                &q, &k8, &v8, &sk, &sv, &kmin, &kmax, &vmean, nk, bc, -6.0,
+                topk, &mut scratch, &mut out,
+            );
+            assert_eq!(att, topk, "attended (topk={topk})");
+            assert_eq!(skip, n_pages - topk, "skipped (topk={topk})");
+            assert!(m.is_finite() && l > 0.0, "softmax state (topk={topk})");
+            let a = Mat::from_vec(1, d, out);
+            let b = Mat::from_vec(1, d, dense.clone());
+            let rel = a.rel_err(&b);
+            assert!(rel < 0.6, "rel {rel} (topk={topk})");
+        }
+        // Single full page, k = 1: covering — dense to the bit.
+        let nk1 = bc;
+        let (kmin1, kmax1, vmean1) = page_summaries(&k8, &v8, nk1, d, bc);
+        let mut want = vec![0.0f32; d];
+        let (wm, wl) = turbo_decode_into(
+            &q, &k8, &v8, &sk, &sv, nk1, bc, -6.0, &mut scratch, &mut want,
+        );
+        let mut out = vec![0.0f32; d];
+        let (m, l, att, skip) = turbo_decode_into_sparse(
+            &q, &k8, &v8, &sk, &sv, &kmin1, &kmax1, &vmean1, nk1, bc, -6.0,
+            1, &mut scratch, &mut out,
+        );
+        assert_eq!((m.to_bits(), l.to_bits()), (wm.to_bits(), wl.to_bits()));
+        assert_eq!(out, want);
+        assert_eq!((att, skip), (1, 0));
+        // Ragged-only cache (no full page): any k is covering.
+        let nk2 = bc - 1;
+        let mut out = vec![0.0f32; d];
+        let (_, _, att, skip) = turbo_decode_into_sparse(
+            &q, &k8, &v8, &sk, &sv, &[], &[], &[], nk2, bc, -6.0, 1,
+            &mut scratch, &mut out,
+        );
+        assert_eq!((att, skip), (0, 0));
+    }
+
+    #[test]
+    fn sparse_streams_fanout_bit_identical_across_threads() {
+        // The sparse fan-out is a pure scheduler too: serial per-stream
+        // sparse calls are the oracle for every thread count, and the
+        // summed counters match the per-stream sum exactly.
+        let (n_streams, d, bc, c) = (6usize, 8usize, 4usize, 24usize);
+        let nb = c / bc;
+        let nk = 19; // 4 full pages + ragged tail of 3
+        let topk = 2;
+        let mut rng = Rng::new(0x51AB5);
+        let q = rng.normal_vec(n_streams * d, 1.0);
+        let mut k8 = vec![0i8; n_streams * c * d];
+        let mut v8 = vec![0i8; n_streams * c * d];
+        for x in k8.iter_mut().chain(v8.iter_mut()) {
+            *x = (rng.range(0, 255) as i32 - 127) as i8;
+        }
+        let sk: Vec<f32> =
+            (0..n_streams * nb).map(|_| rng.f32() + 0.01).collect();
+        let sv: Vec<f32> =
+            (0..n_streams * nb).map(|_| rng.f32() + 0.01).collect();
+        // Capacity-shaped summary slabs, as TurboSlabs carries them.
+        let sums = (c / bc) * d;
+        let mut kmin = vec![0i8; n_streams * sums];
+        let mut kmax = vec![0i8; n_streams * sums];
+        let mut vmean = vec![0.0f32; n_streams * sums];
+        for i in 0..n_streams {
+            let base = i * c * d;
+            let (lo, hi, mu) =
+                page_summaries(&k8[base..base + c * d], &v8[base..base + c * d], c, d, bc);
+            kmin[i * sums..(i + 1) * sums].copy_from_slice(&lo);
+            kmax[i * sums..(i + 1) * sums].copy_from_slice(&hi);
+            vmean[i * sums..(i + 1) * sums].copy_from_slice(&mu);
+        }
+        let mut scratch = DecodeScratch::new();
+        let mut want = vec![0.0f32; n_streams * d];
+        let mut want_ml = vec![(0.0f32, 0.0f32); n_streams];
+        let mut want_att = 0u64;
+        let mut want_skip = 0u64;
+        for i in 0..n_streams {
+            let base = i * c * d;
+            let sbase = i * nb;
+            let mbase = i * sums;
+            let (m, l, att, skip) = turbo_decode_into_sparse(
+                &q[i * d..(i + 1) * d],
+                &k8[base..base + c * d],
+                &v8[base..base + c * d],
+                &sk[sbase..sbase + nb],
+                &sv[sbase..sbase + nb],
+                &kmin[mbase..mbase + sums],
+                &kmax[mbase..mbase + sums],
+                &vmean[mbase..mbase + sums],
+                nk,
+                bc,
+                -6.0,
+                topk,
+                &mut scratch,
+                &mut want[i * d..(i + 1) * d],
+            );
+            want_ml[i] = (m, l);
+            want_att += att as u64;
+            want_skip += skip as u64;
+        }
+        assert!(want_skip > 0, "fixture must actually skip pages");
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut scratches = vec![DecodeScratch::new(); threads];
+            let mut ml = vec![(0.0f32, 0.0f32); n_streams];
+            let mut out = vec![0.0f32; n_streams * d];
+            let (att, skip) = turbo_decode_streams_sparse(
+                &pool, &q, &k8, &v8, &sk, &sv, &kmin, &kmax, &vmean, d, nk,
+                bc, -6.0, topk, &mut scratches, &mut ml, &mut out,
+            )
+            .expect("no panics");
+            assert_eq!(out, want, "outputs (threads={threads})");
+            assert_eq!(ml, want_ml, "(m, l) (threads={threads})");
+            assert_eq!((att, skip), (want_att, want_skip), "counters");
+        }
     }
 
     #[test]

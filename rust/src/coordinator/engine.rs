@@ -453,7 +453,9 @@ impl Engine {
                         &mut state,
                         tok,
                         n + i,
+                        req.sparse_topk_pages,
                     )?;
+                    self.note_sparse(&out);
                     self.backend.fold_new_token(
                         &self.bundle,
                         &mut state,
@@ -530,7 +532,9 @@ impl Engine {
                 &mut session.state,
                 token,
                 pos,
+                session.req.sparse_topk_pages,
             )?;
+            self.note_sparse(&out);
             self.backend.fold_new_token(
                 &self.bundle,
                 &mut session.state,
@@ -704,6 +708,15 @@ impl Engine {
         } else {
             0.0
         };
+    }
+
+    /// Fold one decode step's sparse-attention counters into the
+    /// engine totals (no-ops for dense steps — the backend reports
+    /// zeros when the knob is off).
+    fn note_sparse(&mut self, out: &crate::model::DecodeOut) {
+        self.metrics.sparse_pages_attended += out.sparse_pages_attended;
+        self.metrics.sparse_pages_skipped += out.sparse_pages_skipped;
+        self.metrics.sparse_bytes_saved += out.sparse_bytes_saved;
     }
 
     fn complete(session: &Session, reason: FinishReason) -> Completion {

@@ -59,6 +59,12 @@ pub struct GenRequest {
     pub id: RequestId,
     pub prompt: Vec<u8>,
     pub params: SamplingParams,
+    /// Top-k page-sparse decode knob: attend only this many full KV
+    /// pages per stream per step (envelope-scored, SparQ-style), folding
+    /// the rest as mean-value terms. `0` = dense (the default); any
+    /// value covering the whole context is bit-identical to dense.
+    /// Per-request, so batch-mates mix sparse and dense freely.
+    pub sparse_topk_pages: usize,
     pub submitted_at: Instant,
 }
 
@@ -73,7 +79,19 @@ impl GenRequest {
         prompt: Vec<u8>,
         params: SamplingParams,
     ) -> GenRequest {
-        GenRequest { id, prompt, params, submitted_at: Instant::now() }
+        GenRequest {
+            id,
+            prompt,
+            params,
+            sparse_topk_pages: 0,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    /// Builder-style setter for [`GenRequest::sparse_topk_pages`].
+    pub fn with_sparse_topk(mut self, k: usize) -> GenRequest {
+        self.sparse_topk_pages = k;
+        self
     }
 }
 

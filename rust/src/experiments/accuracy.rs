@@ -105,6 +105,11 @@ pub enum AccMethod {
     SasOnly,
     Kivi { bits: u32 },
     Gear { bits: u32, rank: usize },
+    /// Top-k page-sparse decode over a q1 cache: every position decoded
+    /// through the serving path's `turbo_decode_into_sparse` (envelope
+    /// scoring + mean-value fold of skipped pages). `topk = 0` is the
+    /// dense decode baseline.
+    SparseTopK { topk: usize, bc: usize },
 }
 
 impl AccMethod {
@@ -148,10 +153,90 @@ impl AccMethod {
                         let vq = gear_compress(v, *bits, 32, n_b, *rank);
                         attention_exact(q, &kq, &vq, true)
                     }
+                    AccMethod::SparseTopK { topk, bc } => {
+                        sparse_decode_attention(q, k, v, *bc, *topk)
+                    }
                 }
             })
             .collect()
     }
+}
+
+/// Causal attention where every query row runs one *decode* step of the
+/// sparse serving path over a q1 cache of the keys it can see: blocks of
+/// `bc` tokens quantized INT8 with per-block scales (full blocks =
+/// pages, summarized by key envelope + V column mean), then
+/// [`turbo_decode_into_sparse`] with the given `topk`.
+///
+/// [`turbo_decode_into_sparse`]: crate::attention::turbo_decode_into_sparse
+fn sparse_decode_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    bc: usize,
+    topk: usize,
+) -> Mat {
+    use crate::attention::{turbo_decode_into_sparse, DecodeScratch};
+    use crate::quant::quant_sym_int8;
+    let (n, d) = (k.rows, k.cols);
+    let nb = n.div_ceil(bc);
+    let mut k8 = vec![0i8; n * d];
+    let mut v8 = vec![0i8; n * d];
+    let mut sk = vec![0.0f32; nb];
+    let mut sv = vec![0.0f32; nb];
+    for b in 0..nb {
+        let lo = b * bc;
+        let hi = ((b + 1) * bc).min(n);
+        let qk = quant_sym_int8(&k.data[lo * d..hi * d]);
+        k8[lo * d..hi * d].copy_from_slice(&qk.codes);
+        sk[b] = qk.scale;
+        let qv = quant_sym_int8(&v.data[lo * d..hi * d]);
+        v8[lo * d..hi * d].copy_from_slice(&qv.codes);
+        sv[b] = qv.scale;
+    }
+    // Per-page summaries over the full pages (the pool's memo content).
+    let n_pages = n / bc;
+    let mut kmin = vec![i8::MAX; n_pages * d];
+    let mut kmax = vec![i8::MIN; n_pages * d];
+    let mut vmean = vec![0.0f32; n_pages * d];
+    for b in 0..n_pages {
+        for t in 0..bc {
+            for j in 0..d {
+                let kc = k8[(b * bc + t) * d + j];
+                kmin[b * d + j] = kmin[b * d + j].min(kc);
+                kmax[b * d + j] = kmax[b * d + j].max(kc);
+                vmean[b * d + j] += v8[(b * bc + t) * d + j] as f32;
+            }
+        }
+        for j in 0..d {
+            vmean[b * d + j] /= bc as f32;
+        }
+    }
+    let mut scratch = DecodeScratch::new();
+    let mut out = Mat::zeros(q.rows, d);
+    for r in 0..q.rows {
+        // Causal visibility with tail-query semantics (nq <= nk).
+        let nk = r + 1 + n - q.rows;
+        let mut row = vec![0.0f32; d];
+        turbo_decode_into_sparse(
+            q.row(r),
+            &k8,
+            &v8,
+            &sk,
+            &sv,
+            &kmin,
+            &kmax,
+            &vmean,
+            nk,
+            bc,
+            -6.0,
+            topk,
+            &mut scratch,
+            &mut row,
+        );
+        out.row_mut(r).copy_from_slice(&row);
+    }
+    out
 }
 
 fn sas_only_attention(q: &Mat, k: &Mat, v: &Mat) -> Mat {
@@ -346,6 +431,61 @@ pub fn tab5_weight_quant(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Sparse-decode ablation: next-token agreement vs `sparse_topk_pages`.
+///
+/// Sweeps the per-request top-k knob over the accuracy suites, with the
+/// dense decode path (`topk = 0`) as the 100%-traffic reference — the
+/// SparQ-style trade: how much agreement survives as decode reads fewer
+/// KV pages. Also reports the fraction of full pages actually attended
+/// at the longest context in the suite.
+pub fn sparse_topk_agreement(args: &Args) -> anyhow::Result<()> {
+    let suites = default_suites(args);
+    let bc = args.opt_parse("sparse-bc", 32usize);
+    println!(
+        "Sparse top-k decode — next-token agreement vs dense decode (%), \
+         by sparse_topk_pages\n(pages of {bc} tokens; k = 0 is the dense \
+         reference; the buffer tail is always attended)\n"
+    );
+    let mut table = Table::new(&[
+        "topk", &suites[0].name, &suites[1].name, &suites[2].name, "Ave.",
+        "pages kept",
+    ]);
+    // Agreement is measured against the *dense decode* outputs, so the
+    // sweep isolates the sparsity error from quantization error.
+    let dense: Vec<Vec<Mat>> = suites
+        .iter()
+        .map(|s| AccMethod::SparseTopK { topk: 0, bc }.run(s))
+        .collect();
+    let max_pages = suites
+        .iter()
+        .map(|s| s.k[0].rows / bc)
+        .max()
+        .unwrap_or(0)
+        .max(1);
+    for topk in [1usize, 2, 4, 8, 16] {
+        let mut cells = vec![format!("{topk}")];
+        let mut sum = 0.0;
+        for (s, e) in suites.iter().zip(&dense) {
+            let m = AccMethod::SparseTopK { topk, bc };
+            let acc = s.agreement(e, &m.run(s));
+            sum += acc;
+            cells.push(format!("{acc:.2}"));
+        }
+        cells.push(format!("{:.2}", sum / suites.len() as f64));
+        cells.push(format!("{}/{}", topk.min(max_pages), max_pages));
+        table.row(&cells);
+        if topk >= max_pages {
+            break;
+        }
+    }
+    table.print();
+    println!(
+        "\n(expected: agreement -> 100 as k approaches the page count; \
+         k covering all pages is bit-identical to dense)"
+    );
+    Ok(())
+}
+
 /// Figure 7b: head-selection rule ablation across 2-bit head counts.
 ///
 /// Heads get *graded, structurally different* outlier patterns (one huge
@@ -440,5 +580,28 @@ mod tests {
         let e = s.exact_outputs();
         let acc = s.agreement(&e, &AccMethod::SasOnly.run(&s));
         assert!(acc > 95.0, "sas-only {acc}");
+    }
+
+    #[test]
+    fn sparse_covering_k_matches_dense_decode_exactly() {
+        // 96 positions, 16-token pages -> up to 6 full pages; a k that
+        // covers them all must reproduce the dense decode bit-for-bit,
+        // and agreement must not decrease as k grows.
+        let s = Suite::build("t", 96, 3);
+        let bc = 16;
+        let dense = AccMethod::SparseTopK { topk: 0, bc }.run(&s);
+        let covering = AccMethod::SparseTopK { topk: 6, bc }.run(&s);
+        for (a, b) in dense.iter().zip(&covering) {
+            let ab: Vec<u32> = a.data.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "covering k must be the dense path");
+        }
+        let a1 = s.agreement(&dense, &AccMethod::SparseTopK { topk: 1, bc }.run(&s));
+        let a4 = s.agreement(&dense, &AccMethod::SparseTopK { topk: 4, bc }.run(&s));
+        assert!(
+            a4 + 5.0 >= a1,
+            "agreement should not degrade with k: {a1} vs {a4}"
+        );
+        assert!(a1 > 30.0, "even k=1 keeps the tail + top page: {a1}");
     }
 }

@@ -23,10 +23,11 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
         "tab3" => accuracy::tab3_block_size(args),
         "tab4" => accuracy::tab4_flashq_sas(args),
         "tab5" => accuracy::tab5_weight_quant(args),
+        "sparse" => accuracy::sparse_topk_agreement(args),
         "all" => {
             for id in [
                 "fig1", "fig4", "fig5", "fig6", "fig7a", "fig7b", "fig10",
-                "tab2", "tab3", "tab4", "tab5",
+                "tab2", "tab3", "tab4", "tab5", "sparse",
             ] {
                 println!("\n================ {id} ================");
                 run(id, args)?;
@@ -35,7 +36,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other}; ids: fig1 fig4 fig5 fig6 fig7a \
-             fig7b fig10 tab2 tab3 tab4 tab5 all"
+             fig7b fig10 tab2 tab3 tab4 tab5 sparse all"
         ),
     }
 }

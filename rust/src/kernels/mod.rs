@@ -2,8 +2,8 @@
 //! paper's INT8 tensor-core tiles, now with explicit SIMD arms behind a
 //! runtime dispatch layer.
 //!
-//! Three kernels cover both Turbo block loops (Algorithm 1 prefill
-//! tiles and Algorithm 2 decode blocks):
+//! Four kernels cover the Turbo block loops (Algorithm 1 prefill
+//! tiles and Algorithm 2 decode blocks) plus the sparse page selector:
 //!
 //! * [`idot_mr`] / [`qk_dot_block`] — multi-row QK^T: [`MR`] key rows
 //!   per pass against one quantized query, one independent `i32`
@@ -11,6 +11,9 @@
 //! * [`ipv_acc`] — P·V accumulation kept **entirely in `i32`**; the
 //!   caller applies the fused `p_scale * v_scale` once per block per
 //!   output element (§3's "one dequantization per tile").
+//! * [`page_score`] — envelope upper-bound dot for the SparQ-style
+//!   sparse decode path: one pass over the per-channel key min/max
+//!   bounds of a page yields an upper bound on every key row's score.
 //! * [`sas_exp_block`] — the batched SAS shift-exp-and-sum
 //!   ([`crate::sas::Sas::exp_block`] is the caller-facing wrapper that
 //!   owns the LUT).
@@ -141,6 +144,30 @@ pub fn ipv_acc(p8: &[i8], v8: &[i8], d: usize, acc: &mut [i32]) {
         KernelBackend::Neon => unsafe { neon::ipv_acc(p8, v8, d, acc) },
         #[allow(unreachable_patterns)]
         _ => scalar::ipv_acc(p8, v8, d, acc),
+    }
+}
+
+/// Envelope upper-bound page score for the sparse decode path: each
+/// channel pairs the query code with whichever key-envelope end
+/// maximizes the product (`q >= 0` with `kmax`, `q < 0` with `kmin`)
+/// and the products sum in exact `i32`. For a page whose per-channel q1
+/// key codes all lie inside `[kmin, kmax]`, the result is an upper
+/// bound on `q · k_row` for every row of the page — the selection
+/// signal `topk_pages` ranks by. Dispatches to the selected backend
+/// arm; as with the dot kernels, exact integer accumulation makes every
+/// arm bit-identical.
+#[inline]
+pub fn page_score(q: &[i8], kmin: &[i8], kmax: &[i8]) -> i32 {
+    assert_eq!(q.len(), kmin.len(), "kmin must hold one bound per channel");
+    assert_eq!(q.len(), kmax.len(), "kmax must hold one bound per channel");
+    debug_assert!(q.len() <= ACC_MAX_ROWS);
+    match kernel_backend() {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe { x86::page_score(q, kmin, kmax) },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe { neon::page_score(q, kmin, kmax) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::page_score(q, kmin, kmax),
     }
 }
 
@@ -308,6 +335,33 @@ mod tests {
             ipv_acc(&p8, &v8, d, &mut aa);
             scalar::ipv_acc(&p8, &v8, d, &mut bb);
             assert_eq!(aa, bb, "ipv d={d} rows={rows}");
+        });
+    }
+
+    #[test]
+    fn page_score_dispatch_matches_scalar_and_bounds_rows() {
+        prop::run("page_score == scalar arm, >= idot rows", 60, |g| {
+            let d = g.usize_in(1, 67);
+            let rows = g.usize_in(1, 8);
+            let q = gen_codes(g, d);
+            // Build an envelope as the per-channel min/max over a few
+            // random key rows; every row then lies inside it.
+            let k = gen_codes(g, rows * d);
+            let mut kmin = vec![i8::MAX; d];
+            let mut kmax = vec![i8::MIN; d];
+            for r in 0..rows {
+                for j in 0..d {
+                    let v = k[r * d + j];
+                    kmin[j] = kmin[j].min(v);
+                    kmax[j] = kmax[j].max(v);
+                }
+            }
+            let got = page_score(&q, &kmin, &kmax);
+            assert_eq!(got, scalar::page_score(&q, &kmin, &kmax), "d={d}");
+            for r in 0..rows {
+                let row = idot(&q, &k[r * d..(r + 1) * d]);
+                assert!(got >= row, "score {got} < row {r} dot {row} (d={d})");
+            }
         });
     }
 

@@ -122,6 +122,50 @@ pub unsafe fn qk_dot_block(q: &[i8], k: &[i8], d: usize, out: &mut [i32]) {
     }
 }
 
+/// Envelope upper-bound page score, NEON arm: a byte-sign mask on the
+/// query codes (`vcltq_s8` against zero) selects the matching envelope
+/// end per channel (`vbslq_s8`: `q < 0` takes `kmin`, else `kmax`),
+/// then the selected bytes run the exact `smull`/`sadalp` dot chain —
+/// the scalar arm's product set regrouped into lanes, bit-identical in
+/// i32.
+///
+/// # Safety
+/// `q.len() == kmin.len() == kmax.len()` (validated by the public
+/// wrapper).
+#[target_feature(enable = "neon")]
+pub unsafe fn page_score(q: &[i8], kmin: &[i8], kmax: &[i8]) -> i32 {
+    debug_assert_eq!(q.len(), kmin.len());
+    debug_assert_eq!(q.len(), kmax.len());
+    let d = q.len();
+    let zero = vdupq_n_s8(0);
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i + 16 <= d {
+        let qv = vld1q_s8(q.as_ptr().add(i));
+        let lo = vld1q_s8(kmin.as_ptr().add(i));
+        let hi = vld1q_s8(kmax.as_ptr().add(i));
+        // All-ones where q < 0: those channels take the kmin end.
+        let neg = vcltq_s8(qv, zero);
+        let sel = vbslq_s8(neg, lo, hi);
+        let plo = vmull_s8(vget_low_s8(qv), vget_low_s8(sel));
+        let phi = vmull_s8(vget_high_s8(qv), vget_high_s8(sel));
+        acc = vpadalq_s16(vpadalq_s16(acc, plo), phi);
+        i += 16;
+    }
+    let mut s = vaddvq_s32(acc);
+    while i < d {
+        let qc = *q.get_unchecked(i) as i32;
+        let k = if qc >= 0 {
+            *kmax.get_unchecked(i)
+        } else {
+            *kmin.get_unchecked(i)
+        };
+        s += qc * k as i32;
+        i += 1;
+    }
+    s
+}
+
 /// P·V accumulation, NEON arm: broadcast the probability code, `smull`
 /// eight value lanes to exact i16 products, widen to i32 and add into
 /// the accumulator. Keeps the `pc == 0` row skip (SAS sparsity).
@@ -315,6 +359,22 @@ mod tests {
             unsafe { ipv_acc(&p8, &v8, d, &mut a) };
             scalar::ipv_acc(&p8, &v8, d, &mut b);
             assert_eq!(a, b, "d={d} rows={rows}");
+        });
+    }
+
+    #[test]
+    fn page_score_bit_identical_to_scalar() {
+        prop::run("neon page_score == scalar", 80, |g| {
+            let d = g.usize_in(1, 67);
+            let q = gen_codes(g, d);
+            let a = gen_codes(g, d);
+            let b = gen_codes(g, d);
+            let kmin: Vec<i8> =
+                a.iter().zip(&b).map(|(&x, &y)| x.min(y)).collect();
+            let kmax: Vec<i8> =
+                a.iter().zip(&b).map(|(&x, &y)| x.max(y)).collect();
+            let got = unsafe { page_score(&q, &kmin, &kmax) };
+            assert_eq!(got, scalar::page_score(&q, &kmin, &kmax), "d={d}");
         });
     }
 

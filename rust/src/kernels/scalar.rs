@@ -129,6 +129,25 @@ pub fn qk_dot_block(q: &[i8], k: &[i8], d: usize, out: &mut [i32]) {
     }
 }
 
+/// Envelope upper-bound page score, scalar arm (the oracle): each
+/// channel contributes the larger of `q * kmax` and `q * kmin`, picked
+/// by the sign of the query code (`q >= 0` pairs with the max end,
+/// `q < 0` with the min end), summed in exact `i32`. Over a page whose
+/// per-channel key codes all lie in `[kmin, kmax]`, the result bounds
+/// every key row's dot product from above — the top-k selection signal
+/// of the sparse decode path.
+#[inline]
+pub fn page_score(q: &[i8], kmin: &[i8], kmax: &[i8]) -> i32 {
+    debug_assert_eq!(q.len(), kmin.len());
+    debug_assert_eq!(q.len(), kmax.len());
+    let mut acc = 0i32;
+    for ((&qc, &lo), &hi) in q.iter().zip(kmin).zip(kmax) {
+        let k = if qc >= 0 { hi } else { lo };
+        acc += qc as i32 * k as i32;
+    }
+    acc
+}
+
 /// P·V accumulation for one block, scalar arm, exact in `i32`:
 /// `acc[j] = Σ_c p8[c] * v8[c * d + j]`. `acc[..d]` is overwritten.
 /// Zero probability codes skip their row — SAS sparsity makes whole

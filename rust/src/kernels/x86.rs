@@ -136,6 +136,50 @@ pub unsafe fn qk_dot_block(q: &[i8], k: &[i8], d: usize, out: &mut [i32]) {
     }
 }
 
+/// Envelope upper-bound page score, AVX2 arm: a byte-sign mask on the
+/// query codes (`pcmpgtb` against zero) blends the matching envelope
+/// end per channel (`pblendvb`: `q < 0` takes `kmin`, else `kmax`),
+/// then the selected bytes run the exact widen-and-`vpmaddwd` dot chain
+/// — the arithmetic is the scalar arm's product set regrouped into
+/// lanes, so the i32 result is bit-identical.
+///
+/// # Safety
+/// Requires AVX2; `q.len() == kmin.len() == kmax.len()` (validated by
+/// the public wrapper).
+#[target_feature(enable = "avx2")]
+pub unsafe fn page_score(q: &[i8], kmin: &[i8], kmax: &[i8]) -> i32 {
+    debug_assert_eq!(q.len(), kmin.len());
+    debug_assert_eq!(q.len(), kmax.len());
+    let d = q.len();
+    let mut acc = _mm256_setzero_si256();
+    let zero = _mm_setzero_si128();
+    let mut i = 0usize;
+    while i + 16 <= d {
+        let qv = _mm_loadu_si128(q.as_ptr().add(i) as *const __m128i);
+        let lo = _mm_loadu_si128(kmin.as_ptr().add(i) as *const __m128i);
+        let hi = _mm_loadu_si128(kmax.as_ptr().add(i) as *const __m128i);
+        // 0xFF where q < 0: those channels take the kmin end.
+        let neg = _mm_cmpgt_epi8(zero, qv);
+        let sel = _mm_blendv_epi8(hi, lo, neg);
+        let wq = _mm256_cvtepi8_epi16(qv);
+        let wk = _mm256_cvtepi8_epi16(sel);
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wq, wk));
+        i += 16;
+    }
+    let mut s = hsum_epi32(acc);
+    while i < d {
+        let qc = *q.get_unchecked(i) as i32;
+        let k = if qc >= 0 {
+            *kmax.get_unchecked(i)
+        } else {
+            *kmin.get_unchecked(i)
+        };
+        s += qc * k as i32;
+        i += 1;
+    }
+    s
+}
+
 /// P·V accumulation, AVX2 arm: broadcast the probability code, multiply
 /// 16 value lanes in i16 (exact — |p·v| ≤ 16384 fits i16), widen to i32
 /// and add into the accumulator. Keeps the scalar arm's `pc == 0` row
@@ -347,6 +391,27 @@ mod tests {
             unsafe { ipv_acc(&p8, &v8, d, &mut a) };
             scalar::ipv_acc(&p8, &v8, d, &mut b);
             assert_eq!(a, b, "d={d} rows={rows}");
+        });
+    }
+
+    #[test]
+    fn page_score_bit_identical_to_scalar() {
+        if !avx2() {
+            return;
+        }
+        prop::run("avx2 page_score == scalar", 80, |g| {
+            // Ragged widths around the 16-lane step, incl. d < 16.
+            let d = g.usize_in(1, 67);
+            let q = gen_codes(g, d);
+            let a = gen_codes(g, d);
+            let b = gen_codes(g, d);
+            // Envelope ends: per-channel (min, max) of two random rows.
+            let kmin: Vec<i8> =
+                a.iter().zip(&b).map(|(&x, &y)| x.min(y)).collect();
+            let kmax: Vec<i8> =
+                a.iter().zip(&b).map(|(&x, &y)| x.max(y)).collect();
+            let got = unsafe { page_score(&q, &kmin, &kmax) };
+            assert_eq!(got, scalar::page_score(&q, &kmin, &kmax), "d={d}");
         });
     }
 

@@ -31,6 +31,15 @@
 //!   demand — it is derivable state), and exact shared/private byte
 //!   accounting ([`pagepool::PoolStats`]) feeds the engine's dedup and
 //!   memory-pressure metrics.
+//! * Each page also carries a lazy [`page::PageSummary`] memo (per-channel
+//!   key min/max envelope + per-channel V column mean) feeding the
+//!   SparQ-style top-k page-sparse decode path. Summaries obey the same
+//!   contract as q1 memos: **derivable state**, evictable under the pool
+//!   byte cap *without* an epoch bump, recomputed from the immutable page
+//!   on the next read. The sparse path's own invariants: top-k selection
+//!   is deterministic (stable ties broken toward the lower page index, so
+//!   thread-count invariance holds), and `k = 0` / `k >= pages` delegate
+//!   to the dense block loop and are bit-identical to it.
 
 pub mod buffer;
 pub mod page;
@@ -39,7 +48,7 @@ pub mod precision;
 pub mod store;
 
 pub use buffer::DecodeBuffer;
-pub use page::QuantPage;
+pub use page::{PageSummary, QuantPage};
 pub use pagepool::{
     PageHandle, PagePool, PoolEpoch, PoolStats, SharedPagePool,
 };

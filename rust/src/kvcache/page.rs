@@ -123,6 +123,9 @@ impl QuantPage {
     }
 
     /// Convenience allocating variant (tests / cold paths).
+    #[deprecated(
+        note = "allocates per call; use dequant_q1_into with a reused buffer"
+    )]
     pub fn dequant_q1(&self) -> Vec<i8> {
         let mut out = vec![0i8; self.tokens * self.channels];
         let mut scratch = Vec::new();
@@ -139,6 +142,57 @@ impl QuantPage {
     }
 }
 
+/// Cheap per-page statistics for the SparQ-style sparse decode path:
+/// a per-channel min/max envelope over the page's q1 key codes (the
+/// input to [`crate::kernels::page_score`]) and the per-channel column
+/// mean of the q1 codes as f32 (the mean-value correction folded in for
+/// skipped pages; for K pages the mean is computed but unused).
+///
+/// Summaries are **derivable state**, exactly like the pool's q1 memos:
+/// recomputable from the page at any time, so evicting one never bumps
+/// a cache epoch, and their bytes count against `pool_byte_cap` like
+/// any other memo.
+#[derive(Debug, Clone)]
+pub struct PageSummary {
+    /// Per-channel minimum q1 code (`channels` entries).
+    pub min: Vec<i8>,
+    /// Per-channel maximum q1 code (`channels` entries).
+    pub max: Vec<i8>,
+    /// Per-channel mean q1 code (`channels` f32 entries).
+    pub mean: Vec<f32>,
+}
+
+impl PageSummary {
+    /// Build a summary from q1 codes laid out `tokens x channels`
+    /// row-major. `tokens` must be positive — empty pages never exist
+    /// in the pool.
+    pub fn from_q1(codes: &[i8], tokens: usize, channels: usize) -> PageSummary {
+        assert!(tokens > 0, "a page holds at least one token");
+        assert_eq!(codes.len(), tokens * channels);
+        let mut min = vec![i8::MAX; channels];
+        let mut max = vec![i8::MIN; channels];
+        let mut sum = vec![0i64; channels];
+        for t in 0..tokens {
+            let row = &codes[t * channels..(t + 1) * channels];
+            for c in 0..channels {
+                let v = row[c];
+                min[c] = min[c].min(v);
+                max[c] = max[c].max(v);
+                sum[c] += v as i64;
+            }
+        }
+        let inv = 1.0 / tokens as f32;
+        let mean = sum.iter().map(|&s| s as f32 * inv).collect();
+        PageSummary { min, max, mean }
+    }
+
+    /// Bytes of memo storage this summary occupies (counted against the
+    /// pool byte cap alongside the q1 memos).
+    pub fn bytes(&self) -> usize {
+        self.min.len() + self.max.len() + 4 * self.mean.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +200,7 @@ mod tests {
     use crate::testutil::prop;
 
     #[test]
+    #[allow(deprecated)]
     fn page_roundtrip_matches_unpacked_pipeline() {
         prop::run("page == asym pipeline", 50, |g| {
             let tokens = g.usize_in(1, 64);
@@ -171,6 +226,28 @@ mod tests {
         let fp16_bytes = 64 * 32 * 2;
         assert!(p4.bytes() * 3 < fp16_bytes, "int4 page {}B", p4.bytes());
         assert!(p2.bytes() < p4.bytes());
+    }
+
+    #[test]
+    fn page_summary_envelopes_every_row_and_averages_columns() {
+        prop::run("summary bounds q1 codes", 50, |g| {
+            let tokens = g.usize_in(1, 48);
+            let channels = g.usize_in(1, 24);
+            let x = g.normal_vec(tokens * channels, 2.0);
+            let q1 = quant_sym_int8(&x);
+            let s = PageSummary::from_q1(&q1.codes, tokens, channels);
+            for c in 0..channels {
+                let col: Vec<i8> =
+                    (0..tokens).map(|t| q1.codes[t * channels + c]).collect();
+                assert_eq!(s.min[c], *col.iter().min().unwrap());
+                assert_eq!(s.max[c], *col.iter().max().unwrap());
+                let want: f32 = col.iter().map(|&v| v as i64).sum::<i64>()
+                    as f32
+                    / tokens as f32;
+                assert_eq!(s.mean[c].to_bits(), want.to_bits(), "col {c}");
+            }
+            assert_eq!(s.bytes(), 6 * channels);
+        });
     }
 
     #[test]

@@ -55,7 +55,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
 
-use super::QuantPage;
+use super::{PageSummary, QuantPage};
 
 /// Shared handle onto one [`PagePool`] — cloned into every
 /// [`StreamCache`](super::store::StreamCache) built over the pool.
@@ -99,6 +99,14 @@ struct Slot {
     /// Set when the memo was evicted, so the next fill counts as a
     /// recompute rather than a first compute.
     q1_dropped: AtomicBool,
+    /// Memoized [`PageSummary`] (min/max envelope + column mean) for the
+    /// sparse decode path. Same lifecycle as the q1 memo: filled lazily
+    /// on the first [`PagePool::summary`] read, evicted under the byte
+    /// cap, recomputed from the immutable page — derivable state, so
+    /// dropping it never bumps the epoch.
+    summary: OnceLock<PageSummary>,
+    /// Set when the summary memo was evicted (recompute accounting).
+    summary_dropped: AtomicBool,
     refs: u32,
     gen: u32,
 }
@@ -124,6 +132,9 @@ pub struct PoolStats {
     /// not storage — the pooled analogue of `CacheStats::view_bytes`).
     /// Zero for pages nobody has read and for evicted memos.
     pub q1_memo_bytes: usize,
+    /// Bytes of currently materialized page summaries (the sparse decode
+    /// path's min/max/mean memos — same evictable tier as q1 memos).
+    pub summary_memo_bytes: usize,
     /// Configured byte cap over `physical_bytes + q1_memo_bytes`
     /// (`None` = unbounded).
     pub byte_cap: Option<usize>,
@@ -203,6 +214,8 @@ impl PagePool {
         slot.q1 = OnceLock::new();
         slot.last_used = AtomicU64::new(0);
         slot.q1_dropped = AtomicBool::new(false);
+        slot.summary = OnceLock::new();
+        slot.summary_dropped = AtomicBool::new(false);
         slot.refs = 1;
         let h = PageHandle { index, gen: slot.gen };
         self.enforce_cap();
@@ -236,7 +249,39 @@ impl PagePool {
             if slot.q1_dropped.swap(false, Ordering::Relaxed) {
                 self.memo_recomputes.fetch_add(1, Ordering::Relaxed);
             }
-            slot.page.as_ref().expect("checked live").dequant_q1()
+            let page = slot.page.as_ref().expect("checked live");
+            let mut out = vec![0i8; page.tokens * page.channels];
+            let mut scratch = Vec::new();
+            page.dequant_q1_into(&mut scratch, &mut out);
+            out
+        })
+    }
+
+    /// The page's memoized [`PageSummary`], computed on first read (or
+    /// after a cap eviction). Same concurrency contract as [`Self::q1`]:
+    /// `&self` under the pool's read lock, per-slot `OnceLock`. Reuses
+    /// the q1 memo when it happens to be materialized; otherwise
+    /// dequantizes into a local buffer without pinning a q1 memo.
+    pub fn summary(&self, h: PageHandle) -> &PageSummary {
+        let slot = self.slot(h);
+        let now = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        slot.last_used.store(now, Ordering::Relaxed);
+        slot.summary.get_or_init(|| {
+            if slot.summary_dropped.swap(false, Ordering::Relaxed) {
+                self.memo_recomputes.fetch_add(1, Ordering::Relaxed);
+            }
+            let page = slot.page.as_ref().expect("checked live");
+            match slot.q1.get() {
+                Some(codes) => {
+                    PageSummary::from_q1(codes, page.tokens, page.channels)
+                }
+                None => {
+                    let mut out = vec![0i8; page.tokens * page.channels];
+                    let mut scratch = Vec::new();
+                    page.dequant_q1_into(&mut scratch, &mut out);
+                    PageSummary::from_q1(&out, page.tokens, page.channels)
+                }
+            }
         })
     }
 
@@ -278,6 +323,8 @@ impl PagePool {
             slot.q1 = OnceLock::new();
             slot.last_used = AtomicU64::new(0);
             slot.q1_dropped = AtomicBool::new(false);
+            slot.summary = OnceLock::new();
+            slot.summary_dropped = AtomicBool::new(false);
             slot.gen = slot.gen.wrapping_add(1);
             self.free.push(h.index);
             self.epoch.fetch_add(1, Ordering::Relaxed);
@@ -321,34 +368,47 @@ impl PagePool {
             .sum()
     }
 
-    /// Bytes of currently materialized q1 memos (the evictable tier).
+    /// Bytes of currently materialized memos — q1 dequantizations plus
+    /// page summaries, the whole evictable tier.
     pub fn memo_bytes(&self) -> usize {
         self.slots
             .iter()
-            .map(|s| s.q1.get().map_or(0, |v| v.len()))
+            .map(|s| {
+                s.q1.get().map_or(0, |v| v.len())
+                    + s.summary.get().map_or(0, |sm| sm.bytes())
+            })
             .sum()
     }
 
     /// Tier-1 pressure relief: while `physical + memo` exceeds the cap,
-    /// drop the least-recently-used materialized memo. Returns the
-    /// number of memos evicted. Never frees pages (that is the owners'
-    /// job, via `release`) and never bumps the epoch — views copy memo
-    /// contents, so an eviction cannot invalidate anything; the memo is
-    /// transparently recomputed on the next [`Self::q1`] read.
+    /// drop the least-recently-used slot's materialized memos (its q1
+    /// dequantization and page summary go together — they share the
+    /// LRU stamp). Returns the number of victim slots evicted. Never
+    /// frees pages (that is the owners' job, via `release`) and never
+    /// bumps the epoch — views copy memo contents, so an eviction
+    /// cannot invalidate anything; each memo is transparently
+    /// recomputed on the next [`Self::q1`] / [`Self::summary`] read.
     pub fn enforce_cap(&mut self) -> usize {
         let Some(cap) = self.byte_cap else { return 0 };
         let physical = self.physical_bytes();
         let mut memo = self.memo_bytes();
         let mut evicted = 0usize;
         while physical + memo > cap {
-            let victim = self
-                .slots
-                .iter_mut()
-                .filter(|s| s.page.is_some() && s.q1.get().is_some())
-                .min_by_key(|s| s.last_used.load(Ordering::Relaxed));
+            let victim = self.slots.iter_mut().filter(|s| {
+                s.page.is_some()
+                    && (s.q1.get().is_some() || s.summary.get().is_some())
+            });
+            let victim =
+                victim.min_by_key(|s| s.last_used.load(Ordering::Relaxed));
             let Some(slot) = victim else { break };
-            memo -= slot.q1.take().map_or(0, |v| v.len());
-            slot.q1_dropped.store(true, Ordering::Relaxed);
+            if let Some(v) = slot.q1.take() {
+                memo -= v.len();
+                slot.q1_dropped.store(true, Ordering::Relaxed);
+            }
+            if let Some(sm) = slot.summary.take() {
+                memo -= sm.bytes();
+                slot.summary_dropped.store(true, Ordering::Relaxed);
+            }
             evicted += 1;
         }
         self.memo_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
@@ -370,6 +430,8 @@ impl PagePool {
             st.physical_bytes += bytes;
             st.logical_bytes += bytes * slot.refs as usize;
             st.q1_memo_bytes += slot.q1.get().map_or(0, |v| v.len());
+            st.summary_memo_bytes +=
+                slot.summary.get().map_or(0, |sm| sm.bytes());
             if slot.refs > 1 {
                 st.shared_pages += 1;
                 st.shared_bytes += bytes;
@@ -394,6 +456,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn insert_get_roundtrip_and_lazy_q1_memo() {
         let mut rng = Rng::new(1);
         let mut pool = PagePool::new();
@@ -493,6 +556,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn memo_eviction_recomputes_identically_without_epoch_bump() {
         let mut rng = Rng::new(7);
         let mut pool = PagePool::new();
@@ -514,6 +578,50 @@ mod tests {
         assert_eq!(pool.q1(h), &want[..], "recompute == original");
         assert_eq!(pool.stats().memo_recomputes, 1);
         assert_eq!(pool.enforce_cap(), 1, "and it is evictable again");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn summary_memo_is_lazy_evictable_and_recomputes_identically() {
+        let mut rng = Rng::new(17);
+        let mut pool = PagePool::new();
+        let p = page(&mut rng, 4, 8);
+        let want = PageSummary::from_q1(&p.dequant_q1(), 4, 8);
+        let h = pool.insert(p);
+        assert_eq!(pool.stats().summary_memo_bytes, 0, "summary is lazy");
+        let got = pool.summary(h).clone();
+        assert_eq!(got.min, want.min);
+        assert_eq!(got.max, want.max);
+        assert_eq!(got.mean, want.mean);
+        assert_eq!(pool.stats().summary_memo_bytes, want.bytes());
+        let e0 = pool.epoch();
+        // Cap at bare page bytes: the summary memo must go, no epoch
+        // bump (derivable state, same contract as q1 memos).
+        pool.set_byte_cap(Some(pool.physical_bytes()));
+        assert_eq!(pool.enforce_cap(), 1);
+        assert_eq!(pool.stats().summary_memo_bytes, 0, "summary evicted");
+        assert_eq!(pool.epoch(), e0, "summary eviction never bumps epoch");
+        assert!(pool.is_live(h));
+        // Recompute on next read returns identical values and counts.
+        let again = pool.summary(h);
+        assert_eq!(again.min, want.min);
+        assert_eq!(again.max, want.max);
+        assert_eq!(again.mean, want.mean);
+        assert_eq!(pool.stats().memo_recomputes, 1);
+    }
+
+    #[test]
+    fn cap_evicts_q1_and_summary_memos_together() {
+        let mut rng = Rng::new(18);
+        let mut pool = PagePool::new();
+        let h = pool.insert(page(&mut rng, 4, 8));
+        let _ = pool.q1(h);
+        let _ = pool.summary(h);
+        let both = pool.memo_bytes();
+        assert!(both > 4 * 8, "both memo kinds materialized");
+        pool.set_byte_cap(Some(pool.physical_bytes()));
+        assert_eq!(pool.enforce_cap(), 1, "one victim slot covers both");
+        assert_eq!(pool.memo_bytes(), 0);
     }
 
     #[test]
@@ -616,6 +724,7 @@ mod tests {
     /// and every q1 read returns the page's exact dequantization no
     /// matter how often its memo was dropped in between.
     #[test]
+    #[allow(deprecated)]
     fn cap_eviction_safety_property() {
         prop::run("pool cap eviction safety", 30, |g| {
             let mut rng = Rng::new(g.seed());

@@ -770,6 +770,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn q1_view_rewrites_buffer_region_on_flush() {
         // Mirror the buffer tail, then flush it into a page: the view must
         // pick up the page's (lossier) q2->q1 codes, not the raw tail.

@@ -63,6 +63,16 @@
 //! for processes without this flag). Every backend is bit-identical —
 //! this selects speed, never results — and the arm actually dispatched
 //! is reported in `gen` output and the server's `STATS` line.
+//!
+//! `--sparse-topk-pages K` (default 0 = dense) turns on SparQ-style
+//! top-k page-sparse decode: each attention stream scores its full KV
+//! pages against a per-page key envelope, attends only the K
+//! best-scoring pages exactly, and folds every skipped page as a single
+//! mean-value softmax term. Selection is deterministic (ties go to the
+//! lower page index), so outputs stay reproducible at any thread count;
+//! `K` large enough to cover the context is bit-identical to dense.
+//! Page traffic saved is reported on the `sparse :` line of `gen`
+//! output and in `STATS`.
 
 use std::net::TcpListener;
 use std::sync::mpsc::channel;
@@ -215,13 +225,19 @@ fn gen(args: &Args) -> Result<()> {
     // requests 2..N fork from the first request's pages.
     let batch = args.opt_parse("batch", 1usize).max(1);
     let seed_per_request = args.flag("seed-per-request");
+    // Top-k page-sparse decode (0 = dense). Per-request in the engine;
+    // the CLI applies one value to the whole batch.
+    let sparse_topk = args.opt_parse("sparse-topk-pages", 0usize);
     let tok = ByteTokenizer;
     for i in 0..batch as u64 {
         let mut p = params;
         if seed_per_request {
             p.seed = params.seed.wrapping_add(i);
         }
-        engine.submit(GenRequest::with_params(i + 1, tok.encode(prompt), p));
+        engine.submit(
+            GenRequest::with_params(i + 1, tok.encode(prompt), p)
+                .with_sparse_topk(sparse_topk),
+        );
     }
     let mut completions = if args.flag("stream") {
         // Print tokens as the engine emits them; batch > 1 interleaves,
@@ -282,6 +298,16 @@ fn gen(args: &Args) -> Result<()> {
         engine.metrics.batcher_capacity_waits
     );
     println!("kernel : {}", engine.metrics.kernel_backend);
+    if sparse_topk > 0 {
+        println!(
+            "sparse : topk {} | sparse_pages_attended {} | \
+             sparse_pages_skipped {} | sparse_bytes_saved {}",
+            sparse_topk,
+            engine.metrics.sparse_pages_attended,
+            engine.metrics.sparse_pages_skipped,
+            engine.metrics.sparse_bytes_saved
+        );
+    }
     if engine.metrics.requests_cancelled > 0 {
         println!("cancelled: {}", engine.metrics.requests_cancelled);
     }

@@ -240,6 +240,18 @@ pub struct EngineMetrics {
     /// — this affects speed, never results. Empty on a default-built
     /// snapshot that never touched an engine.
     pub kernel_backend: &'static str,
+    /// Full KV pages attended exactly by top-k page-sparse decode
+    /// steps, summed over streams and layers (monotone). Dense steps
+    /// count their pages here too — the knob-off contract is "attend
+    /// everything" — so attended + skipped is total page traffic.
+    pub sparse_pages_attended: u64,
+    /// Full KV pages replaced by their mean-value summary term by
+    /// sparse decode steps (monotone). 0 whenever the per-request
+    /// `sparse_topk_pages` knob is off or covers the whole context.
+    pub sparse_pages_skipped: u64,
+    /// K+V slab bytes those skipped pages avoided reading
+    /// (`2 * block * d_head` INT8 codes per skip; monotone).
+    pub sparse_bytes_saved: u64,
 }
 
 impl EngineMetrics {

@@ -26,6 +26,14 @@ pub struct DecodeOut {
     /// New token's K and V, `[L*H*dh]`.
     pub k_new: Vec<f32>,
     pub v_new: Vec<f32>,
+    /// Sparse-path accounting for this step, summed over every (layer,
+    /// head) stream: full pages exactly attended / skipped via the
+    /// mean-value fold. Zero on the dense path (knob off, AOT paths).
+    pub sparse_pages_attended: u64,
+    pub sparse_pages_skipped: u64,
+    /// Cache-traffic bytes the skipped pages did not read
+    /// (`skipped * 2 * block * d_head` K+V codes).
+    pub sparse_bytes_saved: u64,
 }
 
 /// Persistent per-session q1 tensors in the decode executable's layout:
@@ -42,6 +50,15 @@ pub struct TurboSlabs {
     pub v8: Vec<i8>,
     pub sk: Vec<f32>,
     pub sv: Vec<f32>,
+    /// Sparse-path page summaries mirrored from the pool at sync time,
+    /// `[L, H, C/block, dh]` each: per-channel K min/max envelope
+    /// (inputs of `kernels::page_score`) and per-channel V column mean
+    /// (the mean-value fold for skipped pages). Zero-filled for blocks
+    /// that are not yet flushed pages — the dense path and the buffer
+    /// tail never read them.
+    pub kmin: Vec<i8>,
+    pub kmax: Vec<i8>,
+    pub vmean: Vec<f32>,
 }
 
 impl TurboSlabs {
@@ -66,19 +83,29 @@ impl TurboSlabs {
         );
         let elems = n_layers * n_heads * max_ctx * d_head;
         let scales = n_layers * n_heads * (max_ctx / block);
+        let sums = scales * d_head;
         TurboSlabs {
             k8: vec![0i8; elems],
             v8: vec![0i8; elems],
             sk: vec![1.0f32; scales],
             sv: vec![1.0f32; scales],
+            kmin: vec![0i8; sums],
+            kmax: vec![0i8; sums],
+            vmean: vec![0.0f32; sums],
         }
     }
 
-    /// Working-set bytes held by the slabs (codes + f32 scales) — the
-    /// decode working memory `CacheStats::slab_bytes` reports next to
-    /// the compressed-cache storage.
+    /// Working-set bytes held by the slabs (codes + f32 scales +
+    /// per-page summaries) — the decode working memory
+    /// `CacheStats::slab_bytes` reports next to the compressed-cache
+    /// storage.
     pub fn bytes(&self) -> usize {
-        self.k8.len() + self.v8.len() + 4 * (self.sk.len() + self.sv.len())
+        self.k8.len()
+            + self.v8.len()
+            + 4 * (self.sk.len() + self.sv.len())
+            + self.kmin.len()
+            + self.kmax.len()
+            + 4 * self.vmean.len()
     }
 
     /// Split into `n_streams` equal, **disjoint** mutable shards — one
@@ -118,6 +145,11 @@ impl TurboSlabs {
         } else {
             (self.sk.len() / n_streams).max(1)
         };
+        let sum_chunk = if n_streams == 0 {
+            1
+        } else {
+            (self.kmin.len() / n_streams).max(1)
+        };
         self.k8
             .chunks_mut(code_chunk)
             .zip(self.v8.chunks_mut(code_chunk))
@@ -126,7 +158,15 @@ impl TurboSlabs {
                     .chunks_mut(scale_chunk)
                     .zip(self.sv.chunks_mut(scale_chunk)),
             )
-            .map(|((k8, v8), (sk, sv))| SlabShardMut { k8, v8, sk, sv })
+            .zip(
+                self.kmin
+                    .chunks_mut(sum_chunk)
+                    .zip(self.kmax.chunks_mut(sum_chunk))
+                    .zip(self.vmean.chunks_mut(sum_chunk)),
+            )
+            .map(|(((k8, v8), (sk, sv)), ((kmin, kmax), vmean))| {
+                SlabShardMut { k8, v8, sk, sv, kmin, kmax, vmean }
+            })
     }
 }
 
@@ -141,6 +181,12 @@ pub struct SlabShardMut<'a> {
     pub sk: &'a mut [f32],
     /// V per-block scales `[C / block]`.
     pub sv: &'a mut [f32],
+    /// K page envelope minima `[(C / block) * d_head]`.
+    pub kmin: &'a mut [i8],
+    /// K page envelope maxima `[(C / block) * d_head]`.
+    pub kmax: &'a mut [i8],
+    /// V page column means `[(C / block) * d_head]`.
+    pub vmean: &'a mut [f32],
 }
 
 /// Persistent per-session float K/V slabs `[L, H, C, dh]` for the flash
@@ -362,6 +408,9 @@ impl ModelBundle {
             logits: logits.as_f32()?.to_vec(),
             k_new: k_new.as_f32()?.to_vec(),
             v_new: v_new.as_f32()?.to_vec(),
+            sparse_pages_attended: 0,
+            sparse_pages_skipped: 0,
+            sparse_bytes_saved: 0,
         })
     }
 
@@ -397,6 +446,9 @@ impl ModelBundle {
             logits: logits.as_f32()?.to_vec(),
             k_new: k_new.as_f32()?.to_vec(),
             v_new: v_new.as_f32()?.to_vec(),
+            sparse_pages_attended: 0,
+            sparse_pages_skipped: 0,
+            sparse_bytes_saved: 0,
         })
     }
 
@@ -447,12 +499,18 @@ mod tests {
             assert_eq!(shard.v8.len(), c * dh);
             assert_eq!(shard.sk.len(), c / block);
             assert_eq!(shard.sv.len(), c / block);
+            assert_eq!(shard.kmin.len(), (c / block) * dh);
+            assert_eq!(shard.kmax.len(), (c / block) * dh);
+            assert_eq!(shard.vmean.len(), (c / block) * dh);
             // Tag every element with its shard id (+1 so untouched
             // elements stay distinguishable at 0 / 1.0 defaults).
             shard.k8.fill(i as i8 + 1);
             shard.v8.fill(-(i as i8 + 1));
             shard.sk.fill(i as f32 + 2.0);
             shard.sv.fill(-(i as f32 + 2.0));
+            shard.kmin.fill(i as i8 + 3);
+            shard.kmax.fill(-(i as i8 + 3));
+            shard.vmean.fill(i as f32 + 4.0);
             count += 1;
         }
         assert_eq!(count, n_streams, "one shard per (layer, head)");
@@ -469,6 +527,16 @@ mod tests {
         }
         for (j, &v) in slabs.sv.iter().enumerate() {
             assert_eq!(v, -((j / (c / block)) as f32 + 2.0), "sv[{j}]");
+        }
+        let sums = (c / block) * dh;
+        for (j, &v) in slabs.kmin.iter().enumerate() {
+            assert_eq!(v, (j / sums) as i8 + 3, "kmin[{j}]");
+        }
+        for (j, &v) in slabs.kmax.iter().enumerate() {
+            assert_eq!(v, -((j / sums) as i8 + 3), "kmax[{j}]");
+        }
+        for (j, &v) in slabs.vmean.iter().enumerate() {
+            assert_eq!(v, (j / sums) as f32 + 4.0, "vmean[{j}]");
         }
     }
 

@@ -44,7 +44,8 @@ use anyhow::{bail, Result};
 
 use crate::attention::turbo::sas_merge_token_into;
 use crate::attention::{
-    turbo_attention, turbo_decode_streams, DecodeScratch, TurboConfig,
+    turbo_attention, turbo_decode_streams, turbo_decode_streams_sparse,
+    DecodeScratch, TurboConfig,
 };
 use crate::kvcache::KvCache;
 use crate::model::{DecodeOut, TurboSlabs};
@@ -444,6 +445,15 @@ impl CpuModel {
     /// axis), then the current token — not yet in the cache — merges in
     /// via the SAS online-softmax float merge, in place.
     ///
+    /// `sparse_topk_pages > 0` routes every stream through the
+    /// SparQ-style [`turbo_decode_streams_sparse`] path instead: each
+    /// stream attends only its top-k envelope-scored full pages and
+    /// folds the rest as mean-value terms, using the summary slabs the
+    /// backend synced alongside the codes. `0` (and any `k` covering
+    /// all pages) is the dense path, bit-identical by delegation. The
+    /// returned [`DecodeOut`] carries the step's attended/skipped page
+    /// totals and the bytes of K/V codes the skips avoided reading.
+    ///
     /// All model-math intermediates live in the session-owned `sc`
     /// ([`ModelScratch`]); in steady state the only allocations in this
     /// function are the three returned `DecodeOut` vectors.
@@ -457,6 +467,7 @@ impl CpuModel {
         pool: &WorkerPool,
         scratches: &mut [DecodeScratch],
         sc: &mut ModelScratch,
+        sparse_topk_pages: usize,
     ) -> Result<DecodeOut> {
         let m = &self.info;
         let (dm, dh, h_n, l_n) = (m.d_model, m.d_head, m.n_heads, m.n_layers);
@@ -480,6 +491,9 @@ impl CpuModel {
         // Fully overwritten by every layer's fan-out.
         scratch_buf(&mut sc.att, dm, &mut sc.grows);
         scratch_buf(&mut sc.ml, h_n, &mut sc.grows);
+        let spp = nb * dh; // summary floats/codes per stream
+        let mut pages_attended = 0u64;
+        let mut pages_skipped = 0u64;
         for (l, lw) in self.layers.iter().enumerate() {
             rms_vec_into(&sc.x, &mut sc.xn, &mut sc.grows);
             vec_mat_into(&sc.xn, &lw.wq, &mut sc.qv, &mut sc.grows);
@@ -489,21 +503,46 @@ impl CpuModel {
             v_new[l * dm..(l + 1) * dm].copy_from_slice(&sc.vv);
             let base = l * h_n * c * dh;
             let sbase = l * h_n * nb;
-            turbo_decode_streams(
-                pool,
-                &sc.qv,
-                &slabs.k8[base..base + h_n * c * dh],
-                &slabs.v8[base..base + h_n * c * dh],
-                &slabs.sk[sbase..sbase + h_n * nb],
-                &slabs.sv[sbase..sbase + h_n * nb],
-                dh,
-                nk,
-                m.block,
-                m.n_r,
-                scratches,
-                &mut sc.ml,
-                &mut sc.att,
-            )?;
+            if sparse_topk_pages > 0 {
+                let mbase = l * h_n * spp;
+                let (att, skip) = turbo_decode_streams_sparse(
+                    pool,
+                    &sc.qv,
+                    &slabs.k8[base..base + h_n * c * dh],
+                    &slabs.v8[base..base + h_n * c * dh],
+                    &slabs.sk[sbase..sbase + h_n * nb],
+                    &slabs.sv[sbase..sbase + h_n * nb],
+                    &slabs.kmin[mbase..mbase + h_n * spp],
+                    &slabs.kmax[mbase..mbase + h_n * spp],
+                    &slabs.vmean[mbase..mbase + h_n * spp],
+                    dh,
+                    nk,
+                    m.block,
+                    m.n_r,
+                    sparse_topk_pages,
+                    scratches,
+                    &mut sc.ml,
+                    &mut sc.att,
+                )?;
+                pages_attended += att;
+                pages_skipped += skip;
+            } else {
+                turbo_decode_streams(
+                    pool,
+                    &sc.qv,
+                    &slabs.k8[base..base + h_n * c * dh],
+                    &slabs.v8[base..base + h_n * c * dh],
+                    &slabs.sk[sbase..sbase + h_n * nb],
+                    &slabs.sv[sbase..sbase + h_n * nb],
+                    dh,
+                    nk,
+                    m.block,
+                    m.n_r,
+                    scratches,
+                    &mut sc.ml,
+                    &mut sc.att,
+                )?;
+            }
             for h in 0..h_n {
                 let (am, al) = sc.ml[h];
                 let q_h = &sc.qv[h * dh..(h + 1) * dh];
@@ -531,7 +570,18 @@ impl CpuModel {
         }
         rms_vec_into(&sc.x, &mut sc.xn, &mut sc.grows);
         let logits = vec_mat(&sc.xn, &self.w_out);
-        Ok(DecodeOut { logits, k_new, v_new })
+        // Each skipped page avoided reading `block * d_head` INT8 codes
+        // from both the K and the V slab.
+        let sparse_bytes_saved =
+            pages_skipped * 2 * (m.block as u64) * (dh as u64);
+        Ok(DecodeOut {
+            logits,
+            k_new,
+            v_new,
+            sparse_pages_attended: pages_attended,
+            sparse_pages_skipped: pages_skipped,
+            sparse_bytes_saved,
+        })
     }
 }
 
@@ -824,7 +874,7 @@ mod tests {
         let mut scratches = vec![DecodeScratch::new(); 2];
         let mut sc = ModelScratch::new();
         let out = model
-            .decode_step(&slabs.slabs, 7, b'h', 7, &pool, &mut scratches, &mut sc)
+            .decode_step(&slabs.slabs, 7, b'h', 7, &pool, &mut scratches, &mut sc, 0)
             .expect("decode");
         assert_eq!(out.logits.len(), info.vocab);
         assert_eq!(out.k_new.len(), info.n_layers * info.d_model);
@@ -859,7 +909,7 @@ mod tests {
         let mut pos = nk;
         let mut token = b'x';
         let out = model
-            .decode_step(&sess.slabs, nk, token, pos, &pool, &mut scratches, &mut sc)
+            .decode_step(&sess.slabs, nk, token, pos, &pool, &mut scratches, &mut sc, 0)
             .expect("warmup step");
         let warmed = sc.grows();
         assert!(warmed > 0, "first step must size the buffers");
@@ -881,7 +931,8 @@ mod tests {
             pos += 1;
             let step = model
                 .decode_step(
-                    &sess.slabs, nk, token, pos, &pool, &mut scratches, &mut sc,
+                    &sess.slabs, nk, token, pos, &pool, &mut scratches,
+                    &mut sc, 0,
                 )
                 .expect("steady step");
             token = crate::model::argmax(&step.logits) as u8;

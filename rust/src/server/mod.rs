@@ -207,7 +207,8 @@ fn format_stats(s: &crate::coordinator::StatsSnapshot) -> String {
          itl_p95_ms={:.3} itl_mean_ms={:.3} dedup={:.3} kernel={} \
          pool_cap={} pool_bytes={} preempt={} replayed={} memo_evict={} \
          memo_recompute={} queue_depth={} fill={:.3} prefill_chunks={} \
-         waiting_p50_ms={:.3}",
+         waiting_p50_ms={:.3} sparse_attended={} sparse_skipped={} \
+         sparse_bytes_saved={}",
         s.metrics.requests_completed,
         s.metrics.requests_cancelled,
         s.metrics.tokens_generated,
@@ -229,6 +230,9 @@ fn format_stats(s: &crate::coordinator::StatsSnapshot) -> String {
         s.metrics.batch_fill_ratio,
         s.metrics.prefill_chunks,
         s.waiting.p50() * 1e3,
+        s.metrics.sparse_pages_attended,
+        s.metrics.sparse_pages_skipped,
+        s.metrics.sparse_bytes_saved,
     )
 }
 

@@ -246,7 +246,7 @@ fn run_cpu_case(prompt: &[u8], steps: usize, threads: usize) -> CpuTrace {
     for i in 0..steps {
         let pos = prompt.len() + i;
         let out = backend
-            .decode_step(&mut bundle, &mut state, token, pos)
+            .decode_step(&mut bundle, &mut state, token, pos, 0)
             .expect("decode");
         backend
             .fold_new_token(&bundle, &mut state, &out.k_new, &out.v_new, pos);
@@ -314,7 +314,7 @@ fn run_cpu_shared_trace(
     for i in 0..steps {
         let pos = prompt.len() + i;
         let out = backend
-            .decode_step(&mut bundle, &mut state, token, pos)
+            .decode_step(&mut bundle, &mut state, token, pos, 0)
             .expect("decode");
         backend
             .fold_new_token(&bundle, &mut state, &out.k_new, &out.v_new, pos);

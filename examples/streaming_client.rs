@@ -1,23 +1,28 @@
-//! Library-client streaming: drive a running engine through
-//! `EngineHandle` — submit, stream `TokenEvent`s as they decode, cancel
-//! a request mid-flight, and read a stats snapshot. Runs on the
-//! artifact-free TurboCpu path (no PJRT toolchain needed).
+//! Thin TCP streaming client over the crate's single wire-protocol
+//! implementation ([`turboattention::loadgen::client`]): spawn an
+//! engine + server on a loopback port (the same wiring `turboattn
+//! serve` does), then drive `GEN → ACK/TOK…/DONE`, a mid-stream
+//! `CANCEL`, and a machine-readable `STATS JSON` scrape as an external
+//! client would. Runs on the artifact-free TurboCpu path (no PJRT
+//! toolchain needed).
 //!
 //! Run: `cargo run --release --example streaming_client`
 
 use std::io::Write as _;
+use std::net::TcpListener;
 use std::sync::mpsc::channel;
 
 use anyhow::Result;
 use turboattention::coordinator::{
-    Engine, EngineConfig, EngineHandle, GenRequest, PathMode, SamplingParams,
-    TokenEvent,
+    Engine, EngineConfig, EngineHandle, PathMode, SamplingParams,
 };
+use turboattention::loadgen::{TcpClient, WireEvent};
 use turboattention::model::{ByteTokenizer, ModelBundle, Sampler};
 use turboattention::runtime::Runtime;
+use turboattention::server;
 
 fn main() -> Result<()> {
-    // Engine thread: the handle is the only thing clients touch.
+    // Engine thread + TCP listener on an ephemeral port.
     let (tx, rx) = channel();
     let engine_thread = std::thread::spawn(move || {
         let cfg =
@@ -26,69 +31,85 @@ fn main() -> Result<()> {
             .run_loop(rx)
     });
     let handle = EngineHandle::new(tx);
-    let tok = ByteTokenizer;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    {
+        let h = handle.clone();
+        std::thread::spawn(move || {
+            let _ = server::serve(listener, h, SamplingParams::default());
+        });
+    }
 
-    // 1. Stream a request token by token (sampling is per-request: the
-    //    same prompt + params reproduces this stream exactly, whatever
-    //    else is batched alongside).
+    let tok = ByteTokenizer;
+    let mut client = TcpClient::connect(addr)?;
+
+    // 1. Stream a request token by token (sampling rides the GEN line:
+    //    the same prompt + overrides reproduces this stream exactly,
+    //    whatever else the server is batching).
     let params = SamplingParams {
         sampler: Sampler::TopK { k: 6, temp: 0.8 },
         seed: 11,
         stop_byte: None,
         max_new_tokens: 48,
     };
-    let mut resp = handle
-        .submit(GenRequest::with_params(0, tok.encode("the stream "), params))?;
-    println!("request {} admitted", resp.id());
-    while let Some(ev) = resp.recv() {
-        match ev {
-            TokenEvent::First { token, ttft } => {
-                print!("[ttft {:.1}ms] {}", ttft * 1e3, tok.decode(&[token]));
+    let id = client.gen(&tok.encode("the stream "), &params, 0)?;
+    println!("request {id} admitted");
+    loop {
+        match client.next_event()? {
+            WireEvent::Tok { byte, .. } => {
+                print!("{}", tok.decode(&[byte]));
                 std::io::stdout().flush().ok();
             }
-            TokenEvent::Token { token, .. } => {
-                print!("{}", tok.decode(&[token]));
-                std::io::stdout().flush().ok();
-            }
-            TokenEvent::Finished(c) => {
+            WireEvent::Done { reason, ttft_ms, total_ms, .. } => {
                 println!(
-                    "\nfinished: {:?} after {} tokens ({:.1} ms total)",
-                    c.finish_reason,
-                    c.generated.len(),
-                    c.total_latency * 1e3
+                    "\nfinished: {reason} (ttft {ttft_ms:.1} ms, \
+                     {total_ms:.1} ms total)"
                 );
+                break;
             }
+            other => anyhow::bail!("unexpected reply: {other:?}"),
         }
     }
 
     // 2. Cancel a long request after its first token: the engine frees
     //    its batcher slot and KV pages immediately, and the stream
-    //    still terminates with a `Cancelled` completion.
-    let mut long = handle.submit(GenRequest::with_params(
+    //    still terminates with a `DONE .. cancelled` line.
+    let id = client.gen(
+        &tok.encode("cancel me "),
+        &SamplingParams::greedy(200),
         0,
-        tok.encode("cancel me "),
-        SamplingParams::greedy(200),
-    ))?;
-    if matches!(long.recv(), Some(TokenEvent::First { .. })) {
-        long.cancel()?;
-    }
-    if let Some(c) = long.wait() {
-        println!(
-            "request {} {:?} after {} of 200 tokens",
-            c.id,
-            c.finish_reason,
-            c.generated.len()
-        );
+    )?;
+    let mut streamed = 0usize;
+    loop {
+        match client.next_event()? {
+            WireEvent::Tok { .. } => {
+                streamed += 1;
+                if streamed == 1 {
+                    client.cancel(id)?;
+                }
+            }
+            WireEvent::Done { reason, .. } => {
+                println!(
+                    "request {id} {reason} after {streamed} of 200 tokens"
+                );
+                break;
+            }
+            other => anyhow::bail!("unexpected reply: {other:?}"),
+        }
     }
 
-    let stats = handle.stats()?;
+    // 3. Machine-readable stats — no fragile text parsing.
+    let stats = client.stats_json()?;
+    let get = |k: &str| stats.get(k).cloned().unwrap_or_default();
     println!(
-        "engine: {} completed, {} cancelled | itl {}",
-        stats.metrics.requests_completed,
-        stats.metrics.requests_cancelled,
-        stats.itl.summary()
+        "engine: {} completed, {} cancelled | itl p50 {} ms | kernel {}",
+        get("completed"),
+        get("cancelled"),
+        get("itl_p50_ms"),
+        get("kernel")
     );
 
+    client.quit()?;
     handle.shutdown();
     engine_thread.join().expect("engine thread")?;
     Ok(())

@@ -165,7 +165,7 @@ pub enum Command {
 }
 
 /// Point-in-time engine telemetry (the server's `STATS` reply).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct StatsSnapshot {
     pub metrics: EngineMetrics,
     pub ttft: Histogram,

@@ -19,6 +19,7 @@ pub mod costmodel;
 pub mod experiments;
 pub mod kernels;
 pub mod kvcache;
+pub mod loadgen;
 pub mod metrics;
 pub mod model;
 pub mod pool;

@@ -1,0 +1,339 @@
+//! The one wire-protocol client for the server's line protocol.
+//!
+//! Everything that talks `GEN → ACK/TOK…/DONE` from the client side —
+//! the load generators, the `streaming_client` example, ad-hoc tools —
+//! goes through [`TcpClient`] / [`parse_wire_line`], so the protocol
+//! has exactly one client-side parse. (`tests/server_stream.rs`
+//! deliberately hand-parses raw bytes instead: it is the wire-format
+//! oracle that pins the server's exact output, independent of this
+//! client.)
+//!
+//! Token bytes are reconstructed from the `TOK` lines (exact), never
+//! from the `DONE` trailer text (lossy: the server maps `\n` to space
+//! there).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::{RequestId, SamplingParams};
+use crate::model::Sampler;
+use crate::util::json::Json;
+
+/// One parsed server reply line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireEvent {
+    /// Admission ack carrying the engine-assigned request id.
+    Ack(RequestId),
+    /// One streamed token (`index` 0 = first token).
+    Tok { id: RequestId, index: usize, byte: u8 },
+    /// Terminal line for a request; `text` is the lossy human trailer.
+    Done {
+        id: RequestId,
+        reason: String,
+        ttft_ms: f64,
+        total_ms: f64,
+        text: String,
+    },
+    /// `STATS` reply payload: `key=value ...` for the classic form, a
+    /// `{...}` object for `STATS JSON`.
+    Stats(String),
+    Err(String),
+    Bye,
+}
+
+/// Parse one server line (without its trailing newline).
+pub fn parse_wire_line(line: &str) -> Result<WireEvent> {
+    if line == "BYE" {
+        return Ok(WireEvent::Bye);
+    }
+    if let Some(rest) = line.strip_prefix("ACK ") {
+        let id = rest.trim().parse::<RequestId>().context("bad ACK id")?;
+        return Ok(WireEvent::Ack(id));
+    }
+    if let Some(rest) = line.strip_prefix("TOK ") {
+        let mut f = rest.split(' ');
+        let id = f
+            .next()
+            .and_then(|w| w.parse::<RequestId>().ok())
+            .with_context(|| format!("bad TOK id: {line:?}"))?;
+        let index = f
+            .next()
+            .and_then(|w| w.parse::<usize>().ok())
+            .with_context(|| format!("bad TOK index: {line:?}"))?;
+        let byte = f
+            .next()
+            .and_then(|w| w.parse::<u16>().ok())
+            .filter(|&b| b < 256)
+            .with_context(|| format!("bad TOK byte: {line:?}"))?;
+        ensure!(f.next().is_none(), "trailing TOK fields: {line:?}");
+        return Ok(WireEvent::Tok { id, index, byte: byte as u8 });
+    }
+    if let Some(rest) = line.strip_prefix("DONE ") {
+        let mut f = rest.splitn(5, ' ');
+        let id = f
+            .next()
+            .and_then(|w| w.parse::<RequestId>().ok())
+            .with_context(|| format!("bad DONE id: {line:?}"))?;
+        let reason = f.next().context("missing DONE reason")?.to_string();
+        let ttft_ms = f
+            .next()
+            .and_then(|w| w.parse::<f64>().ok())
+            .with_context(|| format!("bad DONE ttft: {line:?}"))?;
+        let total_ms = f
+            .next()
+            .and_then(|w| w.parse::<f64>().ok())
+            .with_context(|| format!("bad DONE total: {line:?}"))?;
+        let text = f.next().unwrap_or("").to_string();
+        return Ok(WireEvent::Done { id, reason, ttft_ms, total_ms, text });
+    }
+    if let Some(rest) = line.strip_prefix("STATS ") {
+        return Ok(WireEvent::Stats(rest.to_string()));
+    }
+    if let Some(rest) = line.strip_prefix("ERR ") {
+        return Ok(WireEvent::Err(rest.to_string()));
+    }
+    bail!("unrecognized server line: {line:?}")
+}
+
+/// Render a `GEN` line for `(prompt, params, sparse_topk_pages)` —
+/// the inverse of the server's `parse_gen`. The prompt must be
+/// single-line (the protocol is line-delimited).
+pub fn gen_line(
+    prompt: &[u8],
+    params: &SamplingParams,
+    sparse_topk_pages: usize,
+) -> String {
+    let text = std::str::from_utf8(prompt).expect("prompt must be UTF-8");
+    assert!(
+        !text.contains('\n') && !text.is_empty(),
+        "prompt must be one non-empty line"
+    );
+    let mut line = format!("GEN {} seed={}", params.max_new_tokens, params.seed);
+    match params.sampler {
+        Sampler::Greedy => line.push_str(" greedy"),
+        Sampler::TopK { k, temp } => {
+            line.push_str(&format!(" topk={k} temp={temp}"));
+        }
+    }
+    if let Some(b) = params.stop_byte {
+        line.push_str(&format!(" stop={b}"));
+    }
+    if sparse_topk_pages > 0 {
+        line.push_str(&format!(" sparse={sparse_topk_pages}"));
+    }
+    line.push(' ');
+    line.push_str(text);
+    line
+}
+
+/// Parse the classic `STATS key=value ...` payload.
+pub fn parse_stats_kv(payload: &str) -> BTreeMap<String, String> {
+    payload
+        .split_whitespace()
+        .filter_map(|w| w.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+/// Parse a `STATS JSON` payload into the same string-map shape as
+/// [`parse_stats_kv`] (numbers rendered back to their literal form).
+pub fn parse_stats_json(payload: &str) -> Result<BTreeMap<String, String>> {
+    let j = Json::parse(payload).map_err(|e| anyhow!("STATS JSON: {e}"))?;
+    let obj = j.as_obj().context("STATS JSON payload is not an object")?;
+    Ok(obj
+        .iter()
+        .map(|(k, v)| {
+            let s = match v {
+                Json::Num(n) if n.fract() == 0.0 && n.abs() < 1e15 => {
+                    format!("{}", *n as i64)
+                }
+                Json::Num(n) => format!("{n}"),
+                Json::Str(s) => s.clone(),
+                Json::Bool(b) => b.to_string(),
+                other => crate::util::json::to_string(other),
+            };
+            (k.clone(), s)
+        })
+        .collect())
+}
+
+/// Blocking line-protocol client over one TCP connection.
+pub struct TcpClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl TcpClient {
+    pub fn connect(addr: SocketAddr) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(TcpClient { writer: stream, reader })
+    }
+
+    /// Send one raw protocol line.
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
+        writeln!(self.writer, "{line}").context("socket write")
+    }
+
+    /// Next parsed server line, blocking; errors on EOF (the server
+    /// only closes after `BYE` or on its own failure).
+    pub fn next_event(&mut self) -> Result<WireEvent> {
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line).context("socket read")?;
+            ensure!(n > 0, "server closed the connection");
+            let trimmed = line.trim_end_matches(['\n', '\r']);
+            if trimmed.is_empty() {
+                continue;
+            }
+            return parse_wire_line(trimmed);
+        }
+    }
+
+    /// Submit a request; returns the ACKed id (an `ERR` reply becomes
+    /// an error).
+    pub fn gen(
+        &mut self,
+        prompt: &[u8],
+        params: &SamplingParams,
+        sparse_topk_pages: usize,
+    ) -> Result<RequestId> {
+        self.send_line(&gen_line(prompt, params, sparse_topk_pages))?;
+        match self.next_event()? {
+            WireEvent::Ack(id) => Ok(id),
+            WireEvent::Err(e) => bail!("server rejected GEN: {e}"),
+            other => bail!("expected ACK, got {other:?}"),
+        }
+    }
+
+    /// Cancel an in-flight request (its stream still ends with a
+    /// `DONE .. cancelled` line — keep reading to observe it).
+    pub fn cancel(&mut self, id: RequestId) -> Result<()> {
+        self.send_line(&format!("CANCEL {id}"))
+    }
+
+    /// Classic `STATS` scrape. Only sound on a connection with no
+    /// in-flight streams (TOK lines would interleave with the reply).
+    pub fn stats(&mut self) -> Result<BTreeMap<String, String>> {
+        self.send_line("STATS")?;
+        match self.next_event()? {
+            WireEvent::Stats(p) => Ok(parse_stats_kv(&p)),
+            other => bail!("expected STATS reply, got {other:?}"),
+        }
+    }
+
+    /// `STATS JSON` scrape (machine-readable; same caveat as `stats`).
+    pub fn stats_json(&mut self) -> Result<BTreeMap<String, String>> {
+        self.send_line("STATS JSON")?;
+        match self.next_event()? {
+            WireEvent::Stats(p) => parse_stats_json(&p),
+            other => bail!("expected STATS reply, got {other:?}"),
+        }
+    }
+
+    /// Polite shutdown: `QUIT`, wait for `BYE`.
+    pub fn quit(mut self) -> Result<()> {
+        self.send_line("QUIT")?;
+        match self.next_event()? {
+            WireEvent::Bye => Ok(()),
+            other => bail!("expected BYE, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_line_kind() {
+        assert_eq!(parse_wire_line("ACK 7").unwrap(), WireEvent::Ack(7));
+        assert_eq!(
+            parse_wire_line("TOK 7 0 104").unwrap(),
+            WireEvent::Tok { id: 7, index: 0, byte: 104 }
+        );
+        assert_eq!(
+            parse_wire_line("DONE 7 max_tokens 12.5 80.1 hello there").unwrap(),
+            WireEvent::Done {
+                id: 7,
+                reason: "max_tokens".into(),
+                ttft_ms: 12.5,
+                total_ms: 80.1,
+                text: "hello there".into(),
+            }
+        );
+        // Empty trailer (cancel before the first token).
+        assert_eq!(
+            parse_wire_line("DONE 3 cancelled 0.0 1.0 ").unwrap(),
+            WireEvent::Done {
+                id: 3,
+                reason: "cancelled".into(),
+                ttft_ms: 0.0,
+                total_ms: 1.0,
+                text: String::new(),
+            }
+        );
+        assert_eq!(
+            parse_wire_line("STATS completed=1 kernel=scalar").unwrap(),
+            WireEvent::Stats("completed=1 kernel=scalar".into())
+        );
+        assert_eq!(
+            parse_wire_line("ERR empty prompt").unwrap(),
+            WireEvent::Err("empty prompt".into())
+        );
+        assert_eq!(parse_wire_line("BYE").unwrap(), WireEvent::Bye);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_wire_line("NOPE 1").is_err());
+        assert!(parse_wire_line("ACK x").is_err());
+        assert!(parse_wire_line("TOK 1 2").is_err());
+        assert!(parse_wire_line("TOK 1 2 300").is_err());
+        assert!(parse_wire_line("TOK 1 2 3 4").is_err());
+        assert!(parse_wire_line("DONE 1 max_tokens 1.0").is_err());
+    }
+
+    #[test]
+    fn gen_line_round_trips_through_server_grammar() {
+        let topk = SamplingParams {
+            sampler: Sampler::TopK { k: 6, temp: 0.8 },
+            seed: 11,
+            stop_byte: Some(46),
+            max_new_tokens: 48,
+        };
+        assert_eq!(
+            gen_line(b"the stream", &topk, 0),
+            "GEN 48 seed=11 topk=6 temp=0.8 stop=46 the stream"
+        );
+        let greedy = SamplingParams::greedy(32);
+        assert_eq!(
+            gen_line(b"hi there", &greedy, 3),
+            "GEN 32 seed=0 greedy sparse=3 hi there"
+        );
+    }
+
+    #[test]
+    fn stats_kv_parses() {
+        let m = parse_stats_kv("completed=3 itl_p50_ms=0.120 kernel=avx2");
+        assert_eq!(m.get("completed").map(String::as_str), Some("3"));
+        assert_eq!(m.get("kernel").map(String::as_str), Some("avx2"));
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn stats_json_parses() {
+        let m =
+            parse_stats_json(r#"{"completed":3,"fill":0.25,"kernel":"scalar"}"#)
+                .unwrap();
+        assert_eq!(m.get("completed").map(String::as_str), Some("3"));
+        assert_eq!(m.get("fill").map(String::as_str), Some("0.25"));
+        assert_eq!(m.get("kernel").map(String::as_str), Some("scalar"));
+        assert!(parse_stats_json("completed=3").is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Client-side latency collection: fixed-bucket log-scale histograms
+//! (reusing [`crate::metrics::Histogram`]) so percentile summaries
+//! never require storing per-sample data, whatever the sweep length.
+//!
+//! Four distributions per sweep point:
+//! - **ttft** — send to first token (admission + queue + prefill).
+//! - **itl** — client-observed inter-token gaps.
+//! - **queue_wait** — *scheduled* arrival to first token. Under an
+//!   open-loop generator past saturation this keeps growing while ttft
+//!   measured from `sent_at` can look flat; it is the knee's signature.
+//! - **e2e** — scheduled arrival to terminal event.
+
+use crate::metrics::Histogram;
+
+use super::generators::RequestOutcome;
+
+/// The per-sweep-point latency histograms.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyBundle {
+    pub ttft: Histogram,
+    pub itl: Histogram,
+    pub queue_wait: Histogram,
+    pub e2e: Histogram,
+}
+
+impl LatencyBundle {
+    pub fn new() -> LatencyBundle {
+        LatencyBundle::default()
+    }
+
+    /// Fold one finished request in. Transport errors contribute only
+    /// to `e2e` (they have no token timings).
+    pub fn record(&mut self, o: &RequestOutcome) {
+        if let Some(first) = o.first_token_at {
+            self.ttft.record((first - o.sent_at).max(0.0));
+            self.queue_wait.record((first - o.scheduled_at).max(0.0));
+        }
+        for &gap in &o.itl {
+            self.itl.record(gap.max(0.0));
+        }
+        self.e2e.record((o.done_at - o.scheduled_at).max(0.0));
+    }
+
+    pub fn record_all(&mut self, outcomes: &[RequestOutcome]) {
+        for o in outcomes {
+            self.record(o);
+        }
+    }
+
+    /// Exact fold of another bundle (shared fixed bucket layout).
+    pub fn merge(&mut self, other: &LatencyBundle) {
+        self.ttft.merge(&other.ttft);
+        self.itl.merge(&other.itl);
+        self.queue_wait.merge(&other.queue_wait);
+        self.e2e.merge(&other.e2e);
+    }
+}
+
+/// Render one histogram as a JSON object fragment, milliseconds.
+pub fn hist_json_ms(h: &Histogram) -> String {
+    format!(
+        "{{\"n\":{},\"mean_ms\":{:.4},\"p50_ms\":{:.4},\"p90_ms\":{:.4},\
+         \"p99_ms\":{:.4},\"max_ms\":{:.4}}}",
+        h.count(),
+        h.mean() * 1e3,
+        h.p50() * 1e3,
+        h.p90() * 1e3,
+        h.p99() * 1e3,
+        h.max() * 1e3
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(sched: f64, sent: f64, first: f64, done: f64) -> RequestOutcome {
+        let mut o = RequestOutcome::started(0, sched, sent);
+        o.first_token_at = Some(first);
+        o.done_at = done;
+        o.itl = vec![0.002, 0.003];
+        o.finish_reason = "max_tokens".to_string();
+        o
+    }
+
+    #[test]
+    fn queue_wait_includes_scheduled_backlog() {
+        let mut b = LatencyBundle::new();
+        // Scheduled at t=1.0, actually sent at t=1.5 (dispatcher was
+        // on time, engine queue was not): first token at 1.6.
+        b.record(&outcome(1.0, 1.5, 1.6, 1.7));
+        assert_eq!(b.ttft.count(), 1);
+        // ttft ~0.1s, queue_wait ~0.6s: separate distributions.
+        assert!(b.ttft.p50() < b.queue_wait.p50());
+        assert_eq!(b.itl.count(), 2);
+        assert_eq!(b.e2e.count(), 1);
+    }
+
+    #[test]
+    fn error_outcomes_only_hit_e2e() {
+        let mut b = LatencyBundle::new();
+        let mut o = RequestOutcome::started(2, 0.0, 0.0);
+        o.done_at = 0.25;
+        o.error = Some("connect: refused".to_string());
+        b.record(&o);
+        assert_eq!(b.ttft.count(), 0);
+        assert_eq!(b.e2e.count(), 1);
+    }
+
+    #[test]
+    fn merged_bundle_matches_single() {
+        let mut one = LatencyBundle::new();
+        let mut a = LatencyBundle::new();
+        let mut b = LatencyBundle::new();
+        for i in 0..10 {
+            let o = outcome(0.0, 0.0, 0.01 * (i + 1) as f64, 0.5);
+            one.record(&o);
+            if i % 2 == 0 { a.record(&o) } else { b.record(&o) }
+        }
+        a.merge(&b);
+        assert_eq!(a.ttft.count(), one.ttft.count());
+        assert_eq!(a.ttft.p50(), one.ttft.p50());
+    }
+
+    #[test]
+    fn hist_json_is_valid_json() {
+        let mut h = Histogram::new();
+        h.record(0.012);
+        h.record(0.020);
+        let j = crate::util::json::Json::parse(&hist_json_ms(&h)).unwrap();
+        assert_eq!(j.path("n").unwrap().as_usize(), Some(2));
+        assert!(j.path("p50_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

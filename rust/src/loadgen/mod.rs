@@ -1,0 +1,45 @@
+//! Serving load harness: seeded workloads, open/closed-loop
+//! generators, client-side latency collection, and the
+//! `BENCH_serve.json` saturation report (the `bench-serve`
+//! subcommand's engine room).
+//!
+//! Layout:
+//! - [`workload`] — deterministic request mixes (index-keyed seeding)
+//!   and the seeded open-loop Poisson arrival schedule.
+//! - [`client`] — the one client-side implementation of the server's
+//!   `GEN → ACK/TOK…/DONE` wire protocol, plus `STATS` scraping.
+//! - [`generators`] — open-loop (honest offered load: arrivals never
+//!   wait on service) and closed-loop (fixed concurrency) drivers over
+//!   a TCP or in-process target.
+//! - [`histogram`] — fixed-bucket log-scale percentile collection
+//!   (TTFT / ITL / queue wait / end-to-end).
+//! - [`report`] — sweep-point aggregation, engine `STATS` deltas,
+//!   saturation-knee detection, JSON rendering.
+//!
+//! Two standing invariants, relied on by the acceptance tests:
+//! **the harness never perturbs engine output** (a closed-loop
+//! concurrency-1 sweep reproduces sequential `gen` byte-for-byte — a
+//! consequence of the engine's request-purity invariant, checked in
+//! `tests/loadgen_harness.rs`), and **open-loop arrivals follow the
+//! seeded schedule unconditionally** (queueing delay is measured, not
+//! absorbed into client back-pressure).
+
+pub mod client;
+pub mod generators;
+pub mod histogram;
+pub mod report;
+pub mod workload;
+
+pub use client::{
+    gen_line, parse_stats_json, parse_stats_kv, parse_wire_line, TcpClient,
+    WireEvent,
+};
+pub use generators::{
+    run_closed_loop, run_open_loop, RequestOutcome, RunSummary, Target,
+};
+pub use histogram::LatencyBundle;
+pub use report::{
+    diff_engine_stats, render_report, saturation_knee, summary_line,
+    SweepPoint, SweepPointConfig,
+};
+pub use workload::{open_loop_schedule, LenMix, LoadRequest, WorkloadConfig};

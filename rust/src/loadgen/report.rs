@@ -1,0 +1,391 @@
+//! Sweep-point aggregation and the `BENCH_serve.json` report.
+//!
+//! One [`SweepPoint`] per (mode × rate-or-concurrency × workload mix ×
+//! pool-cap) cell: client-side goodput, tokens/s, and percentile
+//! latencies next to the engine-side `STATS` delta for the same window
+//! (dedup ratio, preemptions, prefill chunks, sparse bytes saved, …).
+//! The saturation knee is *measured*: the first offered rate whose
+//! goodput falls more than 10% short — reported only when the sweep
+//! actually crossed it.
+
+use std::collections::BTreeMap;
+
+use crate::bench::json_str;
+
+use super::generators::RunSummary;
+use super::histogram::{hist_json_ms, LatencyBundle};
+
+/// The knobs that produced one sweep point (echoed into the report so
+/// a point is reproducible from its JSON alone).
+#[derive(Debug, Clone)]
+pub struct SweepPointConfig {
+    /// "open" | "closed".
+    pub mode: String,
+    /// Offered request rate (open loop only).
+    pub rate: Option<f64>,
+    /// Worker count (closed loop only).
+    pub concurrency: Option<usize>,
+    pub mix: String,
+    /// Pool byte cap in force (0 = uncapped).
+    pub pool_byte_cap: usize,
+    pub n_requests: usize,
+    pub seed: u64,
+    pub shared_prefix_ratio: f64,
+    pub cancel_prob: f64,
+    pub sparse_ratio: f64,
+    pub sparse_topk_pages: usize,
+    pub max_new: usize,
+}
+
+impl SweepPointConfig {
+    /// Short human label, e.g. `open rate=8 mix=longtail cap=0`.
+    pub fn label(&self) -> String {
+        let axis = match (self.rate, self.concurrency) {
+            (Some(r), _) => format!("rate={r}"),
+            (_, Some(c)) => format!("conc={c}"),
+            _ => "?".to_string(),
+        };
+        format!(
+            "{} {axis} mix={} cap={}",
+            self.mode, self.mix, self.pool_byte_cap
+        )
+    }
+}
+
+/// One measured sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub cfg: SweepPointConfig,
+    pub wall_s: f64,
+    pub completed: usize,
+    pub cancelled: usize,
+    pub errors: usize,
+    /// Tokens observed across all streams (completed or not).
+    pub tokens: usize,
+    /// Offered load (open loop: the configured rate).
+    pub offered_rps: Option<f64>,
+    /// Terminal-and-not-cancelled requests per wall second.
+    pub goodput_rps: f64,
+    pub tokens_per_s: f64,
+    pub lat: LatencyBundle,
+    /// Engine-side `STATS` delta over the point's window (monotone
+    /// counters subtracted; gauges and strings as scraped after).
+    pub engine: BTreeMap<String, String>,
+}
+
+impl SweepPoint {
+    pub fn build(
+        cfg: SweepPointConfig,
+        summary: &RunSummary,
+        engine: BTreeMap<String, String>,
+    ) -> SweepPoint {
+        let mut lat = LatencyBundle::new();
+        lat.record_all(&summary.outcomes);
+        let completed =
+            summary.outcomes.iter().filter(|o| o.completed()).count();
+        let cancelled = summary
+            .outcomes
+            .iter()
+            .filter(|o| o.finish_reason == "cancelled")
+            .count();
+        let errors =
+            summary.outcomes.iter().filter(|o| o.error.is_some()).count();
+        let tokens: usize = summary.outcomes.iter().map(|o| o.tokens).sum();
+        let wall = summary.wall_s.max(1e-9);
+        SweepPoint {
+            offered_rps: cfg.rate,
+            goodput_rps: completed as f64 / wall,
+            tokens_per_s: tokens as f64 / wall,
+            cfg,
+            wall_s: summary.wall_s,
+            completed,
+            cancelled,
+            errors,
+            tokens,
+            lat,
+            engine,
+        }
+    }
+}
+
+/// Monotone engine counters that are meaningful as deltas across a
+/// sweep window (everything else — gauges, strings, ratios — is
+/// reported as scraped at the window's end).
+const MONOTONE_KEYS: [&str; 12] = [
+    "completed",
+    "cancelled",
+    "tokens",
+    "prefill_tokens",
+    "preempt",
+    "replayed",
+    "memo_evict",
+    "memo_recompute",
+    "prefill_chunks",
+    "sparse_attended",
+    "sparse_skipped",
+    "sparse_bytes_saved",
+];
+
+/// Per-window engine stats: monotone counters become `after - before`
+/// (so a long-lived `--connect` server doesn't leak earlier traffic
+/// into a point), everything else passes through from `after`.
+pub fn diff_engine_stats(
+    before: &BTreeMap<String, String>,
+    after: &BTreeMap<String, String>,
+) -> BTreeMap<String, String> {
+    after
+        .iter()
+        .map(|(k, v)| {
+            let val = if MONOTONE_KEYS.contains(&k.as_str()) {
+                match (
+                    v.parse::<u64>(),
+                    before.get(k).and_then(|b| b.parse::<u64>().ok()),
+                ) {
+                    (Ok(a), Some(b)) => a.saturating_sub(b).to_string(),
+                    _ => v.clone(),
+                }
+            } else {
+                v.clone()
+            };
+            (k.clone(), val)
+        })
+        .collect()
+}
+
+/// First offered rate whose goodput falls >10% short of it, scanning
+/// open-loop points in rate order. `None` if the sweep never saturated
+/// (the knee must be measured, not inferred).
+pub fn saturation_knee(points: &[SweepPoint]) -> Option<f64> {
+    let mut open: Vec<&SweepPoint> =
+        points.iter().filter(|p| p.offered_rps.is_some()).collect();
+    open.sort_by(|a, b| {
+        a.offered_rps.partial_cmp(&b.offered_rps).expect("finite rates")
+    });
+    open.iter()
+        .find(|p| p.goodput_rps < 0.9 * p.offered_rps.unwrap())
+        .and_then(|p| p.offered_rps)
+}
+
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.4}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn opt_num(x: Option<f64>) -> String {
+    x.map(num).unwrap_or_else(|| "null".to_string())
+}
+
+fn engine_json(engine: &BTreeMap<String, String>) -> String {
+    let body = engine
+        .iter()
+        .map(|(k, v)| {
+            let val = match v.parse::<f64>() {
+                Ok(x) if x.is_finite() => v.clone(),
+                _ => json_str(v),
+            };
+            format!("{}:{val}", json_str(k))
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    format!("{{{body}}}")
+}
+
+fn point_json(p: &SweepPoint) -> String {
+    let c = &p.cfg;
+    format!(
+        "{{\"label\":{},\"mode\":{},\"offered_rps\":{},\"concurrency\":{},\
+         \"mix\":{},\"pool_byte_cap\":{},\"n_requests\":{},\"seed\":{},\
+         \"shared_prefix_ratio\":{},\"cancel_prob\":{},\"sparse_ratio\":{},\
+         \"sparse_topk_pages\":{},\"max_new\":{},\"wall_s\":{},\
+         \"completed\":{},\"cancelled\":{},\"errors\":{},\"tokens\":{},\
+         \"goodput_rps\":{},\"tokens_per_s\":{},\"ttft\":{},\"itl\":{},\
+         \"queue_wait\":{},\"e2e\":{},\"engine\":{}}}",
+        json_str(&c.label()),
+        json_str(&c.mode),
+        opt_num(c.rate),
+        c.concurrency
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| "null".to_string()),
+        json_str(&c.mix),
+        c.pool_byte_cap,
+        c.n_requests,
+        c.seed,
+        num(c.shared_prefix_ratio),
+        num(c.cancel_prob),
+        num(c.sparse_ratio),
+        c.sparse_topk_pages,
+        c.max_new,
+        num(p.wall_s),
+        p.completed,
+        p.cancelled,
+        p.errors,
+        p.tokens,
+        num(p.goodput_rps),
+        num(p.tokens_per_s),
+        hist_json_ms(&p.lat.ttft),
+        hist_json_ms(&p.lat.itl),
+        hist_json_ms(&p.lat.queue_wait),
+        hist_json_ms(&p.lat.e2e),
+        engine_json(&p.engine),
+    )
+}
+
+/// The full `BENCH_serve.json` document for a measured sweep.
+pub fn render_report(points: &[SweepPoint], kernel_backend: &str) -> String {
+    let sweep = points
+        .iter()
+        .map(|p| format!("    {}", point_json(p)))
+        .collect::<Vec<_>>()
+        .join(",\n");
+    format!(
+        "{{\n  \"bench\": \"serve\",\n  \"status\": \"measured\",\n  \
+         \"kernel_backend\": {},\n  \"knee_rps\": {},\n  \"sweep\": [\n{}\n  ]\n}}\n",
+        json_str(kernel_backend),
+        opt_num(saturation_knee(points)),
+        sweep
+    )
+}
+
+/// One console line per sweep point.
+pub fn summary_line(p: &SweepPoint) -> String {
+    format!(
+        "{} | {}/{} done, {} cancelled, {} err | goodput {:.2} req/s | \
+         {:.1} tok/s | ttft p50 {:.1}ms | wait p50 {:.1}ms p99 {:.1}ms | \
+         itl p50 {:.2}ms",
+        p.cfg.label(),
+        p.completed,
+        p.cfg.n_requests,
+        p.cancelled,
+        p.errors,
+        p.goodput_rps,
+        p.tokens_per_s,
+        p.lat.ttft.p50() * 1e3,
+        p.lat.queue_wait.p50() * 1e3,
+        p.lat.queue_wait.p99() * 1e3,
+        p.lat.itl.p50() * 1e3,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadgen::generators::RequestOutcome;
+    use crate::util::json::Json;
+
+    fn summary(n: usize, wall_s: f64, cancel_every: usize) -> RunSummary {
+        let outcomes = (0..n)
+            .map(|i| {
+                let sched = i as f64 * 0.01;
+                let mut o = RequestOutcome::started(i, sched, sched + 0.001);
+                o.first_token_at = Some(sched + 0.02);
+                o.done_at = sched + 0.1;
+                o.tokens = 8;
+                o.itl = vec![0.01; 7];
+                o.finish_reason =
+                    if cancel_every > 0 && i % cancel_every == 0 {
+                        "cancelled".to_string()
+                    } else {
+                        "max_tokens".to_string()
+                    };
+                o
+            })
+            .collect();
+        RunSummary { outcomes, wall_s }
+    }
+
+    fn cfg(rate: Option<f64>) -> SweepPointConfig {
+        SweepPointConfig {
+            mode: if rate.is_some() { "open" } else { "closed" }.to_string(),
+            rate,
+            concurrency: if rate.is_some() { None } else { Some(2) },
+            mix: "longtail".to_string(),
+            pool_byte_cap: 0,
+            n_requests: 10,
+            seed: 0,
+            shared_prefix_ratio: 0.5,
+            cancel_prob: 0.2,
+            sparse_ratio: 0.0,
+            sparse_topk_pages: 0,
+            max_new: 8,
+        }
+    }
+
+    #[test]
+    fn build_counts_and_rates() {
+        let p = SweepPoint::build(
+            cfg(None),
+            &summary(10, 2.0, 5),
+            BTreeMap::new(),
+        );
+        assert_eq!(p.completed, 8);
+        assert_eq!(p.cancelled, 2);
+        assert_eq!(p.errors, 0);
+        assert_eq!(p.tokens, 80);
+        assert!((p.goodput_rps - 4.0).abs() < 1e-9);
+        assert!((p.tokens_per_s - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_is_valid_json_with_sane_percentiles() {
+        let mut engine = BTreeMap::new();
+        engine.insert("kernel".to_string(), "scalar".to_string());
+        engine.insert("completed".to_string(), "8".to_string());
+        let points = vec![
+            SweepPoint::build(cfg(Some(4.0)), &summary(10, 2.0, 0), engine),
+            SweepPoint::build(cfg(None), &summary(10, 1.0, 5), BTreeMap::new()),
+        ];
+        let doc = render_report(&points, "scalar");
+        let j = Json::parse(&doc).expect("report parses");
+        assert_eq!(j.path("bench").unwrap().as_str(), Some("serve"));
+        let sweep = j.path("sweep").unwrap().as_arr().unwrap();
+        assert_eq!(sweep.len(), 2);
+        for pt in sweep {
+            let p50 = pt.path("ttft/p50_ms").unwrap().as_f64().unwrap();
+            let p99 = pt.path("ttft/p99_ms").unwrap().as_f64().unwrap();
+            assert!(p50 <= p99 + 1e-9, "p50 {p50} > p99 {p99}");
+        }
+        assert_eq!(
+            sweep[0].path("engine/kernel").unwrap().as_str(),
+            Some("scalar")
+        );
+        assert_eq!(sweep[0].path("engine/completed").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn knee_found_only_when_crossed() {
+        // Goodput tracks offered load at 2 and 4 req/s, collapses at 8.
+        let mk = |rate: f64, wall: f64| {
+            SweepPoint::build(cfg(Some(rate)), &summary(10, wall, 0), BTreeMap::new())
+        };
+        let under = vec![mk(2.0, 5.0), mk(4.0, 2.5)]; // goodput == offered
+        assert_eq!(saturation_knee(&under), None);
+        let mut crossed = under.clone();
+        crossed.push(mk(8.0, 2.0)); // goodput 5 < 0.9 * 8
+        assert_eq!(saturation_knee(&crossed), Some(8.0));
+        // Closed-loop points never define a knee.
+        assert_eq!(saturation_knee(&[mk_closed()]), None);
+    }
+
+    fn mk_closed() -> SweepPoint {
+        SweepPoint::build(cfg(None), &summary(10, 1.0, 0), BTreeMap::new())
+    }
+
+    #[test]
+    fn engine_delta_subtracts_monotone_counters_only() {
+        let mut before = BTreeMap::new();
+        before.insert("completed".to_string(), "10".to_string());
+        before.insert("pool_bytes".to_string(), "4096".to_string());
+        let mut after = BTreeMap::new();
+        after.insert("completed".to_string(), "14".to_string());
+        after.insert("pool_bytes".to_string(), "1024".to_string());
+        after.insert("kernel".to_string(), "avx2".to_string());
+        let d = diff_engine_stats(&before, &after);
+        assert_eq!(d.get("completed").map(String::as_str), Some("4"));
+        // Gauge: passed through, not subtracted.
+        assert_eq!(d.get("pool_bytes").map(String::as_str), Some("1024"));
+        assert_eq!(d.get("kernel").map(String::as_str), Some("avx2"));
+    }
+}

@@ -1,0 +1,331 @@
+//! Deterministic serving workloads for the load harness.
+//!
+//! Two invariants make these workloads usable as benchmark fixtures:
+//!
+//! 1. **Index-keyed determinism.** Request `i` is derived from a private
+//!    RNG seeded by `(seed, i)` alone — not from a shared stream — so
+//!    [`WorkloadConfig::request`] returns the same `LoadRequest` no
+//!    matter which worker thread asks, in what order, or how many
+//!    requests were materialized before it. `generate()` is just
+//!    `(0..n).map(request)`.
+//! 2. **Open-loop honesty.** [`open_loop_schedule`] derives Poisson
+//!    arrival offsets from the seed alone; nothing about engine service
+//!    times can perturb *when* requests are offered. Queueing delay
+//!    past the saturation knee is therefore measured, not hidden by
+//!    client back-pressure (closed-loop generators measure capacity;
+//!    only open-loop generators measure latency under load).
+//!
+//! Prompt text comes from the crate's training grammar
+//! ([`crate::workload::prompt`]): single-line ASCII, in-distribution
+//! for the CPU-substrate byte LM. Length mixes are bounded so
+//! `shared_prefix_len + prompt + max_new` stays inside the substrate's
+//! 256-token context (no accidental `context_full` storms).
+
+use crate::coordinator::SamplingParams;
+use crate::testutil::Rng;
+
+/// Per-request seed salt (index-keyed derivation; any odd constant
+/// works — this is wyhash's prime so request streams and the shared
+/// prefix/schedule streams never collide).
+const REQ_SALT: u64 = 0xA076_1D64_78BD_642F;
+/// Salt for the shared-prefix text stream.
+const PREFIX_SALT: u64 = 0xE703_7ED1_A0B4_28DB;
+/// Salt for the open-loop arrival schedule stream.
+const SCHED_SALT: u64 = 0x8EBC_6AF0_9C88_C6E3;
+
+/// Prompt-length mix (bytes == tokens for the byte LM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LenMix {
+    /// Uniform 16..48 — chat-style short prompts.
+    Short,
+    /// 80% uniform 16..64, 20% uniform 96..128 — the serving-paper
+    /// shape: mostly short with a heavy tail that stresses prefill.
+    LongTail,
+    /// Uniform 96..144 — every prompt is long (prefill-bound).
+    Heavy,
+}
+
+impl LenMix {
+    pub fn parse(s: &str) -> Result<LenMix, String> {
+        match s {
+            "short" => Ok(LenMix::Short),
+            "longtail" | "long-tail" => Ok(LenMix::LongTail),
+            "heavy" => Ok(LenMix::Heavy),
+            other => {
+                Err(format!("unknown mix {other:?} (short|longtail|heavy)"))
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LenMix::Short => "short",
+            LenMix::LongTail => "longtail",
+            LenMix::Heavy => "heavy",
+        }
+    }
+
+    fn sample_len(self, rng: &mut Rng) -> usize {
+        match self {
+            LenMix::Short => rng.range(16, 48),
+            LenMix::LongTail => {
+                if rng.bool(0.8) {
+                    rng.range(16, 64)
+                } else {
+                    rng.range(96, 128)
+                }
+            }
+            LenMix::Heavy => rng.range(96, 144),
+        }
+    }
+}
+
+/// One materialized harness request: what to send and how the client
+/// should behave while it streams.
+#[derive(Debug, Clone)]
+pub struct LoadRequest {
+    /// Position in the workload (stable across thread counts).
+    pub index: usize,
+    pub prompt: Vec<u8>,
+    pub params: SamplingParams,
+    /// Top-k page-sparse decode knob (0 = dense), per request so sweeps
+    /// mix sparse and dense traffic in one batch.
+    pub sparse_topk_pages: usize,
+    /// `Some(k)`: the client cancels after observing the k-th token
+    /// (exercising the disconnect-as-cancel path), then drains the
+    /// stream to its terminal event. `None`: run to completion.
+    pub cancel_after: Option<usize>,
+}
+
+/// Seeded workload description; every field participates in the
+/// derivation, so two equal configs produce bit-identical workloads.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub seed: u64,
+    pub n_requests: usize,
+    pub mix: LenMix,
+    /// Fraction of requests whose prompt starts with the workload's
+    /// shared prefix (exercises the prefix index / page dedup).
+    pub shared_prefix_ratio: f64,
+    /// Length of that shared prefix in bytes (default two KV pages).
+    pub shared_prefix_len: usize,
+    /// Per-request probability of a mid-stream client cancel.
+    pub cancel_prob: f64,
+    /// Fraction of requests decoded with top-k page-sparse attention.
+    pub sparse_ratio: f64,
+    /// `sparse_topk_pages` for the sparse fraction.
+    pub sparse_topk_pages: usize,
+    /// Sampling defaults; per-request seeds are derived on top, and
+    /// `max_new_tokens` is taken as-is.
+    pub base: SamplingParams,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            seed: 0,
+            n_requests: 16,
+            mix: LenMix::LongTail,
+            shared_prefix_ratio: 0.0,
+            shared_prefix_len: 64,
+            cancel_prob: 0.0,
+            sparse_ratio: 0.0,
+            sparse_topk_pages: 4,
+            base: SamplingParams::greedy(32),
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// The workload's shared prompt prefix (same for every request that
+    /// draws it; derived from the seed alone).
+    pub fn shared_prefix(&self) -> Vec<u8> {
+        let mut rng = Rng::new(self.seed ^ PREFIX_SALT);
+        crate::workload::prompt(&mut rng, self.shared_prefix_len.max(1))
+    }
+
+    /// Materialize request `i`. Pure function of `(self, i)`: the
+    /// per-request RNG is keyed by the index, so no call order or
+    /// thread schedule can change what request `i` looks like.
+    pub fn request(&self, i: usize) -> LoadRequest {
+        assert!(i < self.n_requests, "request {i} >= {}", self.n_requests);
+        let mut rng = Rng::new(
+            self.seed ^ (i as u64).wrapping_add(1).wrapping_mul(REQ_SALT),
+        );
+        // Draw order is part of the workload definition — reordering
+        // these draws is a (deliberate) workload-breaking change.
+        let shared = rng.bool(self.shared_prefix_ratio);
+        let len = self.mix.sample_len(&mut rng);
+        let mut prompt = if shared { self.shared_prefix() } else { Vec::new() };
+        prompt.extend_from_slice(&crate::workload::prompt(&mut rng, len));
+        let mut params = self.base;
+        params.seed = rng.next_u64();
+        let sparse = rng.bool(self.sparse_ratio);
+        let cancel = rng.bool(self.cancel_prob);
+        let cancel_after = if cancel {
+            Some(rng.range(1, params.max_new_tokens.max(2)))
+        } else {
+            None
+        };
+        debug_assert!(
+            prompt.iter().all(|&b| b.is_ascii() && b != b'\n'),
+            "prompts must be single-line ASCII for the wire protocol"
+        );
+        LoadRequest {
+            index: i,
+            prompt,
+            params,
+            sparse_topk_pages: if sparse { self.sparse_topk_pages } else { 0 },
+            cancel_after,
+        }
+    }
+
+    /// The whole workload, in index order.
+    pub fn generate(&self) -> Vec<LoadRequest> {
+        (0..self.n_requests).map(|i| self.request(i)).collect()
+    }
+}
+
+/// Seeded Poisson arrival offsets (seconds from sweep start) for an
+/// open-loop run at `rate` requests/s. Derived from `(seed, rate, n)`
+/// alone — service times never feed back into the schedule, which is
+/// the open-loop honesty rule that makes post-knee queue-wait
+/// percentiles meaningful.
+pub fn open_loop_schedule(seed: u64, rate: f64, n: usize) -> Vec<f64> {
+    assert!(rate > 0.0, "open-loop rate must be positive");
+    let mut rng = Rng::new(seed ^ SCHED_SALT);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_is_index_keyed() {
+        let wl = WorkloadConfig {
+            seed: 7,
+            n_requests: 12,
+            shared_prefix_ratio: 0.5,
+            cancel_prob: 0.3,
+            sparse_ratio: 0.5,
+            ..Default::default()
+        };
+        let all = wl.generate();
+        // Asking for request i in any order reproduces generate()[i].
+        for i in (0..wl.n_requests).rev() {
+            let r = wl.request(i);
+            assert_eq!(r.prompt, all[i].prompt);
+            assert_eq!(r.params, all[i].params);
+            assert_eq!(r.cancel_after, all[i].cancel_after);
+            assert_eq!(r.sparse_topk_pages, all[i].sparse_topk_pages);
+        }
+    }
+
+    #[test]
+    fn workload_bit_reproducible() {
+        let wl = WorkloadConfig {
+            seed: 42,
+            n_requests: 20,
+            shared_prefix_ratio: 0.4,
+            cancel_prob: 0.2,
+            ..Default::default()
+        };
+        let a = wl.generate();
+        let b = wl.generate();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.params.seed, y.params.seed);
+        }
+    }
+
+    #[test]
+    fn shared_prefix_actually_shared() {
+        let wl = WorkloadConfig {
+            seed: 3,
+            n_requests: 32,
+            shared_prefix_ratio: 1.0,
+            ..Default::default()
+        };
+        let prefix = wl.shared_prefix();
+        assert_eq!(prefix.len(), wl.shared_prefix_len);
+        for r in wl.generate() {
+            assert!(r.prompt.starts_with(&prefix));
+            assert!(r.prompt.len() > prefix.len());
+        }
+        // ratio 0 ⇒ nothing forced to share it.
+        let wl0 = WorkloadConfig { shared_prefix_ratio: 0.0, ..wl };
+        assert!(wl0.generate().iter().any(|r| !r.prompt.starts_with(&prefix)));
+    }
+
+    #[test]
+    fn mixes_respect_length_bounds() {
+        for (mix, lo, hi) in [
+            (LenMix::Short, 16, 48),
+            (LenMix::LongTail, 16, 128),
+            (LenMix::Heavy, 96, 144),
+        ] {
+            let wl = WorkloadConfig {
+                seed: 9,
+                n_requests: 64,
+                mix,
+                ..Default::default()
+            };
+            for r in wl.generate() {
+                assert!(
+                    (lo..hi).contains(&r.prompt.len()),
+                    "{} prompt len {}",
+                    mix.name(),
+                    r.prompt.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cancel_prob_extremes() {
+        let all = WorkloadConfig {
+            cancel_prob: 1.0,
+            n_requests: 16,
+            ..Default::default()
+        };
+        for r in all.generate() {
+            let k = r.cancel_after.expect("cancel_prob 1.0");
+            assert!(k >= 1 && k < r.params.max_new_tokens.max(2));
+        }
+        let none = WorkloadConfig { cancel_prob: 0.0, ..all };
+        assert!(none.generate().iter().all(|r| r.cancel_after.is_none()));
+    }
+
+    #[test]
+    fn schedule_bit_reproducible_and_monotone() {
+        let a = open_loop_schedule(11, 8.0, 50);
+        let b = open_loop_schedule(11, 8.0, 50);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            // Bit-level equality, not approximate: the schedule is a
+            // fixture, and f64 arithmetic here is deterministic.
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for w in a.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // Mean inter-arrival ≈ 1/rate (loose: 50 samples).
+        let mean = a.last().unwrap() / 50.0;
+        assert!(mean > 0.04 && mean < 0.4, "mean gap {mean}");
+    }
+
+    #[test]
+    fn parse_mix_names() {
+        assert_eq!(LenMix::parse("short").unwrap(), LenMix::Short);
+        assert_eq!(LenMix::parse("long-tail").unwrap(), LenMix::LongTail);
+        assert_eq!(LenMix::parse("heavy").unwrap(), LenMix::Heavy);
+        assert!(LenMix::parse("medium").is_err());
+    }
+}

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   serve       start the TCP serving loop (engine thread + listener)
 //!   gen         one-shot generation from the CLI
+//!   bench-serve sweep the serving stack with the load harness and
+//!               write a BENCH_serve.json saturation report
 //!   experiment  regenerate a paper table/figure (fig1..tab5, all)
 //!   selftest    runtime smoke: load artifacts, run micro kernels
 //!
@@ -12,6 +14,8 @@
 //!   turboattn gen --path turbo-cpu --stream          # print tokens live
 //!   turboattn gen --path turbo-cpu --batch 4 --seed-per-request
 //!   turboattn serve --port 7100 --path turbo-cpu
+//!   turboattn bench-serve --mode open --rates 2,4,8,16 --requests 64
+//!   turboattn bench-serve --mode closed --concurrency 1,4 --check
 //!   turboattn experiment fig6
 //!
 //! `--path` (alias `--mode`) selects the serving backend: `turbo`
@@ -73,6 +77,32 @@
 //! `K` large enough to cover the context is bit-identical to dense.
 //! Page traffic saved is reported on the `sparse :` line of `gen`
 //! output and in `STATS`.
+//!
+//! `bench-serve` drives the serving stack with the `loadgen` harness
+//! and writes a saturation report (default `BENCH_serve.json`). Flags:
+//! `--mode open|closed` picks the generator (open loop: seeded Poisson
+//! arrivals at each of `--rates R1,R2,..` requests/s, offered load
+//! never gated by completions; closed loop: fixed worker counts from
+//! `--concurrency N1,N2,..`, next request on completion). The seeded
+//! workload (`--seed`, `--requests N` per sweep point) is shaped by
+//! `--mix short|longtail|heavy` (comma list sweeps mixes),
+//! `--shared-prefix-ratio R` (+ `--shared-prefix-len L`, exercising
+//! the prefix index), `--cancel-prob P` (client cancels after a random
+//! k-th token — the disconnect-as-cancel path), and `--sparse-ratio R`
+//! + `--sparse-topk-pages K` (sparse/dense traffic mix). Each sweep
+//! point gets a fresh engine; `--pool-bytes-list B1,B2,..` sweeps pool
+//! caps (0 = uncapped). `--transport tcp` (default) spawns an
+//! in-process engine + listener and drives real loopback sockets
+//! through the wire protocol; `--transport inproc` uses the
+//! `EngineHandle` API directly (CI-friendly); `--connect HOST:PORT`
+//! targets an already-running `turboattn serve` (engine counters are
+//! then window deltas via `STATS JSON`). `--out FILE` sets the report
+//! path and `--check` re-parses the written report, asserting nonzero
+//! completions, zero transport errors, and p50 <= p99 per percentile
+//! bundle. Sampling flags (`--greedy`, `--top-k`, `--temp`,
+//! `--max-new`, …) set the workload's base `SamplingParams`; the
+//! harness defaults `--max-new` to 32 so prefix + prompt + generation
+//! fit the CPU substrate's 256-token context.
 
 use std::net::TcpListener;
 use std::sync::mpsc::channel;
@@ -111,6 +141,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("serve") => serve(&args),
         Some("gen") => gen(&args),
+        Some("bench-serve") => bench_serve(&args),
         Some("experiment") => {
             let id = args
                 .positional
@@ -122,8 +153,8 @@ fn main() -> Result<()> {
         Some("selftest") => selftest(&args),
         other => {
             eprintln!(
-                "usage: turboattn <serve|gen|experiment|selftest> [--options]\n\
-                 (got {other:?})"
+                "usage: turboattn <serve|gen|bench-serve|experiment|selftest> \
+                 [--options]\n(got {other:?})"
             );
             std::process::exit(2);
         }
@@ -132,8 +163,16 @@ fn main() -> Result<()> {
 
 fn engine_config(args: &Args) -> EngineConfig {
     // `--path` is the canonical spelling; `--mode` stays as an alias.
-    let path = args.opt("path").or_else(|| args.opt("mode"));
-    let mode = match path.unwrap_or("turbo") {
+    let path =
+        args.opt("path").or_else(|| args.opt("mode")).unwrap_or("turbo");
+    engine_config_for_path(args, path)
+}
+
+/// Engine config for an explicit backend path string. `bench-serve`
+/// resolves `--path` itself — there `--mode` means open|closed, not a
+/// backend — and defaults to the artifact-free `turbo-cpu` substrate.
+fn engine_config_for_path(args: &Args, path: &str) -> EngineConfig {
+    let mode = match path {
         "turbo" => PathMode::Turbo,
         "turbo-cpu" | "turbocpu" => PathMode::TurboCpu,
         "flash" => PathMode::Flash,
@@ -350,6 +389,247 @@ fn serve(args: &Args) -> Result<()> {
     });
     server::serve(listener, EngineHandle::new(tx), defaults)?;
     engine_thread.join().expect("engine thread")?;
+    Ok(())
+}
+
+/// `bench-serve`: sweep the serving stack with the load harness and
+/// write a `BENCH_serve.json` saturation report (flags documented in
+/// the module doc above).
+fn bench_serve(args: &Args) -> Result<()> {
+    use turboattention::loadgen::{self, LenMix, WorkloadConfig};
+
+    let mode = args.opt_or("mode", "open").to_string();
+    anyhow::ensure!(
+        mode == "open" || mode == "closed",
+        "--mode must be open|closed"
+    );
+    let rates = args.opt_list("rates", &[2.0f64, 4.0, 8.0, 16.0, 32.0]);
+    let concs = args.opt_list("concurrency", &[1usize, 2, 4, 8]);
+    let mixes: Vec<LenMix> = args
+        .opt_or("mix", "longtail")
+        .split(',')
+        .map(|m| LenMix::parse(m.trim()).map_err(anyhow::Error::msg))
+        .collect::<Result<_>>()?;
+    let caps = args.opt_list("pool-bytes-list", &[0usize]);
+    let transport = args.opt_or("transport", "tcp").to_string();
+    anyhow::ensure!(
+        transport == "tcp" || transport == "inproc",
+        "--transport must be tcp|inproc"
+    );
+    let cancel_prob = args.opt_parse("cancel-prob", 0.0f64);
+    let out_path = args.opt_or("out", "BENCH_serve.json").to_string();
+
+    let mut base = sampling_params(args);
+    if args.opt("max-new").is_none() {
+        // Harness default: keep shared prefix + prompt + generation
+        // inside the CPU substrate's 256-token context.
+        base.max_new_tokens = 32;
+    }
+
+    let mut points = Vec::new();
+    let mut kernel = String::new();
+    for mix in &mixes {
+        for &cap in &caps {
+            let wl = WorkloadConfig {
+                seed: args.opt_parse("seed", 0u64),
+                n_requests: args.opt_parse("requests", 64usize),
+                mix: *mix,
+                shared_prefix_ratio: args
+                    .opt_parse("shared-prefix-ratio", 0.5f64),
+                shared_prefix_len: args.opt_parse("shared-prefix-len", 64usize),
+                cancel_prob,
+                sparse_ratio: args.opt_parse("sparse-ratio", 0.0f64),
+                sparse_topk_pages: args.opt_parse("sparse-topk-pages", 4usize),
+                base,
+            };
+            let axis: Vec<(Option<f64>, Option<usize>)> = if mode == "open" {
+                rates.iter().map(|&r| (Some(r), None)).collect()
+            } else {
+                concs.iter().map(|&c| (None, Some(c))).collect()
+            };
+            for (rate, conc) in axis {
+                let point =
+                    run_sweep_point(args, &transport, cap, &wl, rate, conc, &mode)?;
+                if let Some(k) = point.engine.get("kernel") {
+                    if !k.is_empty() {
+                        kernel = k.clone();
+                    }
+                }
+                if !args.flag("quiet") {
+                    println!("{}", loadgen::summary_line(&point));
+                }
+                points.push(point);
+            }
+        }
+    }
+    let doc = loadgen::render_report(&points, &kernel);
+    std::fs::write(&out_path, &doc)
+        .with_context(|| format!("write {out_path}"))?;
+    println!(
+        "bench-serve: wrote {out_path} ({} sweep points)",
+        points.len()
+    );
+    if args.flag("check") {
+        check_serve_report(&doc, cancel_prob)?;
+        println!("bench-serve: report checks passed");
+    }
+    Ok(())
+}
+
+/// Run one sweep point: fresh engine (and, for the tcp transport, a
+/// fresh loopback listener) unless `--connect` targets an external
+/// server, an engine-stats scrape on each side of the run, and the
+/// collector's aggregation of the outcomes.
+fn run_sweep_point(
+    args: &Args,
+    transport: &str,
+    cap: usize,
+    wl: &turboattention::loadgen::WorkloadConfig,
+    rate: Option<f64>,
+    conc: Option<usize>,
+    mode: &str,
+) -> Result<turboattention::loadgen::SweepPoint> {
+    use turboattention::loadgen::{self, Target};
+
+    let (target, control, engine_thread) = if let Some(hostport) =
+        args.opt("connect")
+    {
+        use std::net::ToSocketAddrs;
+        let addr = hostport
+            .to_socket_addrs()
+            .with_context(|| format!("--connect {hostport}"))?
+            .next()
+            .context("--connect resolved to no address")?;
+        (Target::Tcp(addr), None, None)
+    } else {
+        let mut cfg =
+            engine_config_for_path(args, args.opt("path").unwrap_or("turbo-cpu"));
+        if cap > 0 {
+            cfg.pool_byte_cap = Some(cap);
+        }
+        let dir = args.opt_or("artifacts", "artifacts").to_string();
+        let (tx, rx) = channel::<Command>();
+        // Engine constructed inside its thread (the PJRT client is not
+        // Send), same pattern as `serve`.
+        let join = std::thread::spawn(move || -> Result<()> {
+            let rt = runtime_for(&cfg, &dir)?;
+            let engine = Engine::new(ModelBundle::new(rt), cfg);
+            engine.run_loop(rx)
+        });
+        let handle = EngineHandle::new(tx);
+        let target = if transport == "inproc" {
+            Target::InProcess(handle.clone())
+        } else {
+            let listener = TcpListener::bind(("127.0.0.1", 0))?;
+            let addr = listener.local_addr()?;
+            let h = handle.clone();
+            // The accept loop has no shutdown path; the thread parks in
+            // accept() when the point ends — harmless in a benchmark
+            // process that exits after the sweep.
+            std::thread::spawn(move || {
+                let _ = server::serve(listener, h, SamplingParams::default());
+            });
+            Target::Tcp(addr)
+        };
+        (target, Some(handle), Some(join))
+    };
+
+    let before = scrape_engine_stats(&target, control.as_ref())?;
+    let run = match (rate, conc) {
+        (Some(r), _) => loadgen::run_open_loop(&target, wl, r),
+        (_, Some(c)) => loadgen::run_closed_loop(&target, wl, c),
+        _ => unreachable!("sweep axis sets rate or concurrency"),
+    };
+    let after = scrape_engine_stats(&target, control.as_ref())?;
+    let engine = loadgen::diff_engine_stats(&before, &after);
+    if let Some(h) = control {
+        h.shutdown();
+    }
+    if let Some(j) = engine_thread {
+        j.join()
+            .map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
+    }
+    let cfgp = loadgen::SweepPointConfig {
+        mode: mode.to_string(),
+        rate,
+        concurrency: conc,
+        mix: wl.mix.name().to_string(),
+        pool_byte_cap: cap,
+        n_requests: wl.n_requests,
+        seed: wl.seed,
+        shared_prefix_ratio: wl.shared_prefix_ratio,
+        cancel_prob: wl.cancel_prob,
+        sparse_ratio: wl.sparse_ratio,
+        sparse_topk_pages: wl.sparse_topk_pages,
+        max_new: wl.base.max_new_tokens,
+    };
+    Ok(loadgen::SweepPoint::build(cfgp, &run, engine))
+}
+
+/// Engine counters in the `stats_pairs` shape: through the control
+/// handle when this process owns the engine, else over the wire via
+/// `STATS JSON` (the `--connect` case).
+fn scrape_engine_stats(
+    target: &turboattention::loadgen::Target,
+    control: Option<&EngineHandle>,
+) -> Result<std::collections::BTreeMap<String, String>> {
+    use turboattention::loadgen::{Target, TcpClient};
+    let snap = match (control, target) {
+        (Some(h), _) | (None, Target::InProcess(h)) => h.stats()?,
+        (None, Target::Tcp(addr)) => {
+            let mut c = TcpClient::connect(*addr)?;
+            let stats = c.stats_json()?;
+            let _ = c.quit();
+            return Ok(stats);
+        }
+    };
+    Ok(server::stats_pairs(&snap)
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect())
+}
+
+/// `--check`: the written report must parse, contain sweep points, and
+/// carry sane aggregates (no transport errors, completions unless the
+/// whole workload cancels, p50 <= p99 per latency bundle).
+fn check_serve_report(doc: &str, cancel_prob: f64) -> Result<()> {
+    use turboattention::util::json::Json;
+    let j = Json::parse(doc).map_err(|e| anyhow::anyhow!("report: {e}"))?;
+    let sweep = j
+        .path("sweep")
+        .and_then(|s| s.as_arr())
+        .context("report missing sweep array")?;
+    anyhow::ensure!(!sweep.is_empty(), "report has no sweep points");
+    for pt in sweep {
+        let label =
+            pt.path("label").and_then(|l| l.as_str()).unwrap_or("?");
+        let errors = pt
+            .path("errors")
+            .and_then(|e| e.as_usize())
+            .context("point missing errors")?;
+        anyhow::ensure!(errors == 0, "{label}: {errors} transport errors");
+        let completed = pt
+            .path("completed")
+            .and_then(|c| c.as_usize())
+            .context("point missing completed")?;
+        if cancel_prob < 1.0 {
+            anyhow::ensure!(completed > 0, "{label}: no completions");
+        }
+        for hist in ["ttft", "itl", "queue_wait", "e2e"] {
+            let p50 = pt
+                .path(&format!("{hist}/p50_ms"))
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("{label}: missing {hist} p50"))?;
+            let p99 = pt
+                .path(&format!("{hist}/p99_ms"))
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("{label}: missing {hist} p99"))?;
+            anyhow::ensure!(
+                p50 <= p99 + 1e-9,
+                "{label}: {hist} p50 {p50} > p99 {p99}"
+            );
+        }
+    }
     Ok(())
 }
 

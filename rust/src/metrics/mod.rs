@@ -88,12 +88,34 @@ impl Histogram {
         self.quantile(0.50)
     }
 
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+
     pub fn p95(&self) -> f64 {
         self.quantile(0.95)
     }
 
     pub fn p99(&self) -> f64 {
         self.quantile(0.99)
+    }
+
+    /// Fold `other`'s samples into `self`. Both histograms share the
+    /// fixed bucket layout from [`Histogram::new`], so merging is exact:
+    /// the result is identical to recording every sample into one
+    /// histogram (the load harness merges per-worker bundles this way).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(
+            self.bounds.len(),
+            other.bounds.len(),
+            "histogram bucket layouts differ"
+        );
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+        self.max = self.max.max(other.max);
     }
 
     /// One-line human summary (ms).
@@ -305,6 +327,35 @@ mod tests {
         // All mass in one bucket: p50 == p99 bucket bound >= 0.01.
         assert!(h.p50() >= 0.01);
         assert!(h.p50() < 0.02);
+    }
+
+    #[test]
+    fn merge_matches_single_histogram() {
+        let mut all = Histogram::new();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 1..=200 {
+            let x = i as f64 * 3e-4;
+            all.record(x);
+            if i % 2 == 0 { a.record(x) } else { b.record(x) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.max(), all.max());
+        assert!((a.mean() - all.mean()).abs() < 1e-12);
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), all.quantile(q));
+        }
+    }
+
+    #[test]
+    fn p90_between_p50_and_p95() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4);
+        }
+        assert!(h.p50() <= h.p90());
+        assert!(h.p90() <= h.p95());
     }
 
     #[test]

@@ -17,20 +17,25 @@
 //!                        (only ids ACKed on this connection; others get
 //!                         ERR unknown request id)
 //!   STATS\n           -> STATS completed=.. cancelled=.. itl_p50_ms=.. ..\n
+//!   STATS JSON\n      -> STATS {"completed":..,"kernel":"..",..}\n
+//!                        (same fields as the key=value form, as a
+//!                         one-line JSON object for machine scraping —
+//!                         the key=value layout stays byte-stable for
+//!                         text scrapers)
 //!   QUIT\n            -> BYE\n, closes the socket — any of this
 //!                        connection's still-running requests are
 //!                        cancelled when their forwarders hit the
 //!                        closed socket
 //! ```
 //!
-//! Per-request sampling overrides ride on the `GEN` line between
-//! `<max_new>` and the prompt: `seed=<u64>`, `topk=<k>`, `temp=<t>`,
-//! `stop=<byte>`, and the bare word `greedy`. Anything else — including
-//! an unknown `key=value` word — starts the prompt, so only a prompt
-//! *beginning* with one of those five override tokens needs care (a
-//! known key with a bad value is rejected with `ERR`). Unspecified
-//! fields fall back to the server's default [`SamplingParams`] (the
-//! `serve` CLI flags).
+//! Per-request overrides ride on the `GEN` line between `<max_new>`
+//! and the prompt: `seed=<u64>`, `topk=<k>`, `temp=<t>`, `stop=<byte>`,
+//! `sparse=<pages>` (top-k page-sparse decode; 0 = dense), and the
+//! bare word `greedy`. Anything else — including an unknown
+//! `key=value` word — starts the prompt, so only a prompt *beginning*
+//! with one of those six override tokens needs care (a known key with
+//! a bad value is rejected with `ERR`). Unspecified fields fall back
+//! to the server's default [`SamplingParams`] (the `serve` CLI flags).
 //!
 //! Each client connection gets a reader thread and each in-flight
 //! request a forwarder thread draining its [`ResponseHandle`]; writes
@@ -102,7 +107,8 @@ fn handle_client(
             ParsedLine::Gen { max_new, overrides, prompt } => {
                 let params = params_for(defaults, max_new, &overrides);
                 // The engine assigns the id; 0 here is a placeholder.
-                let req = GenRequest::with_params(0, prompt, params);
+                let req = GenRequest::with_params(0, prompt, params)
+                    .with_sparse_topk(overrides.sparse.unwrap_or(0));
                 match handle.submit(req) {
                     Ok(resp) => {
                         lock(&mine).insert(resp.id());
@@ -131,6 +137,10 @@ fn handle_client(
             }
             ParsedLine::Stats => match handle.stats() {
                 Ok(s) => write_line(&writer, &format_stats(&s))?,
+                Err(_) => write_line(&writer, "ERR engine gone")?,
+            },
+            ParsedLine::StatsJson => match handle.stats() {
+                Ok(s) => write_line(&writer, &format_stats_json(&s))?,
                 Err(_) => write_line(&writer, "ERR engine gone")?,
             },
             ParsedLine::Quit => {
@@ -200,40 +210,70 @@ fn stream_response(
     lock(&mine).remove(&id);
 }
 
+/// The `STATS` fields in wire order, each value already rendered in
+/// its canonical spelling. Single source for both reply forms — the
+/// classic `key=value` line (whose byte layout external scrapers like
+/// `scripts/stream_smoke.sh` depend on) and the `STATS JSON` object —
+/// and for the in-process scrape the `bench-serve` harness does when
+/// no socket is involved.
+pub fn stats_pairs(
+    s: &crate::coordinator::StatsSnapshot,
+) -> Vec<(&'static str, String)> {
+    vec![
+        ("completed", s.metrics.requests_completed.to_string()),
+        ("cancelled", s.metrics.requests_cancelled.to_string()),
+        ("tokens", s.metrics.tokens_generated.to_string()),
+        ("prefill_tokens", s.metrics.prefill_tokens.to_string()),
+        ("ttft_p50_ms", format!("{:.2}", s.ttft.p50() * 1e3)),
+        ("latency_p50_ms", format!("{:.2}", s.latency.p50() * 1e3)),
+        ("itl_p50_ms", format!("{:.3}", s.itl.p50() * 1e3)),
+        ("itl_p95_ms", format!("{:.3}", s.itl.p95() * 1e3)),
+        ("itl_mean_ms", format!("{:.3}", s.itl.mean() * 1e3)),
+        ("dedup", format!("{:.3}", s.metrics.page_dedup_ratio)),
+        ("kernel", s.metrics.kernel_backend.to_string()),
+        ("pool_cap", s.metrics.pool_byte_cap.to_string()),
+        ("pool_bytes", s.metrics.pool_physical_bytes.to_string()),
+        ("preempt", s.metrics.preemptions.to_string()),
+        ("replayed", s.metrics.preempt_replayed_tokens.to_string()),
+        ("memo_evict", s.metrics.pool_memo_evictions.to_string()),
+        ("memo_recompute", s.metrics.pool_memo_recomputes.to_string()),
+        ("queue_depth", s.metrics.queue_depth.to_string()),
+        ("fill", format!("{:.3}", s.metrics.batch_fill_ratio)),
+        ("prefill_chunks", s.metrics.prefill_chunks.to_string()),
+        ("waiting_p50_ms", format!("{:.3}", s.waiting.p50() * 1e3)),
+        ("sparse_attended", s.metrics.sparse_pages_attended.to_string()),
+        ("sparse_skipped", s.metrics.sparse_pages_skipped.to_string()),
+        ("sparse_bytes_saved", s.metrics.sparse_bytes_saved.to_string()),
+    ]
+}
+
 fn format_stats(s: &crate::coordinator::StatsSnapshot) -> String {
-    format!(
-        "STATS completed={} cancelled={} tokens={} prefill_tokens={} \
-         ttft_p50_ms={:.2} latency_p50_ms={:.2} itl_p50_ms={:.3} \
-         itl_p95_ms={:.3} itl_mean_ms={:.3} dedup={:.3} kernel={} \
-         pool_cap={} pool_bytes={} preempt={} replayed={} memo_evict={} \
-         memo_recompute={} queue_depth={} fill={:.3} prefill_chunks={} \
-         waiting_p50_ms={:.3} sparse_attended={} sparse_skipped={} \
-         sparse_bytes_saved={}",
-        s.metrics.requests_completed,
-        s.metrics.requests_cancelled,
-        s.metrics.tokens_generated,
-        s.metrics.prefill_tokens,
-        s.ttft.p50() * 1e3,
-        s.latency.p50() * 1e3,
-        s.itl.p50() * 1e3,
-        s.itl.p95() * 1e3,
-        s.itl.mean() * 1e3,
-        s.metrics.page_dedup_ratio,
-        s.metrics.kernel_backend,
-        s.metrics.pool_byte_cap,
-        s.metrics.pool_physical_bytes,
-        s.metrics.preemptions,
-        s.metrics.preempt_replayed_tokens,
-        s.metrics.pool_memo_evictions,
-        s.metrics.pool_memo_recomputes,
-        s.metrics.queue_depth,
-        s.metrics.batch_fill_ratio,
-        s.metrics.prefill_chunks,
-        s.waiting.p50() * 1e3,
-        s.metrics.sparse_pages_attended,
-        s.metrics.sparse_pages_skipped,
-        s.metrics.sparse_bytes_saved,
-    )
+    let body = stats_pairs(s)
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    format!("STATS {body}")
+}
+
+/// `STATS JSON` reply: one-line object with the same fields as the
+/// classic form. Numeric-looking values become JSON numbers (the
+/// canonical renderings above are already valid JSON number literals);
+/// everything else — the kernel name, a NaN ratio on an idle engine —
+/// is a JSON string.
+fn format_stats_json(s: &crate::coordinator::StatsSnapshot) -> String {
+    let body = stats_pairs(s)
+        .iter()
+        .map(|(k, v)| {
+            let val = match v.parse::<f64>() {
+                Ok(x) if x.is_finite() => v.clone(),
+                _ => crate::bench::json_str(v),
+            };
+            format!("{}:{val}", crate::bench::json_str(k))
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    format!("STATS {{{body}}}")
 }
 
 /// Sampling fields a `GEN` line may override.
@@ -244,6 +284,8 @@ struct GenOverrides {
     temp: Option<f32>,
     stop: Option<u8>,
     greedy: bool,
+    /// Top-k page-sparse decode pages (`sparse=K`; 0/absent = dense).
+    sparse: Option<usize>,
 }
 
 /// Merge `GEN`-line overrides onto the server defaults.
@@ -281,6 +323,7 @@ enum ParsedLine {
     Gen { max_new: usize, overrides: GenOverrides, prompt: Vec<u8> },
     Cancel(RequestId),
     Stats,
+    StatsJson,
     Quit,
     Bad(&'static str),
 }
@@ -302,6 +345,9 @@ fn parse_line(line: &str) -> ParsedLine {
     }
     if line == "STATS" {
         return ParsedLine::Stats;
+    }
+    if line == "STATS JSON" || line == "STATS json" {
+        return ParsedLine::StatsJson;
     }
     if let Some(rest) = line.strip_prefix("CANCEL ") {
         return match rest.trim().parse::<RequestId>() {
@@ -328,7 +374,7 @@ fn set_override<T: std::str::FromStr>(dst: &mut Option<T>, v: &str) -> bool {
 
 fn parse_gen(rest: &str) -> ParsedLine {
     const USAGE: &str = "usage: GEN <max_new_tokens> [seed=N] [topk=K] \
-                         [temp=T] [stop=BYTE] [greedy] <prompt>";
+                         [temp=T] [stop=BYTE] [sparse=K] [greedy] <prompt>";
     let Some((first, mut rem)) = split_word(rest) else {
         return ParsedLine::Bad(USAGE);
     };
@@ -351,11 +397,12 @@ fn parse_gen(rest: &str) -> ParsedLine {
             "topk" => set_override(&mut ov.top_k, v),
             "temp" => set_override(&mut ov.temp, v),
             "stop" => set_override(&mut ov.stop, v),
+            "sparse" => set_override(&mut ov.sparse, v),
             _ => break,
         };
         if !parsed {
             return ParsedLine::Bad(
-                "bad GEN override value (seed=|topk=|temp=|stop=)",
+                "bad GEN override value (seed=|topk=|temp=|stop=|sparse=)",
             );
         }
         rem = after;
@@ -422,6 +469,48 @@ mod tests {
         assert!(matches!(parse_line("CANCEL 7"), ParsedLine::Cancel(7)));
         assert!(matches!(parse_line("CANCEL x"), ParsedLine::Bad(_)));
         assert!(matches!(parse_line("STATS"), ParsedLine::Stats));
+        assert!(matches!(parse_line("STATS JSON"), ParsedLine::StatsJson));
+        assert!(matches!(parse_line("STATS json"), ParsedLine::StatsJson));
+        assert!(matches!(parse_line("STATS xml"), ParsedLine::Bad(_)));
+    }
+
+    #[test]
+    fn parse_gen_sparse_override() {
+        match parse_line("GEN 16 sparse=4 the prompt") {
+            ParsedLine::Gen { overrides, prompt, .. } => {
+                assert_eq!(overrides.sparse, Some(4));
+                assert_eq!(prompt, b"the prompt");
+            }
+            _ => panic!("expected Gen"),
+        }
+        assert!(matches!(
+            parse_line("GEN 16 sparse=x hi"),
+            ParsedLine::Bad(_)
+        ));
+    }
+
+    #[test]
+    fn stats_forms_agree_and_json_parses() {
+        let mut snap = crate::coordinator::StatsSnapshot::default();
+        snap.metrics.requests_completed = 3;
+        snap.metrics.kernel_backend = "scalar";
+        // key=value form renders stats_pairs verbatim, space-joined —
+        // the byte-compatibility contract for text scrapers.
+        let kv = format_stats(&snap);
+        assert!(kv.starts_with("STATS completed=3 cancelled=0 "));
+        assert!(kv.contains(" kernel=scalar "));
+        assert!(kv.contains(" itl_p50_ms=0.000 "));
+        // JSON form: same fields, parseable, numbers as numbers.
+        let js = format_stats_json(&snap);
+        let payload = js.strip_prefix("STATS ").unwrap();
+        let j = crate::util::json::Json::parse(payload).unwrap();
+        assert_eq!(j.path("completed").unwrap().as_usize(), Some(3));
+        assert_eq!(j.path("kernel").unwrap().as_str(), Some("scalar"));
+        let pairs = stats_pairs(&snap);
+        assert_eq!(pairs.len(), j.as_obj().unwrap().len());
+        for (k, _) in pairs {
+            assert!(j.get(k).is_some(), "missing {k} in JSON form");
+        }
     }
 
     #[test]

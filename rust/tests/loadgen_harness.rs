@@ -1,0 +1,255 @@
+//! Load-harness contracts (ISSUE 10):
+//!
+//! 1. Seeded workloads and open-loop schedules are bit-reproducible —
+//!    across runs and across the order/thread-count in which requests
+//!    are materialized.
+//! 2. A closed loop at concurrency 1 produces token streams
+//!    byte-identical to running the same prompts through the engine
+//!    sequentially (the harness never perturbs engine output — the
+//!    PR-5 purity invariant, observed end to end through the harness).
+//! 3. A cancel-probability-1.0 sweep leaves the engine drained: no
+//!    pinned sessions, empty queue, zero physical pool bytes.
+//! 4. The TCP target works end to end with a sparse/dense mix, and
+//!    both `STATS` forms agree on the same scrape.
+//!
+//! Everything runs the artifact-free TurboCpu path — no PJRT.
+
+use std::net::TcpListener;
+use std::sync::mpsc::channel;
+
+use turboattention::coordinator::{
+    Engine, EngineConfig, EngineHandle, GenRequest, PathMode, SamplingParams,
+};
+use turboattention::loadgen::{
+    open_loop_schedule, run_closed_loop, Target, WorkloadConfig,
+};
+use turboattention::model::ModelBundle;
+use turboattention::runtime::Runtime;
+use turboattention::server;
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        mode: PathMode::TurboCpu,
+        share_prefixes: true,
+        decode_threads: 2,
+        ..Default::default()
+    }
+}
+
+/// Engine on its own thread behind a handle (the PJRT client is not
+/// `Send`, so the engine owns its thread; the handle is the interface).
+fn spawn_engine(
+    cfg: EngineConfig,
+) -> (EngineHandle, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let (tx, rx) = channel();
+    let join = std::thread::spawn(move || {
+        Engine::new(ModelBundle::new(Runtime::cpu_substrate()), cfg)
+            .run_loop(rx)
+    });
+    (EngineHandle::new(tx), join)
+}
+
+#[test]
+fn workload_and_schedule_bit_reproducible_any_order() {
+    let wl = WorkloadConfig {
+        seed: 17,
+        n_requests: 24,
+        shared_prefix_ratio: 0.5,
+        cancel_prob: 0.25,
+        sparse_ratio: 0.5,
+        ..Default::default()
+    };
+    let all = wl.generate();
+    // Materializing in reverse (as a racing worker pool might) changes
+    // nothing: request i is a pure function of (config, i).
+    for i in (0..wl.n_requests).rev() {
+        let r = wl.request(i);
+        assert_eq!(r.prompt, all[i].prompt, "prompt {i}");
+        assert_eq!(r.params, all[i].params, "params {i}");
+        assert_eq!(r.cancel_after, all[i].cancel_after, "cancel {i}");
+        assert_eq!(r.sparse_topk_pages, all[i].sparse_topk_pages, "sparse {i}");
+    }
+    // The arrival schedule is a fixture: bit-equal, not approximately
+    // equal, across independent derivations.
+    let a = open_loop_schedule(wl.seed, 16.0, 64);
+    let b = open_loop_schedule(wl.seed, 16.0, 64);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+#[test]
+fn closed_loop_concurrency_one_matches_sequential_gen() {
+    let wl = WorkloadConfig {
+        seed: 21,
+        n_requests: 5,
+        shared_prefix_ratio: 0.5,
+        sparse_ratio: 0.4,
+        sparse_topk_pages: 2,
+        base: SamplingParams::greedy(12),
+        ..Default::default()
+    };
+    let reqs = wl.generate();
+
+    // Baseline: the same prompts through a direct engine, strictly one
+    // at a time — the `gen` subcommand's exact shape.
+    let mut engine =
+        Engine::new(ModelBundle::new(Runtime::cpu_substrate()), engine_cfg());
+    let mut sequential: Vec<Vec<u8>> = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        engine.submit(
+            GenRequest::with_params(i as u64 + 1, r.prompt.clone(), r.params)
+                .with_sparse_topk(r.sparse_topk_pages),
+        );
+        let done = engine.run_to_completion().expect("sequential run");
+        assert_eq!(done.len(), 1, "one request in flight");
+        sequential.push(done.into_iter().next().unwrap().generated);
+    }
+
+    // Harness: identical workload through the closed loop at
+    // concurrency 1 against a fresh engine with the same config.
+    let (handle, join) = spawn_engine(engine_cfg());
+    let summary = run_closed_loop(&Target::InProcess(handle.clone()), &wl, 1);
+    handle.shutdown();
+    join.join().expect("engine thread").expect("engine run");
+
+    assert_eq!(summary.outcomes.len(), wl.n_requests);
+    for (o, want) in summary.outcomes.iter().zip(&sequential) {
+        assert!(o.ok(), "request {} failed: {:?}", o.index, o.error);
+        assert_eq!(o.finish_reason, "max_tokens");
+        assert_eq!(
+            o.generated, *want,
+            "request {}: harness bytes diverge from sequential gen",
+            o.index
+        );
+    }
+}
+
+#[test]
+fn cancel_rate_one_sweep_drains_engine() {
+    let wl = WorkloadConfig {
+        seed: 33,
+        n_requests: 8,
+        cancel_prob: 1.0,
+        shared_prefix_ratio: 0.5,
+        base: SamplingParams::greedy(16),
+        ..Default::default()
+    };
+    let (handle, join) = spawn_engine(engine_cfg());
+    let summary = run_closed_loop(&Target::InProcess(handle.clone()), &wl, 4);
+
+    // Every stream reached a terminal event — nothing hung.
+    for o in &summary.outcomes {
+        assert!(o.ok(), "request {} not terminal: {:?}", o.index, o.error);
+    }
+    // Mostly cancels; a request can still finish legitimately if its
+    // cancel raced the last token, but the sweep must produce some.
+    let cancelled = summary
+        .outcomes
+        .iter()
+        .filter(|o| o.finish_reason == "cancelled")
+        .count();
+    assert!(cancelled >= 1, "cancel_prob 1.0 produced no cancels");
+
+    // Drained: queue empty, no pinned sessions, pool physically empty.
+    handle.flush().expect("flush");
+    let stats = handle.stats().expect("stats");
+    let m = &stats.metrics;
+    assert_eq!(m.queue_depth, 0, "waiting queue not drained");
+    assert_eq!(
+        m.pool_physical_bytes, 0,
+        "pool holds bytes after a full-cancel sweep — pinned sessions?"
+    );
+    assert_eq!(
+        m.requests_completed + m.requests_cancelled,
+        wl.n_requests as u64,
+        "every request accounted as completed or cancelled"
+    );
+    handle.shutdown();
+    join.join().expect("engine thread").expect("engine run");
+}
+
+#[test]
+fn tcp_target_end_to_end_with_sparse_and_stats_json() {
+    let (handle, join) = spawn_engine(engine_cfg());
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    {
+        let h = handle.clone();
+        // Detached: serve() blocks on accept with no shutdown path;
+        // the thread dies with the test process.
+        std::thread::spawn(move || {
+            let _ = server::serve(listener, h, SamplingParams::default());
+        });
+    }
+
+    let wl = WorkloadConfig {
+        seed: 5,
+        n_requests: 4,
+        sparse_ratio: 1.0,
+        sparse_topk_pages: 2,
+        base: SamplingParams::greedy(10),
+        ..Default::default()
+    };
+    let summary = run_closed_loop(&Target::Tcp(addr), &wl, 2);
+    assert_eq!(summary.outcomes.len(), wl.n_requests);
+    for o in &summary.outcomes {
+        assert!(o.ok(), "request {} failed: {:?}", o.index, o.error);
+        assert_eq!(o.finish_reason, "max_tokens");
+        assert_eq!(o.tokens, 10, "request {} token count", o.index);
+        assert_eq!(o.generated.len(), 10);
+        assert!(o.first_token_at.is_some());
+    }
+
+    // Mid-stream CANCEL through the shared client.
+    let mut client =
+        turboattention::loadgen::TcpClient::connect(addr).expect("connect");
+    let id = client
+        .gen(b"cancel this one", &SamplingParams::greedy(120), 0)
+        .expect("gen");
+    let mut streamed = 0usize;
+    let reason = loop {
+        match client.next_event().expect("event") {
+            turboattention::loadgen::WireEvent::Tok { .. } => {
+                streamed += 1;
+                if streamed == 1 {
+                    client.cancel(id).expect("cancel");
+                }
+            }
+            turboattention::loadgen::WireEvent::Done { reason, .. } => {
+                break reason;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    };
+    assert_eq!(reason, "cancelled");
+    assert!(streamed < 120, "cancel should cut the stream short");
+
+    // Both STATS forms agree on one quiesced scrape. Values compare
+    // numerically where numeric (the JSON round trip drops trailing
+    // zeros: `0.000` comes back as `0`), byte-equal otherwise.
+    handle.flush().expect("flush");
+    let kv = client.stats().expect("stats kv");
+    let js = client.stats_json().expect("stats json");
+    let keys = |m: &std::collections::BTreeMap<String, String>| {
+        m.keys().cloned().collect::<Vec<_>>()
+    };
+    assert_eq!(keys(&kv), keys(&js), "same fields in both STATS forms");
+    for (k, a) in &kv {
+        let b = &js[k];
+        match (a.parse::<f64>(), b.parse::<f64>()) {
+            (Ok(x), Ok(y)) => {
+                assert_eq!(x, y, "field {k}: kv={a} json={b}");
+            }
+            _ => assert_eq!(a, b, "field {k}"),
+        }
+    }
+    let completed: u64 =
+        js.get("completed").expect("completed key").parse().expect("number");
+    assert!(completed >= wl.n_requests as u64, "completed={completed}");
+    assert_eq!(js.get("cancelled").map(String::as_str), Some("1"));
+    client.quit().expect("quit");
+
+    handle.shutdown();
+    join.join().expect("engine thread").expect("engine run");
+}

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Regenerate the checked-in perf baselines BENCH_decode.json and
-# BENCH_sas.json from the two bench binaries' --json mode.
+# Regenerate the checked-in perf baselines: BENCH_decode.json and
+# BENCH_sas.json from the two bench binaries' --json mode, and
+# BENCH_serve.json from a `bench-serve` open-loop saturation sweep.
 #
 # Run it from the rust/ crate root on a quiet machine (no other load),
 # e.g. in CI: bash ../scripts/bench_record.sh
@@ -25,7 +26,16 @@ BACKEND=${1:-auto}
 cargo bench --bench decode_bench -- --json --kernel-backend "$BACKEND"
 cargo bench --bench sas_bench -- --json --kernel-backend "$BACKEND"
 
-for f in BENCH_decode.json BENCH_sas.json; do
+# Serving saturation sweep: open-loop arrivals through the real TCP wire
+# protocol, small enough to finish in a couple of minutes on one core
+# but wide enough to cross the knee. --check validates the report
+# (no transport errors, p50 <= p99 per histogram) before we keep it.
+cargo run --release --quiet -- bench-serve \
+  --mode open --rates 2,4,8,16,32 --requests 64 --mix longtail \
+  --shared-prefix-ratio 0.3 --cancel-prob 0.05 --sparse-ratio 0.25 \
+  --transport tcp --seed 7 --out BENCH_serve.json --check
+
+for f in BENCH_decode.json BENCH_sas.json BENCH_serve.json; do
   [ -s "$f" ] || { echo "bench_record: $f was not written" >&2; exit 1; }
 done
-echo "bench_record: wrote BENCH_decode.json and BENCH_sas.json"
+echo "bench_record: wrote BENCH_decode.json, BENCH_sas.json and BENCH_serve.json"

@@ -75,6 +75,15 @@ case "$stats" in
 esac
 echo "stream_smoke: stats OK"
 
+# --- 3b. STATS JSON: machine-readable form of the same scrape -----------
+printf 'STATS JSON\n' >&3
+read -r stats_json <&3
+case "$stats_json" in
+  STATS\ {*\"cancelled\":1*}) ;;
+  *) fail "STATS JSON missing \"cancelled\":1: $stats_json" ;;
+esac
+echo "stream_smoke: stats json OK"
+
 printf 'QUIT\n' >&3
 read -r bye <&3
 [ "$bye" = BYE ] || fail "expected BYE, got: $bye"
